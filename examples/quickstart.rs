@@ -1,0 +1,61 @@
+//! Quickstart: load the artifact tree, run the learned predictor on one
+//! test prompt, and compare its predictions against the ground-truth
+//! router trace.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use moe_beyond::eval::{eval_trace, EvalAccumulator};
+use moe_beyond::predictor::{learned, LearnedModel};
+use moe_beyond::runtime::PjrtRuntime;
+use moe_beyond::sim::harness;
+use moe_beyond::trace::store;
+use moe_beyond::Result;
+
+fn main() -> Result<()> {
+    // 1. discover the artifacts built by `make artifacts`
+    let arts = harness::load_artifacts()?;
+    println!(
+        "world: {} layers x {} experts, top-{} routing (fingerprint {})",
+        arts.world.n_layers, arts.world.n_experts, arts.world.top_k, arts.world.fingerprint
+    );
+
+    // 2. bring up PJRT and load the trained predictor
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let model = LearnedModel::load(&rt, &arts)?;
+    println!(
+        "predictor loaded: window {}, d_tok {}, batch {}",
+        model.window, model.d_tok, model.batch
+    );
+
+    // 3. read one unseen test prompt's activation trace
+    let traces = store::read_traces(arts.path(&arts.split("test")?.path))?;
+    let tr = &traces[0];
+    println!(
+        "test prompt {}: {} tokens x {} layers",
+        tr.prompt_id,
+        tr.n_tokens(),
+        tr.n_layers
+    );
+
+    // 4. predict expert activations for every (token, layer) position
+    let preds = learned::precompute(&model, tr, model.window, arts.world.top_k as usize)?;
+
+    // 5. score against the ground truth
+    let mut acc = EvalAccumulator::new(arts.world.n_experts as usize);
+    eval_trace(&preds, tr, &mut acc);
+    println!("accuracy  : {:.2}%", acc.accuracy() * 100.0);
+    println!("macro F1  : {:.2}%", acc.macro_f1() * 100.0);
+    println!("micro F1  : {:.2}%", acc.micro_f1() * 100.0);
+
+    // 6. peek at one position
+    let (t, l) = (tr.n_tokens() / 2, 13);
+    println!(
+        "token {t} layer {l}: predicted {:?} vs actual {:?}",
+        preds.sets[t][l],
+        tr.expert_set(t, l)
+    );
+    Ok(())
+}

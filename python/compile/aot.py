@@ -1,0 +1,269 @@
+"""AOT pipeline: world -> traces -> training -> HLO artifacts.
+
+Runs once at `make artifacts`; everything the Rust coordinator needs at
+runtime lands in ``artifacts/``:
+
+  world.json / world.bin(.blobs.json)   synthetic world (DESIGN.md §6)
+  backbone_weights.bin(.json)           constructed backbone params
+  predictor_weights.bin(.json)          TRAINED predictor params
+  training_log.json                     per-step metrics (Figs 5-6)
+  traces/{train,val,test,backbone_val}.bin   MBTR trace files
+  predictor.hlo.txt                     fwd, one (window, layer) pair
+  predictor_batch.hlo.txt               fwd, batch of n_layers pairs
+  backbone_prefill.hlo.txt              prompt prefill
+  backbone_decode.hlo.txt               one decode step
+  artifacts.json                        dims + executable signatures
+
+Interchange is HLO **text**: jax>=0.5 serialized HloModuleProto uses
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Env knobs:
+  MOEB_FAST=1      tiny everything (CI / pytest)
+  MOEB_TRAIN_PROMPTS / MOEB_TEST_PROMPTS / MOEB_EPOCHS   scale overrides
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import tracegen, train as train_mod
+from .model import PredictorConfig
+from .train import TrainConfig
+from .world import World, WorldConfig, build_backbone_params, flatten_params, save_flat
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text (the xla-crate-compatible interchange).
+
+    return_tuple=False and a SINGLE flat f32 result per artifact: the
+    xla-crate/xla_extension-0.5.1 CPU client cannot reliably fetch
+    tuple-shaped output buffers (ToLiteral hits a CHECK on tuple shapes),
+    so every artifact function concatenates its outputs into one f32
+    vector the Rust side slices by the known lengths.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, example_args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    flat, _ = jax.tree.flatten(example_args)
+    return {
+        "path": os.path.basename(path),
+        "num_inputs": len(flat),
+        "input_shapes": [list(np.shape(a)) for a in flat],
+        "input_dtypes": [str(np.asarray(a).dtype) for a in flat],
+        "chars": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=20250710)
+    ap.add_argument("--skip-train", action="store_true", help="reuse existing predictor weights")
+    args = ap.parse_args()
+    out = os.path.abspath(args.outdir)
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "traces"), exist_ok=True)
+
+    fast = os.environ.get("MOEB_FAST", "0") == "1"
+    n_train = int(os.environ.get("MOEB_TRAIN_PROMPTS", 8 if fast else 400))
+    n_val = int(os.environ.get("MOEB_VAL_PROMPTS", 4 if fast else 60))
+    n_test = int(os.environ.get("MOEB_TEST_PROMPTS", 4 if fast else 100))
+    n_bval = int(os.environ.get("MOEB_BACKBONE_VAL_PROMPTS", 2 if fast else 24))
+    epochs = int(os.environ.get("MOEB_EPOCHS", 1 if fast else 26))
+    steps = int(os.environ.get("MOEB_STEPS_PER_EPOCH", 10 if fast else 400))
+
+    t0 = time.time()
+    wc = WorldConfig(seed=args.seed)
+    world = World(wc)
+    print(f"[aot] world fingerprint {world.fingerprint()}")
+    world.save(os.path.join(out, "world.json"))
+
+    # ---- backbone weights
+    params = build_backbone_params(world)
+    flat, man = flatten_params(params)
+    save_flat(
+        os.path.join(out, "backbone_weights.bin"),
+        flat,
+        man,
+        extra={"fingerprint": world.fingerprint()},
+    )
+    print(f"[aot] backbone params {flat.size/1e6:.1f}M ({time.time()-t0:.0f}s)")
+
+    # ---- traces (paper contribution 2: the activation-trace dataset)
+    splits = {}
+    for split, n, mode in [
+        ("train", n_train, "analytic"),
+        ("val", n_val, "analytic"),
+        ("test", n_test, "analytic"),
+        ("backbone_val", n_bval, "backbone"),
+    ]:
+        if n <= 0:
+            continue
+        path = os.path.join(out, "traces", f"{split}.bin")
+        trs = tracegen.generate_split(world, "test" if split == "test" else "train", n, path, mode=mode)
+        splits[split] = {
+            "prompts": len(trs),
+            "trace_points": tracegen.trace_point_count(trs),
+            "path": f"traces/{split}.bin",
+        }
+        print(
+            f"[aot] traces/{split}: {len(trs)} prompts, "
+            f"{splits[split]['trace_points']/1e6:.2f}M points ({time.time()-t0:.0f}s)"
+        )
+
+    # ---- train predictor
+    pc = PredictorConfig()
+    wpath = os.path.join(out, "predictor_weights.bin")
+    if args.skip_train and os.path.exists(wpath):
+        print("[aot] --skip-train: reusing predictor weights")
+    else:
+        tc = TrainConfig(max_epochs=epochs, steps_per_epoch=steps)
+        _, tr_traces = tracegen.read_traces(os.path.join(out, "traces", "train.bin"))
+        _, va_traces = tracegen.read_traces(os.path.join(out, "traces", "val.bin"))
+        print(f"[aot] training predictor ({epochs} epochs x {steps} steps)")
+        train_mod.train_predictor(
+            pc, tc, tr_traces, va_traces, out, world.fingerprint()
+        )
+        print(f"[aot] training done ({time.time()-t0:.0f}s)")
+
+    # ---- lower HLO artifacts
+    specs = model_mod.predictor_param_specs(pc)
+    wlist = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    T = pc.window
+    emb_s = jax.ShapeDtypeStruct((T, pc.d_tok), jnp.float32)
+    lid_s = jax.ShapeDtypeStruct((T,), jnp.int32)
+    msk_s = jax.ShapeDtypeStruct((T,), jnp.float32)
+
+    sigs = {}
+    sigs["predictor"] = lower_and_write(
+        lambda wl, e, l, m: model_mod.predictor_forward(pc, list(wl), e, l, m),
+        (tuple(wlist), emb_s, lid_s, msk_s),
+        os.path.join(out, "predictor.hlo.txt"),
+    )
+
+    # batch = n_model_layers: one PJRT dispatch scores a window for EVERY
+    # layer (the serving refresh needs exactly that; 4x fewer dispatches
+    # than the earlier batch-of-8 artifact — EXPERIMENTS.md §Perf)
+    B = 9  # 3 dispatches per 27-layer refresh — fastest point measured (§Perf)
+    embb = jax.ShapeDtypeStruct((B, T, pc.d_tok), jnp.float32)
+    lidb = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    mskb = jax.ShapeDtypeStruct((B, T), jnp.float32)
+    sigs["predictor_batch"] = lower_and_write(
+        lambda wl, e, l, m: jax.vmap(
+            lambda ee, ll, mm: model_mod.predictor_forward(pc, list(wl), ee, ll, mm)
+        )(e, l, m),
+        (tuple(wlist), embb, lidb, mskb),
+        os.path.join(out, "predictor_batch.hlo.txt"),
+    )
+
+    bspecs = model_mod.backbone_param_specs(wc)
+    bwlist = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in bspecs]
+    P = wc.max_seq
+    toks_s = jax.ShapeDtypeStruct((P,), jnp.int32)
+    n_s = jax.ShapeDtypeStruct((), jnp.int32)
+    def prefill_flat(wl, t, n):
+        kv, ids, x0, logits = model_mod.backbone_prefill(wc, list(wl), t, n)
+        return jnp.concatenate(
+            [kv.reshape(-1), ids.reshape(-1).astype(jnp.float32),
+             x0.reshape(-1), logits.reshape(-1)]
+        )
+
+    sigs["backbone_prefill"] = lower_and_write(
+        prefill_flat,
+        (tuple(bwlist), toks_s, n_s),
+        os.path.join(out, "backbone_prefill.hlo.txt"),
+    )
+
+    # short-prompt prefill: fixed shapes mean the 160-slot prefill pays
+    # for padding compute; most prompts fit 96 slots (§Perf: ~1.7x)
+    toks_short = jax.ShapeDtypeStruct((96,), jnp.int32)
+    sigs["backbone_prefill_96"] = lower_and_write(
+        prefill_flat,
+        (tuple(bwlist), toks_short, n_s),
+        os.path.join(out, "backbone_prefill_96.hlo.txt"),
+    )
+
+    kv_s = jax.ShapeDtypeStruct(
+        (wc.n_layers, 2, wc.max_seq, wc.n_heads * wc.d_head), jnp.float32
+    )
+    tok_s = jax.ShapeDtypeStruct((), jnp.int32)
+    # Chained decode state: one flat vector [HEAD | KV] where
+    # HEAD = logits(V) + router_ids(L*k, as f32) + embedding(D).  The
+    # output has the SAME layout as the state input, so the Rust side can
+    # feed the output buffer of step t directly back as the input of step
+    # t+1 — the KV cache never crosses the host boundary; only the 17 KB
+    # head is fetched per token (EXPERIMENTS.md §Perf).
+    head_len = wc.vocab_size + wc.n_layers * wc.top_k + wc.d_model
+    kv_len = wc.n_layers * 2 * wc.max_seq * wc.n_heads * wc.d_head
+    state_s = jax.ShapeDtypeStruct((head_len + kv_len,), jnp.float32)
+
+    def decode_chained(wl, state, p, t):
+        kv = state[head_len:].reshape(
+            (wc.n_layers, 2, wc.max_seq, wc.n_heads * wc.d_head)
+        )
+        kv2, logits, ids, emb = model_mod.backbone_decode_step(wc, list(wl), kv, p, t)
+        return jnp.concatenate(
+            [logits.reshape(-1), ids.reshape(-1).astype(jnp.float32),
+             emb.reshape(-1), kv2.reshape(-1)]
+        )
+
+    sigs["backbone_decode"] = lower_and_write(
+        decode_chained,
+        (tuple(bwlist), state_s, n_s, tok_s),
+        os.path.join(out, "backbone_decode.hlo.txt"),
+    )
+
+    # head extractor: slices the host-visible head out of the chained
+    # decode state ON DEVICE (CopyRawToHost is unimplemented in this PJRT,
+    # so partial fetches go through this trivial executable instead)
+    sigs["head_extract"] = lower_and_write(
+        lambda st: st[:head_len],
+        (state_s,),
+        os.path.join(out, "head_extract.hlo.txt"),
+    )
+
+    meta = {
+        "world": world.manifest(),
+        "predictor_config": {
+            "d_tok": pc.d_tok,
+            "n_model_layers": pc.n_model_layers,
+            "n_experts": pc.n_experts,
+            "d_layer": pc.d_layer,
+            "d_model": pc.d_model,
+            "n_enc_layers": pc.n_enc_layers,
+            "n_heads": pc.n_heads,
+            "d_ff": pc.d_ff,
+            "window": pc.window,
+            "top_k": pc.top_k,
+            "batch": B,
+        },
+        "splits": splits,
+        "executables": sigs,
+        "fast_mode": fast,
+    }
+    with open(os.path.join(out, "artifacts.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] all artifacts written to {out} ({time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

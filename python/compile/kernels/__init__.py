@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp reference oracles."""
+
+from . import attention, expert_mlp, moe_gate, ref  # noqa: F401
+
+__all__ = ["attention", "expert_mlp", "moe_gate", "ref"]

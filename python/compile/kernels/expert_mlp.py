@@ -1,0 +1,95 @@
+"""Pallas gated expert-FFN accumulation kernel.
+
+This is the backbone's compute hot-spot and the L1 analogue of the paper's
+memory story: on the serving side (L3) whole experts page between host RAM
+and GPU VRAM; inside the kernel the same working-set discipline appears as
+*one expert's weights resident in VMEM per grid step* while the token tile
+stays pinned.
+
+  grid = (experts, token tiles)
+  step (e, tt): VMEM holds  h-tile [BLOCK_T, D],  w_in[e] [D, F],
+                w_out[e] [F, D],  gate column [BLOCK_T, 1]
+  out[tt] += gate[:, e] * relu(h @ w_in[e]) @ w_out[e]
+
+The output block index ignores `e`, so Pallas keeps the accumulator tile
+resident across the expert axis (revolving accumulation) — the classical
+"stationary output, streaming weights" schedule.  Both matmuls are
+MXU-shaped ([BLOCK_T,D]x[D,F] and [BLOCK_T,F]x[F,D]).  VMEM per step for
+the default backbone (D=128, F=64, BLOCK_T=64) is ~100 KiB.
+
+A `skip_zero_gate` refinement exploits MoE sparsity inside the kernel:
+when a whole token tile has zero gate weight for expert e (the common case
+— top-6 of 64), the FLOPs are skipped via lax.cond.  This mirrors the
+paper's premise that sparsity, not width, is what makes MoE servable.
+
+interpret=True: see attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expert_mlp_kernel(h_ref, gate_ref, w_in_ref, w_out_ref, o_ref, *, skip_zero_gate: bool):
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = h_ref[...]              # [bt, D]
+    g = gate_ref[...][:, 0]     # [bt]
+    w_in = w_in_ref[0]          # [D, F]
+    w_out = w_out_ref[0]        # [F, D]
+
+    def compute():
+        act = jnp.maximum(jnp.dot(h, w_in), 0.0)      # [bt, F]
+        return (jnp.dot(act, w_out) * g[:, None]).astype(o_ref.dtype)
+
+    if skip_zero_gate:
+        contrib = jax.lax.cond(
+            jnp.any(g != 0.0),
+            compute,
+            lambda: jnp.zeros_like(o_ref[...]),
+        )
+    else:
+        contrib = compute()
+    o_ref[...] += contrib
+
+
+def expert_mlp(
+    h: jax.Array,      # [T, D]
+    gate: jax.Array,   # [T, E] dense gate (zeros off the top-k)
+    w_in: jax.Array,   # [E, D, F]
+    w_out: jax.Array,  # [E, F, D]
+    block_t: int | None = None,
+    skip_zero_gate: bool = True,
+) -> jax.Array:
+    """Gated expert-FFN mixture via Pallas. -> [T, D]"""
+    t, d = h.shape
+    e = gate.shape[1]
+    f = w_in.shape[2]
+    if block_t is None:
+        block_t = t if t <= 64 else 64
+        while t % block_t:
+            block_t //= 2
+        block_t = max(block_t, 1)
+    grid = (e, t // block_t)
+    kernel = functools.partial(_expert_mlp_kernel, skip_zero_gate=skip_zero_gate)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda ee, tt: (tt, 0)),
+            pl.BlockSpec((block_t, 1), lambda ee, tt: (tt, ee)),
+            pl.BlockSpec((1, d, f), lambda ee, tt: (ee, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda ee, tt: (ee, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda ee, tt: (tt, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), h.dtype),
+        interpret=True,
+    )(h, gate, w_in, w_out)

@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each kernel's pytest suite sweeps
+shapes/dtypes with hypothesis and asserts allclose against these
+implementations.  They are deliberately written in the most obvious way —
+no tiling, no fusion — so a reviewer can audit them line by line.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(
+    q: jax.Array,  # [T, H, Dh]
+    k: jax.Array,  # [T, H, Dh]
+    v: jax.Array,  # [T, H, Dh]
+    mask: jax.Array,  # [T] 1.0 = real token, 0.0 = pad
+    causal: bool = False,
+) -> jax.Array:
+    """Masked multi-head attention, reference implementation. -> [T, H, Dh]"""
+    T, H, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, q.dtype))
+    # [H, T, T]
+    logits = jnp.einsum("thd,shd->hts", q, k) * scale
+    neg = jnp.asarray(-1e30, logits.dtype)
+    logits = jnp.where(mask[None, None, :] > 0, logits, neg)
+    if causal:
+        causal_m = jnp.tril(jnp.ones((T, T), bool))
+        logits = jnp.where(causal_m[None, :, :], logits, neg)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hts,shd->thd", w, v)
+
+
+def topk_gate_ref(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k router gate, reference. logits [T, E] -> (ids [T,k] i32,
+    weights [T,k] f32 = softmax over the selected logits)."""
+    vals, ids = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    return ids.astype(jnp.int32), w.astype(logits.dtype)
+
+
+def dense_gate_ref(logits: jax.Array, k: int) -> jax.Array:
+    """Dense [T, E] gate matrix: softmax-normalized weights on the top-k
+    entries of each row, zero elsewhere."""
+    ids, w = topk_gate_ref(logits, k)
+    T, E = logits.shape
+    g = jnp.zeros((T, E), logits.dtype)
+    rows = jnp.arange(T)[:, None]
+    return g.at[rows, ids].set(w)
+
+
+def expert_mlp_ref(
+    h: jax.Array,      # [T, D]
+    gate: jax.Array,   # [T, E] dense gate weights (mostly zero)
+    w_in: jax.Array,   # [E, D, F]
+    w_out: jax.Array,  # [E, F, D]
+) -> jax.Array:
+    """Gated mixture of expert FFNs, reference. -> [T, D]
+
+    out[t] = sum_e gate[t,e] * relu(h[t] @ w_in[e]) @ w_out[e]
+    """
+    # [E, T, F]
+    act = jax.nn.relu(jnp.einsum("td,edf->etf", h, w_in))
+    per_expert = jnp.einsum("etf,efd->etd", act, w_out)
+    return jnp.einsum("te,etd->td", gate, per_expert)
+
+
+def rmsnorm_ref(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g

@@ -1,0 +1,182 @@
+"""Expert-activation trace extraction (paper §4.1.2, Contribution 2).
+
+The paper runs 6,994 Puffin prompts (train) and 100 WebGLM-QA prompts
+(test) through DeepSeek-V2-Lite and records, per generated token: layer
+id, batch number, token, activated expert ids, and the token embedding —
+~66 M training trace points.
+
+Here we extract the same schema from the synthetic world (DESIGN.md §2/§6)
+in two modes:
+
+  * ``analytic`` (default): sample routing straight from the world model's
+    gumbel-perturbed router logits — fast, used for the bulk training set.
+  * ``backbone``: run the actual JAX backbone (prefill) and record its
+    *real* router decisions — used for an extra validation split proving
+    the predictor transfers to genuine model traces.
+
+Traces are written in the MBTR binary format shared with the Rust side
+(`rust/src/trace/store.rs` mirrors this layout):
+
+  header:  magic  u32 = 0x4D425452 ("MBTR" LE)
+           version u32 = 1
+           n_layers u16, n_experts u16, top_k u16, d_emb u16
+           n_prompts u32
+           flags u32  (bit0: embeddings present)
+  per prompt:
+           prompt_id u32, n_tokens u32
+           tokens      i32 [n_tokens]
+           embeddings  f32 [n_tokens, d_emb]          (if flag bit0)
+           experts     u8  [n_tokens, n_layers, top_k]
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+from .world import CorpusConfig, PromptSampler, World
+
+MAGIC = 0x4D425452
+VERSION = 1
+
+
+@dataclass
+class PromptTrace:
+    prompt_id: int
+    tokens: np.ndarray      # [T] i32
+    embeddings: np.ndarray  # [T, D] f32
+    experts: np.ndarray     # [T, L, K] u8
+
+
+def sample_prompt_trace(
+    world: World, sampler: PromptSampler, prompt_id: int, rng: np.random.Generator
+) -> PromptTrace:
+    """Analytic mode: routing sampled from the world's router logits."""
+    toks, _mix = sampler.sample_prompt()
+    emb = world.token_emb[toks]  # [T, D]
+    route = world.route_vectors(emb)  # token-embedding/context blend
+    L, K = world.cfg.n_layers, world.cfg.top_k
+    T = toks.shape[0]
+    experts = np.empty((T, L, K), dtype=np.uint8)
+    for l in range(L):
+        experts[:, l, :] = world.sample_topk(route, l, rng).astype(np.uint8)
+    return PromptTrace(prompt_id, toks.astype(np.int32), emb, experts)
+
+
+def backbone_prompt_trace(
+    world: World,
+    wlist,
+    prefill_fn,
+    sampler: PromptSampler,
+    prompt_id: int,
+) -> PromptTrace:
+    """Backbone mode: routing recorded from the real JAX model."""
+    import jax.numpy as jnp
+
+    c = world.cfg
+    toks, _ = sampler.sample_prompt()
+    P = min(len(toks), c.max_seq)
+    toks = toks[:P]
+    pad = np.zeros(c.max_seq, np.int32)
+    pad[:P] = toks
+    _kv, ids, x0, _lg = prefill_fn(wlist, jnp.asarray(pad), jnp.int32(P))
+    ids = np.asarray(ids)   # [L, maxseq, K]
+    x0 = np.asarray(x0)     # [maxseq, D]
+    experts = np.transpose(ids[:, :P, :], (1, 0, 2)).astype(np.uint8)  # [T,L,K]
+    return PromptTrace(prompt_id, toks.astype(np.int32), x0[:P], experts)
+
+
+def write_traces(path: str, world: World, traces: "list[PromptTrace]", with_emb: bool = True) -> None:
+    c = world.cfg
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(
+            struct.pack(
+                "<IIHHHHII",
+                MAGIC,
+                VERSION,
+                c.n_layers,
+                c.n_experts,
+                c.top_k,
+                c.d_model,
+                len(traces),
+                1 if with_emb else 0,
+            )
+        )
+        for tr in traces:
+            T = len(tr.tokens)
+            f.write(struct.pack("<II", tr.prompt_id, T))
+            f.write(np.ascontiguousarray(tr.tokens, "<i4").tobytes())
+            if with_emb:
+                f.write(np.ascontiguousarray(tr.embeddings, "<f4").tobytes())
+            assert tr.experts.shape == (T, c.n_layers, c.top_k)
+            f.write(np.ascontiguousarray(tr.experts, np.uint8).tobytes())
+
+
+def read_traces(path: str) -> "tuple[dict, list[PromptTrace]]":
+    with open(path, "rb") as f:
+        hdr = struct.unpack("<IIHHHHII", f.read(24))
+        magic, version, L, E, K, D, n_prompts, flags = hdr
+        assert magic == MAGIC and version == VERSION, "bad trace file"
+        meta = dict(
+            n_layers=L, n_experts=E, top_k=K, d_emb=D, n_prompts=n_prompts, flags=flags
+        )
+        out = []
+        for _ in range(n_prompts):
+            pid, T = struct.unpack("<II", f.read(8))
+            toks = np.frombuffer(f.read(4 * T), "<i4")
+            emb = (
+                np.frombuffer(f.read(4 * T * D), "<f4").reshape(T, D)
+                if flags & 1
+                else np.zeros((T, D), np.float32)
+            )
+            ex = np.frombuffer(f.read(T * L * K), np.uint8).reshape(T, L, K)
+            out.append(PromptTrace(pid, toks.copy(), emb.copy(), ex.copy()))
+    return meta, out
+
+
+def generate_split(
+    world: World,
+    split: str,
+    n_prompts: int,
+    out_path: str,
+    corpus_seed: int = 7,
+    mode: str = "analytic",
+) -> "list[PromptTrace]":
+    ccfg = CorpusConfig(seed=corpus_seed, n_prompts=n_prompts, split=("test" if split == "test" else "train"))
+    sampler = PromptSampler(world, ccfg)
+    rng = np.random.default_rng(world.cfg.seed ^ hash(split) & 0xFFFF_FFFF)
+
+    prefill_fn = None
+    wlist = None
+    if mode == "backbone":
+        import jax
+        import jax.numpy as jnp
+
+        from . import model as model_mod
+        from .world import build_backbone_params
+
+        params = build_backbone_params(world)
+        wlist = [jnp.asarray(params[n]) for n, _ in model_mod.backbone_param_specs(world.cfg)]
+        prefill_fn = jax.jit(
+            lambda wl, t, n: model_mod.backbone_prefill(world.cfg, wl, t, n)
+        )
+
+    traces = []
+    base = {"train": 0, "val": 1_000_000, "test": 2_000_000, "backbone_val": 3_000_000}.get(split, 4_000_000)
+    for i in range(n_prompts):
+        if mode == "backbone":
+            tr = backbone_prompt_trace(world, wlist, prefill_fn, sampler, base + i)
+        else:
+            tr = sample_prompt_trace(world, sampler, base + i, rng)
+        traces.append(tr)
+    write_traces(out_path, world, traces)
+    return traces
+
+
+def trace_point_count(traces: "list[PromptTrace]") -> int:
+    """Number of (token, layer) trace points, the unit the paper counts."""
+    return sum(len(t.tokens) for t in traces) * (traces[0].experts.shape[1] if traces else 0)

@@ -1,0 +1,503 @@
+"""Synthetic "semantic world" model for MoE-Beyond reproduction.
+
+The paper extracts expert-activation traces from DeepSeek-V2-Lite (27 MoE
+layers, 64 routed experts, top-6 routing) over the Puffin / WebGLM-QA
+corpora.  We do not have that model or those corpora; per DESIGN.md §2 we
+substitute a seeded *world model* that reproduces the statistical structure
+the predictor exploits:
+
+  * K topics; each (topic, layer) has a sparse Dirichlet expert-affinity
+    vector (4-8 dominant experts) -> single-prompt skew (paper Fig 2).
+  * Topic->expert maps are balanced across the pool -> cross-prompt
+    uniformity (paper Fig 1).
+  * Affinities at layer l+1 mix layer l's (permuted) affinities with fresh
+    draws -> cross-layer reuse bands (paper Fig 3).
+  * Prompts draw 1-3 topic mixtures; token embeddings are topic embeddings
+    plus noise -> a learnable embedding->experts mapping, which is exactly
+    the signal MoE-Beyond's transformer learns.
+
+The same world parameterizes the from-scratch MoE backbone (see model.py):
+its router weights are constructed from the topic affinities, so traces
+produced by *running the backbone HLO* exhibit the same statistics as
+traces sampled analytically from the world.
+
+Everything is derived from a single integer seed and exported to
+``artifacts/world.json`` (metadata + RNG seeds) and
+``artifacts/backbone_weights.bin`` (constructed backbone params), so the
+Rust side can regenerate identical workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WorldConfig:
+    """Dimensions of the synthetic world + backbone.
+
+    Defaults mirror DeepSeek-V2-Lite's routing topology (27 MoE layers,
+    64 routed experts, top-6, 2 shared experts) at reduced width.
+    """
+
+    seed: int = 20250710
+    n_layers: int = 27          # MoE layers (paper: 27)
+    n_experts: int = 64         # routed experts per layer (paper: 64)
+    top_k: int = 6              # experts activated per token (paper: 6)
+    n_shared: int = 2           # shared (always-active) experts (paper: 2)
+    n_topics: int = 40          # latent semantic topics
+    d_model: int = 128          # backbone embedding width (paper: 2048)
+    vocab_size: int = 4096      # synthetic vocabulary
+    working_set: int = 10       # experts per (topic, layer) working set
+    weight_alpha: float = 1.2   # Dirichlet for within-working-set weights
+    layer_mix: float = 0.62     # fraction of working set carried to next layer
+    router_temp: float = 1.0    # router logit temperature
+    router_noise: float = 0.5   # gumbel noise scale on analytic router logits
+    ctx_alpha: float = 0.75     # EMA coefficient of the routing context
+    route_beta: float = 0.6     # token-embedding share of the routing vector
+                                # (rest is the EMA context; token-level
+                                # idiosyncrasy is the dynamic the learned
+                                # predictor captures and heuristics cannot)
+    score_floor: float = 1e-4   # affinity floor (sets in/out logit gap)
+    topic_tokens_frac: float = 0.75  # fraction of vocab assigned to topics
+    # backbone transformer dims
+    n_heads: int = 4
+    d_head: int = 32
+    d_expert: int = 64          # routed expert FFN hidden dim
+    d_shared: int = 128         # shared expert FFN hidden dim
+    max_seq: int = 160          # KV buffer length in the decode artifact
+
+    def validate(self) -> None:
+        assert self.n_experts <= 64, "ExpertSet on the Rust side is a u64 bitset"
+        assert self.top_k < self.n_experts
+        assert self.n_heads * self.d_head == self.d_model
+        assert 0.0 <= self.layer_mix <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# World construction
+# ---------------------------------------------------------------------------
+
+
+class World:
+    """Seeded synthetic world: topics, affinities, embeddings, vocab."""
+
+    def __init__(self, cfg: WorldConfig):
+        cfg.validate()
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+
+        # --- topic -> expert working sets, per layer, with cross-layer carry.
+        #
+        # Each (topic, layer) owns a *working set* of `working_set` experts
+        # with Dirichlet-decaying weights; everything else sits at the
+        # score floor.  This is what produces the paper's three phenomena:
+        # Fig 2 (single-prompt skew: top-6 routing stays inside the
+        # prompt's 10-25-expert topical working set), Fig 3 (reuse bands:
+        # `layer_mix` of each working set is carried — through a per-layer
+        # expert permutation — to the next layer), and Fig 1 (cross-prompt
+        # uniformity: working sets are assigned with greedy load balancing
+        # so every expert serves ~W*K/E topics).
+        L, K, E = cfg.n_layers, cfg.n_topics, cfg.n_experts
+        W = cfg.working_set
+        affin = np.full((L, K, E), cfg.score_floor, dtype=np.float64)
+        ws = np.zeros((L, K, W), dtype=np.int64)
+        self.layer_perm = np.stack([rng.permutation(E) for _ in range(L)], axis=0)
+        inv_perm = np.empty_like(self.layer_perm)
+        for l in range(L):
+            inv_perm[l, self.layer_perm[l]] = np.arange(E)
+
+        n_carry = int(round(cfg.layer_mix * W))
+        for l in range(L):
+            # `load` tracks expected *weighted* activations per expert so the
+            # multi-prompt marginal comes out flat (paper Fig 1's 800-1400
+            # band), not just working-set membership counts.
+            load = np.zeros(E)
+            for t in rng.permutation(K):
+                chosen: list[int] = []
+                if l > 0:
+                    # carry a layer_mix fraction of the previous working set,
+                    # relabelled by this layer's expert permutation
+                    prev = self.layer_perm[l][ws[l - 1, t]]
+                    keep = rng.permutation(W)[:n_carry]
+                    chosen = list(dict.fromkeys(prev[keep].tolist()))
+                # fill the rest greedily from the least-loaded experts
+                free = [e for e in np.argsort(load + rng.uniform(0, 0.05, E)) if e not in chosen]
+                chosen = (chosen + [int(e) for e in free])[:W]
+                ws[l, t] = np.asarray(chosen)
+                # decaying weights; the LARGEST weight goes to the currently
+                # least-loaded chosen expert, equalizing *activation*
+                # popularity.  Load is incremented by the empirical
+                # P(in top-6 | weight rank) for this noise level (measured
+                # offline, 20k gumbel trials) — activation probability, not
+                # gate weight, is what Fig 1 histograms.
+                p_top6 = np.array(
+                    [0.984, 0.955, 0.909, 0.834, 0.734, 0.612, 0.444, 0.290, 0.166, 0.068]
+                )
+                p_rank = np.interp(np.linspace(0, 9, W), np.arange(10), p_top6)
+                wgt = np.sort(rng.dirichlet([cfg.weight_alpha] * W))[::-1]
+                order = np.argsort(load[ws[l, t]])  # least-loaded first
+                assigned = np.empty(W)
+                assigned[order] = wgt
+                rank_of = np.empty(W, dtype=int)
+                rank_of[order] = np.arange(W)       # weight rank per member
+                affin[l, t, ws[l, t]] = np.maximum(assigned, cfg.score_floor * 2)
+                load[ws[l, t]] += p_rank[rank_of]
+        affin /= affin.sum(axis=2, keepdims=True)
+        self.affinity = affin.astype(np.float32)
+        self.working_sets = ws.astype(np.int32)
+        self._popularity = self.affinity.mean(axis=1)  # [L, E]
+
+        # --- topic embeddings: exactly orthonormal (K <= d_model), so a
+        # pure-topic token produces zero logit leakage into other topics.
+        assert K <= cfg.d_model
+        q_mat, _ = np.linalg.qr(rng.normal(size=(cfg.d_model, K)))
+        topics = q_mat.T  # [K, D], orthonormal rows
+        self.topic_emb = topics.astype(np.float32)
+
+        V = cfg.vocab_size
+        n_topic_tok = int(V * cfg.topic_tokens_frac)
+        # token -> topic assignment (-1 = common/background token)
+        tok_topic = np.full(V, -1, dtype=np.int32)
+        tok_topic[:n_topic_tok] = rng.integers(0, K, size=n_topic_tok)
+        self.token_topic = tok_topic
+
+        # per-token noise has *norm* ~0.35 (not per-dim std), so topical
+        # tokens stay topic-dominated after normalization
+        emb = rng.normal(size=(V, cfg.d_model)) * (0.35 / np.sqrt(cfg.d_model))
+        for v in range(n_topic_tok):
+            emb[v] += topics[tok_topic[v]]
+        emb /= np.maximum(np.linalg.norm(emb, axis=1, keepdims=True), 1e-6)
+        self.token_emb = emb.astype(np.float32)
+
+        # --- analytic router weights: logits(l) = W_r[l] @ h ; constructed so
+        # a hidden state aligned with topic t yields that topic's (shifted)
+        # log-affinities: zero outside the working set, up to
+        # -log(score_floor) ~ 9 nats inside it.  Topic rows are orthonormal,
+        # so scores superpose cleanly for topic mixtures.
+        log_aff = np.log(affin) - np.log(cfg.score_floor)  # >= 0, 0 off-set
+        self.router_scores = log_aff.astype(np.float32)    # [L, K, E]
+        self.router_w = np.einsum("lte,td->led", log_aff, topics).astype(np.float32)
+
+        self._rng = rng
+
+    # -- analytic routing -------------------------------------------------
+
+    def context_embeddings(self, emb: np.ndarray) -> np.ndarray:
+        """EMA context stream over token embeddings (rows), normalized.
+
+        MoE routers condition on the *hidden state*, which carries prompt
+        context through attention — not on the raw token embedding.  The
+        analytic sampler models that with an exponential moving average:
+        ctx_t = a*ctx_{t-1} + (1-a)*emb_t, renormalized.  Non-topical
+        (common) tokens thereby route inside the prompt's topical working
+        set, exactly like filler words do in a real MoE (paper Fig 2).
+        """
+        a = self.cfg.ctx_alpha
+        out = np.empty_like(emb)
+        ctx = emb[0]
+        for t in range(emb.shape[0]):
+            ctx = a * ctx + (1.0 - a) * emb[t]
+            ctx = ctx / max(np.linalg.norm(ctx), 1e-6)
+            out[t] = ctx
+        return out
+
+    def router_logits(self, emb: np.ndarray, layer: int) -> np.ndarray:
+        """Analytic router logits for (context-)embedding rows at ``layer``."""
+        return emb @ self.router_w[layer].T / self.cfg.router_temp
+
+    def route_vectors(self, emb: np.ndarray) -> np.ndarray:
+        """The vectors routing actually conditions on: a normalized blend
+        of the token embedding (token-level dynamics) and the EMA context
+        (topical working set) — the residual-stream analogue."""
+        b = self.cfg.route_beta
+        ctx = self.context_embeddings(emb)
+        route = b * emb + (1.0 - b) * ctx
+        route /= np.maximum(np.linalg.norm(route, axis=1, keepdims=True), 1e-6)
+        return route
+
+    def sample_topk(
+        self, emb: np.ndarray, layer: int, rng: np.random.Generator
+    ) -> np.ndarray:
+        """Sample top-k expert ids (gumbel-perturbed analytic logits)."""
+        logits = self.router_logits(emb, layer)
+        g = rng.gumbel(size=logits.shape) * self.cfg.router_noise
+        pert = logits + g
+        k = self.cfg.top_k
+        idx = np.argpartition(-pert, k, axis=-1)[..., :k]
+        # sort by logit descending for determinism of ordering
+        order = np.argsort(-np.take_along_axis(pert, idx, -1), axis=-1)
+        return np.take_along_axis(idx, order, -1).astype(np.int32)
+
+    # -- export ------------------------------------------------------------
+
+    def manifest(self) -> dict:
+        c = self.cfg
+        return {
+            "format": "moe-beyond-world-v1",
+            "seed": c.seed,
+            "n_layers": c.n_layers,
+            "n_experts": c.n_experts,
+            "top_k": c.top_k,
+            "n_shared": c.n_shared,
+            "n_topics": c.n_topics,
+            "d_model": c.d_model,
+            "vocab_size": c.vocab_size,
+            "working_set": c.working_set,
+            "weight_alpha": c.weight_alpha,
+            "score_floor": c.score_floor,
+            "layer_mix": c.layer_mix,
+            "router_temp": c.router_temp,
+            "router_noise": c.router_noise,
+            "n_heads": c.n_heads,
+            "d_head": c.d_head,
+            "d_expert": c.d_expert,
+            "d_shared": c.d_shared,
+            "max_seq": c.max_seq,
+            "fingerprint": self.fingerprint(),
+        }
+
+    def fingerprint(self) -> str:
+        """Stable fingerprint tying predictor weights to this world."""
+        h = np.float64(0.0)
+        h += float(np.abs(self.affinity).sum())
+        h += float(np.abs(self.token_emb).sum()) * 1e-3
+        return f"w{self.cfg.seed}-{h:.6e}"
+
+    def save(self, path: str) -> None:
+        """world.json + world.npz (affinities/embeddings for Rust+python)."""
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.manifest(), f, indent=2)
+        base = os.path.splitext(path)[0]
+        # Raw little-endian blobs: trivially parseable from Rust.
+        blobs = {
+            "affinity": self.affinity,          # [L,K,E] f32
+            "topic_emb": self.topic_emb,        # [K,D]   f32
+            "token_emb": self.token_emb,        # [V,D]   f32
+            "token_topic": self.token_topic,    # [V]     i32
+            "router_w": self.router_w,          # [L,E,D] f32
+            "router_scores": self.router_scores,  # [L,K,E] f32
+            "working_sets": self.working_sets,  # [L,K,W] i32
+            "layer_perm": self.layer_perm.astype(np.int32),  # [L,E]
+        }
+        man = {}
+        off = 0
+        with open(base + ".bin", "wb") as f:
+            for name, arr in blobs.items():
+                raw = np.ascontiguousarray(arr).tobytes()
+                f.write(raw)
+                man[name] = {
+                    "offset": off,
+                    "nbytes": len(raw),
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                }
+                off += len(raw)
+        with open(base + ".blobs.json", "w") as f:
+            json.dump(man, f, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Prompt corpus ("puffin-syn" train split / "webglm-syn" test split)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    """Synthetic prompt corpus: topic-mixture prompts, multi-turn shaped.
+
+    Train and test splits draw from disjoint topic-mixture distributions
+    (test mixes lean on a held-out topic subset) to model the paper's
+    Puffin -> WebGLM-QA domain shift.
+    """
+
+    seed: int = 7
+    n_prompts: int = 600
+    min_tokens: int = 48
+    max_tokens: int = 200
+    max_topics_per_prompt: int = 3
+    common_token_prob: float = 0.22
+    split: str = "train"        # "train" | "test"
+    held_out_frac: float = 0.25  # topics reserved for extra weight in test
+
+
+class PromptSampler:
+    """Samples synthetic prompts (token-id sequences + latent topic mix)."""
+
+    def __init__(self, world: World, cfg: CorpusConfig):
+        self.world = world
+        self.cfg = cfg
+        self.rng = np.random.default_rng(
+            (world.cfg.seed * 1_000_003) ^ (cfg.seed * 97 + (0 if cfg.split == "train" else 1))
+        )
+        K = world.cfg.n_topics
+        n_held = max(1, int(K * cfg.held_out_frac))
+        self.held_out = np.arange(K - n_held, K)
+        self.main = np.arange(0, K - n_held)
+        self._deck: list[int] = []
+
+    def _next_from_deck(self) -> int:
+        # Primary topics cycle a shuffled deck: main topics appear at fair
+        # share (deck-balanced -> the paper's Fig-1 uniformity over the
+        # training corpus); held-out topics appear at ~1/3 of fair share —
+        # frequent enough for the predictor to identify the router map on
+        # their subspace, rare enough that the EAMC holds almost no
+        # matching request sketches (the Puffin -> WebGLM-QA shift).
+        if not self._deck:
+            deck = list(self.main) * 3 + list(self.held_out)
+            self.rng.shuffle(deck)
+            self._deck = deck
+        return int(self._deck.pop())
+
+    def _draw_topics(self) -> np.ndarray:
+        cfg, rng = self.cfg, self.rng
+        n = int(rng.integers(1, cfg.max_topics_per_prompt + 1))
+        if cfg.split == "test":
+            # test prompts mix held-out topics EXCLUSIVELY: request-level
+            # sketches from training match them poorly, as in the paper
+            out = list(rng.choice(self.held_out, size=min(n, len(self.held_out)), replace=False))
+            return np.asarray(out)
+        primary = self._next_from_deck()
+        if n == 1:
+            return np.asarray([primary])
+        rest = [t for t in range(self.world.cfg.n_topics) if t != primary]
+        extra = rng.choice(rest, size=n - 1, replace=False)
+        return np.concatenate([[primary], extra])
+
+    def sample_prompt(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (token_ids [T] i32, topic_mix [n_topics] f32)."""
+        w, cfg, rng = self.world, self.cfg, self.rng
+        topics = self._draw_topics()
+        weights = rng.dirichlet([2.0] * len(topics))
+        T = int(rng.integers(cfg.min_tokens, cfg.max_tokens + 1))
+
+        tok_topic = w.token_topic
+        V = w.cfg.vocab_size
+        common_pool = np.nonzero(tok_topic < 0)[0]
+        topic_pools = [np.nonzero(tok_topic == t)[0] for t in topics]
+
+        toks = np.empty(T, dtype=np.int32)
+        # Multi-turn structure: segments of 8-24 tokens each biased to one
+        # topic of the mixture (mimics conversation turns).
+        i = 0
+        while i < T:
+            seg = int(rng.integers(8, 25))
+            t_idx = int(rng.choice(len(topics), p=weights))
+            pool = topic_pools[t_idx]
+            for j in range(i, min(T, i + seg)):
+                if rng.random() < cfg.common_token_prob or len(pool) == 0:
+                    toks[j] = rng.choice(common_pool)
+                else:
+                    toks[j] = rng.choice(pool)
+            i += seg
+        mix = np.zeros(w.cfg.n_topics, dtype=np.float32)
+        mix[topics] = weights.astype(np.float32)
+        return toks, mix
+
+
+# ---------------------------------------------------------------------------
+# Backbone parameter construction
+# ---------------------------------------------------------------------------
+
+
+def build_backbone_params(world: World) -> "dict[str, np.ndarray]":
+    """Construct the from-scratch MoE backbone's parameters.
+
+    Router weights come straight from the world's analytic router; the rest
+    (attention, expert FFNs, shared experts, embeddings, LM head) are
+    random but small so the residual stream stays dominated by the token
+    embedding — that is what keeps *actual* backbone routing statistically
+    aligned with the analytic world sampler (DESIGN.md §6).
+    """
+    c = world.cfg
+    rng = np.random.default_rng(c.seed + 0xBACB0)
+    L, D, E = c.n_layers, c.d_model, c.n_experts
+    H, Dh, F, Fs = c.n_heads, c.d_head, c.d_expert, c.d_shared
+
+    def glorot(*shape, scale=1.0):
+        fan = shape[-1] + shape[-2] if len(shape) >= 2 else shape[-1]
+        return (rng.normal(size=shape) * scale * np.sqrt(2.0 / fan)).astype(
+            np.float32
+        )
+
+    # Attention value->output is an (orthogonal, scaled-transpose) pair:
+    # wv[l] = Q_l, wo[l] = gamma * Q_l^T.  Attention then *mixes context*
+    # (out ~ gamma * attention-weighted average of past hidden states)
+    # instead of rotating the residual stream into a random basis.  This
+    # keeps rmsnorm(h) topic-aligned at every depth, which is what makes
+    # the backbone's REAL router decisions track the world's working sets
+    # (test_backbone_routing_tracks_world) — the residual-stream analogue
+    # of the analytic sampler's EMA context.
+    gamma = 0.55
+    wv = np.empty((L, D, H * Dh), dtype=np.float32)
+    wo = np.empty((L, H * Dh, D), dtype=np.float32)
+    for l in range(L):
+        q_mat, _ = np.linalg.qr(rng.normal(size=(D, H * Dh)))
+        wv[l] = q_mat
+        wo[l] = gamma * q_mat.T
+
+    p = {
+        "tok_emb": world.token_emb.copy(),                 # [V, D]
+        "router_w": world.router_w.copy(),                 # [L, E, D]
+        "wq": glorot(L, D, H * Dh, scale=0.5),
+        "wk": glorot(L, D, H * Dh, scale=0.5),
+        "wv": wv,
+        "wo": wo,
+        "ln1": np.ones((L, D), dtype=np.float32),
+        "ln2": np.ones((L, D), dtype=np.float32),
+        # routed experts: per layer, per expert, two-layer FFN.  Output
+        # scales are small so 27 layers of FFN noise never swamp the
+        # topical direction of the residual stream.
+        "w_in": glorot(L, E, D, F, scale=0.4),             # [L,E,D,F]
+        "w_out": glorot(L, E, F, D, scale=0.12),           # [L,E,F,D]
+        # shared experts (always active)
+        "ws_in": glorot(L, c.n_shared, D, Fs, scale=0.4),
+        "ws_out": glorot(L, c.n_shared, Fs, D, scale=0.1),
+        "ln_f": np.ones((D,), dtype=np.float32),
+        # weight-tied LM head (standard practice): logits = h @ tok_emb^T.
+        # Tying keeps greedy generations ON the topical token manifold, so
+        # decode-phase routing stays predictable — with a random head the
+        # model free-runs into arbitrary token sequences whose routing no
+        # predictor could anticipate (E2E ablation in EXPERIMENTS.md).
+        "lm_head": (world.token_emb.T * 1.2).astype(np.float32),
+    }
+    return p
+
+
+PARAM_ORDER = [
+    "tok_emb", "router_w", "wq", "wk", "wv", "wo", "ln1", "ln2",
+    "w_in", "w_out", "ws_in", "ws_out", "ln_f", "lm_head",
+]
+
+
+def flatten_params(params: "dict[str, np.ndarray]", order=None) -> Tuple[np.ndarray, list]:
+    """Flatten params to one little-endian f32 vector + manifest entries."""
+    order = order or PARAM_ORDER
+    parts, man, off = [], [], 0
+    for name in order:
+        arr = np.ascontiguousarray(params[name], dtype=np.float32)
+        parts.append(arr.reshape(-1))
+        man.append(
+            {"name": name, "offset": off, "size": int(arr.size), "shape": list(arr.shape)}
+        )
+        off += arr.size
+    return np.concatenate(parts), man
+
+
+def save_flat(path: str, flat: np.ndarray, manifest: list, extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    flat.astype("<f4").tofile(path)
+    meta = {"total_f32": int(flat.size), "params": manifest}
+    meta.update(extra or {})
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=2)

@@ -1,0 +1,264 @@
+"""L2 model contracts: predictor + backbone shapes, determinism, training
+step behaviour, weight export round-trips, and backbone/world routing
+alignment (the property that makes the whole reproduction hang together).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as model_mod
+from compile import train as train_mod
+from compile import tracegen
+from compile.model import PredictorConfig
+from compile.world import CorpusConfig, PromptSampler, World, WorldConfig, build_backbone_params
+
+PC = PredictorConfig()
+
+
+@pytest.fixture(scope="module")
+def world():
+    return World(WorldConfig())
+
+
+@pytest.fixture(scope="module")
+def bb_wlist(world):
+    params = build_backbone_params(world)
+    return [jnp.asarray(params[n]) for n, _ in model_mod.backbone_param_specs(world.cfg)]
+
+
+@pytest.fixture(scope="module")
+def pflat():
+    return jnp.asarray(model_mod.predictor_flatten(PC, model_mod.predictor_init(PC, 0))[0])
+
+
+def _inputs(seed=0, t=None):
+    t = t or PC.window
+    rng = np.random.default_rng(seed)
+    emb = jnp.asarray(rng.normal(size=(t, PC.d_tok)), jnp.float32)
+    lids = jnp.asarray(rng.integers(0, PC.n_model_layers, t), jnp.int32)
+    mask = jnp.asarray((np.arange(t) < t - 3).astype(np.float32))
+    return emb, lids, mask
+
+
+def test_predictor_shapes(pflat):
+    emb, lids, mask = _inputs()
+    out = model_mod.predictor_forward(PC, pflat, emb, lids, mask)
+    assert out.shape == (PC.window, PC.n_experts)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_predictor_deterministic(pflat):
+    emb, lids, mask = _inputs()
+    a = model_mod.predictor_forward(PC, pflat, emb, lids, mask)
+    b = model_mod.predictor_forward(PC, pflat, emb, lids, mask)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_predictor_flat_equals_list_params(pflat):
+    """AOT per-param convention must match the flat-vector convention."""
+    emb, lids, mask = _inputs()
+    specs = model_mod.predictor_param_specs(PC)
+    off, wlist = 0, []
+    flat = np.asarray(pflat)
+    for name, shape in specs:
+        n = int(np.prod(shape))
+        wlist.append(jnp.asarray(flat[off : off + n].reshape(shape)))
+        off += n
+    a = model_mod.predictor_forward(PC, pflat, emb, lids, mask)
+    b = model_mod.predictor_forward(PC, wlist, emb, lids, mask)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_predictor_padded_positions_suppressed(pflat):
+    emb, lids, mask = _inputs()
+    out = np.asarray(model_mod.predictor_forward(PC, pflat, emb, lids, mask))
+    pad = np.asarray(mask) == 0
+    assert (out[pad] <= -29.9).all()
+
+
+def test_predictor_layer_id_changes_output(pflat):
+    emb, _, mask = _inputs()
+    a = model_mod.predictor_forward(PC, pflat, emb, jnp.zeros(PC.window, jnp.int32), mask)
+    b = model_mod.predictor_forward(PC, pflat, emb, jnp.full((PC.window,), 13, jnp.int32), mask)
+    assert np.abs(np.asarray(a) - np.asarray(b)).max() > 1e-4
+
+
+def test_predictor_all_layers_consistent(pflat):
+    emb, _, mask = _inputs()
+    allp = model_mod.predictor_forward_all_layers(PC, pflat, emb, mask)
+    assert allp.shape == (PC.n_model_layers, PC.window, PC.n_experts)
+    one = model_mod.predictor_forward(
+        PC, pflat, emb, jnp.full((PC.window,), 5, jnp.int32), mask
+    )
+    assert_allclose(np.asarray(allp[5]), np.asarray(one), rtol=1e-4, atol=1e-4)
+
+
+def test_predictor_dropout_train_mode_differs(pflat):
+    emb, lids, mask = _inputs()
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    a = model_mod.predictor_forward(PC, pflat, emb, lids, mask, train=True, rng=k1)
+    b = model_mod.predictor_forward(PC, pflat, emb, lids, mask, train=True, rng=k2)
+    assert np.abs(np.asarray(a) - np.asarray(b)).max() > 1e-4
+
+
+def test_predictor_weight_export_roundtrip(tmp_path):
+    params = model_mod.predictor_init(PC, 3)
+    flat, man = model_mod.predictor_flatten(PC, params)
+    # round-trip through the binary file format train.py emits
+    p = tmp_path / "w.bin"
+    flat.astype("<f4").tofile(p)
+    back = np.fromfile(p, "<f4")
+    assert np.array_equal(back, flat)
+    total = sum(m["size"] for m in man)
+    assert total == flat.size == sum(
+        int(np.prod(s)) for _, s in model_mod.predictor_param_specs(PC)
+    )
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_traces(world):
+    s = PromptSampler(world, CorpusConfig(n_prompts=6, min_tokens=40, max_tokens=60))
+    rng = np.random.default_rng(0)
+    return [tracegen.sample_prompt_trace(world, s, i, rng) for i in range(6)]
+
+
+def test_train_loss_decreases(tiny_traces, tmp_path):
+    tc = train_mod.TrainConfig(
+        batch_size=8, steps_per_epoch=30, max_epochs=1, val_batches=2, log_every=5
+    )
+    _, log = train_mod.train_predictor(
+        PC, tc, tiny_traces, tiny_traces, str(tmp_path), "test-fp", quiet=True
+    )
+    losses = [s["loss"] for s in log["train_steps"]]
+    assert losses[-1] < losses[0]
+    assert (tmp_path / "predictor_weights.bin").exists()
+    assert (tmp_path / "training_log.json").exists()
+
+
+def test_trace_sampler_batch_shapes(tiny_traces):
+    s = train_mod.TraceSampler(tiny_traces, PC, 0)
+    emb, lids, mask, y = s.batch(4)
+    assert emb.shape == (4, PC.window, PC.d_tok)
+    assert lids.shape == (4, PC.window)
+    assert y.shape == (4, PC.window, PC.n_experts)
+    # every real position has exactly top_k active experts
+    for b in range(4):
+        real = mask[b] > 0
+        assert np.allclose(y[b, real].sum(-1), PC.top_k)
+        assert (lids[b] == lids[b, 0]).all()  # one layer per sample
+
+
+def test_macro_f1_perfect_and_zero():
+    tp = np.full(64, 10.0)
+    assert train_mod.macro_f1(tp, np.zeros(64), np.zeros(64)) == pytest.approx(1.0)
+    assert train_mod.macro_f1(np.zeros(64), np.zeros(64), tp) == pytest.approx(0.0)
+
+
+def test_adamw_moves_toward_minimum():
+    tc = train_mod.TrainConfig()
+    params = {"w": jnp.asarray([4.0, -2.0])}
+    state = train_mod.adamw_init(params)
+    lrs = {"w": 0.1}
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, state, _ = train_mod.adamw_update(params, grads, state, lrs, tc)
+    assert np.abs(np.asarray(params["w"])).max() < 0.5
+
+
+def test_grad_clip_applied():
+    tc = train_mod.TrainConfig(clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = train_mod.adamw_init(params)
+    _, _, gnorm = train_mod.adamw_update(
+        params, {"w": jnp.asarray([100.0, 0.0, 0.0])}, state, {"w": 1e-4}, tc
+    )
+    assert float(gnorm) == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# backbone
+# ---------------------------------------------------------------------------
+
+
+def test_backbone_prefill_shapes(world, bb_wlist):
+    c = world.cfg
+    P = c.max_seq
+    toks = jnp.asarray(np.arange(P) % 50, jnp.int32)
+    kv, ids, x0, logits = model_mod.backbone_prefill(c, bb_wlist, toks, jnp.int32(20))
+    assert kv.shape == (c.n_layers, 2, c.max_seq, c.n_heads * c.d_head)
+    assert ids.shape == (c.n_layers, P, c.top_k)
+    assert x0.shape == (P, c.d_model)
+    assert logits.shape == (c.vocab_size,)
+
+
+def test_backbone_decode_step_advances(world, bb_wlist):
+    c = world.cfg
+    P = c.max_seq
+    toks = jnp.asarray(np.arange(P) % 50, jnp.int32)
+    kv, _, _, _ = model_mod.backbone_prefill(c, bb_wlist, toks, jnp.int32(10))
+    kv2, logits, ids, emb = model_mod.backbone_decode_step(
+        c, bb_wlist, kv, jnp.int32(10), jnp.int32(7)
+    )
+    assert kv2.shape == kv.shape
+    assert ids.shape == (c.n_layers, c.top_k)
+    # KV written at pos 10
+    assert np.abs(np.asarray(kv2[:, :, 10, :])).max() > 0
+    # decode ids are valid experts, unique per layer
+    ids = np.asarray(ids)
+    assert (ids >= 0).all() and (ids < c.n_experts).all()
+    for l in range(c.n_layers):
+        assert len(set(ids[l].tolist())) == c.top_k
+
+
+def test_backbone_routing_tracks_world(world, bb_wlist):
+    """The constructed backbone's actual routing must stay inside the
+    world's topical working sets most of the time — the alignment that
+    lets one predictor serve both trace sources (DESIGN.md §6)."""
+    c = world.cfg
+    s = PromptSampler(world, CorpusConfig(n_prompts=3, min_tokens=60, max_tokens=100))
+    hits, total = 0, 0
+    for i in range(3):
+        toks, mix = s.sample_prompt()
+        topics = np.nonzero(mix)[0]
+        P = min(len(toks), c.max_seq)
+        pad = np.zeros(c.max_seq, np.int32)
+        pad[:P] = toks[:P]
+        _, ids, _, _ = model_mod.backbone_prefill(
+            c, bb_wlist, jnp.asarray(pad), jnp.int32(P)
+        )
+        ids = np.asarray(ids)  # [L, maxseq, K]
+        for l in [2, 13, 25]:
+            allowed = set(world.working_sets[l][topics].reshape(-1).tolist())
+            got = ids[l, 8:P, :].reshape(-1)  # skip the first few warmup tokens
+            hits += sum(1 for e in got if int(e) in allowed)
+            total += len(got)
+    assert hits / total > 0.55, f"backbone/world routing alignment too weak: {hits/total:.2f}"
+
+
+def test_sparse_decode_matches_dense(world, bb_wlist):
+    """The sparse top-k gather decode path must equal the dense einsum."""
+    import jax
+    c = world.cfg
+    lp = {
+        "router_w": bb_wlist[1][5],
+        "w_in": bb_wlist[8][5],
+        "w_out": bb_wlist[9][5],
+        "ws_in": bb_wlist[10][5],
+        "ws_out": bb_wlist[11][5],
+    }
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(size=(c.d_model,)), jnp.float32)
+    d_sparse, ids_sparse = model_mod._moe_block_sparse(c, lp, h)
+    d_dense, ids_dense = model_mod._moe_block(c, lp, h[None, :])
+    assert np.array_equal(np.asarray(ids_sparse), np.asarray(ids_dense[0]))
+    assert_allclose(np.asarray(d_sparse), np.asarray(d_dense[0]), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,106 @@
+"""MBTR trace format round-trips + AOT artifact pipeline (fast mode)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import tracegen
+from compile.world import CorpusConfig, PromptSampler, World, WorldConfig
+
+
+@pytest.fixture(scope="module")
+def world():
+    return World(WorldConfig())
+
+
+def _mk_traces(world, n=4):
+    s = PromptSampler(world, CorpusConfig(n_prompts=n, min_tokens=40, max_tokens=80))
+    rng = np.random.default_rng(0)
+    return [tracegen.sample_prompt_trace(world, s, i, rng) for i in range(n)]
+
+
+def test_roundtrip(world, tmp_path):
+    traces = _mk_traces(world)
+    p = str(tmp_path / "t.bin")
+    tracegen.write_traces(p, world, traces)
+    meta, back = tracegen.read_traces(p)
+    assert meta["n_layers"] == world.cfg.n_layers
+    assert meta["n_experts"] == world.cfg.n_experts
+    assert meta["top_k"] == world.cfg.top_k
+    assert meta["n_prompts"] == len(traces)
+    for a, b in zip(traces, back):
+        assert a.prompt_id == b.prompt_id
+        assert np.array_equal(a.tokens, b.tokens)
+        assert np.allclose(a.embeddings, b.embeddings)
+        assert np.array_equal(a.experts, b.experts)
+
+
+def test_roundtrip_without_embeddings(world, tmp_path):
+    traces = _mk_traces(world, 2)
+    p = str(tmp_path / "t2.bin")
+    tracegen.write_traces(p, world, traces, with_emb=False)
+    meta, back = tracegen.read_traces(p)
+    assert meta["flags"] & 1 == 0
+    assert np.array_equal(traces[0].experts, back[0].experts)
+    assert np.allclose(back[0].embeddings, 0)
+
+
+def test_expert_ids_in_range(world):
+    for tr in _mk_traces(world):
+        assert (tr.experts < world.cfg.n_experts).all()
+        # top-k unique per (token, layer)
+        T, L, K = tr.experts.shape
+        for t in range(0, T, 17):
+            for l in range(0, L, 9):
+                assert len(set(tr.experts[t, l].tolist())) == K
+
+
+def test_trace_point_count(world):
+    traces = _mk_traces(world, 3)
+    n = tracegen.trace_point_count(traces)
+    assert n == sum(len(t.tokens) for t in traces) * world.cfg.n_layers
+
+
+def test_generate_split_reproducible(world, tmp_path):
+    a = tracegen.generate_split(world, "test", 3, str(tmp_path / "a.bin"))
+    b = tracegen.generate_split(world, "test", 3, str(tmp_path / "b.bin"))
+    for x, y in zip(a, b):
+        assert np.array_equal(x.tokens, y.tokens)
+        assert np.array_equal(x.experts, y.experts)
+
+
+def test_backbone_mode_trace(world, tmp_path):
+    trs = tracegen.generate_split(
+        world, "backbone_val", 1, str(tmp_path / "bb.bin"), mode="backbone"
+    )
+    tr = trs[0]
+    assert tr.experts.shape[1] == world.cfg.n_layers
+    assert (tr.experts < world.cfg.n_experts).all()
+    # embeddings are the backbone's real token embeddings (unit-ish norm)
+    norms = np.linalg.norm(tr.embeddings, axis=1)
+    assert (norms > 0.5).all() and (norms < 2.0).all()
+
+
+@pytest.mark.slow
+def test_full_fast_aot_pipeline(tmp_path):
+    """End-to-end MOEB_FAST aot run produces every artifact."""
+    env = dict(os.environ, MOEB_FAST="1")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(tmp_path)],
+        check=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    meta = json.load(open(tmp_path / "artifacts.json"))
+    for exe in ("predictor", "predictor_batch", "backbone_prefill", "backbone_decode", "head_extract"):
+        assert (tmp_path / meta["executables"][exe]["path"]).exists()
+    assert (tmp_path / "predictor_weights.bin").exists()
+    assert (tmp_path / "backbone_weights.bin").exists()
+    assert (tmp_path / "traces" / "train.bin").exists()
+    wj = json.load(open(tmp_path / "world.json"))
+    pj = json.load(open(tmp_path / "predictor_weights.bin.json"))
+    assert wj["fingerprint"] == pj["fingerprint"]

@@ -1,0 +1,153 @@
+"""World-model fidelity tests (DESIGN.md §6).
+
+These pin down the statistical phenomena the paper's evaluation rests on:
+single-prompt skew (Fig 2), cross-prompt uniformity (Fig 1), cross-layer
+reuse (Fig 3), and the train/test domain shift.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from compile import tracegen
+from compile.world import CorpusConfig, PromptSampler, World, WorldConfig, build_backbone_params, flatten_params
+
+
+@pytest.fixture(scope="module")
+def world():
+    return World(WorldConfig())
+
+
+@pytest.fixture(scope="module")
+def traces(world):
+    s = PromptSampler(world, CorpusConfig(n_prompts=40))
+    rng = np.random.default_rng(0)
+    return [tracegen.sample_prompt_trace(world, s, i, rng) for i in range(40)]
+
+
+def test_world_is_deterministic():
+    a, b = World(WorldConfig()), World(WorldConfig())
+    assert a.fingerprint() == b.fingerprint()
+    assert np.array_equal(a.affinity, b.affinity)
+    assert np.array_equal(a.token_emb, b.token_emb)
+
+
+def test_seed_changes_world():
+    a = World(WorldConfig())
+    b = World(dataclasses.replace(WorldConfig(), seed=1))
+    assert a.fingerprint() != b.fingerprint()
+
+
+def test_affinity_rows_normalized(world):
+    s = world.affinity.sum(axis=2)
+    assert np.allclose(s, 1.0, atol=1e-5)
+
+
+def test_working_sets_have_expected_size(world):
+    c = world.cfg
+    assert world.working_sets.shape == (c.n_layers, c.n_topics, c.working_set)
+    for l in range(c.n_layers):
+        for t in range(c.n_topics):
+            assert len(set(world.working_sets[l, t].tolist())) == c.working_set
+
+
+def test_topic_embeddings_orthonormal(world):
+    g = world.topic_emb @ world.topic_emb.T
+    assert np.allclose(g, np.eye(world.cfg.n_topics), atol=1e-5)
+
+
+def test_single_prompt_skew(world, traces):
+    """Fig 2: one prompt touches only a small fraction of the expert pool."""
+    sizes = [len(np.unique(tr.experts[:, 13, :])) for tr in traces]
+    mean_ws = np.mean(sizes)
+    # With token-level routing dynamics (route_beta) the per-prompt union
+    # is wider than the paper's DeepSeek traces, but still well below the
+    # pool; per-token sparsity stays exactly 6/64.
+    assert 6 <= mean_ws <= 46, mean_ws
+
+
+def test_cross_prompt_uniformity(world, traces):
+    """Fig 1: aggregated over many prompts, popularity flattens out."""
+    agg = np.zeros(world.cfg.n_experts)
+    for tr in traces:
+        agg += np.bincount(tr.experts[:, 0, :].reshape(-1), minlength=64)
+    assert agg.min() > 0
+    # held-out topics appear at 1/3 of fair share in the training corpus
+    # (the domain-shift device), which widens the band vs the paper's
+    # 1.75; at this small sample (40 prompts) the ratio is noisy — the
+    # 122-prompt Fig-1 bench measures ~3.3
+    assert agg.max() / agg.min() < 15.0
+
+
+def test_single_vs_multi_prompt_entropy(world, traces):
+    """The core sparsity insight: per-prompt activation entropy is far
+    below the aggregate entropy."""
+
+    def entropy(counts):
+        p = counts / max(counts.sum(), 1)
+        p = p[p > 0]
+        return -(p * np.log(p)).sum()
+
+    agg = np.zeros(64)
+    singles = []
+    for tr in traces:
+        c = np.bincount(tr.experts[:, 13, :].reshape(-1), minlength=64).astype(float)
+        agg += c
+        singles.append(entropy(c))
+    assert np.mean(singles) < entropy(agg) - 0.5
+
+
+def test_cross_layer_reuse(world, traces):
+    """Fig 3: adjacent layers reuse (permutation-adjusted) working sets."""
+    tr = traces[0]
+    reuse = []
+    for l in range(world.cfg.n_layers - 1):
+        a = np.unique(tr.experts[:, l, :])
+        b = set(np.unique(tr.experts[:, l + 1, :]).tolist())
+        mapped = set(int(x) for x in world.layer_perm[l + 1][a])
+        reuse.append(len(mapped & b) / max(len(b), 1))
+    assert np.mean(reuse) > 0.5
+
+
+def test_test_split_domain_shift(world):
+    tr_s = PromptSampler(world, CorpusConfig(n_prompts=10, split="train"))
+    te_s = PromptSampler(world, CorpusConfig(n_prompts=10, split="test"))
+    K = world.cfg.n_topics
+    held = te_s.held_out
+    tr_mass = np.mean([tr_s.sample_prompt()[1][held].sum() for _ in range(60)])
+    te_mass = np.mean([te_s.sample_prompt()[1][held].sum() for _ in range(60)])
+    assert te_mass > tr_mass + 0.2
+
+
+def test_prompt_token_range(world):
+    cfg = CorpusConfig(n_prompts=5, min_tokens=48, max_tokens=200)
+    s = PromptSampler(world, cfg)
+    for _ in range(10):
+        toks, mix = s.sample_prompt()
+        assert 48 <= len(toks) <= 200
+        assert abs(mix.sum() - 1.0) < 1e-5
+        assert (toks >= 0).all() and (toks < world.cfg.vocab_size).all()
+
+
+def test_backbone_params_flatten_roundtrip(world):
+    params = build_backbone_params(world)
+    flat, man = flatten_params(params)
+    assert flat.dtype == np.float32
+    total = sum(m["size"] for m in man)
+    assert total == flat.size
+    # offsets are contiguous and ordered
+    off = 0
+    for m in man:
+        assert m["offset"] == off
+        off += m["size"]
+    # router weights inside the blob equal the world's analytic router
+    rw = next(m for m in man if m["name"] == "router_w")
+    got = flat[rw["offset"] : rw["offset"] + rw["size"]].reshape(rw["shape"])
+    assert np.allclose(got, world.router_w)
+
+
+def test_context_embeddings_normalized(world, traces):
+    ctx = world.context_embeddings(traces[0].embeddings)
+    norms = np.linalg.norm(ctx, axis=1)
+    assert np.allclose(norms, 1.0, atol=1e-4)

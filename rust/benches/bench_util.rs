@@ -1,0 +1,52 @@
+//! Tiny shared bench harness (offline build: no criterion).
+//!
+//! Each bench target is a standalone binary (`harness = false`) that runs
+//! one paper experiment end-to-end, prints the paper-style rows, and
+//! times its hot sections with `time_block` / `bench_loop`.
+
+use std::time::Instant;
+
+/// Run `f` once, returning (result, seconds).
+pub fn time_block<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    eprintln!("[bench] {name}: {:.2}s", t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Repeat `f` until ~`target_secs` elapsed (at least `min_iters`), print
+/// mean/std per iteration in µs, and return mean µs.
+pub fn bench_loop(name: &str, min_iters: usize, target_secs: f64, mut f: impl FnMut()) -> f64 {
+    // warmup
+    f();
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < target_secs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    println!(
+        "{name:<44} {mean:>12.2} µs/iter  (±{:>8.2}, n={})",
+        var.sqrt(),
+        samples.len()
+    );
+    mean
+}
+
+/// Simple env-var knob for bench scale.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[allow(dead_code)]
+fn main() {} // not a real bench target; included via #[path] by the others

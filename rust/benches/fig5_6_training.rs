@@ -1,0 +1,46 @@
+//! Bench: regenerate the paper's Figs 5-6 (training/validation curves)
+//! from the build-time training log.
+//!
+//! Paper reference points: train acc 0.96 -> 0.989, train F1 0.5 -> 0.86,
+//! train loss 0.35 -> 0.131; val acc 0.987, val F1 0.85, val loss 0.133.
+
+use moe_beyond::sim::harness;
+
+fn main() -> moe_beyond::Result<()> {
+    let arts = harness::load_artifacts()?;
+    let log = harness::load_training_log(&arts)?;
+
+    println!("== FIG 5 (training curves, {} logged steps) ==", log.train_steps.len());
+    for s in log.train_steps.iter().step_by((log.train_steps.len() / 12).max(1)) {
+        println!(
+            "  step {:>5}: loss {:.3} acc {:.3} f1 {:.3} exact {:.3}",
+            s.step, s.loss, s.acc, s.f1, s.exact
+        );
+    }
+    let first = log.train_steps.first().expect("empty log");
+    let last = log.train_steps.last().unwrap();
+    println!(
+        "train: loss {:.3}->{:.3} [paper 0.35->0.131], acc {:.3}->{:.3} [paper 0.96->0.989], f1 {:.2}->{:.2} [paper 0.5->0.86]",
+        first.loss, last.loss, first.acc, last.acc, first.f1, last.f1
+    );
+
+    println!("\n== FIG 6 (validation curves, {} epochs) ==", log.val_epochs.len());
+    for e in &log.val_epochs {
+        println!(
+            "  epoch {:>2}: loss {:.4} acc {:.4} f1 {:.3} exact {:.3}",
+            e.epoch, e.loss, e.acc, e.f1, e.exact
+        );
+    }
+    let vlast = log.val_epochs.last().expect("no val epochs");
+    println!(
+        "val final: loss {:.3} [paper 0.133], acc {:.3} [paper 0.987], f1 {:.3} [paper 0.85]",
+        vlast.loss, vlast.acc, vlast.f1
+    );
+
+    // shape assertions: curves must move the right way, train/val gap small
+    assert!(last.loss < first.loss * 0.7, "training loss did not converge");
+    assert!(vlast.f1 > 0.5, "validation F1 too low");
+    assert!((last.f1 - vlast.f1).abs() < 0.2, "train/val F1 gap too large");
+    println!("\nshape check: PASS (wall {:.0}s)", log.wall_seconds);
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Bench: regenerate the paper's Fig 7 — GPU cache hit rate vs expert
+//! capacity for MoE-Beyond vs MoE-Infinity (plus LRU-only and the oracle
+//! upper bound).
+//!
+//! Paper reference points: at 10% capacity MoE-Beyond >70% vs
+//! MoE-Infinity 17%; MoE-Beyond keeps a 10-25pt lead and converges to
+//! 100% faster.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{env_usize, time_block};
+
+use moe_beyond::config::SimConfig;
+use moe_beyond::runtime::PjrtRuntime;
+use moe_beyond::sim::harness;
+use moe_beyond::sim::PredictorKind;
+
+fn main() -> moe_beyond::Result<()> {
+    let n_prompts = env_usize("MOEB_BENCH_PROMPTS", 40);
+    let arts = harness::load_artifacts()?;
+    let rt = PjrtRuntime::cpu()?;
+    let kinds = [
+        PredictorKind::Learned,
+        PredictorKind::Eam,
+        PredictorKind::None,
+        PredictorKind::Oracle,
+    ];
+
+    let results = time_block("fig7 sweep (4 predictors x 9 capacities)", || {
+        harness::run_fig7(&rt, &arts, &kinds, harness::FIG7_FRACS, n_prompts, SimConfig::default())
+    })?;
+
+    println!("\n== FIG 7: cache hit rate (%) vs GPU expert capacity (%) ==");
+    print!("{:>10}", "capacity%");
+    for r in &results {
+        print!("{:>22}", r.predictor);
+    }
+    println!();
+    for (i, frac) in harness::FIG7_FRACS.iter().enumerate() {
+        print!("{:>10.0}", frac * 100.0);
+        for r in &results {
+            print!("{:>22.1}", r.points[i].hit_rate * 100.0);
+        }
+        println!();
+    }
+    println!("\nprediction hit rate @10%:");
+    for r in &results {
+        println!("  {:>22}: {:.1}%", r.predictor, r.points[1].prediction_hit_rate * 100.0);
+    }
+
+    let learned = &results[0];
+    let eam = &results[1];
+    // shape assertions: learned wins at the memory-starved end and stays
+    // >= EAM (within noise) everywhere; both converge at full capacity
+    assert!(
+        learned.points[1].hit_rate > eam.points[1].hit_rate + 0.05,
+        "learned must clearly beat EAM at 10% capacity"
+    );
+    for i in 0..harness::FIG7_FRACS.len() {
+        assert!(
+            learned.points[i].hit_rate >= eam.points[i].hit_rate - 0.02,
+            "learned fell below EAM at {}%",
+            harness::FIG7_FRACS[i] * 100.0
+        );
+    }
+    assert!(learned.points.last().unwrap().hit_rate > 0.95);
+    println!("\nshape check: PASS");
+    Ok(())
+}

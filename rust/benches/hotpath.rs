@@ -1,0 +1,128 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): the L3 operations
+//! that run per (token, layer) in the simulator/coordinator, plus the
+//! PJRT call latencies that bound serving throughput.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{bench_loop, env_usize};
+
+use moe_beyond::cache::{CachePolicy, LruCache};
+use moe_beyond::config::{EamConfig, SimConfig};
+use moe_beyond::predictor::{EamPredictor, ExpertPredictor, NoPrefetch, OraclePredictor};
+use moe_beyond::runtime::{PjrtRuntime, TensorArg};
+use moe_beyond::sim::{simulate_prompt, harness};
+use moe_beyond::trace::corpus::CorpusConfig;
+use moe_beyond::trace::generator::TraceGenerator;
+use moe_beyond::trace::WorldModel;
+use moe_beyond::util::{ExpertSet, Rng};
+
+fn main() -> moe_beyond::Result<()> {
+    println!("== L3 hot paths ==");
+
+    // ExpertSet algebra
+    let mut rng = Rng::new(1);
+    let sets: Vec<ExpertSet> = (0..1024).map(|_| ExpertSet(rng.next_u64())).collect();
+    let mut acc = 0u32;
+    bench_loop("expert_set: 1k union+overlap", 200, 0.5, || {
+        for w in sets.windows(2) {
+            acc = acc.wrapping_add(w[0].union(w[1]).len() + w[0].overlap(w[1]));
+        }
+    });
+    std::hint::black_box(acc);
+
+    // LRU ops
+    let mut lru = LruCache::new(173);
+    let keys: Vec<u32> = (0..4096).map(|_| rng.below(1728) as u32).collect();
+    bench_loop("lru: 4k touch+insert", 200, 0.5, || {
+        for &k in &keys {
+            if !lru.touch(k) {
+                lru.insert(k);
+            }
+        }
+    });
+
+    // EAM cosine match against a full EAMC
+    let arts = harness::load_artifacts()?;
+    let world = WorldModel::load(arts.path("world.json"))?;
+    let mut gen = TraceGenerator::new(&world, CorpusConfig::default(), 3);
+    let fit = gen.generate(60);
+    let mut eam = EamPredictor::new(EamConfig::default(), 27, 64);
+    eam.fit(&fit);
+    let probe = gen.generate(1).pop().unwrap();
+    eam.begin_prompt(&probe);
+    let ctx = moe_beyond::predictor::DecodeContext { trace: &probe, t: 4 };
+    for l in 0..27 {
+        eam.observe(&ctx, l, probe.expert_set(2, l));
+    }
+    bench_loop("eam: predict (cosine over EAMC)", 500, 0.5, || {
+        std::hint::black_box(eam.predict(&ctx, 13));
+    });
+
+    // whole-prompt simulation throughput
+    let tr = gen.generate(1).pop().unwrap();
+    bench_loop("sim: full prompt replay (no prefetch)", 50, 1.0, || {
+        std::hint::black_box(simulate_prompt(&tr, &mut NoPrefetch, 173, SimConfig::default(), 64));
+    });
+    bench_loop("sim: full prompt replay (oracle)", 50, 1.0, || {
+        std::hint::black_box(simulate_prompt(
+            &tr,
+            &mut OraclePredictor::new(),
+            173,
+            SimConfig::default(),
+            64,
+        ));
+    });
+
+    println!("\n== PJRT call latencies ==");
+    let rt = PjrtRuntime::cpu()?;
+    let model = moe_beyond::predictor::LearnedModel::load(&rt, &arts)?;
+    let emb = vec![0.1f32; 32 * 128];
+    let layers: Vec<usize> = (0..27).collect();
+    bench_loop("predictor: all-layer window refresh", 5, 2.0, || {
+        std::hint::black_box(model.predict_window(&emb, 32, &layers).unwrap());
+    });
+
+    let bb = moe_beyond::moe::Backbone::load(&rt, &arts)?;
+    let tokens: Vec<i32> = (0..48).map(|i| (i * 13) % 200).collect();
+    let pre = bb.prefill(&tokens)?;
+    bench_loop("backbone: prefill (48-token prompt, adaptive)", 3, 2.0, || {
+        std::hint::black_box(bb.prefill(&tokens).unwrap());
+    });
+    bench_loop("backbone: decode step (host kv roundtrip)", 5, 2.0, || {
+        std::hint::black_box(bb.decode_step(&pre.kv, 48, 7).unwrap());
+    });
+    let mut sess = bb.start_decode(&pre.kv).unwrap();
+    let mut pos = 48usize;
+    bench_loop("backbone: decode step (device-resident kv)", 5, 2.0, || {
+        std::hint::black_box(bb.decode_chained(&mut sess, pos, 7).unwrap());
+        pos = (pos + 1).min(150);
+    });
+
+    // raw executable dispatch overhead (tiny arg, resident weights)
+    let n = env_usize("MOEB_BENCH_DISPATCH", 20);
+    let mut probe_exe = rt.load_hlo_text(arts.path("predictor_batch.hlo.txt"))?;
+    let blob = moe_beyond::runtime::WeightBlob::load(arts.path("predictor_weights.bin"))?;
+    let params: Vec<(&[f32], &[usize])> = blob
+        .params
+        .iter()
+        .map(|p| (&blob.data[p.offset..p.offset + p.size], p.shape.as_slice()))
+        .collect();
+    probe_exe.set_resident_args(&rt, &params)?;
+    let (b, t, d) = (
+        arts.predictor.batch as usize,
+        arts.predictor.window as usize,
+        arts.predictor.d_tok as usize,
+    );
+    bench_loop("pjrt: batched predictor dispatch", n, 2.0, || {
+        std::hint::black_box(
+            probe_exe
+                .call_flat(&[
+                    TensorArg::F32(vec![0.1f32; b * t * d], vec![b, t, d]),
+                    TensorArg::I32(vec![0i32; b * t], vec![b, t]),
+                    TensorArg::F32(vec![1.0f32; b * t], vec![b, t]),
+                ])
+                .unwrap(),
+        );
+    });
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! Belady (MIN) cache — the offline-optimal eviction policy, used as the
+//! simulator's upper bound on what ANY eviction policy can achieve at a
+//! given capacity (prefetching aside).
+//!
+//! Requires the future reference string, so it only exists inside the
+//! trace-driven simulator: `prime` loads the full (token, layer) expert
+//! sequence; eviction picks the resident key whose next use is farthest
+//! in the future.
+
+use std::collections::HashMap;
+
+use super::policy::{CachePolicy, ExpertKey};
+
+pub struct BeladyCache {
+    capacity: usize,
+    resident: Vec<ExpertKey>,
+    /// For each key, the (sorted) positions at which it will be used.
+    uses: HashMap<ExpertKey, Vec<u32>>,
+    /// Cursor into the reference string.
+    clock: u32,
+}
+
+impl BeladyCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity,
+            resident: Vec::with_capacity(capacity),
+            uses: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// Load the future reference string (keys in lookup order).
+    pub fn prime(&mut self, reference: &[ExpertKey]) {
+        self.uses.clear();
+        for (i, &k) in reference.iter().enumerate() {
+            self.uses.entry(k).or_default().push(i as u32);
+        }
+        self.clock = 0;
+        self.resident.clear();
+    }
+
+    /// Advance the reference cursor (call once per lookup, after touch).
+    pub fn tick(&mut self) {
+        self.clock += 1;
+    }
+
+    fn next_use(&self, k: ExpertKey) -> u32 {
+        match self.uses.get(&k) {
+            None => u32::MAX,
+            Some(v) => {
+                // first use strictly at/after clock
+                match v.binary_search(&self.clock) {
+                    Ok(i) => v[i],
+                    Err(i) if i < v.len() => v[i],
+                    _ => u32::MAX,
+                }
+            }
+        }
+    }
+}
+
+impl CachePolicy for BeladyCache {
+    fn contains(&self, k: ExpertKey) -> bool {
+        self.resident.contains(&k)
+    }
+
+    fn touch(&mut self, k: ExpertKey) -> bool {
+        self.contains(k)
+    }
+
+    fn insert(&mut self, k: ExpertKey) -> Option<ExpertKey> {
+        if self.contains(k) {
+            return None;
+        }
+        let mut evicted = None;
+        if self.resident.len() == self.capacity {
+            // evict the key with the farthest next use
+            let (idx, _) = self
+                .resident
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &r)| self.next_use(r))
+                .unwrap();
+            evicted = Some(self.resident.swap_remove(idx));
+        }
+        self.resident.push(k);
+        evicted
+    }
+
+    fn evict(&mut self, k: ExpertKey) -> bool {
+        if let Some(i) = self.resident.iter().position(|&r| r == k) {
+            self.resident.swap_remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn clear(&mut self) {
+        self.resident.clear();
+        self.clock = 0;
+    }
+
+    fn resident(&self) -> Vec<ExpertKey> {
+        self.resident.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "belady"
+    }
+}
+
+/// Run the Belady-optimal hit rate for a reference string at `capacity`.
+pub fn belady_hit_rate(reference: &[ExpertKey], capacity: usize) -> f64 {
+    if reference.is_empty() {
+        return 0.0;
+    }
+    let mut c = BeladyCache::new(capacity);
+    c.prime(reference);
+    let mut hits = 0u64;
+    for &k in reference {
+        c.tick(); // next_use must look strictly past the current position
+        if c.touch(k) {
+            hits += 1;
+        } else {
+            c.insert(k);
+        }
+    }
+    hits as f64 / reference.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::LruCache;
+    use crate::util::Rng;
+
+    #[test]
+    fn belady_classic_example() {
+        // reference 1,2,3,4,1,2,5,1,2,3,4,5 with capacity 3:
+        // Belady gives 5 hits (7 faults)
+        let r: Vec<u32> = vec![1, 2, 3, 4, 1, 2, 5, 1, 2, 3, 4, 5];
+        let hr = belady_hit_rate(&r, 3);
+        assert!((hr - 5.0 / 12.0).abs() < 1e-9, "hit rate {hr}");
+    }
+
+    #[test]
+    fn full_capacity_misses_only_cold() {
+        let r: Vec<u32> = vec![1, 2, 3, 1, 2, 3, 1, 2, 3];
+        let hr = belady_hit_rate(&r, 10);
+        assert!((hr - 6.0 / 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_belady_dominates_lru() {
+        let mut rng = Rng::new(77);
+        for _case in 0..80 {
+            let cap = rng.range(2, 10);
+            let n = rng.range(10, 200);
+            let reference: Vec<u32> = (0..n).map(|_| rng.below(20) as u32).collect();
+            let opt = belady_hit_rate(&reference, cap);
+
+            let mut lru = LruCache::new(cap);
+            let mut hits = 0u64;
+            for &k in &reference {
+                if lru.touch(k) {
+                    hits += 1;
+                } else {
+                    lru.insert(k);
+                }
+            }
+            let lru_hr = hits as f64 / n as f64;
+            assert!(
+                opt >= lru_hr - 1e-9,
+                "belady {opt} < lru {lru_hr} (cap {cap})"
+            );
+        }
+    }
+}

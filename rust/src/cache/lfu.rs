@@ -1,0 +1,205 @@
+//! LFU expert cache — frequency-ordered eviction with LRU tie-break,
+//! O(capacity) eviction scan over dense slots (capacity ≤ 1728, and
+//! eviction is off the fast path, so the scan beats maintaining a heap).
+
+use super::policy::{CachePolicy, ExpertKey};
+
+#[derive(Clone, Copy, Default)]
+struct Slot {
+    resident: bool,
+    freq: u32,
+    last_use: u64,
+}
+
+pub struct LfuCache {
+    slots: Vec<Slot>,
+    clock: u64,
+    len: usize,
+    capacity: usize,
+}
+
+impl LfuCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "LFU capacity must be > 0");
+        Self {
+            slots: Vec::new(),
+            clock: 0,
+            len: 0,
+            capacity,
+        }
+    }
+
+    fn ensure(&mut self, k: ExpertKey) {
+        let need = k as usize + 1;
+        if self.slots.len() < need {
+            self.slots.resize(need, Slot::default());
+        }
+    }
+
+    fn victim(&self) -> ExpertKey {
+        let mut best: Option<(u32, u64, ExpertKey)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if !s.resident {
+                continue;
+            }
+            let cand = (s.freq, s.last_use, i as ExpertKey);
+            if best.map(|b| (cand.0, cand.1) < (b.0, b.1)).unwrap_or(true) {
+                best = Some(cand);
+            }
+        }
+        best.expect("victim() on empty cache").2
+    }
+}
+
+impl CachePolicy for LfuCache {
+    fn contains(&self, k: ExpertKey) -> bool {
+        self.slots
+            .get(k as usize)
+            .map(|s| s.resident)
+            .unwrap_or(false)
+    }
+
+    fn touch(&mut self, k: ExpertKey) -> bool {
+        self.clock += 1;
+        if !self.contains(k) {
+            return false;
+        }
+        let s = &mut self.slots[k as usize];
+        s.freq += 1;
+        s.last_use = self.clock;
+        true
+    }
+
+    fn insert(&mut self, k: ExpertKey) -> Option<ExpertKey> {
+        self.ensure(k);
+        self.clock += 1;
+        if self.slots[k as usize].resident {
+            self.slots[k as usize].freq += 1;
+            self.slots[k as usize].last_use = self.clock;
+            return None;
+        }
+        let mut evicted = None;
+        if self.len == self.capacity {
+            let v = self.victim();
+            self.slots[v as usize].resident = false;
+            self.slots[v as usize].freq = 0;
+            self.len -= 1;
+            evicted = Some(v);
+        }
+        let s = &mut self.slots[k as usize];
+        s.resident = true;
+        s.freq = 1;
+        s.last_use = self.clock;
+        self.len += 1;
+        evicted
+    }
+
+    fn evict(&mut self, k: ExpertKey) -> bool {
+        if !self.contains(k) {
+            return false;
+        }
+        self.slots[k as usize].resident = false;
+        self.slots[k as usize].freq = 0;
+        self.len -= 1;
+        true
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn clear(&mut self) {
+        self.slots.fill(Slot::default());
+        self.len = 0;
+        self.clock = 0;
+    }
+
+    fn resident(&self) -> Vec<ExpertKey> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.resident)
+            .map(|(i, _)| i as ExpertKey)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_frequent() {
+        let mut c = LfuCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        c.touch(1);
+        c.touch(1); // freq(1)=3, freq(2)=1
+        assert_eq!(c.insert(3), Some(2));
+        assert!(c.contains(1));
+    }
+
+    #[test]
+    fn tie_breaks_by_lru() {
+        let mut c = LfuCache::new(2);
+        c.insert(1);
+        c.insert(2); // equal freq=1, 1 older
+        assert_eq!(c.insert(3), Some(1));
+    }
+
+    #[test]
+    fn reinsert_bumps_freq() {
+        let mut c = LfuCache::new(2);
+        c.insert(1);
+        c.insert(1); // freq 2
+        c.insert(2); // freq 1
+        assert_eq!(c.insert(3), Some(2));
+    }
+
+    #[test]
+    fn prop_capacity_never_exceeded() {
+        let mut rng = crate::util::Rng::new(41);
+        for _case in 0..100 {
+            let cap = rng.range(1, 8);
+            let mut c = LfuCache::new(cap);
+            for _ in 0..rng.range(1, 200) {
+                c.insert(rng.below(30) as u32);
+                assert!(c.len() <= cap);
+                assert_eq!(c.resident().len(), c.len());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_eviction_picks_min_freq() {
+        let mut rng = crate::util::Rng::new(42);
+        for _case in 0..100 {
+            let mut c = LfuCache::new(4);
+            let mut freqs = std::collections::HashMap::<u32, u32>::new();
+            for _ in 0..rng.range(1, 100) {
+                let k = rng.below(10) as u32;
+                let resident_before: Vec<u32> = c.resident();
+                let evicted = c.insert(k);
+                if let Some(v) = evicted {
+                    // evicted key's frequency must be <= all remaining
+                    let fv = freqs.get(&v).copied().unwrap_or(0);
+                    for r in c.resident() {
+                        if r != k && resident_before.contains(&r) {
+                            assert!(fv <= freqs.get(&r).copied().unwrap_or(0));
+                        }
+                    }
+                    freqs.insert(v, 0);
+                }
+                *freqs.entry(k).or_insert(0) += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! LRU expert cache — intrusive doubly-linked list over a dense slot
+//! table, O(1) for every operation, zero allocation after construction.
+
+use super::policy::{CachePolicy, ExpertKey};
+
+const NIL: u32 = u32::MAX;
+
+/// Per-key node state; `prev`/`next` weave the recency list (head = MRU).
+#[derive(Clone, Copy)]
+struct Node {
+    prev: u32,
+    next: u32,
+    resident: bool,
+}
+
+pub struct LruCache {
+    nodes: Vec<Node>,
+    head: u32, // most recently used
+    tail: u32, // least recently used
+    len: usize,
+    capacity: usize,
+}
+
+impl LruCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "LRU capacity must be > 0");
+        Self {
+            nodes: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            len: 0,
+            capacity,
+        }
+    }
+
+    fn ensure(&mut self, k: ExpertKey) {
+        let need = k as usize + 1;
+        if self.nodes.len() < need {
+            self.nodes.resize(
+                need,
+                Node {
+                    prev: NIL,
+                    next: NIL,
+                    resident: false,
+                },
+            );
+        }
+    }
+
+    fn unlink(&mut self, k: u32) {
+        let (p, n) = (self.nodes[k as usize].prev, self.nodes[k as usize].next);
+        if p != NIL {
+            self.nodes[p as usize].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.nodes[n as usize].prev = p;
+        } else {
+            self.tail = p;
+        }
+        self.nodes[k as usize].prev = NIL;
+        self.nodes[k as usize].next = NIL;
+    }
+
+    fn push_front(&mut self, k: u32) {
+        self.nodes[k as usize].prev = NIL;
+        self.nodes[k as usize].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = k;
+        }
+        self.head = k;
+        if self.tail == NIL {
+            self.tail = k;
+        }
+    }
+}
+
+impl CachePolicy for LruCache {
+    fn contains(&self, k: ExpertKey) -> bool {
+        self.nodes
+            .get(k as usize)
+            .map(|n| n.resident)
+            .unwrap_or(false)
+    }
+
+    fn touch(&mut self, k: ExpertKey) -> bool {
+        if !self.contains(k) {
+            return false;
+        }
+        if self.head != k {
+            self.unlink(k);
+            self.push_front(k);
+        }
+        true
+    }
+
+    fn insert(&mut self, k: ExpertKey) -> Option<ExpertKey> {
+        self.ensure(k);
+        if self.nodes[k as usize].resident {
+            self.touch(k);
+            return None;
+        }
+        let mut evicted = None;
+        if self.len == self.capacity {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            self.unlink(victim);
+            self.nodes[victim as usize].resident = false;
+            self.len -= 1;
+            evicted = Some(victim);
+        }
+        self.nodes[k as usize].resident = true;
+        self.push_front(k);
+        self.len += 1;
+        evicted
+    }
+
+    fn evict(&mut self, k: ExpertKey) -> bool {
+        if !self.contains(k) {
+            return false;
+        }
+        self.unlink(k);
+        self.nodes[k as usize].resident = false;
+        self.len -= 1;
+        true
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn clear(&mut self) {
+        for n in &mut self.nodes {
+            *n = Node {
+                prev: NIL,
+                next: NIL,
+                resident: false,
+            };
+        }
+        self.head = NIL;
+        self.tail = NIL;
+        self.len = 0;
+    }
+
+    fn resident(&self) -> Vec<ExpertKey> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut cur = self.head;
+        while cur != NIL {
+            out.push(cur);
+            cur = self.nodes[cur as usize].next;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        assert_eq!(c.insert(1), None);
+        assert_eq!(c.insert(2), None);
+        assert_eq!(c.insert(3), Some(1)); // 1 is LRU
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn touch_refreshes_recency() {
+        let mut c = LruCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        assert!(c.touch(1)); // 1 becomes MRU
+        assert_eq!(c.insert(3), Some(2));
+        assert!(c.contains(1));
+    }
+
+    #[test]
+    fn reinsert_is_refresh_not_grow() {
+        let mut c = LruCache::new(2);
+        c.insert(1);
+        c.insert(2);
+        assert_eq!(c.insert(1), None);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.insert(3), Some(2)); // 2 was LRU after 1's refresh
+    }
+
+    #[test]
+    fn explicit_evict() {
+        let mut c = LruCache::new(3);
+        c.insert(5);
+        assert!(c.evict(5));
+        assert!(!c.evict(5));
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn resident_order_is_mru_first() {
+        let mut c = LruCache::new(3);
+        c.insert(1);
+        c.insert(2);
+        c.insert(3);
+        c.touch(1);
+        assert_eq!(c.resident(), vec![1, 3, 2]);
+    }
+
+    /// Model-based property test against a reference implementation
+    /// (Vec as recency list), seeded random ops.
+    #[test]
+    fn prop_matches_reference_model() {
+        let mut rng = crate::util::Rng::new(31);
+        for _case in 0..150 {
+            let cap = rng.range(1, 12);
+            let n_ops = rng.range(1, 300);
+            let mut c = LruCache::new(cap);
+            let mut model: Vec<u32> = Vec::new(); // front = MRU
+            for _ in 0..n_ops {
+                let k = rng.below(40) as u32;
+                let is_insert = rng.f64() < 0.5;
+                if is_insert {
+                    let evicted = c.insert(k);
+                    if let Some(pos) = model.iter().position(|&x| x == k) {
+                        model.remove(pos);
+                        model.insert(0, k);
+                        assert_eq!(evicted, None);
+                    } else {
+                        let mut want = None;
+                        if model.len() == cap {
+                            want = model.pop();
+                        }
+                        model.insert(0, k);
+                        assert_eq!(evicted, want);
+                    }
+                } else {
+                    let hit = c.touch(k);
+                    let mhit = model.contains(&k);
+                    assert_eq!(hit, mhit);
+                    if mhit {
+                        let pos = model.iter().position(|&x| x == k).unwrap();
+                        model.remove(pos);
+                        model.insert(0, k);
+                    }
+                }
+                assert!(c.len() <= cap);
+                assert_eq!(c.len(), model.len());
+                assert_eq!(c.resident(), model.clone());
+            }
+        }
+    }
+}

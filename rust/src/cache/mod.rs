@@ -1,0 +1,28 @@
+//! The simulated GPU-VRAM expert cache (paper §2.3).
+//!
+//! Experts are identified by a dense id `layer * n_experts + expert`
+//! (≤ 27×64 = 1728 for the DeepSeek-V2-Lite topology), so every policy
+//! can use flat arrays instead of hash maps on the hot path.
+
+mod belady;
+mod lfu;
+mod lru;
+pub mod policy;
+mod stats;
+mod vram;
+
+pub use belady::{belady_hit_rate, BeladyCache};
+pub use lfu::LfuCache;
+pub use lru::LruCache;
+pub use policy::{CachePolicy, EvictionPolicy, ExpertKey};
+pub use stats::CacheStats;
+pub use vram::VramModel;
+
+/// Build a policy by name ("lru" | "lfu").
+pub fn build_policy(name: &str, capacity: usize) -> crate::Result<Box<dyn CachePolicy>> {
+    match name {
+        "lru" => Ok(Box::new(LruCache::new(capacity))),
+        "lfu" => Ok(Box::new(LfuCache::new(capacity))),
+        other => anyhow::bail!("unknown cache policy {other}"),
+    }
+}

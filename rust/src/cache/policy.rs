@@ -1,0 +1,71 @@
+//! Cache policy trait + expert keying.
+
+/// Dense expert key: `layer * n_experts + expert_id`.
+pub type ExpertKey = u32;
+
+/// Compose a dense key.
+#[inline]
+pub fn key(layer: usize, expert: u8, n_experts: usize) -> ExpertKey {
+    (layer * n_experts + expert as usize) as ExpertKey
+}
+
+/// Decompose a dense key.
+#[inline]
+pub fn unkey(k: ExpertKey, n_experts: usize) -> (usize, u8) {
+    ((k as usize) / n_experts, ((k as usize) % n_experts) as u8)
+}
+
+/// Eviction policy identifier (config / reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    Lru,
+    Lfu,
+}
+
+/// A bounded set of resident experts with an eviction policy.
+///
+/// Contract invariants (enforced by proptests in `sim`):
+/// * `len() <= capacity()` at all times,
+/// * `insert` of a resident key only refreshes recency/frequency,
+/// * evictions only happen on insert into a full cache, one per insert.
+pub trait CachePolicy: Send {
+    /// Is this expert resident? Does NOT update recency.
+    fn contains(&self, k: ExpertKey) -> bool;
+
+    /// Record a use of `k` (recency/frequency bump). Returns true if it
+    /// was resident (a hit).
+    fn touch(&mut self, k: ExpertKey) -> bool;
+
+    /// Make `k` resident, evicting if needed. Returns the evicted key.
+    fn insert(&mut self, k: ExpertKey) -> Option<ExpertKey>;
+
+    /// Evict a specific key (used by pinning logic / invalidation).
+    fn evict(&mut self, k: ExpertKey) -> bool;
+
+    fn len(&self) -> usize;
+    fn capacity(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn clear(&mut self);
+
+    /// Resident keys (unordered); for diagnostics and invariant checks.
+    fn resident(&self) -> Vec<ExpertKey>;
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_roundtrip() {
+        for layer in [0usize, 5, 26] {
+            for expert in [0u8, 17, 63] {
+                let k = key(layer, expert, 64);
+                assert_eq!(unkey(k, 64), (layer, expert));
+            }
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Cache hit/miss accounting — the paper's primary system-level metric.
+
+/// Counters for one simulation or serving run.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    /// Ground-truth expert lookups served from cache.
+    pub hits: u64,
+    /// Lookups that required a host->VRAM fetch.
+    pub misses: u64,
+    /// Experts prefetched ahead of use.
+    pub prefetches: u64,
+    /// Prefetched experts that were evicted before first use.
+    pub wasted_prefetches: u64,
+    /// Prediction hits: ground-truth expert was in the predicted set
+    /// (paper's "prediction hit rate").
+    pub prediction_hits: u64,
+    /// Total predicted-against lookups.
+    pub prediction_total: u64,
+    /// Modeled transfer time spent on misses (µs).
+    pub transfer_us: f64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// GPU cache hit rate in [0, 1] (Fig 7's y-axis).
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+
+    /// Prediction hit rate in [0, 1].
+    pub fn prediction_hit_rate(&self) -> f64 {
+        if self.prediction_total == 0 {
+            0.0
+        } else {
+            self.prediction_hits as f64 / self.prediction_total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.prefetches += other.prefetches;
+        self.wasted_prefetches += other.wasted_prefetches;
+        self.prediction_hits += other.prediction_hits;
+        self.prediction_total += other.prediction_total;
+        self.transfer_us += other.transfer_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let s = CacheStats {
+            hits: 3,
+            misses: 1,
+            prediction_hits: 5,
+            prediction_total: 10,
+            ..Default::default()
+        };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert!((s.prediction_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(s.lookups(), 4);
+    }
+
+    #[test]
+    fn empty_rates_are_zero() {
+        let s = CacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.prediction_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CacheStats {
+            hits: 1,
+            misses: 2,
+            ..Default::default()
+        };
+        let b = CacheStats {
+            hits: 3,
+            misses: 4,
+            transfer_us: 10.0,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.hits, 4);
+        assert_eq!(a.misses, 6);
+        assert_eq!(a.transfer_us, 10.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! VRAM transfer-cost model.
+//!
+//! The paper evaluates on an A100 where a miss costs a PCIe transfer of
+//! one expert's weights.  We model virtual time: each miss adds
+//! `pcie_us_per_expert`, each hit `hit_us`; prefetches issued ahead of
+//! the layer overlap with the previous layer's compute (paper §5: DMA
+//! overlaps the *preceding* layer only), so a prefetched-but-timely
+//! expert costs nothing on the critical path.
+
+use crate::config::CacheConfig;
+
+/// Accumulates modeled transfer time.
+#[derive(Debug, Clone)]
+pub struct VramModel {
+    cfg: CacheConfig,
+    /// Modeled microseconds spent on demand fetches (critical path).
+    pub demand_us: f64,
+    /// Modeled microseconds of prefetch DMA (overlapped, off critical path
+    /// up to `overlap_budget_us` per layer).
+    pub prefetch_us: f64,
+    /// Prefetch time that exceeded the overlap window and stalled.
+    pub stall_us: f64,
+    /// Per-layer compute time available to hide prefetch DMA (µs).
+    pub overlap_budget_us: f64,
+    layer_prefetch_us: f64,
+}
+
+impl VramModel {
+    pub fn new(cfg: CacheConfig, overlap_budget_us: f64) -> Self {
+        Self {
+            cfg,
+            demand_us: 0.0,
+            prefetch_us: 0.0,
+            stall_us: 0.0,
+            overlap_budget_us,
+            layer_prefetch_us: 0.0,
+        }
+    }
+
+    /// A cache hit on the critical path.
+    pub fn on_hit(&mut self) {
+        self.demand_us += self.cfg.hit_us;
+    }
+
+    /// A demand miss: the layer stalls for a full PCIe fetch.
+    pub fn on_demand_miss(&mut self) {
+        self.demand_us += self.cfg.pcie_us_per_expert;
+    }
+
+    /// A prefetch issued one layer ahead.
+    pub fn on_prefetch(&mut self) {
+        self.prefetch_us += self.cfg.pcie_us_per_expert;
+        self.layer_prefetch_us += self.cfg.pcie_us_per_expert;
+    }
+
+    /// Close out a layer: prefetch DMA beyond the overlap window becomes
+    /// stall time.
+    pub fn end_layer(&mut self) {
+        if self.layer_prefetch_us > self.overlap_budget_us {
+            self.stall_us += self.layer_prefetch_us - self.overlap_budget_us;
+        }
+        self.layer_prefetch_us = 0.0;
+    }
+
+    /// Total modeled critical-path microseconds.
+    pub fn critical_path_us(&self) -> f64 {
+        self.demand_us + self.stall_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CacheConfig {
+        CacheConfig {
+            capacity_experts: 16,
+            pcie_us_per_expert: 100.0,
+            hit_us: 1.0,
+            pin_shared: true,
+        }
+    }
+
+    #[test]
+    fn demand_miss_costs_pcie() {
+        let mut v = VramModel::new(cfg(), 1000.0);
+        v.on_hit();
+        v.on_demand_miss();
+        assert_eq!(v.demand_us, 101.0);
+        assert_eq!(v.critical_path_us(), 101.0);
+    }
+
+    #[test]
+    fn prefetch_within_budget_is_free() {
+        let mut v = VramModel::new(cfg(), 250.0);
+        v.on_prefetch();
+        v.on_prefetch(); // 200µs <= 250µs budget
+        v.end_layer();
+        assert_eq!(v.stall_us, 0.0);
+        assert_eq!(v.critical_path_us(), 0.0);
+    }
+
+    #[test]
+    fn prefetch_beyond_budget_stalls() {
+        let mut v = VramModel::new(cfg(), 250.0);
+        for _ in 0..4 {
+            v.on_prefetch(); // 400µs > 250µs
+        }
+        v.end_layer();
+        assert_eq!(v.stall_us, 150.0);
+        // budget resets per layer
+        v.on_prefetch();
+        v.end_layer();
+        assert_eq!(v.stall_us, 150.0);
+    }
+}

@@ -1,0 +1,260 @@
+//! `artifacts/` manifest loading.
+//!
+//! `make artifacts` (the build-time Python path) writes `artifacts.json`
+//! describing the world dimensions, the trained predictor, trace splits,
+//! and the HLO executables.  This module is the single entry point the
+//! rest of the crate uses to locate and sanity-check those files.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// World dimensions + provenance (mirrors `world.py::World.manifest`).
+#[derive(Debug, Clone)]
+pub struct WorldMeta {
+    pub format: String,
+    pub seed: u64,
+    pub n_layers: u16,
+    pub n_experts: u16,
+    pub top_k: u16,
+    pub n_shared: u16,
+    pub n_topics: u16,
+    pub d_model: u16,
+    pub vocab_size: u32,
+    pub working_set: u16,
+    pub layer_mix: f64,
+    pub router_temp: f64,
+    pub router_noise: f64,
+    pub ctx_alpha: Option<f64>,
+    pub route_beta: Option<f64>,
+    pub score_floor: f64,
+    pub n_heads: u16,
+    pub d_head: u16,
+    pub d_expert: u16,
+    pub d_shared: u16,
+    pub max_seq: u32,
+    pub fingerprint: String,
+}
+
+impl WorldMeta {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            format: j.req("format")?.as_str()?.to_string(),
+            seed: j.req("seed")?.as_u64()?,
+            n_layers: j.req("n_layers")?.as_u64()? as u16,
+            n_experts: j.req("n_experts")?.as_u64()? as u16,
+            top_k: j.req("top_k")?.as_u64()? as u16,
+            n_shared: j.req("n_shared")?.as_u64()? as u16,
+            n_topics: j.req("n_topics")?.as_u64()? as u16,
+            d_model: j.req("d_model")?.as_u64()? as u16,
+            vocab_size: j.req("vocab_size")?.as_u64()? as u32,
+            working_set: j.req("working_set")?.as_u64()? as u16,
+            layer_mix: j.req("layer_mix")?.as_f64()?,
+            router_temp: j.req("router_temp")?.as_f64()?,
+            router_noise: j.req("router_noise")?.as_f64()?,
+            ctx_alpha: j.get("ctx_alpha").map(|v| v.as_f64()).transpose()?,
+            route_beta: j.get("route_beta").map(|v| v.as_f64()).transpose()?,
+            score_floor: j.req("score_floor")?.as_f64()?,
+            n_heads: j.req("n_heads")?.as_u64()? as u16,
+            d_head: j.req("d_head")?.as_u64()? as u16,
+            d_expert: j.req("d_expert")?.as_u64()? as u16,
+            d_shared: j.req("d_shared")?.as_u64()? as u16,
+            max_seq: j.req("max_seq")?.as_u64()? as u32,
+            fingerprint: j.req("fingerprint")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Predictor hyper-parameters (mirrors `PredictorConfig`).
+#[derive(Debug, Clone)]
+pub struct PredictorMeta {
+    pub d_tok: u16,
+    pub n_model_layers: u16,
+    pub n_experts: u16,
+    pub d_layer: u16,
+    pub d_model: u16,
+    pub n_enc_layers: u16,
+    pub n_heads: u16,
+    pub d_ff: u16,
+    pub window: u32,
+    pub top_k: u16,
+    pub batch: u32,
+}
+
+impl PredictorMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            d_tok: j.req("d_tok")?.as_u64()? as u16,
+            n_model_layers: j.req("n_model_layers")?.as_u64()? as u16,
+            n_experts: j.req("n_experts")?.as_u64()? as u16,
+            d_layer: j.req("d_layer")?.as_u64()? as u16,
+            d_model: j.req("d_model")?.as_u64()? as u16,
+            n_enc_layers: j.req("n_enc_layers")?.as_u64()? as u16,
+            n_heads: j.req("n_heads")?.as_u64()? as u16,
+            d_ff: j.req("d_ff")?.as_u64()? as u16,
+            window: j.req("window")?.as_u64()? as u32,
+            top_k: j.req("top_k")?.as_u64()? as u16,
+            batch: j.req("batch")?.as_u64()? as u32,
+        })
+    }
+}
+
+/// One trace split (train/val/test/backbone_val).
+#[derive(Debug, Clone)]
+pub struct SplitMeta {
+    pub prompts: u32,
+    pub trace_points: u64,
+    pub path: String,
+}
+
+/// Signature of one AOT-lowered executable.
+#[derive(Debug, Clone)]
+pub struct ExecutableSig {
+    pub path: String,
+    pub num_inputs: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// A discovered, validated artifact tree.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub world: WorldMeta,
+    pub predictor: PredictorMeta,
+    pub splits: HashMap<String, SplitMeta>,
+    pub executables: HashMap<String, ExecutableSig>,
+}
+
+impl Artifacts {
+    /// Load and validate `<root>/artifacts.json`.
+    pub fn discover<P: AsRef<Path>>(root: P) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let manifest_path = root.join("artifacts.json");
+        ensure!(
+            manifest_path.exists(),
+            "no artifacts.json under {root:?}; run `make artifacts` first"
+        );
+        let j = Json::parse_file(&manifest_path)?;
+
+        let world = WorldMeta::from_json(j.req("world")?)?;
+        ensure!(
+            world.n_experts <= 64,
+            "ExpertSet is a u64 bitset: n_experts={} > 64",
+            world.n_experts
+        );
+        ensure!(world.top_k < world.n_experts, "top_k must be < n_experts");
+        ensure!(
+            world.format == "moe-beyond-world-v1",
+            "unknown world format {}",
+            world.format
+        );
+
+        let predictor = PredictorMeta::from_json(j.req("predictor_config")?)?;
+
+        let mut splits = HashMap::new();
+        for (name, s) in j.req("splits")?.as_obj()? {
+            splits.insert(
+                name.clone(),
+                SplitMeta {
+                    prompts: s.req("prompts")?.as_u64()? as u32,
+                    trace_points: s.req("trace_points")?.as_u64()?,
+                    path: s.req("path")?.as_str()?.to_string(),
+                },
+            );
+        }
+
+        let mut executables = HashMap::new();
+        for (name, e) in j.req("executables")?.as_obj()? {
+            executables.insert(
+                name.clone(),
+                ExecutableSig {
+                    path: e.req("path")?.as_str()?.to_string(),
+                    num_inputs: e.req("num_inputs")?.as_usize()?,
+                    input_shapes: e
+                        .req("input_shapes")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize_vec())
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let arts = Self {
+            root,
+            world,
+            predictor,
+            splits,
+            executables,
+        };
+        // every declared executable must exist on disk
+        for (name, sig) in &arts.executables {
+            let p = arts.root.join(&sig.path);
+            ensure!(p.exists(), "executable {name} missing at {p:?}");
+        }
+        Ok(arts)
+    }
+
+    /// Absolute path of a file inside the artifact tree.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableSig> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("no executable named {name} in artifacts.json"))
+    }
+
+    pub fn split(&self, name: &str) -> Result<&SplitMeta> {
+        self.splits
+            .get(name)
+            .with_context(|| format!("no trace split named {name} in artifacts.json"))
+    }
+
+    /// The predictor-weights fingerprint must match the world fingerprint
+    /// (paper §5: the predictor is tightly coupled to its backbone; a
+    /// mismatch is a hard error, not a silent accuracy collapse).
+    pub fn check_fingerprint(&self) -> Result<()> {
+        let j = Json::parse_file(self.path("predictor_weights.bin.json"))?;
+        let fp = j.req("fingerprint")?.as_str()?;
+        ensure!(
+            fp == self.world.fingerprint,
+            "predictor weights were trained for world {} but artifacts hold {}",
+            fp,
+            self.world.fingerprint
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts_root() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("artifacts.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn discover_real_artifacts_if_present() {
+        let Some(root) = arts_root() else { return };
+        let a = Artifacts::discover(&root).unwrap();
+        assert_eq!(a.world.n_experts, 64);
+        assert_eq!(a.world.top_k, 6);
+        assert_eq!(a.world.n_layers, 27);
+        assert!(a.executables.contains_key("predictor"));
+        assert!(a.predictor.window >= 16);
+        a.check_fingerprint().unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Artifacts::discover("/nonexistent/nowhere").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Typed configuration: artifact manifests written by the Python compile
+//! path, plus runtime knobs (cache, simulator, serving) with validation.
+
+mod artifacts;
+mod runtime_cfg;
+
+pub use artifacts::{Artifacts, ExecutableSig, PredictorMeta, SplitMeta, WorldMeta};
+pub use runtime_cfg::{CacheConfig, EamConfig, ServeConfig, SimConfig};

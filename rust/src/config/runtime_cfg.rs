@@ -1,0 +1,204 @@
+//! Runtime configuration knobs (cache, EAM baseline, simulator, serving)
+//! with builder-style construction and validation.
+
+use anyhow::ensure;
+use crate::Result;
+
+/// Expert-cache configuration (the simulated GPU VRAM).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Total experts the cache can hold (across all layers).
+    pub capacity_experts: usize,
+    /// Modeled cost of fetching one expert host->VRAM over PCIe, in µs.
+    /// Default: DeepSeek-V2-Lite expert ≈ 44 MB bf16 over PCIe 4.0 x16
+    /// (~32 GB/s sustained) ≈ 1.4 ms; scaled to our backbone's expert
+    /// size at the same bandwidth ratio.
+    pub pcie_us_per_expert: f64,
+    /// Modeled cost of an in-VRAM hit (µs) — effectively free.
+    pub hit_us: f64,
+    /// Pin shared experts (always resident, not counted against capacity).
+    pub pin_shared: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            capacity_experts: 172, // 10% of 27*64
+            pcie_us_per_expert: 1400.0,
+            hit_us: 2.0,
+            pin_shared: true,
+        }
+    }
+}
+
+impl CacheConfig {
+    pub fn with_capacity(mut self, n: usize) -> Self {
+        self.capacity_experts = n;
+        self
+    }
+
+    /// Capacity as a fraction of the full expert pool (layers × experts).
+    pub fn with_capacity_frac(mut self, frac: f64, n_layers: usize, n_experts: usize) -> Self {
+        let total = n_layers * n_experts;
+        self.capacity_experts = ((total as f64 * frac).round() as usize).max(1);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.capacity_experts > 0, "cache capacity must be > 0");
+        ensure!(self.pcie_us_per_expert >= 0.0, "negative PCIe cost");
+        Ok(())
+    }
+}
+
+/// MoE-Infinity EAM baseline configuration (paper §3.1 / §4.1.4).
+#[derive(Debug, Clone)]
+pub struct EamConfig {
+    /// EAMC capacity: number of request-level sketches retained.
+    pub eamc_capacity: usize,
+    /// k-means clusters used to compact the EAMC (Fig 4); 0 = keep raw.
+    pub kmeans_clusters: usize,
+    /// k-means iterations.
+    pub kmeans_iters: usize,
+    /// Experts prefetched per layer from the matched sketch.
+    pub prefetch_per_layer: usize,
+}
+
+impl Default for EamConfig {
+    fn default() -> Self {
+        Self {
+            eamc_capacity: 120,
+            kmeans_clusters: 24,
+            kmeans_iters: 12,
+            prefetch_per_layer: 6,
+        }
+    }
+}
+
+impl EamConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.eamc_capacity > 0, "eamc_capacity must be > 0");
+        ensure!(self.prefetch_per_layer > 0, "prefetch_per_layer must be > 0");
+        Ok(())
+    }
+}
+
+/// Trace-driven simulator configuration (paper §4.1.4).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Warm-up tokens per prompt: these only warm the LRU cache (and the
+    /// partial rEAM) before prediction starts — "the first n tokens".
+    pub warmup_tokens: usize,
+    /// Experts taken from the predictor per layer (top-k of probs).
+    pub predict_top_k: usize,
+    /// Refresh the learned predictor every this many tokens (its window
+    /// output covers all positions, so reuse between refreshes is sound).
+    pub predictor_stride: usize,
+    /// Prefetch horizon in layers (paper: 1 — §5 third limitation).
+    pub lookahead_layers: usize,
+    /// Max experts whose DMA can complete within one layer's compute
+    /// window (PCIe-bound; paper §5: transfers overlap only the preceding
+    /// layer).  Prefetches beyond this are issued but arrive too late —
+    /// this is what makes DeepSpeed-MoE's fetch-everything strategy
+    /// "over-fetch badly" (§3.1) instead of trivially winning.
+    pub prefetch_budget: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            warmup_tokens: 8,
+            predict_top_k: 6,
+            predictor_stride: 4,
+            lookahead_layers: 1,
+            prefetch_budget: 12,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.predict_top_k > 0 && self.predict_top_k <= 64, "bad predict_top_k");
+        ensure!(self.predictor_stride > 0, "stride must be > 0");
+        ensure!(self.lookahead_layers >= 1, "lookahead must be >= 1");
+        ensure!(self.prefetch_budget >= 1, "prefetch_budget must be >= 1");
+        Ok(())
+    }
+}
+
+/// Serving-loop configuration (L3 coordinator).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Max tokens generated per request.
+    pub max_new_tokens: usize,
+    /// Micro-batch size; the paper's method assumes 1 (§5), larger values
+    /// are supported to reproduce the degradation ablation.
+    pub batch_size: usize,
+    /// Request queue bound (admission control / backpressure).
+    pub queue_depth: usize,
+    /// Sampling temperature for the backbone LM head (0 = greedy).
+    pub temperature: f64,
+    /// Which predictor drives prefetch: "learned", "eam", "next-layer",
+    /// "popularity", "oracle", "none".
+    pub predictor: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_new_tokens: 32,
+            batch_size: 1,
+            queue_depth: 64,
+            temperature: 0.0,
+            predictor: "learned".to_string(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_new_tokens > 0, "max_new_tokens must be > 0");
+        ensure!(self.batch_size >= 1, "batch_size must be >= 1");
+        ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        ensure!(
+            ["learned", "eam", "next-layer", "popularity", "oracle", "none"]
+                .contains(&self.predictor.as_str()),
+            "unknown predictor {}",
+            self.predictor
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        CacheConfig::default().validate().unwrap();
+        EamConfig::default().validate().unwrap();
+        SimConfig::default().validate().unwrap();
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn capacity_frac() {
+        let c = CacheConfig::default().with_capacity_frac(0.10, 27, 64);
+        assert_eq!(c.capacity_experts, 173); // round(1728 * 0.1)
+        let c = CacheConfig::default().with_capacity_frac(0.0, 27, 64);
+        assert_eq!(c.capacity_experts, 1); // clamped to at least 1
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(CacheConfig::default().with_capacity(0).validate().is_err());
+        let mut s = ServeConfig::default();
+        s.predictor = "magic".into();
+        assert!(s.validate().is_err());
+        let mut sim = SimConfig::default();
+        sim.predict_top_k = 0;
+        assert!(sim.validate().is_err());
+    }
+
+}

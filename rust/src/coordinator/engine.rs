@@ -1,0 +1,341 @@
+//! The model engine: a single-owner decode loop over the PJRT backbone
+//! with predictor-driven expert prefetch.
+//!
+//! One engine == one edge accelerator.  All xla handles live here (they
+//! are not Send); the async front-end talks to it over channels
+//! (`server.rs`).  Per decoded token the engine:
+//!
+//! 1. refreshes the learned predictor every `predictor_stride` tokens
+//!    (one batched PJRT call covering all 27 layers),
+//! 2. prefetches the predicted per-layer expert sets into the cache
+//!    manager (modeled PCIe DMA, overlapped per layer),
+//! 3. runs the backbone decode step (real HLO compute),
+//! 4. reconciles the router's actual expert ids against the cache
+//!    (hit/miss accounting) and feeds observers (EAM partial sketches),
+//! 5. samples the next token.
+
+use std::time::Instant;
+
+use crate::cache::build_policy;
+use crate::config::{Artifacts, CacheConfig, EamConfig, ServeConfig, SimConfig};
+use crate::coordinator::expert_state::ExpertCacheManager;
+use crate::coordinator::request::{GenStats, Request, Response};
+use crate::coordinator::session::Session;
+use crate::moe::{sample_token, Backbone};
+use crate::predictor::{
+    DecodeContext, EamPredictor, ExpertPredictor, LearnedModel, NextLayerAll,
+    PopularityPredictor,
+};
+use crate::runtime::PjrtRuntime;
+use crate::trace::PromptTrace;
+use crate::util::{ExpertSet, Rng};
+use crate::Result;
+
+/// Engine construction knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub serve: ServeConfig,
+    pub cache: CacheConfig,
+    pub sim: SimConfig,
+    pub eam: EamConfig,
+    /// Cache policy name ("lru" | "lfu").
+    pub policy: String,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            serve: ServeConfig::default(),
+            cache: CacheConfig::default(),
+            sim: SimConfig::default(),
+            eam: EamConfig::default(),
+            policy: "lru".into(),
+        }
+    }
+}
+
+enum EnginePredictor {
+    Learned(LearnedModel),
+    Heuristic(Box<dyn ExpertPredictor>),
+    None,
+}
+
+pub struct ModelEngine {
+    backbone: Backbone,
+    predictor: EnginePredictor,
+    cache_mgr: ExpertCacheManager,
+    cfg: EngineConfig,
+    rng: Rng,
+    /// Empty trace handed to heuristic predictors (they only use
+    /// observe/predict state, never the trace contents).
+    dummy_trace: PromptTrace,
+}
+
+/// One in-flight decode stream (session + accounting + cached predictions).
+struct Stream {
+    sess: Session,
+    stats: GenStats,
+    logits: Vec<f32>,
+    pred_sets: Vec<ExpertSet>,
+    started: Instant,
+    /// VRAM-model baseline at request start (per-request modeled time).
+    vram_mark: (f64, f64),
+    /// Device-resident KV state (threads between decode calls).
+    decode: crate::moe::DecodeSession,
+}
+
+impl ModelEngine {
+    /// Build an engine from artifacts (loads backbone + chosen predictor).
+    pub fn load(rt: &PjrtRuntime, arts: &Artifacts, cfg: EngineConfig) -> Result<Self> {
+        cfg.serve.validate()?;
+        cfg.cache.validate()?;
+        cfg.sim.validate()?;
+        let backbone = Backbone::load(rt, arts)?;
+        let w = &arts.world;
+        let (n_layers, n_experts) = (w.n_layers as usize, w.n_experts as usize);
+
+        let predictor = match cfg.serve.predictor.as_str() {
+            "learned" => EnginePredictor::Learned(LearnedModel::load(rt, arts)?),
+            "eam" => EnginePredictor::Heuristic(Box::new(EamPredictor::new(
+                cfg.eam.clone(),
+                n_layers,
+                n_experts,
+            ))),
+            "next-layer" => {
+                EnginePredictor::Heuristic(Box::new(NextLayerAll::new(n_experts as u16)))
+            }
+            "popularity" => EnginePredictor::Heuristic(Box::new(PopularityPredictor::new(
+                n_layers,
+                n_experts,
+                cfg.sim.predict_top_k,
+            ))),
+            "none" => EnginePredictor::None,
+            other => anyhow::bail!("predictor {other} not servable (oracle is sim-only)"),
+        };
+
+        // overlap budget: one layer's decode compute hides this much DMA.
+        // Estimated from the measured per-token decode wall / n_layers.
+        let overlap_us = 30_000.0 / n_layers as f64;
+        let cache_mgr = ExpertCacheManager::new(
+            build_policy(&cfg.policy, cfg.cache.capacity_experts)?,
+            cfg.cache.clone(),
+            n_experts,
+            overlap_us,
+        )
+        .with_prefetch_budget(cfg.sim.prefetch_budget);
+
+        let n_layers_u16 = w.n_layers;
+        Ok(Self {
+            backbone,
+            predictor,
+            cache_mgr,
+            cfg,
+            rng: Rng::new(0x5EED),
+            dummy_trace: PromptTrace {
+                prompt_id: 0,
+                n_layers: n_layers_u16,
+                top_k: w.top_k,
+                d_emb: 0,
+                tokens: vec![],
+                embeddings: vec![],
+                experts: vec![],
+            },
+        })
+    }
+
+    pub fn world(&self) -> &crate::config::WorldMeta {
+        &self.backbone.world
+    }
+
+    fn predictor_window(&self) -> usize {
+        match &self.predictor {
+            EnginePredictor::Learned(m) => m.window,
+            _ => 32,
+        }
+    }
+
+    /// Prefill one request into a fresh stream (prompt experts warm the
+    /// cache and the heuristic observers).
+    fn prefill_stream(&mut self, request: Request) -> Result<Stream> {
+        let w = self.backbone.world.clone();
+        let (n_layers, d) = (w.n_layers as usize, w.d_model as usize);
+        let mut sess = Session::new(request, d, self.predictor_window());
+        let mut stats = GenStats::default();
+        let started = Instant::now();
+        let vram_mark = self.cache_mgr.begin_request();
+
+        if let EnginePredictor::Heuristic(p) = &mut self.predictor {
+            p.begin_prompt(&self.dummy_trace);
+        }
+
+        let td = Instant::now();
+        let pre = self.backbone.prefill(&sess.request.prompt)?;
+        stats.decode_time += td.elapsed();
+        let n_prompt = sess.request.prompt.len().min(w.max_seq as usize);
+        for pos in 0..n_prompt {
+            sess.push_embedding(&pre.embeddings[pos * d..(pos + 1) * d]);
+            for l in 0..n_layers {
+                let ids = self.backbone.prefill_router_ids(&pre, l, pos);
+                let set = ExpertSet::from_ids(ids.iter().map(|&e| e as u8));
+                self.cache_mgr.observe_actual(l, set, &mut stats);
+                if let EnginePredictor::Heuristic(p) = &mut self.predictor {
+                    let ctx = DecodeContext {
+                        trace: &self.dummy_trace,
+                        t: 0,
+                    };
+                    p.observe(&ctx, l, set);
+                }
+            }
+        }
+        let decode = self.backbone.start_decode(&pre.kv)?;
+        sess.pos = n_prompt;
+        Ok(Stream {
+            sess,
+            stats,
+            logits: pre.logits,
+            pred_sets: vec![ExpertSet::EMPTY; n_layers],
+            started,
+            vram_mark,
+            decode,
+        })
+    }
+
+    /// Decode exactly one token on a stream: predict → prefetch → execute
+    /// → reconcile → sample.
+    fn step_stream(&mut self, s: &mut Stream) -> Result<()> {
+        let w = self.backbone.world.clone();
+        let n_layers = w.n_layers as usize;
+        let next = sample_token(&s.logits, s.sess.request.temperature, &mut self.rng);
+
+        // 1) predictions
+        match &mut self.predictor {
+            EnginePredictor::Learned(model) => {
+                if s.sess.since_refresh >= self.cfg.sim.predictor_stride {
+                    let tp = Instant::now();
+                    let (emb, n_real) = s.sess.window();
+                    if n_real > 0 {
+                        let layers: Vec<usize> = (0..n_layers).collect();
+                        let lg = model.predict_window(emb, n_real, &layers)?;
+                        let e_n = model.n_experts;
+                        for (li, set) in s.pred_sets.iter_mut().enumerate() {
+                            let base = (li * n_real + (n_real - 1)) * e_n;
+                            *set = model
+                                .top_set(&lg[base..base + e_n], self.cfg.sim.predict_top_k);
+                        }
+                    }
+                    s.sess.since_refresh = 0;
+                    s.stats.predict_time += tp.elapsed();
+                }
+            }
+            EnginePredictor::Heuristic(p) => {
+                let ctx = DecodeContext {
+                    trace: &self.dummy_trace,
+                    t: 0,
+                };
+                for (l, set) in s.pred_sets.iter_mut().enumerate() {
+                    *set = p.predict(&ctx, l);
+                }
+            }
+            EnginePredictor::None => {}
+        }
+
+        // 2) prefetch (one layer ahead of execution)
+        if !matches!(self.predictor, EnginePredictor::None) {
+            for l in 0..n_layers {
+                self.cache_mgr.prefetch(l, s.pred_sets[l], &mut s.stats);
+            }
+        }
+
+        // 3) execute the decode step (KV stays device-resident)
+        let td = Instant::now();
+        let dec = self.backbone.decode_chained(&mut s.decode, s.sess.pos, next)?;
+        s.stats.decode_time += td.elapsed();
+
+        // 4) reconcile actual router decisions
+        for l in 0..n_layers {
+            let ids = &dec.router_ids[l * w.top_k as usize..(l + 1) * w.top_k as usize];
+            let set = ExpertSet::from_ids(ids.iter().map(|&e| e as u8));
+            self.cache_mgr.observe_phase(l, set, &mut s.stats, true);
+            if let EnginePredictor::Heuristic(p) = &mut self.predictor {
+                let ctx = DecodeContext {
+                    trace: &self.dummy_trace,
+                    t: 0,
+                };
+                p.observe(&ctx, l, set);
+            }
+        }
+
+        // 5) advance
+        s.sess.push_embedding(&dec.embedding);
+        s.sess.generated.push(next);
+        s.sess.pos += 1;
+        s.sess.since_refresh = s.sess.since_refresh.saturating_add(1);
+        s.logits = dec.logits;
+        Ok(())
+    }
+
+    fn finish_stream(&mut self, mut s: Stream) -> Response {
+        if let EnginePredictor::Heuristic(p) = &mut self.predictor {
+            p.end_prompt(&self.dummy_trace);
+        }
+        self.cache_mgr.finish_from(s.vram_mark, &mut s.stats);
+        s.stats.wall = s.started.elapsed();
+        Response {
+            id: s.sess.request.id,
+            tokens: s.sess.generated,
+            stats: s.stats,
+        }
+    }
+
+    /// Serve one request start-to-finish (batch size 1, the paper's
+    /// operating point).
+    pub fn process(&mut self, request: Request) -> Result<Response> {
+        let max_seq = self.backbone.world.max_seq as usize;
+        let mut stream = self.prefill_stream(request)?;
+        while !stream.sess.done() && stream.sess.remaining_positions(max_seq) > 0 {
+            self.step_stream(&mut stream)?;
+        }
+        Ok(self.finish_stream(stream))
+    }
+
+    /// Token-interleaved micro-batching (paper §5 first limitation): all
+    /// streams share the expert cache and the heuristic observers, so
+    /// their activation streams superpose — the ablation bench measures
+    /// the resulting hit-rate collapse.
+    pub fn process_batch(&mut self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        let max_seq = self.backbone.world.max_seq as usize;
+        // merged decoding computes each layer once for the whole batch, so
+        // the per-layer prefetch DMA window is SHARED: each stream gets
+        // 1/B of it — the §5 hit-rate collapse under micro-batching
+        self.cache_mgr.set_batch_share(requests.len());
+        let mut streams = Vec::with_capacity(requests.len());
+        for r in requests {
+            streams.push(Some(self.prefill_stream(r)?));
+        }
+        loop {
+            let mut progressed = false;
+            for slot in streams.iter_mut() {
+                if let Some(s) = slot {
+                    if !s.sess.done() && s.sess.remaining_positions(max_seq) > 0 {
+                        self.step_stream(s)?;
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        let out = streams
+            .into_iter()
+            .map(|s| self.finish_stream(s.unwrap()))
+            .collect();
+        self.cache_mgr.set_batch_share(1);
+        Ok(out)
+    }
+
+    /// Reset cache residency between experiments.
+    pub fn reset_cache(&mut self) {
+        self.cache_mgr.clear();
+    }
+}

@@ -1,0 +1,177 @@
+//! Expert residency manager for the serving path: one cache policy + the
+//! VRAM transfer model + per-request accounting, shared by every predictor
+//! kind.
+
+use crate::cache::{policy, CachePolicy, VramModel};
+use crate::config::CacheConfig;
+use crate::coordinator::request::GenStats;
+use crate::util::ExpertSet;
+
+pub struct ExpertCacheManager {
+    cache: Box<dyn CachePolicy>,
+    vram: VramModel,
+    n_experts: usize,
+    /// Max DMA transfers that can land within one layer's compute window.
+    prefetch_budget: usize,
+    base_budget: usize,
+}
+
+impl ExpertCacheManager {
+    pub fn new(
+        cache: Box<dyn CachePolicy>,
+        cfg: CacheConfig,
+        n_experts: usize,
+        overlap_budget_us: f64,
+    ) -> Self {
+        Self {
+            cache,
+            vram: VramModel::new(cfg, overlap_budget_us),
+            n_experts,
+            prefetch_budget: 12,
+            base_budget: 12,
+        }
+    }
+
+    pub fn with_prefetch_budget(mut self, budget: usize) -> Self {
+        self.prefetch_budget = budget.max(1);
+        self.base_budget = self.prefetch_budget;
+        self
+    }
+
+    /// Micro-batching shares the per-layer DMA window across the batch
+    /// (each layer computes once for all streams, so its prefetch window
+    /// is divided): effective budget = base / batch (paper §5 ablation).
+    pub fn set_batch_share(&mut self, batch: usize) {
+        self.prefetch_budget = (self.base_budget / batch.max(1)).max(1);
+    }
+
+    /// Prefetch a predicted set for `layer` (issued before the layer runs;
+    /// DMA overlaps the previous layer's compute up to the budget).
+    pub fn prefetch(&mut self, layer: usize, predicted: ExpertSet, stats: &mut GenStats) {
+        let mut landed = 0usize;
+        for e in predicted.iter() {
+            let k = policy::key(layer, e, self.n_experts);
+            stats.prefetches += 1;
+            if self.cache.contains(k) {
+                self.cache.touch(k);
+                continue;
+            }
+            if landed >= self.prefetch_budget {
+                continue; // DMA window exhausted: arrives too late
+            }
+            landed += 1;
+            self.vram.on_prefetch();
+            self.cache.insert(k);
+        }
+    }
+
+    /// Account the ground-truth experts of an executed layer.
+    /// `decode_phase` additionally feeds the decode-only counters.
+    pub fn observe_actual(&mut self, layer: usize, actual: ExpertSet, stats: &mut GenStats) {
+        self.observe_phase(layer, actual, stats, false)
+    }
+
+    pub fn observe_phase(
+        &mut self,
+        layer: usize,
+        actual: ExpertSet,
+        stats: &mut GenStats,
+        decode_phase: bool,
+    ) {
+        for e in actual.iter() {
+            let k = policy::key(layer, e, self.n_experts);
+            if self.cache.touch(k) {
+                stats.cache_hits += 1;
+                if decode_phase {
+                    stats.decode_cache_hits += 1;
+                }
+                self.vram.on_hit();
+            } else {
+                stats.cache_misses += 1;
+                if decode_phase {
+                    stats.decode_cache_misses += 1;
+                }
+                self.vram.on_demand_miss();
+                self.cache.insert(k);
+            }
+        }
+        self.vram.end_layer();
+    }
+
+    /// Mark the start of a request (baseline for per-request modeled time).
+    pub fn begin_request(&mut self) -> (f64, f64) {
+        (self.vram.demand_us, self.vram.stall_us)
+    }
+
+    /// Snapshot per-request modeled time into the stats (request end).
+    pub fn finish_from(&mut self, mark: (f64, f64), stats: &mut GenStats) {
+        stats.modeled_miss_us = self.vram.demand_us - mark.0;
+        stats.modeled_stall_us = self.vram.stall_us - mark.1;
+    }
+
+    /// Snapshot cumulative modeled time into the stats.
+    pub fn finish(&mut self, stats: &mut GenStats) {
+        stats.modeled_miss_us = self.vram.demand_us;
+        stats.modeled_stall_us = self.vram.stall_us;
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn clear(&mut self) {
+        self.cache.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::LruCache;
+
+    fn mgr(cap: usize) -> ExpertCacheManager {
+        ExpertCacheManager::new(
+            Box::new(LruCache::new(cap)),
+            CacheConfig {
+                capacity_experts: cap,
+                pcie_us_per_expert: 100.0,
+                hit_us: 1.0,
+                pin_shared: true,
+            },
+            64,
+            1000.0,
+        )
+    }
+
+    #[test]
+    fn prefetched_experts_hit() {
+        let mut m = mgr(16);
+        let mut stats = GenStats::default();
+        let set = ExpertSet::from_ids([1u8, 2, 3]);
+        m.prefetch(0, set, &mut stats);
+        m.observe_actual(0, set, &mut stats);
+        assert_eq!(stats.cache_hits, 3);
+        assert_eq!(stats.cache_misses, 0);
+        assert_eq!(stats.prefetches, 3);
+    }
+
+    #[test]
+    fn unprefetched_experts_miss_and_cost_pcie() {
+        let mut m = mgr(16);
+        let mut stats = GenStats::default();
+        m.observe_actual(5, ExpertSet::from_ids([9u8]), &mut stats);
+        m.finish(&mut stats);
+        assert_eq!(stats.cache_misses, 1);
+        assert!(stats.modeled_miss_us >= 100.0);
+    }
+
+    #[test]
+    fn keys_are_layer_scoped() {
+        let mut m = mgr(16);
+        let mut stats = GenStats::default();
+        m.prefetch(0, ExpertSet::from_ids([7u8]), &mut stats);
+        // same expert id at a different layer is NOT resident
+        m.observe_actual(1, ExpertSet::from_ids([7u8]), &mut stats);
+        assert_eq!(stats.cache_misses, 1);
+    }
+}

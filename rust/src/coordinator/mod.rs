@@ -1,0 +1,28 @@
+//! L3 serving coordinator — the edge-serving loop MoE-Beyond plugs into.
+//!
+//! Architecture (vLLM-router-style, scaled to a single edge device):
+//!
+//! ```text
+//!   clients ──► RequestQueue (tokio mpsc, bounded = admission control)
+//!                   │
+//!                   ▼
+//!            ModelEngine thread (owns ALL PJRT state — xla handles are
+//!            not Send, and an edge GPU has one execution stream anyway)
+//!                   │  per token: predict ► prefetch ► decode ► account
+//!                   ▼
+//!            ExpertCacheManager (simulated VRAM residency + PCIe model)
+//! ```
+//!
+//! Python never appears: the engine executes AOT HLO through `runtime`.
+
+mod engine;
+mod expert_state;
+mod request;
+mod server;
+mod session;
+
+pub use engine::{EngineConfig, ModelEngine};
+pub use expert_state::ExpertCacheManager;
+pub use request::{GenStats, Request, Response};
+pub use server::{serve_requests, ServeReport};
+pub use session::Session;

@@ -1,0 +1,88 @@
+//! Request/response types for the serving loop.
+
+use std::time::Duration;
+
+/// An inference request (batch-size-1 edge semantics).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            temperature: 0.0,
+        }
+    }
+}
+
+/// Per-request generation statistics.
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    /// Wall time from admission to completion.
+    pub wall: Duration,
+    /// Wall time spent inside backbone decode calls.
+    pub decode_time: Duration,
+    /// Wall time spent inside predictor calls.
+    pub predict_time: Duration,
+    /// Modeled PCIe time for demand misses (µs, virtual).
+    pub modeled_miss_us: f64,
+    /// Modeled stall from non-overlapped prefetch (µs, virtual).
+    pub modeled_stall_us: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Decode-phase-only subset of the above (prefill warms the cache and
+    /// dilutes whole-request rates; the §5 batching ablation needs this).
+    pub decode_cache_hits: u64,
+    pub decode_cache_misses: u64,
+    pub prefetches: u64,
+}
+
+impl GenStats {
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.cache_hits + self.cache_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / n as f64
+        }
+    }
+
+    /// Hit rate over generated (decode) tokens only.
+    pub fn decode_hit_rate(&self) -> f64 {
+        let n = self.decode_cache_hits + self.decode_cache_misses;
+        if n == 0 {
+            0.0
+        } else {
+            self.decode_cache_hits as f64 / n as f64
+        }
+    }
+}
+
+/// A completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub stats: GenStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_math() {
+        let mut s = GenStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s.cache_hits = 9;
+        s.cache_misses = 1;
+        assert!((s.hit_rate() - 0.9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,143 @@
+//! Serving front-end: bounded admission queue (backpressure) feeding the
+//! engine on a dedicated OS thread.
+//!
+//! Implemented on std::sync primitives — this build environment has no
+//! async runtime, and the engine is a single execution stream anyway
+//! (PJRT handles are not Send; one edge accelerator == one worker).
+//! `sync_channel(queue_depth)` gives exactly the bounded-queue admission
+//! semantics an async version would have.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::engine::ModelEngine;
+use crate::coordinator::request::{Request, Response};
+use crate::metrics::{LatencyReport, ServingMetrics};
+use crate::Result;
+
+/// Aggregate report of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completed: usize,
+    /// Admission-pressure events (submissions that found the queue full
+    /// and had to block).
+    pub backpressured: usize,
+    pub total_tokens: usize,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+    pub requests_per_sec: f64,
+    pub cache_hit_rate: f64,
+    pub request_latency: LatencyReport,
+    pub responses: Vec<Response>,
+}
+
+type Job = (Request, mpsc::Sender<Response>);
+
+/// Serve a closed set of requests through an engine built on the worker
+/// thread by `make_engine`; returns when all requests completed.
+///
+/// `queue_depth` bounds the admission queue; `batch_size` > 1 enables the
+/// token-interleaved micro-batch path (paper §5 ablation).
+pub fn serve_requests<F>(
+    make_engine: F,
+    requests: Vec<Request>,
+    queue_depth: usize,
+    batch_size: usize,
+) -> Result<ServeReport>
+where
+    F: FnOnce() -> Result<ModelEngine> + Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth.max(1));
+    let metrics = std::sync::Arc::new(ServingMetrics::default());
+
+    // ---- engine worker thread
+    let worker = std::thread::spawn(move || -> Result<()> {
+        let mut engine = make_engine()?;
+        let mut pending: Vec<Job> = Vec::new();
+        loop {
+            let first = match rx.recv() {
+                Ok(j) => j,
+                Err(_) => break,
+            };
+            pending.push(first);
+            // dynamic-batching window: wait briefly for co-arriving
+            // requests before launching the batch (vLLM-style)
+            let deadline = std::time::Instant::now() + std::time::Duration::from_millis(20);
+            while pending.len() < batch_size {
+                match rx.try_recv() {
+                    Ok(j) => pending.push(j),
+                    Err(mpsc::TryRecvError::Empty) => {
+                        if std::time::Instant::now() >= deadline {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => break,
+                }
+            }
+            let (reqs, senders): (Vec<_>, Vec<_>) = pending.drain(..).unzip();
+            let responses = if reqs.len() == 1 {
+                vec![engine.process(reqs.into_iter().next().unwrap())?]
+            } else {
+                engine.process_batch(reqs)?
+            };
+            for (resp, sender) in responses.into_iter().zip(senders) {
+                let _ = sender.send(resp);
+            }
+        }
+        Ok(())
+    });
+
+    // ---- submit everything, respecting the bounded queue
+    let t0 = Instant::now();
+    let mut waiters = Vec::new();
+    let mut backpressured = 0usize;
+    for req in requests {
+        let (otx, orx) = mpsc::channel();
+        metrics.requests_admitted.inc();
+        match tx.try_send((req, otx)) {
+            Ok(()) => waiters.push(orx),
+            Err(mpsc::TrySendError::Full(job)) => {
+                // backpressure: account the event, then block for capacity
+                backpressured += 1;
+                metrics.requests_rejected.inc();
+                if tx.send(job).is_err() {
+                    break;
+                }
+                waiters.push(orx);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => break,
+        }
+    }
+    drop(tx);
+
+    // ---- collect
+    let mut responses = Vec::new();
+    for w in waiters {
+        if let Ok(resp) = w.recv() {
+            metrics.requests_completed.inc();
+            metrics.tokens_generated.add(resp.tokens.len() as u64);
+            metrics.cache_hits.add(resp.stats.cache_hits);
+            metrics.cache_misses.add(resp.stats.cache_misses);
+            metrics.request_latency.record(resp.stats.wall);
+            responses.push(resp);
+        }
+    }
+    worker
+        .join()
+        .map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
+
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    Ok(ServeReport {
+        completed: responses.len(),
+        backpressured,
+        total_tokens,
+        wall_secs: wall,
+        tokens_per_sec: total_tokens as f64 / wall.max(1e-9),
+        requests_per_sec: responses.len() as f64 / wall.max(1e-9),
+        cache_hit_rate: metrics.cache_hit_rate(),
+        request_latency: metrics.request_latency.report(),
+        responses,
+    })
+}

@@ -1,0 +1,103 @@
+//! Per-request decode session: KV state, the embedding ring the learned
+//! predictor consumes, and generation progress.
+
+use crate::coordinator::request::Request;
+
+/// Decode state for one in-flight request.
+pub struct Session {
+    pub request: Request,
+    /// Backbone KV state (host copy; only populated by non-chained
+    /// callers — the engine threads KV device-side via `DecodeSession`).
+    pub kv: Vec<f32>,
+    /// Absolute position of the next token to write.
+    pub pos: usize,
+    /// Generated token ids.
+    pub generated: Vec<i32>,
+    /// Ring of the most recent token embeddings (predictor window).
+    emb_ring: Vec<f32>,
+    ring_len: usize,
+    ring_cap: usize,
+    d_emb: usize,
+    /// Tokens decoded since the last predictor refresh.
+    pub since_refresh: usize,
+}
+
+impl Session {
+    pub fn new(request: Request, d_emb: usize, window: usize) -> Self {
+        Self {
+            request,
+            kv: Vec::new(),
+            pos: 0,
+            generated: Vec::new(),
+            emb_ring: vec![0.0; window * d_emb],
+            ring_len: 0,
+            ring_cap: window,
+            d_emb,
+            since_refresh: usize::MAX, // force refresh on first token
+        }
+    }
+
+    /// Append a token embedding to the ring.
+    pub fn push_embedding(&mut self, emb: &[f32]) {
+        debug_assert_eq!(emb.len(), self.d_emb);
+        if self.ring_len < self.ring_cap {
+            let off = self.ring_len * self.d_emb;
+            self.emb_ring[off..off + self.d_emb].copy_from_slice(emb);
+            self.ring_len += 1;
+        } else {
+            // shift left one row (window is small: 32 * 128 floats)
+            self.emb_ring.copy_within(self.d_emb.., 0);
+            let off = (self.ring_cap - 1) * self.d_emb;
+            self.emb_ring[off..off + self.d_emb].copy_from_slice(emb);
+        }
+    }
+
+    /// The current window: (embeddings row-major, n_real).
+    pub fn window(&self) -> (&[f32], usize) {
+        (&self.emb_ring[..self.ring_len * self.d_emb], self.ring_len)
+    }
+
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.request.max_new_tokens
+    }
+
+    /// Remaining KV slots (generation must stop at max_seq).
+    pub fn remaining_positions(&self, max_seq: usize) -> usize {
+        max_seq.saturating_sub(self.pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sess(window: usize) -> Session {
+        Session::new(Request::new(1, vec![1, 2, 3], 4), 2, window)
+    }
+
+    #[test]
+    fn ring_fills_then_slides() {
+        let mut s = sess(3);
+        s.push_embedding(&[1.0, 1.0]);
+        s.push_embedding(&[2.0, 2.0]);
+        let (w, n) = s.window();
+        assert_eq!(n, 2);
+        assert_eq!(w, &[1.0, 1.0, 2.0, 2.0]);
+        s.push_embedding(&[3.0, 3.0]);
+        s.push_embedding(&[4.0, 4.0]); // evicts [1,1]
+        let (w, n) = s.window();
+        assert_eq!(n, 3);
+        assert_eq!(w, &[2.0, 2.0, 3.0, 3.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn done_and_positions() {
+        let mut s = sess(4);
+        assert!(!s.done());
+        s.generated = vec![9, 9, 9, 9];
+        assert!(s.done());
+        s.pos = 150;
+        assert_eq!(s.remaining_positions(160), 10);
+        assert_eq!(s.remaining_positions(100), 0);
+    }
+}

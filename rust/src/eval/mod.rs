@@ -1,0 +1,248 @@
+//! Predictor evaluation — the paper's §3.2.4 metrics behind Table 1:
+//! element-wise accuracy, macro-F1 across experts, exact top-k set match
+//! ("position-wise accuracy"), plus micro-F1 for completeness.
+
+use crate::predictor::TracePredictions;
+use crate::trace::PromptTrace;
+use crate::util::ExpertSet;
+
+/// Aggregated evaluation counters.
+#[derive(Debug, Clone)]
+pub struct EvalAccumulator {
+    pub n_experts: usize,
+    /// Per-expert true/false positives/negatives (threshold 0.5).
+    pub tp: Vec<u64>,
+    pub fp: Vec<u64>,
+    pub fn_: Vec<u64>,
+    pub tn: Vec<u64>,
+    /// Exact top-k set matches / total positions.
+    pub exact: u64,
+    pub positions: u64,
+}
+
+impl EvalAccumulator {
+    pub fn new(n_experts: usize) -> Self {
+        Self {
+            n_experts,
+            tp: vec![0; n_experts],
+            fp: vec![0; n_experts],
+            fn_: vec![0; n_experts],
+            tn: vec![0; n_experts],
+            exact: 0,
+            positions: 0,
+        }
+    }
+
+    /// Record one position: sigmoid(logits) thresholded at 0.5 for the
+    /// per-expert confusion counts; `pred_topk` vs `truth` for exact match.
+    pub fn record(&mut self, logits: &[f32], pred_topk: ExpertSet, truth: ExpertSet) {
+        debug_assert_eq!(logits.len(), self.n_experts);
+        for e in 0..self.n_experts {
+            // sigmoid(x) > 0.5  <=>  x > 0
+            let p = logits[e] > 0.0;
+            let a = truth.contains(e as u8);
+            match (p, a) {
+                (true, true) => self.tp[e] += 1,
+                (true, false) => self.fp[e] += 1,
+                (false, true) => self.fn_[e] += 1,
+                (false, false) => self.tn[e] += 1,
+            }
+        }
+        if pred_topk == truth {
+            self.exact += 1;
+        }
+        self.positions += 1;
+    }
+
+    /// Element-wise accuracy over all (position, expert) decisions.
+    pub fn accuracy(&self) -> f64 {
+        let correct: u64 = self.tp.iter().sum::<u64>() + self.tn.iter().sum::<u64>();
+        let total = self.positions * self.n_experts as u64;
+        if total == 0 {
+            0.0
+        } else {
+            correct as f64 / total as f64
+        }
+    }
+
+    /// Macro-F1: mean per-expert F1 (paper's headline F1).
+    pub fn macro_f1(&self) -> f64 {
+        let mut sum = 0.0;
+        for e in 0..self.n_experts {
+            let p = self.tp[e] as f64 / (self.tp[e] + self.fp[e]).max(1) as f64;
+            let r = self.tp[e] as f64 / (self.tp[e] + self.fn_[e]).max(1) as f64;
+            sum += if p + r > 0.0 { 2.0 * p * r / (p + r) } else { 0.0 };
+        }
+        sum / self.n_experts as f64
+    }
+
+    /// Micro-F1 (pooled counts).
+    pub fn micro_f1(&self) -> f64 {
+        let tp: u64 = self.tp.iter().sum();
+        let fp: u64 = self.fp.iter().sum();
+        let fn_: u64 = self.fn_.iter().sum();
+        if tp == 0 {
+            return 0.0;
+        }
+        let p = tp as f64 / (tp + fp) as f64;
+        let r = tp as f64 / (tp + fn_) as f64;
+        2.0 * p * r / (p + r)
+    }
+
+    /// Exact top-k set match rate.
+    pub fn exact_match(&self) -> f64 {
+        if self.positions == 0 {
+            0.0
+        } else {
+            self.exact as f64 / self.positions as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &EvalAccumulator) {
+        for e in 0..self.n_experts {
+            self.tp[e] += other.tp[e];
+            self.fp[e] += other.fp[e];
+            self.fn_[e] += other.fn_[e];
+            self.tn[e] += other.tn[e];
+        }
+        self.exact += other.exact;
+        self.positions += other.positions;
+    }
+}
+
+/// Evaluate precomputed predictions against a trace's ground truth.
+pub fn eval_trace(preds: &TracePredictions, trace: &PromptTrace, acc: &mut EvalAccumulator) {
+    let e_n = preds.n_experts;
+    for t in 0..trace.n_tokens() {
+        let row = &preds.logits[t];
+        for l in 0..preds.n_layers {
+            let logits = &row[l * e_n..(l + 1) * e_n];
+            acc.record(logits, preds.sets[t][l], trace.expert_set(t, l));
+        }
+    }
+}
+
+/// Per-layer expert agreement (paper §3.2.4: "logging the per-layer
+/// expert agreement rates"): for each model layer, the mean fraction of
+/// the top-k truth set covered by the top-k predicted set.
+#[derive(Debug, Clone)]
+pub struct LayerAgreement {
+    /// overlap(pred, truth) summed, per layer.
+    pub overlap: Vec<u64>,
+    /// positions counted per layer.
+    pub count: Vec<u64>,
+    pub top_k: usize,
+}
+
+impl LayerAgreement {
+    pub fn new(n_layers: usize, top_k: usize) -> Self {
+        Self {
+            overlap: vec![0; n_layers],
+            count: vec![0; n_layers],
+            top_k,
+        }
+    }
+
+    pub fn record_trace(&mut self, preds: &TracePredictions, trace: &PromptTrace) {
+        for t in 0..trace.n_tokens() {
+            for l in 0..preds.n_layers {
+                self.overlap[l] += preds.sets[t][l].overlap(trace.expert_set(t, l)) as u64;
+                self.count[l] += 1;
+            }
+        }
+    }
+
+    /// Agreement rate per layer, in [0, 1].
+    pub fn rates(&self) -> Vec<f64> {
+        self.overlap
+            .iter()
+            .zip(&self.count)
+            .map(|(&o, &c)| {
+                if c == 0 {
+                    0.0
+                } else {
+                    o as f64 / (c * self.top_k as u64) as f64
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_scores_one() {
+        let mut a = EvalAccumulator::new(4);
+        // truth {0,1}; logits positive exactly there; topk matches
+        let truth = ExpertSet::from_ids([0u8, 1]);
+        a.record(&[5.0, 5.0, -5.0, -5.0], truth, truth);
+        assert_eq!(a.accuracy(), 1.0);
+        assert_eq!(a.exact_match(), 1.0);
+        assert!((a.micro_f1() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_negative_prediction() {
+        let mut a = EvalAccumulator::new(4);
+        let truth = ExpertSet::from_ids([0u8]);
+        a.record(&[-1.0, -1.0, -1.0, -1.0], ExpertSet::EMPTY, truth);
+        assert_eq!(a.accuracy(), 0.75); // 3 TN of 4 decisions
+        assert_eq!(a.exact_match(), 0.0);
+        assert_eq!(a.micro_f1(), 0.0);
+    }
+
+    #[test]
+    fn macro_vs_micro_weighting() {
+        let mut a = EvalAccumulator::new(2);
+        // expert 0 always right (10 positives), expert 1 always wrong (1)
+        for _ in 0..10 {
+            a.record(&[5.0, -5.0], ExpertSet::from_ids([0u8]), ExpertSet::from_ids([0u8]));
+        }
+        a.record(&[-5.0, -5.0], ExpertSet::EMPTY, ExpertSet::from_ids([1u8]));
+        // macro averages the per-expert F1s: (f1_0 + 0) / 2
+        assert!(a.macro_f1() < a.micro_f1());
+    }
+
+    #[test]
+    fn layer_agreement_rates() {
+        use crate::predictor::TracePredictions;
+        use crate::trace::PromptTrace;
+        let trace = PromptTrace {
+            prompt_id: 0,
+            n_layers: 2,
+            top_k: 2,
+            d_emb: 0,
+            tokens: vec![0],
+            embeddings: vec![],
+            experts: vec![1, 2, 3, 4], // layer0 {1,2}, layer1 {3,4}
+        };
+        let preds = TracePredictions {
+            n_layers: 2,
+            sets: vec![vec![
+                ExpertSet::from_ids([1u8, 9]),  // half right
+                ExpertSet::from_ids([3u8, 4]),  // exact
+            ]],
+            logits: vec![vec![]],
+            n_experts: 64,
+        };
+        let mut la = LayerAgreement::new(2, 2);
+        la.record_trace(&preds, &trace);
+        let r = la.rates();
+        assert!((r[0] - 0.5).abs() < 1e-9);
+        assert!((r[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = EvalAccumulator::new(2);
+        let mut b = EvalAccumulator::new(2);
+        let t = ExpertSet::from_ids([0u8]);
+        a.record(&[1.0, -1.0], t, t);
+        b.record(&[1.0, -1.0], t, t);
+        a.merge(&b);
+        assert_eq!(a.positions, 2);
+        assert_eq!(a.exact, 2);
+    }
+}

@@ -1,0 +1,43 @@
+//! # MoE-Beyond — learning-based expert activation prediction for edge MoE serving
+//!
+//! Rust reproduction of *MoE-Beyond: Learning-Based Expert Activation
+//! Prediction on Edge Devices* (Gavhane et al., 2025), built as a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: request router, decode
+//!   scheduler, simulated-VRAM expert cache, prefetch pipeline, the
+//!   MoE-Infinity / DeepSpeed-MoE / BrainStorm heuristic baselines, the
+//!   trace-driven cache simulator behind the paper's Fig. 7, and the
+//!   evaluation harness behind Table 1.
+//! * **L2 (JAX, build-time)** — the MoE backbone (DeepSeek-V2-Lite
+//!   stand-in) and the MoE-Beyond predictor transformer, AOT-lowered to
+//!   HLO text in `artifacts/`.
+//! * **L1 (Pallas, build-time)** — fused attention / top-k gate / expert
+//!   FFN kernels inside those HLO modules.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! HLO artifacts through PJRT (`xla` crate) and executes them natively.
+//!
+//! Start with [`config::Artifacts`] to locate a built artifact tree, then:
+//!
+//! ```no_run
+//! use moe_beyond::{config::Artifacts, trace::store};
+//! let arts = Artifacts::discover("artifacts").unwrap();
+//! let traces = store::read_traces(arts.path("traces/test.bin")).unwrap();
+//! println!("{} test prompts", traces.len());
+//! ```
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod metrics;
+pub mod moe;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result type (anyhow for rich error context).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,352 @@
+//! `moe-beyond` — CLI launcher for the MoE-Beyond serving stack and every
+//! paper experiment.
+//!
+//! ```text
+//! moe-beyond info                         artifact + model summary
+//! moe-beyond serve    [--predictor ...]   E2E edge serving on synthetic prompts
+//! moe-beyond sweep    [--predictors ...]  Fig 7: hit rate vs capacity
+//! moe-beyond eval     [--split test]      Table 1: accuracy / macro-F1
+//! moe-beyond analyze  [--prompts 122]     Figs 1-3: trace sparsity analysis
+//! moe-beyond training-report              Figs 5-6: training curves
+//! ```
+//!
+//! Flag parsing is hand-rolled (offline build: no clap); every flag is
+//! `--name value`.
+
+use moe_beyond::config::{CacheConfig, ServeConfig, SimConfig};
+use moe_beyond::coordinator::{serve_requests, EngineConfig, ModelEngine, Request};
+use moe_beyond::runtime::PjrtRuntime;
+use moe_beyond::sim::harness;
+use moe_beyond::sim::PredictorKind;
+use moe_beyond::trace::corpus::{CorpusConfig, PromptSampler};
+use moe_beyond::trace::WorldModel;
+use moe_beyond::Result;
+
+/// Minimal `--flag value` argument map.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                flags.insert(name.to_string(), val);
+            } else {
+                anyhow::bail!("unexpected argument {a} (flags are --name value)");
+            }
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} must be an integer")),
+        }
+    }
+
+    fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} must be a number")),
+        }
+    }
+}
+
+const HELP: &str = "\
+moe-beyond — learning-based expert activation prediction for edge MoE serving
+
+USAGE: moe-beyond <command> [--flag value ...]
+
+COMMANDS:
+  info              artifact + world + model summary
+  serve             end-to-end edge serving on synthetic prompts
+                    --predictor learned|eam|next-layer|popularity|none  (learned)
+                    --capacity 0.10   --requests 8   --max-new-tokens 24
+                    --batch-size 1    --prompt-tokens 48
+  sweep             Fig 7: cache hit rate vs capacity
+                    --predictors learned,eam,none   --prompts 40   --out -
+  eval              Table 1: predictor accuracy/F1
+                    --split test   --prompts 100
+  analyze           Figs 1-3: activation sparsity analysis
+                    --prompts 122  --layer 0
+  training-report   Figs 5-6: training curve summary
+  export-csv        dump a trace split in the paper's CSV logging format
+                    --split test   --out traces.csv
+
+GLOBAL: --artifacts <dir>  (default: $MOEB_ARTIFACTS or ./artifacts)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    if let Some(a) = args.flags.get("artifacts") {
+        std::env::set_var("MOEB_ARTIFACTS", a);
+    }
+    match args.cmd.as_str() {
+        "info" => info(),
+        "serve" => serve(&args),
+        "sweep" => sweep(&args),
+        "eval" => eval(&args),
+        "analyze" => analyze(&args),
+        "training-report" => training_report(),
+        "export-csv" => export_csv(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command '{other}'\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let arts = harness::load_artifacts()?;
+    let w = &arts.world;
+    println!("MoE-Beyond artifact tree: {}", arts.root.display());
+    println!(
+        "  world: {} layers x {} experts (top-{} + {} shared), {} topics, vocab {}, d_model {}",
+        w.n_layers, w.n_experts, w.top_k, w.n_shared, w.n_topics, w.vocab_size, w.d_model
+    );
+    println!("  fingerprint: {}", w.fingerprint);
+    println!(
+        "  predictor: d={} x{} layers, {} heads, ffn {}, window {}",
+        arts.predictor.d_model,
+        arts.predictor.n_enc_layers,
+        arts.predictor.n_heads,
+        arts.predictor.d_ff,
+        arts.predictor.window
+    );
+    let mut splits: Vec<_> = arts.splits.iter().collect();
+    splits.sort_by(|a, b| a.0.cmp(b.0));
+    for (name, s) in splits {
+        println!(
+            "  split {name}: {} prompts, {} trace points",
+            s.prompts, s.trace_points
+        );
+    }
+    let mut exes: Vec<_> = arts.executables.iter().collect();
+    exes.sort_by(|a, b| a.0.cmp(b.0));
+    for (name, e) in exes {
+        println!("  exe {name}: {} inputs ({})", e.num_inputs, e.path);
+    }
+    arts.check_fingerprint()?;
+    println!("  fingerprint check: OK");
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let predictor = args.get("predictor", "learned");
+    let capacity = args.get_f64("capacity", 0.10)?;
+    let n_requests = args.get_usize("requests", 8)?;
+    let max_new_tokens = args.get_usize("max-new-tokens", 24)?;
+    let batch_size = args.get_usize("batch-size", 1)?;
+    let prompt_tokens = args.get_usize("prompt-tokens", 48)?;
+
+    let arts = harness::load_artifacts()?;
+    let world = WorldModel::load(arts.path("world.json"))?;
+    let mut sampler = PromptSampler::new(
+        &world,
+        CorpusConfig {
+            test_split: true,
+            min_tokens: prompt_tokens.min(100),
+            max_tokens: prompt_tokens,
+            ..Default::default()
+        },
+    );
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| Request::new(i as u64, sampler.sample().tokens, max_new_tokens))
+        .collect();
+
+    let (nl, ne) = (arts.world.n_layers as usize, arts.world.n_experts as usize);
+    let cfg = EngineConfig {
+        serve: ServeConfig {
+            predictor: predictor.clone(),
+            max_new_tokens,
+            batch_size,
+            ..Default::default()
+        },
+        cache: CacheConfig::default().with_capacity_frac(capacity, nl, ne),
+        sim: SimConfig::default(),
+        ..Default::default()
+    };
+    println!(
+        "serving {n_requests} requests (predictor={predictor}, capacity={:.0}%, batch={batch_size}) ...",
+        capacity * 100.0
+    );
+    let arts2 = arts.clone();
+    let report = serve_requests(
+        move || {
+            let rt = PjrtRuntime::cpu()?;
+            ModelEngine::load(&rt, &arts2, cfg)
+        },
+        requests,
+        64,
+        batch_size,
+    )?;
+
+    println!("completed  : {}", report.completed);
+    println!(
+        "tokens     : {} ({:.1} tok/s)",
+        report.total_tokens, report.tokens_per_sec
+    );
+    println!("requests/s : {:.2}", report.requests_per_sec);
+    println!("hit rate   : {:.1}%", report.cache_hit_rate * 100.0);
+    println!("latency    : {}", report.request_latency);
+    let miss_us: f64 = report.responses.iter().map(|r| r.stats.modeled_miss_us).sum();
+    let stall_us: f64 = report.responses.iter().map(|r| r.stats.modeled_stall_us).sum();
+    println!(
+        "modeled PCIe: {:.1} ms demand-miss + {:.1} ms prefetch-stall across run",
+        miss_us / 1e3,
+        stall_us / 1e3
+    );
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let predictors = args.get("predictors", "learned,eam,none");
+    let prompts = args.get_usize("prompts", 40)?;
+    let out = args.get("out", "-");
+
+    let arts = harness::load_artifacts()?;
+    let rt = PjrtRuntime::cpu()?;
+    let kinds: Vec<PredictorKind> = predictors
+        .split(',')
+        .map(|s| {
+            PredictorKind::parse(s.trim()).ok_or_else(|| anyhow::anyhow!("unknown predictor {s}"))
+        })
+        .collect::<Result<_>>()?;
+    let results = harness::run_fig7(
+        &rt,
+        &arts,
+        &kinds,
+        harness::FIG7_FRACS,
+        prompts,
+        SimConfig::default(),
+    )?;
+    println!("\nFig 7 — GPU cache hit rate (%) vs expert capacity (%):");
+    print!("{:>10}", "capacity%");
+    for r in &results {
+        print!("{:>22}", r.predictor);
+    }
+    println!();
+    for (i, frac) in harness::FIG7_FRACS.iter().enumerate() {
+        print!("{:>10.0}", frac * 100.0);
+        for r in &results {
+            print!("{:>22.1}", r.points[i].hit_rate * 100.0);
+        }
+        println!();
+    }
+    println!("\nprediction hit rate @10% capacity:");
+    for r in &results {
+        println!(
+            "  {:>22}: {:.1}%",
+            r.predictor,
+            r.points[1].prediction_hit_rate * 100.0
+        );
+    }
+    if out != "-" {
+        let rows = harness::fig7_rows(&results);
+        std::fs::write(&out, harness::fig7_rows_json(&rows))?;
+        println!("rows written to {out}");
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let split = args.get("split", "test");
+    let prompts = args.get_usize("prompts", 100)?;
+    let arts = harness::load_artifacts()?;
+    let rt = PjrtRuntime::cpu()?;
+    let t = harness::run_table1(&rt, &arts, prompts, &split)?;
+    println!(
+        "Table 1 — predictor evaluation on split '{split}' ({} prompts, {} positions):",
+        t.prompts, t.positions
+    );
+    println!("  accuracy     : {:.2}%   (paper: 97.55%)", t.accuracy_pct);
+    println!("  macro F1     : {:.2}%   (paper: 86.18%)", t.macro_f1_pct);
+    println!("  micro F1     : {:.2}%", t.micro_f1_pct);
+    println!("  exact top-{}  : {:.2}%", arts.world.top_k, t.exact_match_pct);
+    Ok(())
+}
+
+fn analyze(args: &Args) -> Result<()> {
+    let prompts = args.get_usize("prompts", 122)?;
+    let layer = args.get_usize("layer", 0)?;
+    let arts = harness::load_artifacts()?;
+    let rep = harness::run_fig123(&arts, prompts, layer)?;
+    println!("Figs 1-3 — activation sparsity over {prompts} prompts (layer {layer}):");
+    println!(
+        "  Fig 1 aggregate histogram: min {} max {} (ratio {:.2}; paper band 800-1400 @122 prompts)",
+        rep.fig1_min, rep.fig1_max, rep.fig1_ratio
+    );
+    println!(
+        "  Fig 2 single prompt: working set {} / {} experts; peaks at {:?}",
+        rep.fig2_working_set, arts.world.n_experts, rep.fig2_peak_experts
+    );
+    println!(
+        "  Fig 3 heatmap: mean per-layer working set {:.1}, cross-layer reuse {:.2}",
+        rep.fig3_working_sets.iter().sum::<usize>() as f64 / rep.fig3_working_sets.len() as f64,
+        rep.fig3_cross_layer_reuse
+    );
+    println!(
+        "  sparsity: per-prompt entropy {:.2} nats vs aggregate {:.2} nats; working-set frac {:.1}%",
+        rep.sparsity.mean_single_entropy,
+        rep.sparsity.aggregate_entropy,
+        rep.sparsity.working_set_frac * 100.0
+    );
+    Ok(())
+}
+
+fn export_csv(args: &Args) -> Result<()> {
+    let split = args.get("split", "test");
+    let out = args.get("out", "traces.csv");
+    let arts = harness::load_artifacts()?;
+    let (meta, traces) = moe_beyond::trace::store::read_traces_with_meta(
+        arts.path(&arts.split(&split)?.path),
+    )?;
+    moe_beyond::trace::csv::write_csv(&out, &traces)?;
+    println!(
+        "wrote {} prompts x {} layers (top-{}) to {out}",
+        traces.len(),
+        meta.n_layers,
+        meta.top_k
+    );
+    Ok(())
+}
+
+fn training_report() -> Result<()> {
+    let arts = harness::load_artifacts()?;
+    let log = harness::load_training_log(&arts)?;
+    println!(
+        "Figs 5-6 — training/validation curves ({} steps logged, {:.0}s wall):",
+        log.train_steps.len(),
+        log.wall_seconds
+    );
+    if let (Some(first), Some(last)) = (log.train_steps.first(), log.train_steps.last()) {
+        println!(
+            "  train: loss {:.3} -> {:.3}, acc {:.3} -> {:.3}, F1 {:.3} -> {:.3}",
+            first.loss, last.loss, first.acc, last.acc, first.f1, last.f1
+        );
+    }
+    for e in &log.val_epochs {
+        println!(
+            "  val epoch {:>2}: loss {:.4} acc {:.4} f1 {:.3} exact {:.3}",
+            e.epoch, e.loss, e.acc, e.f1, e.exact
+        );
+    }
+    Ok(())
+}

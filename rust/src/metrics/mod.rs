@@ -1,0 +1,151 @@
+//! Serving metrics: lock-free counters + latency recording with
+//! percentile reporting, shared across the coordinator's tasks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::percentile;
+
+/// Monotonic counter, relaxed ordering (hot-path safe).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency recorder (mutex-guarded vec; recording happens per request,
+/// not per token, so contention is negligible).
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples_us: Mutex<Vec<f64>>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&self, d: Duration) {
+        self.samples_us.lock().unwrap().push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&self, us: f64) {
+        self.samples_us.lock().unwrap().push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.lock().unwrap().len()
+    }
+
+    pub fn report(&self) -> LatencyReport {
+        let s = self.samples_us.lock().unwrap();
+        LatencyReport {
+            count: s.len(),
+            mean_us: if s.is_empty() {
+                0.0
+            } else {
+                s.iter().sum::<f64>() / s.len() as f64
+            },
+            p50_us: percentile(&s, 50.0),
+            p95_us: percentile(&s, 95.0),
+            p99_us: percentile(&s, 99.0),
+            max_us: s.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LatencyReport {
+    pub count: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl std::fmt::Display for LatencyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.0}µs p50={:.0}µs p95={:.0}µs p99={:.0}µs max={:.0}µs",
+            self.count, self.mean_us, self.p50_us, self.p95_us, self.p99_us, self.max_us
+        )
+    }
+}
+
+/// The coordinator's metric set.
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    pub requests_admitted: Counter,
+    pub requests_completed: Counter,
+    pub requests_rejected: Counter,
+    pub tokens_generated: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub prefetches: Counter,
+    pub request_latency: LatencyRecorder,
+    pub token_latency: LatencyRecorder,
+}
+
+impl ServingMetrics {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let h = self.cache_hits.get();
+        let m = self.cache_misses.get();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_threads() {
+        let c = std::sync::Arc::new(Counter::default());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn latency_report_percentiles() {
+        let r = LatencyRecorder::default();
+        for i in 1..=100 {
+            r.record_us(i as f64);
+        }
+        let rep = r.report();
+        assert_eq!(rep.count, 100);
+        assert!((rep.p50_us - 50.0).abs() <= 1.0);
+        assert!((rep.p99_us - 99.0).abs() <= 1.0);
+        assert_eq!(rep.max_us, 100.0);
+    }
+
+    #[test]
+    fn hit_rate() {
+        let m = ServingMetrics::default();
+        m.cache_hits.add(3);
+        m.cache_misses.add(1);
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

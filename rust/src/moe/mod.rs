@@ -1,0 +1,7 @@
+//! The MoE backbone (DeepSeek-V2-Lite stand-in) served via PJRT.
+
+mod backbone;
+mod sampler;
+
+pub use backbone::{Backbone, DecodeHead, DecodeResult, DecodeSession, PrefillResult};
+pub use sampler::sample_token;

@@ -1,0 +1,60 @@
+//! LM-head sampling: greedy or temperature sampling over vocab logits.
+
+use crate::util::{math, Rng};
+
+/// Sample the next token id.  `temperature == 0` means greedy argmax.
+pub fn sample_token(logits: &[f32], temperature: f64, rng: &mut Rng) -> i32 {
+    debug_assert!(!logits.is_empty());
+    if temperature <= 0.0 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best as i32;
+    }
+    let mut scaled: Vec<f32> = logits.iter().map(|&x| x / temperature as f32).collect();
+    math::softmax(&mut scaled);
+    let weights: Vec<f64> = scaled.iter().map(|&x| x as f64).collect();
+    rng.choose_weighted(&weights) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Rng::new(0);
+        let logits = [0.1f32, 5.0, -1.0, 4.9];
+        assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_samples_high_mass_tokens() {
+        let mut rng = Rng::new(1);
+        let mut logits = vec![-10.0f32; 16];
+        logits[3] = 8.0;
+        logits[7] = 7.5;
+        let mut counts = [0u32; 16];
+        for _ in 0..500 {
+            counts[sample_token(&logits, 1.0, &mut rng) as usize] += 1;
+        }
+        assert!(counts[3] + counts[7] > 480);
+        assert!(counts[3] > counts[7]);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(2);
+        let logits = [1.0f32, 1.2, 0.8];
+        let mut greedy_hits = 0;
+        for _ in 0..200 {
+            if sample_token(&logits, 0.05, &mut rng) == 1 {
+                greedy_hits += 1;
+            }
+        }
+        assert!(greedy_hits > 195);
+    }
+}

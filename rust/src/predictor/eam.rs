@@ -1,0 +1,324 @@
+//! MoE-Infinity baseline: request-level Expert Activation Matrix (rEAM)
+//! matching (paper §3.1, §4.1.4, Fig 4).
+//!
+//! Offline (Fig 4 top): each training prompt's per-token iEAMs accumulate
+//! into an L×E rEAM histogram; the rEAM collection is compacted with
+//! k-means into an EAMC of centroid sketches.
+//!
+//! Online (Fig 4 bottom): the decode loop accumulates a *partial* rEAM
+//! from the tokens seen so far; before each layer executes, the partial
+//! sketch is cosine-matched against the EAMC and the matched sketch's
+//! strongest experts for that layer are predicted (and prefetched).
+
+use crate::config::EamConfig;
+use crate::predictor::{DecodeContext, ExpertPredictor};
+use crate::trace::PromptTrace;
+use crate::util::{math, ExpertSet, Rng};
+
+/// One stored sketch: a unit-normalized flattened rEAM + cached norm of
+/// each layer row (for per-layer top-k extraction we keep raw values too).
+#[derive(Clone)]
+struct Sketch {
+    flat: Vec<f32>, // [L*E], unit L2 norm
+}
+
+pub struct EamPredictor {
+    cfg: EamConfig,
+    n_layers: usize,
+    n_experts: usize,
+    /// Raw rEAMs collected (ring buffer, capacity = eamc_capacity).
+    collection: Vec<Sketch>,
+    next_slot: usize,
+    /// Compacted EAMC (k-means centroids) — what matching scans.
+    eamc: Vec<Sketch>,
+    dirty: bool,
+    /// Partial rEAM of the in-flight request.
+    partial: Vec<f32>,
+    partial_tokens: usize,
+}
+
+impl EamPredictor {
+    pub fn new(cfg: EamConfig, n_layers: usize, n_experts: usize) -> Self {
+        Self {
+            cfg,
+            n_layers,
+            n_experts,
+            collection: Vec::new(),
+            next_slot: 0,
+            eamc: Vec::new(),
+            dirty: false,
+            partial: vec![0.0; n_layers * n_experts],
+            partial_tokens: 0,
+        }
+    }
+
+    /// Build an rEAM sketch from a full prompt trace.
+    fn ream_of(&self, tr: &PromptTrace) -> Sketch {
+        let mut flat = vec![0.0f32; self.n_layers * self.n_experts];
+        for t in 0..tr.n_tokens() {
+            for l in 0..self.n_layers {
+                for &e in tr.expert_ids(t, l) {
+                    flat[l * self.n_experts + e as usize] += 1.0;
+                }
+            }
+        }
+        math::normalize(&mut flat);
+        Sketch { flat }
+    }
+
+    /// Offline EAMC construction from a training trace set (Fig 4 top).
+    pub fn fit(&mut self, traces: &[PromptTrace]) {
+        for tr in traces {
+            self.push_sketch(self.ream_of(tr));
+        }
+        self.rebuild();
+    }
+
+    fn push_sketch(&mut self, s: Sketch) {
+        if self.collection.len() < self.cfg.eamc_capacity {
+            self.collection.push(s);
+        } else {
+            // ring replacement of the oldest sketch
+            self.collection[self.next_slot] = s;
+            self.next_slot = (self.next_slot + 1) % self.cfg.eamc_capacity;
+        }
+        self.dirty = true;
+    }
+
+    /// Recompute the compacted EAMC (k-means; raw copy if clusters == 0).
+    fn rebuild(&mut self) {
+        self.dirty = false;
+        if self.cfg.kmeans_clusters == 0 || self.collection.len() <= self.cfg.kmeans_clusters {
+            self.eamc = self.collection.clone();
+            return;
+        }
+        self.eamc = kmeans(
+            &self.collection,
+            self.cfg.kmeans_clusters,
+            self.cfg.kmeans_iters,
+        );
+    }
+
+    /// Cosine-match the current partial rEAM against the EAMC.
+    fn best_match(&self) -> Option<&Sketch> {
+        if self.partial_tokens == 0 {
+            return None;
+        }
+        let qn = math::norm(&self.partial);
+        if qn == 0.0 {
+            return None;
+        }
+        let mut best: Option<(f32, &Sketch)> = None;
+        for s in &self.eamc {
+            // sketches are unit-norm, so cosine = dot / |q|
+            let c = math::dot(&self.partial, &s.flat) / qn;
+            if best.map(|(b, _)| c > b).unwrap_or(true) {
+                best = Some((c, s));
+            }
+        }
+        best.map(|(_, s)| s)
+    }
+
+    /// Number of sketches the matcher currently scans.
+    pub fn eamc_len(&self) -> usize {
+        self.eamc.len()
+    }
+}
+
+impl ExpertPredictor for EamPredictor {
+    fn name(&self) -> &'static str {
+        "eam"
+    }
+
+    fn begin_prompt(&mut self, _tr: &PromptTrace) {
+        self.partial.fill(0.0);
+        self.partial_tokens = 0;
+        if self.dirty {
+            self.rebuild();
+        }
+    }
+
+    fn predict(&mut self, _ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+        let Some(m) = self.best_match() else {
+            return ExpertSet::EMPTY;
+        };
+        let row = &m.flat[layer * self.n_experts..(layer + 1) * self.n_experts];
+        let vals: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+        let mut out = ExpertSet::new();
+        for i in math::top_k(&vals, self.cfg.prefetch_per_layer) {
+            if vals[i] > 0.0 {
+                out.insert(i as u8);
+            }
+        }
+        out
+    }
+
+    fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet) {
+        for e in actual.iter() {
+            self.partial[layer * self.n_experts + e as usize] += 1.0;
+        }
+        if layer == self.n_layers - 1 {
+            self.partial_tokens += 1;
+        }
+    }
+
+    fn end_prompt(&mut self, tr: &PromptTrace) {
+        // fold the finished request's rEAM into the collection; in live
+        // serving there is no materialized trace (n_tokens == 0), so the
+        // online-accumulated partial rEAM is used instead
+        let s = if tr.n_tokens() == 0 {
+            let mut flat = self.partial.clone();
+            math::normalize(&mut flat);
+            Sketch { flat }
+        } else {
+            self.ream_of(tr)
+        };
+        self.push_sketch(s);
+    }
+}
+
+/// Lloyd's k-means over unit-norm vectors (euclidean on the sphere ==
+/// cosine ordering), k-means++-lite seeding, empty clusters re-seeded.
+fn kmeans(points: &[Sketch], k: usize, iters: usize) -> Vec<Sketch> {
+    let mut rng = Rng::new(0xEA11C);
+    let dim = points[0].flat.len();
+    // seed with distinct random points
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    rng.shuffle(&mut idx);
+    let mut centroids: Vec<Vec<f32>> = idx[..k].iter().map(|&i| points[i].flat.clone()).collect();
+    let mut assign = vec![0usize; points.len()];
+
+    for _ in 0..iters {
+        // assignment step
+        for (pi, p) in points.iter().enumerate() {
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for (ci, c) in centroids.iter().enumerate() {
+                let d = math::dot(&p.flat, c);
+                if d > best.0 {
+                    best = (d, ci);
+                }
+            }
+            assign[pi] = best.1;
+        }
+        // update step
+        let mut sums = vec![vec![0.0f32; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (pi, p) in points.iter().enumerate() {
+            let c = assign[pi];
+            counts[c] += 1;
+            for d in 0..dim {
+                sums[c][d] += p.flat[d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster with a random point
+                sums[c] = points[rng.below(points.len())].flat.clone();
+            }
+            math::normalize(&mut sums[c]);
+        }
+        centroids = sums;
+    }
+    centroids.into_iter().map(|flat| Sketch { flat }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trace where layer-l experts are always {base, base+1} (top-2).
+    fn uniform_trace(id: u32, n_layers: u16, base: u8, n_tokens: usize) -> PromptTrace {
+        let top_k = 2u16;
+        let mut experts = Vec::new();
+        for _ in 0..n_tokens {
+            for _ in 0..n_layers {
+                experts.push(base);
+                experts.push(base + 1);
+            }
+        }
+        PromptTrace {
+            prompt_id: id,
+            n_layers,
+            top_k,
+            d_emb: 0,
+            tokens: vec![0; n_tokens],
+            embeddings: vec![],
+            experts,
+        }
+    }
+
+    fn cfg() -> EamConfig {
+        EamConfig {
+            eamc_capacity: 16,
+            kmeans_clusters: 0,
+            kmeans_iters: 4,
+            prefetch_per_layer: 2,
+        }
+    }
+
+    #[test]
+    fn matches_similar_request_and_predicts_its_experts() {
+        let mut p = EamPredictor::new(cfg(), 3, 64);
+        // two distinct request families in the EAMC
+        p.fit(&[uniform_trace(0, 3, 10, 8), uniform_trace(1, 3, 40, 8)]);
+        assert_eq!(p.eamc_len(), 2);
+
+        // replay a prompt from the {10,11} family
+        let tr = uniform_trace(2, 3, 10, 8);
+        p.begin_prompt(&tr);
+        let ctx = DecodeContext { trace: &tr, t: 0 };
+        // before any observation: no partial sketch -> empty prediction
+        assert!(p.predict(&ctx, 0).is_empty());
+        // observe one token's worth of layers
+        for l in 0..3 {
+            p.observe(&ctx, l, ExpertSet::from_ids([10u8, 11]));
+        }
+        let pred = p.predict(&ctx, 1);
+        assert_eq!(pred.to_vec(), vec![10, 11]);
+    }
+
+    #[test]
+    fn end_prompt_grows_collection() {
+        let mut p = EamPredictor::new(cfg(), 2, 64);
+        let tr = uniform_trace(0, 2, 5, 4);
+        p.begin_prompt(&tr);
+        p.end_prompt(&tr);
+        p.begin_prompt(&tr); // triggers rebuild
+        assert_eq!(p.eamc_len(), 1);
+    }
+
+    #[test]
+    fn ring_buffer_respects_capacity() {
+        let mut cfg = cfg();
+        cfg.eamc_capacity = 3;
+        let mut p = EamPredictor::new(cfg, 2, 64);
+        for i in 0..10 {
+            let tr = uniform_trace(i, 2, (i % 30) as u8, 4);
+            p.end_prompt(&tr);
+        }
+        p.begin_prompt(&uniform_trace(99, 2, 0, 1));
+        assert!(p.eamc_len() <= 3);
+    }
+
+    #[test]
+    fn kmeans_compacts_families() {
+        let mut cfg = cfg();
+        cfg.kmeans_clusters = 2;
+        let mut p = EamPredictor::new(cfg, 3, 64);
+        let mut traces = Vec::new();
+        for i in 0..12 {
+            let base = if i % 2 == 0 { 10 } else { 40 };
+            traces.push(uniform_trace(i, 3, base, 8));
+        }
+        p.fit(&traces);
+        assert_eq!(p.eamc_len(), 2);
+        // matching still works through centroids
+        let tr = uniform_trace(100, 3, 40, 8);
+        p.begin_prompt(&tr);
+        let ctx = DecodeContext { trace: &tr, t: 0 };
+        for l in 0..3 {
+            p.observe(&ctx, l, ExpertSet::from_ids([40u8, 41]));
+        }
+        assert_eq!(p.predict(&ctx, 2).to_vec(), vec![40, 41]);
+    }
+}

@@ -1,0 +1,305 @@
+//! MoE-Beyond's learned predictor, served from the AOT HLO artifact.
+//!
+//! `LearnedModel` wraps the batched predictor executable (`predictor_batch`):
+//! one call scores a window of up to 32 tokens for 8 layer ids at once.
+//! The serving/simulation flow predicts *for the current token* (whose
+//! embedding exists before any MoE layer runs — exactly the information
+//! the paper's predictor conditions on) and refreshes every
+//! `predictor_stride` tokens: within a topically-coherent prompt the
+//! per-layer activation set drifts slowly, so the stride trades PJRT
+//! calls for marginal staleness (ablated in `ablation_stride`).
+//!
+//! Because the predictions for a trace do not depend on cache capacity,
+//! `precompute` evaluates a whole trace once and `CachedPredictor` replays
+//! it across every point of a capacity sweep.
+
+use std::path::Path;
+
+use anyhow::ensure;
+
+use crate::config::Artifacts;
+use crate::predictor::{DecodeContext, ExpertPredictor};
+use crate::runtime::{Executable, PjrtRuntime, TensorArg, WeightBlob};
+use crate::trace::PromptTrace;
+use crate::util::{math, ExpertSet};
+use crate::Result;
+
+/// The loaded predictor model (weights resident on device).
+pub struct LearnedModel {
+    exe_batch: Executable,
+    pub window: usize,
+    pub d_tok: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub batch: usize,
+}
+
+impl LearnedModel {
+    /// Load from an artifact tree (checks the world fingerprint).
+    pub fn load(rt: &PjrtRuntime, arts: &Artifacts) -> Result<Self> {
+        arts.check_fingerprint()?;
+        let sig = arts.executable("predictor_batch")?;
+        let mut exe_batch = rt.load_hlo_text(arts.path(&sig.path))?;
+        let blob = WeightBlob::load(arts.path("predictor_weights.bin"))?;
+        let params: Vec<(&[f32], &[usize])> = blob
+            .params
+            .iter()
+            .map(|p| (&blob.data[p.offset..p.offset + p.size], p.shape.as_slice()))
+            .collect();
+        exe_batch.set_resident_args(rt, &params)?;
+        Ok(Self {
+            exe_batch,
+            window: arts.predictor.window as usize,
+            d_tok: arts.predictor.d_tok as usize,
+            n_layers: arts.predictor.n_model_layers as usize,
+            n_experts: arts.predictor.n_experts as usize,
+            batch: arts.predictor.batch as usize,
+        })
+    }
+
+    /// Load from explicit paths (tests / tools).
+    pub fn load_from_paths<P: AsRef<Path>>(
+        rt: &PjrtRuntime,
+        hlo_b8: P,
+        weights: P,
+        window: usize,
+        d_tok: usize,
+        n_layers: usize,
+        n_experts: usize,
+        batch: usize,
+    ) -> Result<Self> {
+        let mut exe_batch = rt.load_hlo_text(hlo_b8)?;
+        let blob = WeightBlob::load(weights)?;
+        let params: Vec<(&[f32], &[usize])> = blob
+            .params
+            .iter()
+            .map(|p| (&blob.data[p.offset..p.offset + p.size], p.shape.as_slice()))
+            .collect();
+        exe_batch.set_resident_args(rt, &params)?;
+        Ok(Self {
+            exe_batch,
+            window,
+            d_tok,
+            n_layers,
+            n_experts,
+            batch,
+        })
+    }
+
+    /// Score one embedding window for a set of layers.
+    ///
+    /// `emb` is row-major [n_real, d_tok] (n_real <= window; right-padded
+    /// internally).  Returns logits row-major [layers.len(), n_real,
+    /// n_experts].
+    pub fn predict_window(&self, emb: &[f32], n_real: usize, layers: &[usize]) -> Result<Vec<f32>> {
+        ensure!(n_real > 0 && n_real <= self.window, "bad window fill {n_real}");
+        ensure!(emb.len() == n_real * self.d_tok, "embedding shape mismatch");
+        let (b, t, d) = (self.batch, self.window, self.d_tok);
+
+        let mut padded = vec![0.0f32; t * d];
+        padded[..n_real * d].copy_from_slice(emb);
+        let mut mask = vec![0.0f32; t];
+        mask[..n_real].fill(1.0);
+
+        let mut out = vec![0.0f32; layers.len() * n_real * self.n_experts];
+        for (chunk_i, chunk) in layers.chunks(b).enumerate() {
+            // batch rows: same window, different layer ids (pad with layer 0)
+            let mut emb_b = Vec::with_capacity(b * t * d);
+            let mut lid_b = Vec::with_capacity(b * t);
+            let mut mask_b = Vec::with_capacity(b * t);
+            for bi in 0..b {
+                emb_b.extend_from_slice(&padded);
+                let lid = *chunk.get(bi).unwrap_or(&0) as i32;
+                lid_b.extend(std::iter::repeat(lid).take(t));
+                mask_b.extend_from_slice(&mask);
+            }
+            let logits = self.exe_batch.call_flat(&[
+                TensorArg::F32(emb_b, vec![b, t, d]),
+                TensorArg::I32(lid_b, vec![b, t]),
+                TensorArg::F32(mask_b, vec![b, t]),
+            ])?; // [b, t, E] flattened
+            for (bi, &layer) in chunk.iter().enumerate() {
+                let li = chunk_i * b + bi;
+                debug_assert_eq!(layers[li], layer);
+                for pos in 0..n_real {
+                    let src = (bi * t + pos) * self.n_experts;
+                    let dst = (li * n_real + pos) * self.n_experts;
+                    out[dst..dst + self.n_experts]
+                        .copy_from_slice(&logits[src..src + self.n_experts]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Top-k expert set from a logit row.
+    pub fn top_set(&self, logits: &[f32], k: usize) -> ExpertSet {
+        let vals: Vec<f64> = logits.iter().map(|&x| x as f64).collect();
+        let mut s = ExpertSet::new();
+        for i in math::top_k(&vals, k) {
+            s.insert(i as u8);
+        }
+        s
+    }
+}
+
+/// Precomputed per-(token, layer) predicted sets for one trace.
+#[derive(Debug, Clone)]
+pub struct TracePredictions {
+    pub n_layers: usize,
+    /// [token][layer] predicted set.
+    pub sets: Vec<Vec<ExpertSet>>,
+    /// Raw sigmoid logits at the predicted positions (for Table-1 eval):
+    /// [token][layer * n_experts .. ].
+    pub logits: Vec<Vec<f32>>,
+    pub n_experts: usize,
+}
+
+/// Evaluate the model over a full trace with refresh stride.
+///
+/// Two modes:
+/// * `positionwise = false` (simulation): for token `t` the prediction
+///   uses the window ending at the most recent refresh point `r <= t`,
+///   read at the refresh row — the online prefetcher's behaviour (only
+///   embeddings `..= r` exist at prediction time; predictions are reused
+///   until the next refresh).
+/// * `positionwise = true` (offline eval, the paper's §3.2.4 protocol):
+///   every token is scored at ITS OWN row of its window — the standard
+///   sequence-labeling evaluation behind Table 1.
+pub fn precompute_mode(
+    model: &LearnedModel,
+    trace: &PromptTrace,
+    stride: usize,
+    top_k: usize,
+    positionwise: bool,
+) -> Result<TracePredictions> {
+    let n = trace.n_tokens();
+    let d = model.d_tok;
+    let layers: Vec<usize> = (0..model.n_layers).collect();
+    let mut sets = vec![vec![ExpertSet::EMPTY; model.n_layers]; n];
+    let mut logits_out = vec![Vec::new(); n];
+
+    let mut t = 0;
+    while t < n {
+        // window placement differs by mode: the online prefetcher only
+        // has embeddings up to the refresh token t (window ENDS at t);
+        // offline eval scores the whole chunk [t, t+window) at once
+        // (window starts at t and extends forward, paper §3.2.4).
+        let (start, end) = if positionwise {
+            (t, (t + model.window).min(n))
+        } else {
+            ((t + 1).saturating_sub(model.window), t + 1)
+        };
+        let n_real = end - start;
+        let emb = &trace.embeddings[start * d..end * d];
+        let win_logits = model.predict_window(emb, n_real, &layers)?;
+
+        // fill tokens t .. t+stride from this window
+        let until = (t + stride).min(n);
+        for tt in t..until {
+            // offline eval reads each token's own row; the online
+            // prefetcher only has the refresh row
+            let pos = if positionwise {
+                (tt - start).min(n_real - 1)
+            } else {
+                n_real - 1
+            };
+            let mut row = Vec::with_capacity(model.n_layers * model.n_experts);
+            for (li, _l) in layers.iter().enumerate() {
+                let base = (li * n_real + pos) * model.n_experts;
+                let lrow = &win_logits[base..base + model.n_experts];
+                sets[tt][li] = model.top_set(lrow, top_k);
+                row.extend_from_slice(lrow);
+            }
+            logits_out[tt] = row;
+        }
+        t = until;
+    }
+    Ok(TracePredictions {
+        n_layers: model.n_layers,
+        sets,
+        logits: logits_out,
+        n_experts: model.n_experts,
+    })
+}
+
+/// Simulation-mode precompute (see `precompute_mode`).
+pub fn precompute(
+    model: &LearnedModel,
+    trace: &PromptTrace,
+    stride: usize,
+    top_k: usize,
+) -> Result<TracePredictions> {
+    precompute_mode(model, trace, stride, top_k, false)
+}
+
+/// An `ExpertPredictor` replaying precomputed predictions (sweep reuse).
+pub struct CachedPredictor<'a> {
+    preds: &'a TracePredictions,
+}
+
+impl<'a> CachedPredictor<'a> {
+    pub fn new(preds: &'a TracePredictions) -> Self {
+        Self { preds }
+    }
+}
+
+impl ExpertPredictor for CachedPredictor<'_> {
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+    fn begin_prompt(&mut self, _: &PromptTrace) {}
+    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+        self.preds.sets[ctx.t][layer]
+    }
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn end_prompt(&mut self, _: &PromptTrace) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts() -> Option<(PjrtRuntime, Artifacts)> {
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("artifacts.json").exists() {
+            return None;
+        }
+        let arts = Artifacts::discover(&root).ok()?;
+        let rt = PjrtRuntime::cpu().ok()?;
+        Some((rt, arts))
+    }
+
+    #[test]
+    fn window_prediction_shapes_and_batching() {
+        let Some((rt, arts)) = arts() else { return };
+        let model = LearnedModel::load(&rt, &arts).unwrap();
+        let n_real = 5usize;
+        let emb = vec![0.05f32; n_real * model.d_tok];
+        // 10 layers spans two b8 batches
+        let layers: Vec<usize> = (0..10).collect();
+        let out = model.predict_window(&emb, n_real, &layers).unwrap();
+        assert_eq!(out.len(), 10 * n_real * model.n_experts);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // layer identity must matter (different rows differ)
+        let a = &out[..model.n_experts];
+        let b = &out[9 * n_real * model.n_experts..9 * n_real * model.n_experts + model.n_experts];
+        assert!(a.iter().zip(b).any(|(x, y)| (x - y).abs() > 1e-5));
+    }
+
+    #[test]
+    fn precompute_covers_every_token() {
+        let Some((rt, arts)) = arts() else { return };
+        let model = LearnedModel::load(&rt, &arts).unwrap();
+        let traces =
+            crate::trace::store::read_traces(arts.path("traces/val.bin")).unwrap();
+        let tr = &traces[0];
+        let preds = precompute(&model, tr, 8, 6).unwrap();
+        assert_eq!(preds.sets.len(), tr.n_tokens());
+        for t in (0..tr.n_tokens()).step_by(17) {
+            for l in (0..preds.n_layers).step_by(9) {
+                assert_eq!(preds.sets[t][l].len(), 6);
+            }
+        }
+    }
+}

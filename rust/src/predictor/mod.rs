@@ -1,0 +1,98 @@
+//! Expert-activation predictors: the paper's learned model plus every
+//! heuristic baseline it compares against (§3.1).
+//!
+//! | name         | paper reference                                   |
+//! |--------------|---------------------------------------------------|
+//! | `learned`    | MoE-Beyond (this paper) — AOT transformer via PJRT |
+//! | `eam`        | MoE-Infinity: rEAM/EAMC cosine matching + k-means  |
+//! | `next-layer` | DeepSpeed-MoE: eagerly fetch whole next layer      |
+//! | `popularity` | BrainStorm: global activation counts               |
+//! | `oracle`     | ground-truth lookahead (upper bound)               |
+//! | `none`       | no prefetch (pure LRU reactive caching)            |
+
+pub mod eam;
+pub mod learned;
+pub mod next_layer;
+pub mod oracle;
+pub mod popularity;
+
+pub use eam::EamPredictor;
+pub use learned::{CachedPredictor, LearnedModel, TracePredictions};
+pub use next_layer::NextLayerAll;
+pub use oracle::OraclePredictor;
+pub use popularity::PopularityPredictor;
+
+use crate::trace::PromptTrace;
+use crate::util::ExpertSet;
+
+/// Online decode context handed to a predictor at each step.
+///
+/// At simulation/serving time the current token IS known (its embedding
+/// exists before any MoE layer runs), so predictors may use everything up
+/// to and including token `t` — and nothing after it.
+pub struct DecodeContext<'a> {
+    /// The trace being decoded (embeddings + ground truth; predictors must
+    /// only read tokens `..=t` and ground-truth experts `..t`).
+    pub trace: &'a PromptTrace,
+    /// Current token position.
+    pub t: usize,
+}
+
+/// An expert-activation predictor.
+///
+/// The simulator calls, for each token `t` and layer `l` (in execution
+/// order), `predict(ctx, l)` *before* revealing the ground truth, then
+/// `observe(ctx, l, actual)` after the layer "executes".  `begin_prompt`
+/// resets per-request state (batch-size-1 semantics, paper §5).
+pub trait ExpertPredictor: Send {
+    fn name(&self) -> &'static str;
+
+    /// Reset per-request state at the start of a prompt.
+    fn begin_prompt(&mut self, trace: &PromptTrace);
+
+    /// Predict the experts that will fire at (current token, `layer`).
+    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet;
+
+    /// Observe the ground-truth activation after the layer ran.
+    fn observe(&mut self, ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet);
+
+    /// Finish a prompt (e.g. fold its rEAM into the EAMC).
+    fn end_prompt(&mut self, trace: &PromptTrace);
+}
+
+/// A no-op predictor: reactive caching only.
+pub struct NoPrefetch;
+
+impl ExpertPredictor for NoPrefetch {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn begin_prompt(&mut self, _: &PromptTrace) {}
+    fn predict(&mut self, _: &DecodeContext<'_>, _: usize) -> ExpertSet {
+        ExpertSet::EMPTY
+    }
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn end_prompt(&mut self, _: &PromptTrace) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_prefetch_predicts_nothing() {
+        let tr = PromptTrace {
+            prompt_id: 0,
+            n_layers: 2,
+            top_k: 1,
+            d_emb: 0,
+            tokens: vec![1],
+            embeddings: vec![],
+            experts: vec![0, 1],
+        };
+        let mut p = NoPrefetch;
+        p.begin_prompt(&tr);
+        let ctx = DecodeContext { trace: &tr, t: 0 };
+        assert!(p.predict(&ctx, 0).is_empty());
+    }
+}

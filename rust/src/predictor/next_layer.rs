@@ -1,0 +1,84 @@
+//! DeepSpeed-MoE baseline (paper §3.1): eagerly "prefetch" every expert of
+//! the next layer, assuming dense-model locality.  Over-fetches badly once
+//! routing is sparse — with 64 experts per layer and a 6-expert truth set,
+//! 90% of its prefetches are wasted cache pressure.
+
+use crate::predictor::{DecodeContext, ExpertPredictor};
+use crate::trace::PromptTrace;
+use crate::util::ExpertSet;
+
+pub struct NextLayerAll {
+    n_experts: u16,
+    /// Optional cap on how many experts fit in the prefetch window; the
+    /// real system is PCIe-bound, so fetching "all 64" within one layer's
+    /// compute window is physically impossible — `cap` models that.
+    cap: Option<usize>,
+}
+
+impl NextLayerAll {
+    pub fn new(n_experts: u16) -> Self {
+        Self {
+            n_experts,
+            cap: None,
+        }
+    }
+
+    pub fn with_cap(n_experts: u16, cap: usize) -> Self {
+        Self {
+            n_experts,
+            cap: Some(cap),
+        }
+    }
+}
+
+impl ExpertPredictor for NextLayerAll {
+    fn name(&self) -> &'static str {
+        "next-layer"
+    }
+
+    fn begin_prompt(&mut self, _: &PromptTrace) {}
+
+    fn predict(&mut self, _ctx: &DecodeContext<'_>, _layer: usize) -> ExpertSet {
+        match self.cap {
+            None => ExpertSet::all(self.n_experts),
+            Some(c) => ExpertSet::all(self.n_experts.min(c as u16)),
+        }
+    }
+
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn end_prompt(&mut self, _: &PromptTrace) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr() -> PromptTrace {
+        PromptTrace {
+            prompt_id: 0,
+            n_layers: 1,
+            top_k: 1,
+            d_emb: 0,
+            tokens: vec![0],
+            embeddings: vec![],
+            experts: vec![0],
+        }
+    }
+
+    #[test]
+    fn predicts_everything() {
+        let t = tr();
+        let mut p = NextLayerAll::new(64);
+        p.begin_prompt(&t);
+        let ctx = DecodeContext { trace: &t, t: 0 };
+        assert_eq!(p.predict(&ctx, 0).len(), 64);
+    }
+
+    #[test]
+    fn cap_limits_prefetch() {
+        let t = tr();
+        let mut p = NextLayerAll::with_cap(64, 8);
+        let ctx = DecodeContext { trace: &t, t: 0 };
+        assert_eq!(p.predict(&ctx, 0).len(), 8);
+    }
+}

@@ -1,0 +1,86 @@
+//! Oracle predictor: reads the ground truth for (current token, layer)
+//! straight from the trace.  The upper bound every policy is measured
+//! against — with enough cache it drives the hit rate to 100%, and the
+//! `sim` proptests assert no other predictor beats it.
+
+use crate::predictor::{DecodeContext, ExpertPredictor};
+use crate::trace::PromptTrace;
+use crate::util::ExpertSet;
+
+pub struct OraclePredictor {
+    /// Look this many layers ahead (1 = the layer about to execute).
+    pub horizon: usize,
+}
+
+impl OraclePredictor {
+    pub fn new() -> Self {
+        Self { horizon: 1 }
+    }
+}
+
+impl Default for OraclePredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExpertPredictor for OraclePredictor {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn begin_prompt(&mut self, _: &PromptTrace) {}
+
+    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+        let mut out = ctx.trace.expert_set(ctx.t, layer);
+        // extended horizon: union of the next horizon-1 layers too
+        for h in 1..self.horizon {
+            if layer + h < ctx.trace.n_layers as usize {
+                out = out.union(ctx.trace.expert_set(ctx.t, layer + h));
+            }
+        }
+        out
+    }
+
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn end_prompt(&mut self, _: &PromptTrace) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr() -> PromptTrace {
+        PromptTrace {
+            prompt_id: 0,
+            n_layers: 3,
+            top_k: 2,
+            d_emb: 0,
+            tokens: vec![0, 1],
+            embeddings: vec![],
+            experts: vec![
+                1, 2, 3, 4, 5, 6, // token 0, layers 0..3
+                7, 8, 9, 10, 11, 12, // token 1
+            ],
+        }
+    }
+
+    #[test]
+    fn oracle_is_exact() {
+        let t = tr();
+        let mut p = OraclePredictor::new();
+        let ctx = DecodeContext { trace: &t, t: 1 };
+        assert_eq!(p.predict(&ctx, 0).to_vec(), vec![7, 8]);
+        assert_eq!(p.predict(&ctx, 2).to_vec(), vec![11, 12]);
+    }
+
+    #[test]
+    fn horizon_unions_layers() {
+        let t = tr();
+        let mut p = OraclePredictor { horizon: 2 };
+        let ctx = DecodeContext { trace: &t, t: 0 };
+        assert_eq!(p.predict(&ctx, 0).to_vec(), vec![1, 2, 3, 4]);
+        // horizon clipped at the last layer
+        assert_eq!(p.predict(&ctx, 2).to_vec(), vec![5, 6]);
+    }
+}

@@ -1,0 +1,151 @@
+//! BrainStorm baseline (paper §3.1): global per-expert activation counts
+//! across the workload; prefetch the "popular" experts per layer.  As the
+//! paper notes, once many prompts merge these counts flatten and the hit
+//! rate collapses — exactly what the Fig 1 uniformity predicts.
+
+use crate::predictor::{DecodeContext, ExpertPredictor};
+use crate::trace::PromptTrace;
+use crate::util::{math, ExpertSet};
+
+pub struct PopularityPredictor {
+    n_layers: usize,
+    n_experts: usize,
+    /// Global (workload-lifetime) activation counts per (layer, expert).
+    counts: Vec<u64>,
+    /// Experts predicted per layer.
+    top_k: usize,
+    /// Cached per-layer top-k sets, rebuilt lazily.
+    cached: Vec<ExpertSet>,
+    dirty: bool,
+}
+
+impl PopularityPredictor {
+    pub fn new(n_layers: usize, n_experts: usize, top_k: usize) -> Self {
+        Self {
+            n_layers,
+            n_experts,
+            counts: vec![0; n_layers * n_experts],
+            top_k,
+            cached: vec![ExpertSet::EMPTY; n_layers],
+            dirty: true,
+        }
+    }
+
+    /// Pre-train on a workload's traces (how BrainStorm profiles).
+    pub fn fit(&mut self, traces: &[PromptTrace]) {
+        for tr in traces {
+            for t in 0..tr.n_tokens() {
+                for l in 0..self.n_layers {
+                    for &e in tr.expert_ids(t, l) {
+                        self.counts[l * self.n_experts + e as usize] += 1;
+                    }
+                }
+            }
+        }
+        self.dirty = true;
+    }
+
+    fn rebuild(&mut self) {
+        for l in 0..self.n_layers {
+            let row: Vec<f64> = self.counts[l * self.n_experts..(l + 1) * self.n_experts]
+                .iter()
+                .map(|&c| c as f64)
+                .collect();
+            let mut s = ExpertSet::new();
+            for i in math::top_k(&row, self.top_k) {
+                if row[i] > 0.0 {
+                    s.insert(i as u8);
+                }
+            }
+            self.cached[l] = s;
+        }
+        self.dirty = false;
+    }
+}
+
+impl ExpertPredictor for PopularityPredictor {
+    fn name(&self) -> &'static str {
+        "popularity"
+    }
+
+    fn begin_prompt(&mut self, _: &PromptTrace) {
+        if self.dirty {
+            self.rebuild();
+        }
+    }
+
+    fn predict(&mut self, _ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+        if self.dirty {
+            self.rebuild();
+        }
+        self.cached[layer]
+    }
+
+    fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet) {
+        for e in actual.iter() {
+            self.counts[layer * self.n_experts + e as usize] += 1;
+        }
+        // counts drift slowly; rebuilding per-prompt (begin_prompt) is
+        // enough and keeps predict() allocation-free
+        self.dirty = true;
+    }
+
+    fn end_prompt(&mut self, _: &PromptTrace) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(base: u8) -> PromptTrace {
+        // 4 tokens, 2 layers, top-2: layer l uses {base+l, base+l+1}
+        let mut experts = Vec::new();
+        for _ in 0..4 {
+            for l in 0..2u8 {
+                experts.push(base + l);
+                experts.push(base + l + 1);
+            }
+        }
+        PromptTrace {
+            prompt_id: 0,
+            n_layers: 2,
+            top_k: 2,
+            d_emb: 0,
+            tokens: vec![0; 4],
+            embeddings: vec![],
+            experts,
+        }
+    }
+
+    #[test]
+    fn predicts_most_popular() {
+        let mut p = PopularityPredictor::new(2, 64, 2);
+        p.fit(&[tr(10), tr(10), tr(10), tr(30)]);
+        let t = tr(10);
+        p.begin_prompt(&t);
+        let ctx = DecodeContext { trace: &t, t: 0 };
+        assert_eq!(p.predict(&ctx, 0).to_vec(), vec![10, 11]);
+        assert_eq!(p.predict(&ctx, 1).to_vec(), vec![11, 12]);
+    }
+
+    #[test]
+    fn observe_updates_counts() {
+        let mut p = PopularityPredictor::new(1, 64, 1);
+        let t = tr(0);
+        let ctx = DecodeContext { trace: &t, t: 0 };
+        for _ in 0..5 {
+            p.observe(&ctx, 0, ExpertSet::from_ids([42u8]));
+        }
+        p.begin_prompt(&t);
+        assert_eq!(p.predict(&ctx, 0).to_vec(), vec![42]);
+    }
+
+    #[test]
+    fn empty_counts_predict_nothing() {
+        let mut p = PopularityPredictor::new(1, 64, 4);
+        let t = tr(0);
+        p.begin_prompt(&t);
+        let ctx = DecodeContext { trace: &t, t: 0 };
+        assert!(p.predict(&ctx, 0).is_empty());
+    }
+}

@@ -1,0 +1,284 @@
+//! PJRT client wrapper: HLO text -> compiled executable -> typed execute.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax≥0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Weights are uploaded to device buffers ONCE (`execute_b` keeps them
+//! resident); per-call tensors are converted to literals on the fly.
+
+use std::path::Path;
+
+use anyhow::ensure;
+
+use crate::Result;
+
+/// State input for `call_chained`: host boot tensor or device buffer.
+pub enum StateArg<'a> {
+    Host(TensorArg),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// A host-side tensor argument for one executable call.
+#[derive(Debug, Clone)]
+pub enum TensorArg {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    /// Scalar i32 (rank 0).
+    ScalarI32(i32),
+}
+
+impl TensorArg {
+    /// Upload as a device buffer via `buffer_from_host_buffer`, which the
+    /// TFRT CPU client copies SYNCHRONOUSLY (kImmutableOnlyDuringCall).
+    ///
+    /// `BufferFromHostLiteral` must NOT be used here: it schedules the
+    /// host->device copy asynchronously, so a Rust-side literal dropped
+    /// right after the call is read after free (observed as SIGSEGVs and
+    /// spurious size-check aborts under load).
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            TensorArg::F32(data, dims) => {
+                ensure!(
+                    data.len() == dims.iter().product::<usize>(),
+                    "f32 arg shape mismatch"
+                );
+                client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("f32 arg upload: {e:?}"))?
+            }
+            TensorArg::I32(data, dims) => {
+                ensure!(
+                    data.len() == dims.iter().product::<usize>(),
+                    "i32 arg shape mismatch"
+                );
+                client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("i32 arg upload: {e:?}"))?
+            }
+            TensorArg::ScalarI32(v) => client
+                .buffer_from_host_buffer(&[*v], &[], None)
+                .map_err(|e| anyhow::anyhow!("scalar arg upload: {e:?}"))?,
+        };
+        Ok(buf)
+    }
+}
+
+/// The PJRT CPU client; create once, compile many executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu init: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+            resident: Vec::new(),
+        })
+    }
+
+    /// Upload a set of f32 tensors as device-resident buffers (weights).
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let dims_i: Vec<usize> = dims.to_vec();
+        self.client
+            .buffer_from_host_buffer(data, &dims_i, None)
+            .map_err(|e| anyhow::anyhow!("uploading buffer: {e:?}"))
+    }
+}
+
+/// A compiled executable plus optional device-resident leading arguments
+/// (the model weights).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    resident: Vec<xla::PjRtBuffer>,
+}
+
+impl Executable {
+    /// Pin weights device-side as the leading arguments of every call.
+    /// `params` is an ordered list of (values, shape).
+    pub fn set_resident_args(
+        &mut self,
+        rt: &PjrtRuntime,
+        params: &[(&[f32], &[usize])],
+    ) -> Result<()> {
+        self.resident = params
+            .iter()
+            .map(|(vals, shape)| rt.upload_f32(vals, shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
+
+    pub fn num_resident(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Upload a raw f32 tensor to a device buffer on this executable's
+    /// client (used by state-threading callers to boot their state).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.exe
+            .client()
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("uploading buffer: {e:?}"))
+    }
+
+    /// `call_flat` variant whose first non-weight argument is a host
+    /// state tensor (boot path of chained executables).
+    pub fn call_flat_with_state(&self, state: TensorArg, rest: &[TensorArg]) -> Result<Vec<f32>> {
+        let mut args = Vec::with_capacity(rest.len() + 1);
+        args.push(state);
+        args.extend_from_slice(rest);
+        self.call_flat(&args)
+    }
+
+    /// Execute and fetch the SINGLE flat f32 output.
+    ///
+    /// Every artifact is lowered to exactly one flat f32 result — the CPU
+    /// PJRT client in xla_extension 0.5.1 cannot fetch tuple-shaped
+    /// output buffers (ToLiteral CHECK-fails on them), so multi-output
+    /// model functions concatenate into one vector at the JAX level.
+    pub fn call_flat(&self, args: &[TensorArg]) -> Result<Vec<f32>> {
+        let out = self.execute_buffers(args)?;
+        out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching output: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("output as f32: {e:?}"))
+    }
+
+    /// Chained execution for state-threading executables (decode): the
+    /// first non-weight argument is either a host tensor (boot) or the
+    /// PREVIOUS call's output buffer (steady state — zero host copies of
+    /// the state).  Returns the new state buffer plus the first
+    /// `head_len` f32s fetched to host.
+    pub fn call_chained(
+        &self,
+        state: StateArg<'_>,
+        rest: &[TensorArg],
+    ) -> Result<xla::PjRtBuffer> {
+        let client = self.exe.client().clone();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut all: Vec<&xla::PjRtBuffer> = self.resident.iter().collect();
+        match state {
+            StateArg::Host(t) => {
+                bufs.push(t.to_buffer(&client)?);
+            }
+            StateArg::Device(b) => all.push(b),
+        }
+        let state_ref_from_host = matches!(&bufs.first(), Some(_));
+        if state_ref_from_host {
+            all.push(&bufs[0]);
+        }
+        let mut arg_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(rest.len());
+        for a in rest {
+            arg_bufs.push(a.to_buffer(&client)?);
+        }
+        all.extend(arg_bufs.iter());
+        let mut out = self
+            .exe
+            .execute_b(&all)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        Ok(out[0].remove(0))
+    }
+
+    /// Execute on raw device buffers and fetch the single f32 output
+    /// (used by tiny extractor executables over chained state).
+    pub fn call_on_buffers(&self, bufs: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let mut all: Vec<&xla::PjRtBuffer> = self.resident.iter().collect();
+        all.extend_from_slice(bufs);
+        let out = self
+            .exe
+            .execute_b(&all)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching output: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("output as f32: {e:?}"))
+    }
+
+    fn execute_buffers(&self, args: &[TensorArg]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        let client = self.exe.client().clone();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            bufs.push(a.to_buffer(&client)?);
+        }
+        let mut all: Vec<&xla::PjRtBuffer> = self.resident.iter().collect();
+        all.extend(bufs.iter());
+        self.exe
+            .execute_b(&all)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end PJRT check against the real predictor artifact.
+    #[test]
+    fn predictor_artifact_runs() {
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("predictor.hlo.txt").exists() {
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let mut exe = rt.load_hlo_text(root.join("predictor.hlo.txt")).unwrap();
+        let blob = crate::runtime::WeightBlob::load(root.join("predictor_weights.bin")).unwrap();
+        let params: Vec<(&[f32], &[usize])> = blob
+            .params
+            .iter()
+            .map(|p| {
+                (
+                    &blob.data[p.offset..p.offset + p.size],
+                    p.shape.as_slice(),
+                )
+            })
+            .collect();
+        exe.set_resident_args(&rt, &params).unwrap();
+
+        let t = 32usize;
+        let d = 128usize;
+        let emb = vec![0.1f32; t * d];
+        let lids = vec![3i32; t];
+        let mask = vec![1.0f32; t];
+        let probs = exe
+            .call_flat(&[
+                TensorArg::F32(emb, vec![t, d]),
+                TensorArg::I32(lids, vec![t]),
+                TensorArg::F32(mask, vec![t]),
+            ])
+            .unwrap();
+        assert_eq!(probs.len(), t * 64);
+        assert!(probs.iter().all(|x| x.is_finite()));
+
+        // repeated calls with resident weights must be stable
+        let probs2 = exe
+            .call_flat(&[
+                TensorArg::F32(vec![0.1f32; t * d], vec![t, d]),
+                TensorArg::I32(vec![3i32; t], vec![t]),
+                TensorArg::F32(vec![1.0f32; t], vec![t]),
+            ])
+            .unwrap();
+        assert_eq!(probs2.len(), t * 64);
+    }
+}

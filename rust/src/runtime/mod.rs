@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by the Python
+//! compile path and executes them natively.  This is the only place the
+//! crate touches the `xla` FFI; everything above works with plain slices.
+
+mod client;
+mod weights;
+
+pub use client::{Executable, PjrtRuntime, StateArg, TensorArg};
+pub use weights::WeightBlob;

@@ -1,0 +1,172 @@
+//! Weight blob loader: flat little-endian f32 file + JSON manifest
+//! (`*_weights.bin` / `*_weights.bin.json` written by the Python side).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// A loaded weight blob: the raw f32 vector + per-parameter views.
+#[derive(Debug, Clone)]
+pub struct WeightBlob {
+    pub data: Vec<f32>,
+    pub params: Vec<ParamEntry>,
+    pub fingerprint: Option<String>,
+}
+
+impl WeightBlob {
+    /// Load `<path>` (+ `<path>.json` manifest).
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        let raw = std::fs::read(path).with_context(|| format!("reading weights {path:?}"))?;
+        ensure!(raw.len() % 4 == 0, "weight file not a multiple of 4 bytes");
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let man_path = format!("{}.json", path.display());
+        let j = Json::parse_file(&man_path).with_context(|| format!("manifest {man_path}"))?;
+        let total = j.req("total_f32")?.as_usize()?;
+        ensure!(
+            total == data.len(),
+            "manifest says {} f32s, file holds {}",
+            total,
+            data.len()
+        );
+        let params: Vec<ParamEntry> = j
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|e| -> Result<ParamEntry> {
+                Ok(ParamEntry {
+                    name: e.req("name")?.as_str()?.to_string(),
+                    offset: e.req("offset")?.as_usize()?,
+                    size: e.req("size")?.as_usize()?,
+                    shape: e.req("shape")?.as_usize_vec()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let fingerprint = j
+            .get("fingerprint")
+            .and_then(|f| f.as_str().ok().map(|s| s.to_string()));
+        let mut off = 0;
+        for p in &params {
+            ensure!(p.offset == off, "param {} offset mismatch", p.name);
+            ensure!(
+                p.size == p.shape.iter().product::<usize>(),
+                "param {} size/shape mismatch",
+                p.name
+            );
+            off += p.size;
+        }
+        ensure!(off == data.len(), "manifest does not cover the blob");
+        Ok(Self {
+            data,
+            params,
+            fingerprint,
+        })
+    }
+
+    /// View one parameter's values.
+    pub fn view(&self, name: &str) -> Result<(&[f32], &[usize])> {
+        let p = self
+            .params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no param named {name}"))?;
+        Ok((&self.data[p.offset..p.offset + p.size], &p.shape))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_blob(dir: &Path, params: &[(&str, Vec<usize>, Vec<f32>)]) -> std::path::PathBuf {
+        let mut data: Vec<u8> = Vec::new();
+        let mut man = Vec::new();
+        let mut off = 0;
+        for (name, shape, vals) in params {
+            for v in vals {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+            let shape_s = format!("{:?}", shape);
+            man.push(format!(
+                "{{\"name\": \"{}\", \"offset\": {}, \"size\": {}, \"shape\": {}}}",
+                name, off, vals.len(), shape_s
+            ));
+            off += vals.len();
+        }
+        let p = dir.join("w.bin");
+        std::fs::write(&p, &data).unwrap();
+        std::fs::write(
+            dir.join("w.bin.json"),
+            format!(
+                "{{\"total_f32\": {}, \"params\": [{}], \"fingerprint\": \"fp1\"}}",
+                off,
+                man.join(",")
+            ),
+        )
+        .unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_view() {
+        let dir = std::env::temp_dir().join("moeb_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_blob(
+            &dir,
+            &[
+                ("a", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+                ("b", vec![3], vec![5.0, 6.0, 7.0]),
+            ],
+        );
+        let blob = WeightBlob::load(&p).unwrap();
+        assert_eq!(blob.total_params(), 7);
+        assert_eq!(blob.fingerprint.as_deref(), Some("fp1"));
+        let (vals, shape) = blob.view("b").unwrap();
+        assert_eq!(vals, &[5.0, 6.0, 7.0]);
+        assert_eq!(shape, &[3]);
+        assert!(blob.view("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("moeb_weights_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = write_blob(&dir, &[("a", vec![3], vec![1.0, 2.0])]); // shape says 3, data 2
+        assert!(WeightBlob::load(&p).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/predictor_weights.bin");
+        if !p.exists() {
+            return;
+        }
+        let blob = WeightBlob::load(&p).unwrap();
+        assert!(blob.total_params() > 100_000);
+        let (le, shape) = blob.view("layer_emb").unwrap();
+        assert_eq!(shape[0], 27);
+        assert!(le.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,463 @@
+//! Experiment harness shared by the CLI, the criterion benches, and the
+//! examples: one function per paper artifact (Fig 1-3, Fig 5-6, Fig 7,
+//! Table 1), all reading the same `artifacts/` tree.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::config::{Artifacts, EamConfig, SimConfig};
+use crate::eval::{eval_trace, EvalAccumulator};
+use crate::predictor::{learned, LearnedModel, TracePredictions};
+use crate::runtime::PjrtRuntime;
+use crate::sim::sweep::{sweep_capacities, PredictorKind, SweepInputs, SweepResult};
+use crate::trace::{analysis, store, PromptTrace};
+use crate::util::ExpertSet;
+use crate::Result;
+
+/// Default capacity fractions for the Fig-7 sweep (paper: 10%..100%).
+pub const FIG7_FRACS: &[f64] = &[0.05, 0.10, 0.15, 0.20, 0.30, 0.40, 0.60, 0.80, 1.00];
+
+/// Locate the artifact tree: $MOEB_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("MOEB_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub fn load_artifacts() -> Result<Artifacts> {
+    Artifacts::discover(artifacts_root())
+}
+
+// ---------------------------------------------------------------------------
+// Learned-prediction precompute with a binary disk cache
+// ---------------------------------------------------------------------------
+
+/// Precompute learned predictions for a trace set, caching the predicted
+/// sets on disk (keyed by stride/top-k/count) so capacity sweeps and
+/// repeated bench runs skip the PJRT pass.  The disk cache stores only
+/// the sets, not the logits — Table-1 eval recomputes logits in memory.
+pub fn precompute_learned(
+    rt: &PjrtRuntime,
+    arts: &Artifacts,
+    traces: &[PromptTrace],
+    stride: usize,
+    top_k: usize,
+    use_disk_cache: bool,
+) -> Result<Vec<TracePredictions>> {
+    // cache key includes a cheap content fingerprint so regenerated
+    // traces can never silently reuse stale predictions
+    let fp: u64 = traces
+        .iter()
+        .map(|t| {
+            t.prompt_id as u64
+                ^ ((t.n_tokens() as u64) << 20)
+                ^ (t.experts.iter().map(|&e| e as u64).sum::<u64>() << 32)
+        })
+        .fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b));
+    let cache_path = arts.path(&format!(
+        "cache/learned_s{}_k{}_n{}_{:016x}.bin",
+        stride,
+        top_k,
+        traces.len(),
+        fp
+    ));
+    if use_disk_cache {
+        if let Ok(cached) = read_pred_cache(&cache_path, traces) {
+            return Ok(cached);
+        }
+    }
+    let model = LearnedModel::load(rt, arts)?;
+    let mut out = Vec::with_capacity(traces.len());
+    for tr in traces {
+        out.push(learned::precompute(&model, tr, stride, top_k)?);
+    }
+    if use_disk_cache {
+        let _ = write_pred_cache(&cache_path, &out);
+    }
+    Ok(out)
+}
+
+fn write_pred_cache(path: &Path, preds: &[TracePredictions]) -> Result<()> {
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&(preds.len() as u32).to_le_bytes())?;
+    for p in preds {
+        f.write_all(&(p.sets.len() as u32).to_le_bytes())?;
+        f.write_all(&(p.n_layers as u32).to_le_bytes())?;
+        f.write_all(&(p.n_experts as u32).to_le_bytes())?;
+        for row in &p.sets {
+            for s in row {
+                f.write_all(&s.0.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_pred_cache(path: &Path, traces: &[PromptTrace]) -> Result<Vec<TracePredictions>> {
+    use std::io::Read as _;
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+    anyhow::ensure!(n == traces.len(), "cache count mismatch");
+    let mut out = Vec::with_capacity(n);
+    for tr in traces {
+        f.read_exact(&mut b4)?;
+        let n_tokens = u32::from_le_bytes(b4) as usize;
+        anyhow::ensure!(n_tokens == tr.n_tokens(), "cache token-count mismatch");
+        f.read_exact(&mut b4)?;
+        let n_layers = u32::from_le_bytes(b4) as usize;
+        f.read_exact(&mut b4)?;
+        let n_experts = u32::from_le_bytes(b4) as usize;
+        let mut sets = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            let mut row = Vec::with_capacity(n_layers);
+            for _ in 0..n_layers {
+                f.read_exact(&mut b8)?;
+                row.push(ExpertSet(u64::from_le_bytes(b8)));
+            }
+            sets.push(row);
+        }
+        out.push(TracePredictions {
+            n_layers,
+            sets,
+            logits: vec![Vec::new(); n_tokens],
+            n_experts,
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// FIG 7 — cache hit rate vs capacity
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig7Row {
+    pub predictor: String,
+    pub capacity_pct: f64,
+    pub hit_rate_pct: f64,
+    pub prediction_hit_rate_pct: f64,
+}
+
+/// Run the full Fig-7 experiment for the given predictor kinds.
+pub fn run_fig7(
+    rt: &PjrtRuntime,
+    arts: &Artifacts,
+    kinds: &[PredictorKind],
+    fracs: &[f64],
+    max_test_prompts: usize,
+    sim: SimConfig,
+) -> Result<Vec<SweepResult>> {
+    let test = store::read_traces(arts.path(&arts.split("test")?.path))?;
+    let test = &test[..test.len().min(max_test_prompts)];
+    let fit = store::read_traces(arts.path(&arts.split("train")?.path))?;
+    let fit = &fit[..fit.len().min(120)];
+
+    let learned_preds = if kinds.contains(&PredictorKind::Learned) {
+        Some(precompute_learned(
+            rt,
+            arts,
+            test,
+            sim.predictor_stride,
+            sim.predict_top_k,
+            true,
+        )?)
+    } else {
+        None
+    };
+
+    let inputs = SweepInputs {
+        test_traces: test,
+        fit_traces: fit,
+        learned: learned_preds.as_deref(),
+        sim,
+        eam: EamConfig::default(),
+        n_layers: arts.world.n_layers as usize,
+        n_experts: arts.world.n_experts as usize,
+    };
+
+    kinds
+        .iter()
+        .map(|&k| sweep_capacities(k, fracs, &inputs))
+        .collect()
+}
+
+/// Flatten sweep results into printable/serializable rows.
+pub fn fig7_rows(results: &[SweepResult]) -> Vec<Fig7Row> {
+    let mut rows = Vec::new();
+    for r in results {
+        for p in &r.points {
+            rows.push(Fig7Row {
+                predictor: r.predictor.clone(),
+                capacity_pct: p.capacity_frac * 100.0,
+                hit_rate_pct: p.hit_rate * 100.0,
+                prediction_hit_rate_pct: p.prediction_hit_rate * 100.0,
+            });
+        }
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// TABLE 1 — predictor accuracy / F1 on the test split
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub accuracy_pct: f64,
+    pub macro_f1_pct: f64,
+    pub micro_f1_pct: f64,
+    pub exact_match_pct: f64,
+    pub positions: u64,
+    pub prompts: usize,
+}
+
+/// Evaluate the trained predictor on the test split (offline, full
+/// windows — the paper's §3.2.4 protocol).
+pub fn run_table1(rt: &PjrtRuntime, arts: &Artifacts, max_prompts: usize, split: &str) -> Result<Table1> {
+    let traces = store::read_traces(arts.path(&arts.split(split)?.path))?;
+    let traces = &traces[..traces.len().min(max_prompts)];
+    let model = LearnedModel::load(rt, arts)?;
+    let mut acc = EvalAccumulator::new(arts.world.n_experts as usize);
+    for tr in traces {
+        // offline eval: full-window stride, each token scored at its own
+        // window row (the paper's §3.2.4 protocol)
+        let preds = learned::precompute_mode(
+            &model,
+            tr,
+            model.window,
+            arts.world.top_k as usize,
+            true,
+        )?;
+        eval_trace(&preds, tr, &mut acc);
+    }
+    Ok(Table1 {
+        accuracy_pct: acc.accuracy() * 100.0,
+        macro_f1_pct: acc.macro_f1() * 100.0,
+        micro_f1_pct: acc.micro_f1() * 100.0,
+        exact_match_pct: acc.exact_match() * 100.0,
+        positions: acc.positions,
+        prompts: traces.len(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// FIGS 1-3 — trace analysis
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig123Report {
+    pub n_prompts: usize,
+    /// Fig 1: layer-1 aggregate histogram (64 counts).
+    pub fig1_histogram: Vec<u64>,
+    pub fig1_min: u64,
+    pub fig1_max: u64,
+    pub fig1_ratio: f64,
+    /// Fig 2: single-prompt histogram + its peak experts.
+    pub fig2_histogram: Vec<u64>,
+    pub fig2_peak_experts: Vec<u8>,
+    pub fig2_working_set: usize,
+    /// Fig 3: heatmap summary (per-layer working-set sizes + reuse score).
+    pub fig3_working_sets: Vec<usize>,
+    pub fig3_cross_layer_reuse: f64,
+    pub sparsity: SparsitySummary,
+}
+
+#[derive(Debug, Clone)]
+pub struct SparsitySummary {
+    pub mean_working_set: f64,
+    pub working_set_frac: f64,
+    pub mean_single_entropy: f64,
+    pub aggregate_entropy: f64,
+}
+
+/// Reproduce the paper's §2.2 trace analysis on `n_prompts` test prompts
+/// (paper: 122 Puffin prompts, probe layer 1, single prompt #6000).
+pub fn run_fig123(arts: &Artifacts, n_prompts: usize, probe_layer: usize) -> Result<Fig123Report> {
+    let world = crate::trace::WorldModel::load(arts.path("world.json"))?;
+    // analytic generator gives us exactly-n prompts regardless of split sizes
+    let mut gen = crate::trace::generator::TraceGenerator::new(
+        &world,
+        crate::trace::corpus::CorpusConfig::default(),
+        6000,
+    );
+    let traces = gen.generate(n_prompts);
+    let n_experts = arts.world.n_experts as usize;
+
+    let fig1 = analysis::aggregate_layer_histogram(&traces, probe_layer, n_experts);
+    let single = &traces[traces.len() / 2]; // the paper's "prompt #6000"
+    let fig2 = analysis::single_prompt_histogram(single, probe_layer, n_experts);
+    let heat = analysis::layer_expert_heatmap(single, n_experts);
+    let rep = analysis::sparsity_report(&traces, probe_layer, n_experts);
+
+    let peak_thresh = fig2.iter().max().copied().unwrap_or(0) / 3;
+    let peaks: Vec<u8> = fig2
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > peak_thresh.max(1))
+        .map(|(i, _)| i as u8)
+        .collect();
+
+    Ok(Fig123Report {
+        n_prompts,
+        fig1_min: *fig1.iter().min().unwrap(),
+        fig1_max: *fig1.iter().max().unwrap(),
+        fig1_ratio: *fig1.iter().max().unwrap() as f64
+            / (*fig1.iter().min().unwrap()).max(1) as f64,
+        fig1_histogram: fig1,
+        fig2_peak_experts: peaks,
+        fig2_working_set: single.layer_working_set(probe_layer).len() as usize,
+        fig2_histogram: fig2,
+        fig3_working_sets: heat
+            .iter()
+            .map(|row| row.iter().filter(|&&c| c > 0).count())
+            .collect(),
+        fig3_cross_layer_reuse: analysis::cross_layer_reuse(
+            single,
+            &world.layer_perm,
+            n_experts,
+        ),
+        sparsity: SparsitySummary {
+            mean_working_set: rep.mean_working_set,
+            working_set_frac: rep.working_set_frac,
+            mean_single_entropy: rep.mean_single_entropy,
+            aggregate_entropy: rep.aggregate_entropy,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// FIGS 5-6 — training/validation curves from training_log.json
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct TrainStep {
+    pub step: u64,
+    pub loss: f64,
+    pub acc: f64,
+    pub f1: f64,
+    pub exact: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ValEpoch {
+    pub epoch: u64,
+    pub loss: f64,
+    pub acc: f64,
+    pub f1: f64,
+    pub exact: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainingLog {
+    pub train_steps: Vec<TrainStep>,
+    pub val_epochs: Vec<ValEpoch>,
+    pub wall_seconds: f64,
+}
+
+pub fn load_training_log(arts: &Artifacts) -> Result<TrainingLog> {
+    let j = crate::util::json::Json::parse_file(arts.path("training_log.json"))?;
+    let train_steps = j
+        .req("train_steps")?
+        .as_arr()?
+        .iter()
+        .map(|e| -> Result<TrainStep> {
+            Ok(TrainStep {
+                step: e.req("step")?.as_u64()?,
+                loss: e.req("loss")?.as_f64()?,
+                acc: e.req("acc")?.as_f64()?,
+                f1: e.req("f1")?.as_f64()?,
+                exact: e.req("exact")?.as_f64()?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let val_epochs = j
+        .req("val_epochs")?
+        .as_arr()?
+        .iter()
+        .map(|e| -> Result<ValEpoch> {
+            Ok(ValEpoch {
+                epoch: e.req("epoch")?.as_u64()?,
+                loss: e.req("loss")?.as_f64()?,
+                acc: e.req("acc")?.as_f64()?,
+                f1: e.req("f1")?.as_f64()?,
+                exact: e.req("exact")?.as_f64()?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let wall_seconds = j.get("wall_seconds").map(|v| v.as_f64()).transpose()?.unwrap_or(0.0);
+    Ok(TrainingLog {
+        train_steps,
+        val_epochs,
+        wall_seconds,
+    })
+}
+
+/// Serialize Fig-7 rows as a JSON array (for --out files).
+pub fn fig7_rows_json(rows: &[Fig7Row]) -> String {
+    use crate::util::json::Json;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("predictor", Json::str(&r.predictor)),
+                    ("capacity_pct", Json::num(r.capacity_pct)),
+                    ("hit_rate_pct", Json::num(r.hit_rate_pct)),
+                    ("prediction_hit_rate_pct", Json::num(r.prediction_hit_rate_pct)),
+                ])
+            })
+            .collect(),
+    )
+    .to_json_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pred_cache_roundtrip() {
+        let traces = vec![PromptTrace {
+            prompt_id: 0,
+            n_layers: 3,
+            top_k: 2,
+            d_emb: 0,
+            tokens: vec![0, 1],
+            embeddings: vec![],
+            experts: vec![0; 12],
+        }];
+        let preds = vec![TracePredictions {
+            n_layers: 3,
+            sets: vec![
+                vec![ExpertSet(0b101), ExpertSet(0b110), ExpertSet(0b011)],
+                vec![ExpertSet(0b1), ExpertSet(0b10), ExpertSet(0b100)],
+            ],
+            logits: vec![Vec::new(), Vec::new()],
+            n_experts: 64,
+        }];
+        let p = std::env::temp_dir().join("moeb_predcache_test.bin");
+        write_pred_cache(&p, &preds).unwrap();
+        let back = read_pred_cache(&p, &traces).unwrap();
+        assert_eq!(back[0].sets, preds[0].sets);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn fig123_runs_without_pjrt() {
+        // only needs world.json + traces, not the runtime
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("artifacts.json").exists() {
+            return;
+        }
+        let arts = Artifacts::discover(&root).unwrap();
+        let rep = run_fig123(&arts, 20, 0).unwrap();
+        assert_eq!(rep.fig1_histogram.len(), 64);
+        // wider per-prompt unions under token-level routing (route_beta)
+        assert!(rep.fig2_working_set < 50);
+        assert!(rep.sparsity.mean_single_entropy < rep.sparsity.aggregate_entropy);
+        assert!(rep.fig3_cross_layer_reuse > 0.3);
+    }
+}

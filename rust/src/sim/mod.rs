@@ -1,0 +1,9 @@
+//! Trace-driven cache simulator (paper §4.1.4) and the capacity-sweep
+//! harness behind Fig 7.
+
+mod engine;
+pub mod harness;
+pub mod sweep;
+
+pub use engine::{simulate_prompt, SimEngine};
+pub use sweep::{sweep_capacities, PredictorKind, SweepPoint, SweepResult};

@@ -1,0 +1,218 @@
+//! Synthetic prompt corpus — Rust mirror of `world.py::PromptSampler`.
+//!
+//! Streams need not be bit-identical with numpy's; the contract is
+//! *distributional*: topic-mixture prompts with multi-turn segment
+//! structure, deck-balanced primary topics, and a held-out-topic-weighted
+//! test split (the Puffin -> WebGLM-QA domain shift).
+
+use crate::trace::WorldModel;
+use crate::util::Rng;
+
+/// Corpus parameters (mirrors `CorpusConfig`).
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    pub min_tokens: usize,
+    pub max_tokens: usize,
+    pub max_topics_per_prompt: usize,
+    pub common_token_prob: f64,
+    pub test_split: bool,
+    pub held_out_frac: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            seed: 7,
+            min_tokens: 48,
+            max_tokens: 200,
+            max_topics_per_prompt: 3,
+            common_token_prob: 0.22,
+            test_split: false,
+            held_out_frac: 0.25,
+        }
+    }
+}
+
+/// A sampled prompt: token ids + its latent topic mixture.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    pub tokens: Vec<i32>,
+    pub topics: Vec<(usize, f64)>, // (topic id, weight)
+}
+
+/// Prompt sampler over a loaded world.
+pub struct PromptSampler<'w> {
+    world: &'w WorldModel,
+    cfg: CorpusConfig,
+    rng: Rng,
+    deck: Vec<usize>,
+    held_out: Vec<usize>,
+    main: Vec<usize>,
+    common_pool: Vec<i32>,
+    topic_pools: Vec<Vec<i32>>,
+}
+
+impl<'w> PromptSampler<'w> {
+    pub fn new(world: &'w WorldModel, cfg: CorpusConfig) -> Self {
+        let k = world.meta.n_topics as usize;
+        let n_held = ((k as f64 * cfg.held_out_frac) as usize).max(1);
+        let held_out: Vec<usize> = (k - n_held..k).collect();
+        let main: Vec<usize> = (0..k - n_held).collect();
+
+        let mut common_pool = Vec::new();
+        let mut topic_pools = vec![Vec::new(); k];
+        for (tok, &topic) in world.token_topic.iter().enumerate() {
+            if topic < 0 {
+                common_pool.push(tok as i32);
+            } else {
+                topic_pools[topic as usize].push(tok as i32);
+            }
+        }
+        let seed = world.meta.seed
+            .wrapping_mul(1_000_003)
+            ^ cfg.seed.wrapping_mul(97).wrapping_add(cfg.test_split as u64);
+        Self {
+            world,
+            rng: Rng::new(seed),
+            cfg,
+            deck: Vec::new(),
+            held_out,
+            main,
+            common_pool,
+            topic_pools,
+        }
+    }
+
+    fn next_from_deck(&mut self) -> usize {
+        // main topics at fair share, held-out at ~1/3 of fair share
+        // (mirrors world.py::PromptSampler, see its comment)
+        if self.deck.is_empty() {
+            let mut deck: Vec<usize> = Vec::new();
+            for _ in 0..3 {
+                deck.extend(&self.main);
+            }
+            deck.extend(&self.held_out);
+            self.rng.shuffle(&mut deck);
+            self.deck = deck;
+        }
+        self.deck.pop().unwrap()
+    }
+
+    fn draw_topics(&mut self) -> Vec<usize> {
+        let n = self.rng.range(1, self.cfg.max_topics_per_prompt + 1);
+        if self.cfg.test_split {
+            // test prompts mix held-out topics EXCLUSIVELY (the
+            // Puffin -> WebGLM-QA domain shift)
+            let n = n.min(self.held_out.len());
+            let mut out = Vec::new();
+            while out.len() < n {
+                let t = *self.rng.choose(&self.held_out);
+                if !out.contains(&t) {
+                    out.push(t);
+                }
+            }
+            return out;
+        }
+        let primary = self.next_from_deck();
+        let mut out = vec![primary];
+        while out.len() < n {
+            let t = self.rng.below(self.world.meta.n_topics as usize);
+            if !out.contains(&t) {
+                out.push(t);
+            }
+        }
+        out
+    }
+
+    /// Sample one prompt (token ids + topic mixture).
+    pub fn sample(&mut self) -> Prompt {
+        let topics = self.draw_topics();
+        let weights = self.rng.dirichlet(2.0, topics.len());
+        let t_total = self.rng.range(self.cfg.min_tokens, self.cfg.max_tokens + 1);
+
+        let mut tokens = Vec::with_capacity(t_total);
+        while tokens.len() < t_total {
+            // multi-turn: 8-24 token segments biased to one mixture topic
+            let seg = self.rng.range(8, 25);
+            let t_idx = self.rng.choose_weighted(&weights);
+            let pool_id = topics[t_idx];
+            for _ in 0..seg {
+                if tokens.len() >= t_total {
+                    break;
+                }
+                let tok = if self.rng.f64() < self.cfg.common_token_prob
+                    || self.topic_pools[pool_id].is_empty()
+                {
+                    *self.rng.choose(&self.common_pool)
+                } else {
+                    *self.rng.choose(&self.topic_pools[pool_id])
+                };
+                tokens.push(tok);
+            }
+        }
+        Prompt {
+            tokens,
+            topics: topics.into_iter().zip(weights).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> Option<WorldModel> {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/world.json");
+        p.exists().then(|| WorldModel::load(&p).unwrap())
+    }
+
+    #[test]
+    fn prompts_in_bounds() {
+        let Some(w) = world() else { return };
+        let mut s = PromptSampler::new(&w, CorpusConfig::default());
+        for _ in 0..20 {
+            let p = s.sample();
+            assert!(p.tokens.len() >= 48 && p.tokens.len() <= 200);
+            assert!(p.tokens.iter().all(|&t| t >= 0 && (t as u32) < w.meta.vocab_size));
+            let wsum: f64 = p.topics.iter().map(|(_, w)| w).sum();
+            assert!((wsum - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn test_split_prefers_held_out() {
+        let Some(w) = world() else { return };
+        let k = w.meta.n_topics as usize;
+        let held_start = k - (k as f64 * 0.25) as usize;
+        let mass = |test: bool| {
+            let mut s = PromptSampler::new(
+                &w,
+                CorpusConfig {
+                    test_split: test,
+                    ..Default::default()
+                },
+            );
+            let mut m = 0.0;
+            for _ in 0..80 {
+                for (t, wgt) in s.sample().topics {
+                    if t >= held_start {
+                        m += wgt;
+                    }
+                }
+            }
+            m / 80.0
+        };
+        assert!(mass(true) > mass(false) + 0.2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let Some(w) = world() else { return };
+        let mut a = PromptSampler::new(&w, CorpusConfig::default());
+        let mut b = PromptSampler::new(&w, CorpusConfig::default());
+        for _ in 0..5 {
+            assert_eq!(a.sample().tokens, b.sample().tokens);
+        }
+    }
+}

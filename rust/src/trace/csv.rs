@@ -1,0 +1,166 @@
+//! CSV trace logging — the paper's §4.1.4 interchange ("For every prompt
+//! we run DeepSeek-V2-Lite once and log, to a CSV file, each Layer ID
+//! together with the list of Activated Expert IDs").
+//!
+//! Format (one row per (prompt, token, layer) point):
+//!
+//! ```text
+//! prompt_id,token_idx,token,layer_id,expert_ids
+//! 42,0,1017,0,"3;17;22;40;51;60"
+//! ```
+//!
+//! Embeddings are not representable in this format (the paper stores them
+//! separately too); round-tripping through CSV preserves everything else.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::trace::schema::{PromptTrace, TraceMeta};
+use crate::Result;
+
+/// Write traces as CSV (header + one row per trace point).
+pub fn write_csv<P: AsRef<Path>>(path: P, traces: &[PromptTrace]) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "prompt_id,token_idx,token,layer_id,expert_ids")?;
+    for tr in traces {
+        for t in 0..tr.n_tokens() {
+            for l in 0..tr.n_layers as usize {
+                let ids: Vec<String> = tr
+                    .expert_ids(t, l)
+                    .iter()
+                    .map(|e| e.to_string())
+                    .collect();
+                writeln!(
+                    w,
+                    "{},{},{},{},\"{}\"",
+                    tr.prompt_id,
+                    t,
+                    tr.tokens[t],
+                    l,
+                    ids.join(";")
+                )?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a CSV trace file back (embeddings come back empty).
+pub fn read_csv<P: AsRef<Path>>(path: P, meta: &TraceMeta) -> Result<Vec<PromptTrace>> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut lines = BufReader::new(f).lines();
+    match lines.next() {
+        Some(Ok(h)) if h.trim() == "prompt_id,token_idx,token,layer_id,expert_ids" => {}
+        _ => bail!("bad CSV header"),
+    }
+
+    let (l_n, k_n) = (meta.n_layers as usize, meta.top_k as usize);
+    let mut traces: Vec<PromptTrace> = Vec::new();
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.splitn(5, ',');
+        let pid: u32 = parts.next().context("pid")?.parse()?;
+        let t: usize = parts.next().context("token_idx")?.parse()?;
+        let tok: i32 = parts.next().context("token")?.parse()?;
+        let l: usize = parts.next().context("layer")?.parse()?;
+        let ids_raw = parts.next().context("expert_ids")?.trim();
+        let ids_raw = ids_raw
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .context("expert_ids not quoted")?;
+        let ids: Vec<u8> = ids_raw
+            .split(';')
+            .map(|s| s.parse::<u8>().context("expert id"))
+            .collect::<Result<_>>()?;
+        ensure!(ids.len() == k_n, "expected {k_n} experts, got {}", ids.len());
+        ensure!(l < l_n, "layer {l} out of range");
+
+        // rows arrive prompt-major, token-major, layer-major
+        if traces.last().map(|tr| tr.prompt_id) != Some(pid) {
+            traces.push(PromptTrace {
+                prompt_id: pid,
+                n_layers: meta.n_layers,
+                top_k: meta.top_k,
+                d_emb: 0,
+                tokens: Vec::new(),
+                embeddings: Vec::new(),
+                experts: Vec::new(),
+            });
+        }
+        let tr = traces.last_mut().unwrap();
+        if tr.tokens.len() == t {
+            tr.tokens.push(tok);
+            tr.experts.resize(tr.experts.len() + l_n * k_n, 0);
+        }
+        ensure!(t < tr.tokens.len(), "token rows out of order");
+        let base = (t * l_n + l) * k_n;
+        tr.experts[base..base + k_n].copy_from_slice(&ids);
+    }
+    Ok(traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            n_layers: 3,
+            n_experts: 64,
+            top_k: 2,
+            d_emb: 0,
+            has_embeddings: false,
+        }
+    }
+
+    fn sample() -> PromptTrace {
+        PromptTrace {
+            prompt_id: 42,
+            n_layers: 3,
+            top_k: 2,
+            d_emb: 0,
+            tokens: vec![10, 11],
+            embeddings: vec![],
+            experts: vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = std::env::temp_dir().join("moeb_csv_test.csv");
+        let traces = vec![sample()];
+        write_csv(&p, &traces).unwrap();
+        let back = read_csv(&p, &meta()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].prompt_id, 42);
+        assert_eq!(back[0].tokens, traces[0].tokens);
+        assert_eq!(back[0].experts, traces[0].experts);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn header_is_paper_schema() {
+        let p = std::env::temp_dir().join("moeb_csv_test2.csv");
+        write_csv(&p, &[sample()]).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.starts_with("prompt_id,token_idx,token,layer_id,expert_ids"));
+        assert!(content.contains("42,0,10,0,\"1;2\""));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = std::env::temp_dir().join("moeb_csv_test3.csv");
+        std::fs::write(&p, "not,a,real,header\n").unwrap();
+        assert!(read_csv(&p, &meta()).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,177 @@
+//! Analytic trace generator — Rust mirror of
+//! `tracegen.py::sample_prompt_trace`: sample a prompt from the corpus,
+//! run the EMA routing context over its embeddings, and draw
+//! gumbel-perturbed top-k expert activations per (token, layer).
+//!
+//! Used for large-scale workload sweeps (the Python side only materializes
+//! the splits training needs) and by property tests; the distribution is
+//! identical to the Python sampler because both consume the same
+//! `world.bin` tensors.
+
+use crate::trace::corpus::{CorpusConfig, Prompt, PromptSampler};
+use crate::trace::schema::{PromptTrace, TraceMeta};
+use crate::trace::WorldModel;
+use crate::util::Rng;
+
+/// Generates `PromptTrace`s from the world model.
+pub struct TraceGenerator<'w> {
+    world: &'w WorldModel,
+    sampler: PromptSampler<'w>,
+    rng: Rng,
+    next_id: u32,
+}
+
+impl<'w> TraceGenerator<'w> {
+    pub fn new(world: &'w WorldModel, corpus: CorpusConfig, seed: u64) -> Self {
+        Self {
+            world,
+            sampler: PromptSampler::new(world, corpus),
+            rng: Rng::new(seed),
+            next_id: 0,
+        }
+    }
+
+    pub fn meta(&self) -> TraceMeta {
+        TraceMeta {
+            n_layers: self.world.meta.n_layers,
+            n_experts: self.world.meta.n_experts,
+            top_k: self.world.meta.top_k,
+            d_emb: self.world.meta.d_model,
+            has_embeddings: true,
+        }
+    }
+
+    /// Trace the given prompt through the analytic router.
+    pub fn trace_prompt(&mut self, prompt: &Prompt) -> PromptTrace {
+        let w = self.world;
+        let (l_n, k_n, d) = (w.n_layers(), w.top_k(), w.d_model());
+        let n = prompt.tokens.len();
+
+        let mut embeddings = Vec::with_capacity(n * d);
+        let mut experts = Vec::with_capacity(n * l_n * k_n);
+        let mut ctx = w.token_embedding(prompt.tokens[0]).to_vec();
+        let beta = w.meta.route_beta.unwrap_or(0.6) as f32;
+        let mut route = vec![0.0f32; d];
+
+        for (t, &tok) in prompt.tokens.iter().enumerate() {
+            let emb = w.token_embedding(tok);
+            embeddings.extend_from_slice(emb);
+            if t == 0 {
+                ctx.copy_from_slice(emb);
+                crate::util::math::normalize(&mut ctx);
+            } else {
+                w.context_step(&mut ctx, emb);
+            }
+            // routing vector: token-embedding/context blend (world.py)
+            for i in 0..d {
+                route[i] = beta * emb[i] + (1.0 - beta) * ctx[i];
+            }
+            crate::util::math::normalize(&mut route);
+            for layer in 0..l_n {
+                experts.extend(w.sample_topk(&route, layer, &mut self.rng));
+            }
+        }
+
+        let id = self.next_id;
+        self.next_id += 1;
+        PromptTrace {
+            prompt_id: id,
+            n_layers: w.meta.n_layers,
+            top_k: w.meta.top_k,
+            d_emb: w.meta.d_model,
+            tokens: prompt.tokens.clone(),
+            embeddings,
+            experts,
+        }
+    }
+
+    /// Sample + trace `n` fresh prompts.
+    pub fn generate(&mut self, n: usize) -> Vec<PromptTrace> {
+        (0..n)
+            .map(|_| {
+                let p = self.sampler.sample();
+                self.trace_prompt(&p)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::entropy;
+
+    fn world() -> Option<WorldModel> {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/world.json");
+        p.exists().then(|| WorldModel::load(&p).unwrap())
+    }
+
+    #[test]
+    fn generated_traces_are_well_formed() {
+        let Some(w) = world() else { return };
+        let mut g = TraceGenerator::new(&w, CorpusConfig::default(), 11);
+        for tr in g.generate(3) {
+            assert_eq!(tr.embeddings.len(), tr.n_tokens() * tr.d_emb as usize);
+            assert_eq!(
+                tr.experts.len(),
+                tr.n_tokens() * tr.n_layers as usize * tr.top_k as usize
+            );
+            // unique top-k per point
+            for t in (0..tr.n_tokens()).step_by(13) {
+                for l in (0..tr.n_layers as usize).step_by(9) {
+                    assert_eq!(tr.expert_set(t, l).len() as usize, tr.top_k as usize);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rust_traces_match_python_statistics() {
+        // The core no-drift check: single-prompt working sets and
+        // activation entropy from the Rust generator must look like the
+        // Python-generated artifact traces.
+        let Some(w) = world() else { return };
+        let arts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/traces/val.bin");
+        if !arts.exists() {
+            return;
+        }
+        let py = crate::trace::store::read_traces(&arts).unwrap();
+        let mut g = TraceGenerator::new(&w, CorpusConfig::default(), 5);
+        let rs = g.generate(py.len().min(20));
+
+        let ws_mean = |trs: &[PromptTrace]| {
+            trs.iter()
+                .map(|t| t.layer_working_set(13).len() as f64)
+                .sum::<f64>()
+                / trs.len() as f64
+        };
+        let (a, b) = (ws_mean(&rs), ws_mean(&py[..rs.len().min(py.len())]));
+        assert!(
+            (a - b).abs() < 8.0,
+            "working-set drift: rust {a:.1} vs python {b:.1}"
+        );
+
+        let ent = |trs: &[PromptTrace]| {
+            let mut counts = vec![0u64; 64];
+            for tr in trs {
+                for t in 0..tr.n_tokens() {
+                    for &e in tr.expert_ids(t, 13) {
+                        counts[e as usize] += 1;
+                    }
+                }
+            }
+            entropy(&counts)
+        };
+        assert!((ent(&rs) - ent(&py[..rs.len().min(py.len())])).abs() < 0.5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let Some(w) = world() else { return };
+        let t1 = TraceGenerator::new(&w, CorpusConfig::default(), 42).generate(2);
+        let t2 = TraceGenerator::new(&w, CorpusConfig::default(), 42).generate(2);
+        assert_eq!(t1[0].experts, t2[0].experts);
+        assert_eq!(t1[1].tokens, t2[1].tokens);
+    }
+}

@@ -1,0 +1,14 @@
+//! Expert-activation trace substrate: schema, binary store (MBTR, shared
+//! with the Python compile path), the synthetic-world loader + workload
+//! generator, and the statistics behind the paper's Figs 1-3.
+
+pub mod analysis;
+pub mod corpus;
+pub mod csv;
+pub mod generator;
+pub mod schema;
+pub mod store;
+pub mod world;
+
+pub use schema::{PromptTrace, TraceMeta};
+pub use world::WorldModel;

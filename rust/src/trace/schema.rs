@@ -1,0 +1,122 @@
+//! Trace schema — the paper's per-token record (§4.1.2): layer id, token,
+//! activated expert ids, token embedding.
+
+use crate::util::ExpertSet;
+
+/// Per-file metadata (mirrors the MBTR header).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceMeta {
+    pub n_layers: u16,
+    pub n_experts: u16,
+    pub top_k: u16,
+    pub d_emb: u16,
+    pub has_embeddings: bool,
+}
+
+/// One prompt's full activation trace.
+///
+/// `experts[t * n_layers * top_k ..]` stores the activated expert ids for
+/// token `t`, layer-major, exactly top_k per (token, layer).
+#[derive(Debug, Clone)]
+pub struct PromptTrace {
+    pub prompt_id: u32,
+    pub n_layers: u16,
+    pub top_k: u16,
+    pub d_emb: u16,
+    pub tokens: Vec<i32>,
+    /// Row-major [n_tokens, d_emb]; empty if the file had no embeddings.
+    pub embeddings: Vec<f32>,
+    /// Row-major [n_tokens, n_layers, top_k].
+    pub experts: Vec<u8>,
+}
+
+impl PromptTrace {
+    pub fn n_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// The `top_k` expert ids activated for (token, layer).
+    #[inline]
+    pub fn expert_ids(&self, token: usize, layer: usize) -> &[u8] {
+        let k = self.top_k as usize;
+        let l = self.n_layers as usize;
+        let base = (token * l + layer) * k;
+        &self.experts[base..base + k]
+    }
+
+    /// Activated experts for (token, layer) as a bitset.
+    #[inline]
+    pub fn expert_set(&self, token: usize, layer: usize) -> ExpertSet {
+        ExpertSet::from_ids(self.expert_ids(token, layer).iter().copied())
+    }
+
+    /// Token embedding row (empty slice if embeddings were not stored).
+    #[inline]
+    pub fn embedding(&self, token: usize) -> &[f32] {
+        let d = self.d_emb as usize;
+        if self.embeddings.is_empty() {
+            return &[];
+        }
+        &self.embeddings[token * d..(token + 1) * d]
+    }
+
+    /// Union of experts activated at `layer` across the whole prompt —
+    /// the prompt's working set at that layer (Fig 2).
+    pub fn layer_working_set(&self, layer: usize) -> ExpertSet {
+        let mut s = ExpertSet::new();
+        for t in 0..self.n_tokens() {
+            s = s.union(self.expert_set(t, layer));
+        }
+        s
+    }
+
+    /// Total (token, layer) trace points.
+    pub fn trace_points(&self) -> usize {
+        self.n_tokens() * self.n_layers as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_trace() -> PromptTrace {
+        // 2 tokens, 3 layers, top-2
+        PromptTrace {
+            prompt_id: 7,
+            n_layers: 3,
+            top_k: 2,
+            d_emb: 4,
+            tokens: vec![10, 11],
+            embeddings: (0..8).map(|x| x as f32).collect(),
+            experts: vec![
+                0, 1, 2, 3, 4, 5, // token 0: layers (0,1),(2,3),(4,5)
+                0, 2, 2, 4, 4, 6, // token 1
+            ],
+        }
+    }
+
+    #[test]
+    fn expert_indexing() {
+        let tr = tiny_trace();
+        assert_eq!(tr.expert_ids(0, 0), &[0, 1]);
+        assert_eq!(tr.expert_ids(0, 2), &[4, 5]);
+        assert_eq!(tr.expert_ids(1, 1), &[2, 4]);
+        assert_eq!(tr.expert_set(1, 0).to_vec(), vec![0, 2]);
+    }
+
+    #[test]
+    fn working_set_unions_layers() {
+        let tr = tiny_trace();
+        assert_eq!(tr.layer_working_set(0).to_vec(), vec![0, 1, 2]);
+        assert_eq!(tr.layer_working_set(2).to_vec(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn embedding_rows() {
+        let tr = tiny_trace();
+        assert_eq!(tr.embedding(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(tr.embedding(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(tr.trace_points(), 6);
+    }
+}

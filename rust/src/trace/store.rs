@@ -1,0 +1,252 @@
+//! MBTR binary trace store — byte-compatible with `python/compile/tracegen.py`.
+//!
+//! Layout (little endian):
+//! ```text
+//! header:  magic   u32 = 0x4D425452
+//!          version u32 = 1
+//!          n_layers u16, n_experts u16, top_k u16, d_emb u16
+//!          n_prompts u32
+//!          flags    u32  (bit0: embeddings present)
+//! per prompt:
+//!          prompt_id u32, n_tokens u32
+//!          tokens      i32 [n_tokens]
+//!          embeddings  f32 [n_tokens * d_emb]   (iff flags & 1)
+//!          experts     u8  [n_tokens * n_layers * top_k]
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+
+use super::schema::{PromptTrace, TraceMeta};
+use crate::Result;
+
+pub const MAGIC: u32 = 0x4D42_5452;
+pub const VERSION: u32 = 1;
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+/// Read every prompt trace in a MBTR file.
+pub fn read_traces<P: AsRef<Path>>(path: P) -> Result<Vec<PromptTrace>> {
+    let (_, traces) = read_traces_with_meta(path)?;
+    Ok(traces)
+}
+
+/// Read a MBTR file, returning header metadata + traces.
+pub fn read_traces_with_meta<P: AsRef<Path>>(path: P) -> Result<(TraceMeta, Vec<PromptTrace>)> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("opening trace file {path:?}"))?;
+    let mut r = BufReader::new(f);
+
+    let magic = read_u32(&mut r)?;
+    ensure!(magic == MAGIC, "bad magic {magic:#x} in {path:?}");
+    let version = read_u32(&mut r)?;
+    ensure!(version == VERSION, "unsupported trace version {version}");
+    let n_layers = read_u16(&mut r)?;
+    let n_experts = read_u16(&mut r)?;
+    let top_k = read_u16(&mut r)?;
+    let d_emb = read_u16(&mut r)?;
+    let n_prompts = read_u32(&mut r)?;
+    let flags = read_u32(&mut r)?;
+    let has_emb = flags & 1 == 1;
+    ensure!(n_experts <= 64, "n_experts {n_experts} > 64 unsupported");
+
+    let meta = TraceMeta {
+        n_layers,
+        n_experts,
+        top_k,
+        d_emb,
+        has_embeddings: has_emb,
+    };
+
+    let mut traces = Vec::with_capacity(n_prompts as usize);
+    for _ in 0..n_prompts {
+        let prompt_id = read_u32(&mut r)?;
+        let n_tokens = read_u32(&mut r)? as usize;
+
+        let mut tok_bytes = vec![0u8; n_tokens * 4];
+        r.read_exact(&mut tok_bytes)?;
+        let tokens: Vec<i32> = tok_bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let embeddings = if has_emb {
+            let mut eb = vec![0u8; n_tokens * d_emb as usize * 4];
+            r.read_exact(&mut eb)?;
+            eb.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        let mut experts = vec![0u8; n_tokens * n_layers as usize * top_k as usize];
+        r.read_exact(&mut experts)?;
+        for &e in &experts {
+            ensure!(
+                (e as u16) < n_experts,
+                "expert id {e} out of range in {path:?}"
+            );
+        }
+
+        traces.push(PromptTrace {
+            prompt_id,
+            n_layers,
+            top_k,
+            d_emb,
+            tokens,
+            embeddings,
+            experts,
+        });
+    }
+    Ok((meta, traces))
+}
+
+/// Write traces in MBTR format (exactly what tracegen.py reads back).
+pub fn write_traces<P: AsRef<Path>>(
+    path: P,
+    meta: &TraceMeta,
+    traces: &[PromptTrace],
+) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&meta.n_layers.to_le_bytes())?;
+    w.write_all(&meta.n_experts.to_le_bytes())?;
+    w.write_all(&meta.top_k.to_le_bytes())?;
+    w.write_all(&meta.d_emb.to_le_bytes())?;
+    w.write_all(&(traces.len() as u32).to_le_bytes())?;
+    w.write_all(&(meta.has_embeddings as u32).to_le_bytes())?;
+    for tr in traces {
+        ensure!(tr.n_layers == meta.n_layers && tr.top_k == meta.top_k, "trace/meta mismatch");
+        w.write_all(&tr.prompt_id.to_le_bytes())?;
+        w.write_all(&(tr.tokens.len() as u32).to_le_bytes())?;
+        for t in &tr.tokens {
+            w.write_all(&t.to_le_bytes())?;
+        }
+        if meta.has_embeddings {
+            ensure!(
+                tr.embeddings.len() == tr.tokens.len() * meta.d_emb as usize,
+                "embedding size mismatch"
+            );
+            for e in &tr.embeddings {
+                w.write_all(&e.to_le_bytes())?;
+            }
+        }
+        ensure!(
+            tr.experts.len() == tr.tokens.len() * meta.n_layers as usize * meta.top_k as usize,
+            "expert array size mismatch"
+        );
+        w.write_all(&tr.experts)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(meta: &TraceMeta, id: u32, n_tokens: usize) -> PromptTrace {
+        let d = meta.d_emb as usize;
+        PromptTrace {
+            prompt_id: id,
+            n_layers: meta.n_layers,
+            top_k: meta.top_k,
+            d_emb: meta.d_emb,
+            tokens: (0..n_tokens as i32).collect(),
+            embeddings: if meta.has_embeddings {
+                (0..n_tokens * d).map(|x| x as f32 * 0.5).collect()
+            } else {
+                vec![]
+            },
+            experts: (0..n_tokens * meta.n_layers as usize * meta.top_k as usize)
+                .map(|x| (x % meta.n_experts as usize) as u8)
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let meta = TraceMeta {
+            n_layers: 5,
+            n_experts: 16,
+            top_k: 3,
+            d_emb: 8,
+            has_embeddings: true,
+        };
+        let traces = vec![mk(&meta, 1, 4), mk(&meta, 2, 9)];
+        let tmp = std::env::temp_dir().join("moeb_store_test.bin");
+        write_traces(&tmp, &meta, &traces).unwrap();
+        let (m2, back) = read_traces_with_meta(&tmp).unwrap();
+        assert_eq!(m2, meta);
+        assert_eq!(back.len(), 2);
+        for (a, b) in traces.iter().zip(&back) {
+            assert_eq!(a.prompt_id, b.prompt_id);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.embeddings, b.embeddings);
+            assert_eq!(a.experts, b.experts);
+        }
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn roundtrip_no_embeddings() {
+        let meta = TraceMeta {
+            n_layers: 2,
+            n_experts: 8,
+            top_k: 2,
+            d_emb: 4,
+            has_embeddings: false,
+        };
+        let traces = vec![mk(&meta, 9, 3)];
+        let tmp = std::env::temp_dir().join("moeb_store_test2.bin");
+        write_traces(&tmp, &meta, &traces).unwrap();
+        let (m2, back) = read_traces_with_meta(&tmp).unwrap();
+        assert!(!m2.has_embeddings);
+        assert!(back[0].embeddings.is_empty());
+        assert_eq!(back[0].experts, traces[0].experts);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let tmp = std::env::temp_dir().join("moeb_store_bad.bin");
+        std::fs::write(&tmp, [0u8; 64]).unwrap();
+        assert!(read_traces(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn python_written_traces_if_present() {
+        // integration against the real artifact tree when it exists
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/traces/test.bin");
+        if !p.exists() {
+            return;
+        }
+        let (meta, traces) = read_traces_with_meta(&p).unwrap();
+        assert_eq!(meta.n_layers, 27);
+        assert_eq!(meta.top_k, 6);
+        assert!(!traces.is_empty());
+        let tr = &traces[0];
+        assert!(tr.n_tokens() >= 48);
+        // experts per (token, layer) are unique
+        let ids = tr.expert_ids(0, 0);
+        let set: std::collections::BTreeSet<_> = ids.iter().collect();
+        assert_eq!(set.len(), ids.len());
+    }
+}

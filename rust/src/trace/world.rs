@@ -1,0 +1,257 @@
+//! Rust-side loader for the synthetic world model (`world.json` +
+//! `world.bin` + `world.blobs.json` written by `python/compile/world.py`).
+//!
+//! The Rust workload generator and the trace simulator use the same
+//! parametric world the Python side trained the predictor on — the blobs
+//! are shared verbatim, so there is no drift between the two languages'
+//! notion of topics, affinities, or the analytic router.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+
+use crate::config::WorldMeta;
+use crate::util::json::Json;
+use crate::util::{math, Rng};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+struct BlobEntry {
+    offset: usize,
+    nbytes: usize,
+    #[allow(dead_code)]
+    shape: Vec<usize>,
+    dtype: String,
+}
+
+/// The loaded world: metadata + the tensors the generator needs.
+#[derive(Debug, Clone)]
+pub struct WorldModel {
+    pub meta: WorldMeta,
+    /// [L, K, E] row-normalized expert affinities.
+    pub affinity: Vec<f32>,
+    /// [K, D] orthonormal topic embeddings.
+    pub topic_emb: Vec<f32>,
+    /// [V, D] token embedding table (backbone `tok_emb`).
+    pub token_emb: Vec<f32>,
+    /// [V] topic id per token (-1 = common token).
+    pub token_topic: Vec<i32>,
+    /// [L, E, D] analytic router weights.
+    pub router_w: Vec<f32>,
+    /// [L, K, W] working-set expert ids.
+    pub working_sets: Vec<i32>,
+    /// [L, E] per-layer expert permutation.
+    pub layer_perm: Vec<i32>,
+}
+
+impl WorldModel {
+    /// Load from `<artifacts>/world.json` (+ sibling .bin/.blobs.json).
+    pub fn load<P: AsRef<Path>>(world_json: P) -> Result<Self> {
+        let path = world_json.as_ref();
+        let meta = WorldMeta::from_json(&Json::parse_file(path)?)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let base = path.with_extension(""); // strips .json
+        let bj = Json::parse_file(base.with_extension("blobs.json"))
+            .context("reading world.blobs.json")?;
+        let mut blobs_manifest: HashMap<String, BlobEntry> = HashMap::new();
+        for (name, e) in bj.as_obj()? {
+            blobs_manifest.insert(
+                name.clone(),
+                BlobEntry {
+                    offset: e.req("offset")?.as_usize()?,
+                    nbytes: e.req("nbytes")?.as_usize()?,
+                    shape: e.req("shape")?.as_usize_vec()?,
+                    dtype: e.req("dtype")?.as_str()?.to_string(),
+                },
+            );
+        }
+        let bin = std::fs::read(base.with_extension("bin")).context("reading world.bin")?;
+
+        let f32s = |name: &str| -> Result<Vec<f32>> {
+            let e = blobs_manifest
+                .get(name)
+                .with_context(|| format!("blob {name} missing"))?;
+            ensure!(e.dtype == "float32", "blob {name} is {}", e.dtype);
+            let raw = &bin[e.offset..e.offset + e.nbytes];
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let i32s = |name: &str| -> Result<Vec<i32>> {
+            let e = blobs_manifest
+                .get(name)
+                .with_context(|| format!("blob {name} missing"))?;
+            ensure!(e.dtype == "int32", "blob {name} is {}", e.dtype);
+            let raw = &bin[e.offset..e.offset + e.nbytes];
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+
+        let w = Self {
+            affinity: f32s("affinity")?,
+            topic_emb: f32s("topic_emb")?,
+            token_emb: f32s("token_emb")?,
+            token_topic: i32s("token_topic")?,
+            router_w: f32s("router_w")?,
+            working_sets: i32s("working_sets")?,
+            layer_perm: i32s("layer_perm")?,
+            meta,
+        };
+        let (l, k, e, d, v) = (
+            w.meta.n_layers as usize,
+            w.meta.n_topics as usize,
+            w.meta.n_experts as usize,
+            w.meta.d_model as usize,
+            w.meta.vocab_size as usize,
+        );
+        ensure!(w.affinity.len() == l * k * e, "affinity shape mismatch");
+        ensure!(w.topic_emb.len() == k * d, "topic_emb shape mismatch");
+        ensure!(w.token_emb.len() == v * d, "token_emb shape mismatch");
+        ensure!(w.router_w.len() == l * e * d, "router_w shape mismatch");
+        ensure!(w.layer_perm.len() == l * e, "layer_perm shape mismatch");
+        Ok(w)
+    }
+
+    #[inline]
+    pub fn n_layers(&self) -> usize {
+        self.meta.n_layers as usize
+    }
+    #[inline]
+    pub fn n_experts(&self) -> usize {
+        self.meta.n_experts as usize
+    }
+    #[inline]
+    pub fn top_k(&self) -> usize {
+        self.meta.top_k as usize
+    }
+    #[inline]
+    pub fn d_model(&self) -> usize {
+        self.meta.d_model as usize
+    }
+
+    /// Embedding row of a token id.
+    pub fn token_embedding(&self, token: i32) -> &[f32] {
+        let d = self.d_model();
+        let v = token as usize;
+        &self.token_emb[v * d..(v + 1) * d]
+    }
+
+    /// Analytic router logits for a context embedding at `layer`.
+    /// `out` must have length n_experts.
+    pub fn router_logits(&self, ctx: &[f32], layer: usize, out: &mut [f64]) {
+        let (e_n, d) = (self.n_experts(), self.d_model());
+        let temp = self.meta.router_temp;
+        let base = layer * e_n * d;
+        for e in 0..e_n {
+            let w = &self.router_w[base + e * d..base + (e + 1) * d];
+            out[e] = math::dot(ctx, w) as f64 / temp;
+        }
+    }
+
+    /// Sample gumbel-perturbed top-k expert ids for one context embedding
+    /// (mirrors `World.sample_topk`).
+    pub fn sample_topk(&self, ctx: &[f32], layer: usize, rng: &mut Rng) -> Vec<u8> {
+        let e_n = self.n_experts();
+        let mut logits = vec![0.0f64; e_n];
+        self.router_logits(ctx, layer, &mut logits);
+        let noise = self.meta.router_noise;
+        for l in logits.iter_mut() {
+            *l += rng.gumbel() * noise;
+        }
+        math::top_k(&logits, self.top_k())
+            .into_iter()
+            .map(|i| i as u8)
+            .collect()
+    }
+
+    /// EMA context update (mirrors `World.context_embeddings` step).
+    pub fn context_step(&self, ctx: &mut [f32], emb: &[f32]) {
+        let a = self.meta.ctx_alpha.unwrap_or(0.75) as f32;
+        for i in 0..ctx.len() {
+            ctx[i] = a * ctx[i] + (1.0 - a) * emb[i];
+        }
+        math::normalize(ctx);
+    }
+
+    /// Working set of (layer, topic).
+    pub fn working_set(&self, layer: usize, topic: usize) -> &[i32] {
+        let (k, w) = (self.meta.n_topics as usize, self.meta.working_set as usize);
+        let base = (layer * k + topic) * w;
+        &self.working_sets[base..base + w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load_if_present() -> Option<WorldModel> {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/world.json");
+        p.exists().then(|| WorldModel::load(&p).unwrap())
+    }
+
+    #[test]
+    fn world_loads_and_validates() {
+        let Some(w) = load_if_present() else { return };
+        assert_eq!(w.n_layers(), 27);
+        assert_eq!(w.n_experts(), 64);
+        assert_eq!(w.top_k(), 6);
+        // affinity rows normalized
+        let (k, e) = (w.meta.n_topics as usize, w.n_experts());
+        for l in [0, 13] {
+            for t in 0..k {
+                let row = &w.affinity[(l * k + t) * e..(l * k + t + 1) * e];
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-3, "layer {l} topic {t} sum {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn topic_embeddings_orthonormal() {
+        let Some(w) = load_if_present() else { return };
+        let (k, d) = (w.meta.n_topics as usize, w.d_model());
+        for a in (0..k).step_by(7) {
+            for b in (0..k).step_by(7) {
+                let ea = &w.topic_emb[a * d..(a + 1) * d];
+                let eb = &w.topic_emb[b * d..(b + 1) * d];
+                let dot = math::dot(ea, eb);
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "{a},{b} dot {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_topk_lands_in_working_sets() {
+        let Some(w) = load_if_present() else { return };
+        let mut rng = Rng::new(3);
+        // a pure-topic context should route inside that topic's working set
+        let d = w.d_model();
+        for topic in [0usize, 5, 20] {
+            let ctx: Vec<f32> = w.topic_emb[topic * d..(topic + 1) * d].to_vec();
+            for layer in [0usize, 13, 26] {
+                let ws: std::collections::BTreeSet<i32> =
+                    w.working_set(layer, topic).iter().copied().collect();
+                let mut hits = 0;
+                let mut total = 0;
+                for _ in 0..20 {
+                    for id in w.sample_topk(&ctx, layer, &mut rng) {
+                        total += 1;
+                        if ws.contains(&(id as i32)) {
+                            hits += 1;
+                        }
+                    }
+                }
+                assert!(
+                    hits as f64 / total as f64 > 0.7,
+                    "layer {layer} topic {topic}: {hits}/{total}"
+                );
+            }
+        }
+    }
+}

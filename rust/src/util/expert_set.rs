@@ -1,0 +1,206 @@
+//! `ExpertSet` — a set over ≤64 expert ids as a single `u64` bitmask.
+//!
+//! Every hot path in the simulator and cache manager works on these sets
+//! (a token activates 6 of 64 experts per layer), so set algebra must be
+//! branch-free integer ops, not hash sets.
+
+use std::fmt;
+
+/// A set of expert ids in `0..64`, represented as a `u64` bitmask.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ExpertSet(pub u64);
+
+impl ExpertSet {
+    pub const EMPTY: ExpertSet = ExpertSet(0);
+
+    #[inline]
+    pub fn new() -> Self {
+        Self(0)
+    }
+
+    /// Set containing all experts `0..n`.
+    #[inline]
+    pub fn all(n: u16) -> Self {
+        debug_assert!(n <= 64);
+        if n == 64 {
+            Self(u64::MAX)
+        } else {
+            Self((1u64 << n) - 1)
+        }
+    }
+
+    #[inline]
+    pub fn from_ids<I: IntoIterator<Item = u8>>(ids: I) -> Self {
+        let mut s = Self(0);
+        for id in ids {
+            s.insert(id);
+        }
+        s
+    }
+
+    #[inline]
+    pub fn insert(&mut self, id: u8) {
+        debug_assert!(id < 64);
+        self.0 |= 1u64 << id;
+    }
+
+    #[inline]
+    pub fn remove(&mut self, id: u8) {
+        self.0 &= !(1u64 << id);
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u8) -> bool {
+        (self.0 >> id) & 1 == 1
+    }
+
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.0.count_ones()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.0 == 0
+    }
+
+    #[inline]
+    pub fn union(&self, other: Self) -> Self {
+        Self(self.0 | other.0)
+    }
+
+    #[inline]
+    pub fn intersect(&self, other: Self) -> Self {
+        Self(self.0 & other.0)
+    }
+
+    #[inline]
+    pub fn difference(&self, other: Self) -> Self {
+        Self(self.0 & !other.0)
+    }
+
+    /// Number of ids present in both sets.
+    #[inline]
+    pub fn overlap(&self, other: Self) -> u32 {
+        (self.0 & other.0).count_ones()
+    }
+
+    /// Jaccard similarity; 1.0 for two empty sets.
+    pub fn jaccard(&self, other: Self) -> f64 {
+        let u = (self.0 | other.0).count_ones();
+        if u == 0 {
+            return 1.0;
+        }
+        (self.0 & other.0).count_ones() as f64 / u as f64
+    }
+
+    /// Iterate over member ids in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = u8> + '_ {
+        let mut bits = self.0;
+        std::iter::from_fn(move || {
+            if bits == 0 {
+                None
+            } else {
+                let id = bits.trailing_zeros() as u8;
+                bits &= bits - 1;
+                Some(id)
+            }
+        })
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.iter().collect()
+    }
+}
+
+impl FromIterator<u8> for ExpertSet {
+    fn from_iter<I: IntoIterator<Item = u8>>(iter: I) -> Self {
+        Self::from_ids(iter)
+    }
+}
+
+impl fmt::Debug for ExpertSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ExpertSet{{")?;
+        for (i, id) in self.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{id}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let mut s = ExpertSet::new();
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(63);
+        s.insert(17);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(17));
+        assert!(!s.contains(16));
+        s.remove(17);
+        assert!(!s.contains(17));
+        assert_eq!(s.to_vec(), vec![0, 63]);
+    }
+
+    #[test]
+    fn all_n() {
+        assert_eq!(ExpertSet::all(64).len(), 64);
+        assert_eq!(ExpertSet::all(6).to_vec(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(ExpertSet::all(0).len(), 0);
+    }
+
+    #[test]
+    fn jaccard_edge_cases() {
+        let a = ExpertSet::from_ids([1, 2, 3]);
+        assert_eq!(a.jaccard(a), 1.0);
+        assert_eq!(a.jaccard(ExpertSet::EMPTY), 0.0);
+        assert_eq!(ExpertSet::EMPTY.jaccard(ExpertSet::EMPTY), 1.0);
+    }
+
+    // seeded-random property checks (no proptest in the offline build)
+    #[test]
+    fn prop_union_intersect_laws() {
+        let mut rng = crate::util::Rng::new(11);
+        for _ in 0..500 {
+            let (sa, sb) = (ExpertSet(rng.next_u64()), ExpertSet(rng.next_u64()));
+            assert_eq!(sa.union(sb).len() + sa.intersect(sb).len(), sa.len() + sb.len());
+            assert_eq!(sa.difference(sb).union(sa.intersect(sb)), sa);
+            assert_eq!(sa.overlap(sb), sa.intersect(sb).len());
+        }
+    }
+
+    #[test]
+    fn prop_iter_roundtrip() {
+        let mut rng = crate::util::Rng::new(12);
+        for _ in 0..200 {
+            let mut ids = std::collections::BTreeSet::new();
+            for _ in 0..rng.below(20) {
+                ids.insert(rng.below(64) as u8);
+            }
+            let s = ExpertSet::from_ids(ids.iter().copied());
+            assert_eq!(s.to_vec(), ids.into_iter().collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn prop_insert_then_contains() {
+        let mut rng = crate::util::Rng::new(13);
+        for _ in 0..300 {
+            let id = rng.below(64) as u8;
+            let mut s = ExpertSet(rng.next_u64());
+            s.insert(id);
+            assert!(s.contains(id));
+            s.remove(id);
+            assert!(!s.contains(id));
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Vector math for routing and EAM similarity search.
+
+/// Cosine similarity between two equal-length vectors; 0.0 if either is 0.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f32, 0.0f32, 0.0f32);
+    for i in 0..a.len() {
+        dot += a[i] * b[i];
+        na += a[i] * a[i];
+        nb += b[i] * b[i];
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na.sqrt() * nb.sqrt())
+}
+
+/// Cosine against a pre-normalized query (`q_norm = ||q||`), with the
+/// candidate's norm supplied — the EAMC hot loop precomputes both.
+#[inline]
+pub fn cosine_prenorm(dot: f32, q_norm: f32, c_norm: f32) -> f32 {
+    if q_norm == 0.0 || c_norm == 0.0 {
+        0.0
+    } else {
+        dot / (q_norm * c_norm)
+    }
+}
+
+/// L2 norm.
+pub fn norm(a: &[f32]) -> f32 {
+    a.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// In-place softmax.
+pub fn softmax(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+/// Indices of the `k` largest values, ties broken toward lower index,
+/// result ordered by descending value.  O(n·k) — n is 64 here, and this
+/// beats a full sort for k=6.
+pub fn top_k(xs: &[f64], k: usize) -> Vec<usize> {
+    let k = k.min(xs.len());
+    let mut out: Vec<usize> = Vec::with_capacity(k);
+    let mut taken = vec![false; xs.len()];
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        let mut best_v = f64::NEG_INFINITY;
+        for (i, &v) in xs.iter().enumerate() {
+            if !taken[i] && v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        taken[best] = true;
+        out.push(best);
+    }
+    out
+}
+
+/// Normalize a vector to unit L2 norm in place (no-op on zero vectors).
+pub fn normalize(xs: &mut [f32]) {
+    let n = norm(xs);
+    if n > 1e-12 {
+        for x in xs.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0f32, 2.0, 3.0, -1.0];
+        softmax(&mut v);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(v[2] > v[1] && v[1] > v[0] && v[0] > v[3]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut v = vec![1000.0f32, 1000.0];
+        softmax(&mut v);
+        assert!((v[0] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn top_k_selects_and_orders() {
+        let xs = [0.1, 5.0, 3.0, 4.0, 2.0];
+        assert_eq!(top_k(&xs, 3), vec![1, 3, 2]);
+        assert_eq!(top_k(&xs, 0), Vec::<usize>::new());
+        assert_eq!(top_k(&xs, 10).len(), 5);
+    }
+
+    #[test]
+    fn top_k_tie_prefers_lower_index() {
+        let xs = [1.0, 1.0, 1.0];
+        assert_eq!(top_k(&xs, 2), vec![0, 1]);
+    }
+
+    // seeded-random property checks (no proptest in the offline build)
+    #[test]
+    fn prop_top_k_matches_sort() {
+        let mut rng = crate::util::Rng::new(21);
+        for _ in 0..300 {
+            let n = rng.range(1, 40);
+            let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 200.0 - 100.0).collect();
+            let k = rng.range(1, 10);
+            let got = top_k(&xs, k);
+            let mut idx: Vec<usize> = (0..xs.len()).collect();
+            idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b)));
+            idx.truncate(k.min(xs.len()));
+            assert_eq!(got, idx);
+        }
+    }
+
+    #[test]
+    fn prop_cosine_bounded() {
+        let mut rng = crate::util::Rng::new(22);
+        for _ in 0..300 {
+            let a: Vec<f32> = (0..8).map(|_| (rng.f64() * 20.0 - 10.0) as f32).collect();
+            let b: Vec<f32> = (0..8).map(|_| (rng.f64() * 20.0 - 10.0) as f32).collect();
+            let c = cosine(&a, &b);
+            assert!((-1.0001..=1.0001).contains(&c));
+        }
+    }
+}

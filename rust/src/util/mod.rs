@@ -1,0 +1,10 @@
+//! Small, allocation-free building blocks shared by every subsystem.
+
+pub mod expert_set;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod stats;
+
+pub use expert_set::ExpertSet;
+pub use rng::Rng;

@@ -1,0 +1,104 @@
+//! Failure-injection tests: corrupted or inconsistent artifact trees must
+//! be rejected loudly at load time, never produce silent wrong numbers.
+
+use moe_beyond::config::Artifacts;
+use moe_beyond::runtime::WeightBlob;
+use moe_beyond::trace::store;
+
+fn real_artifacts() -> Option<std::path::PathBuf> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("artifacts.json").exists().then_some(root)
+}
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("moeb_fi_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn truncated_trace_file_rejected() {
+    let Some(root) = real_artifacts() else { return };
+    let src = std::fs::read(root.join("traces/val.bin")).unwrap();
+    let dir = temp_dir("trunc");
+    let p = dir.join("t.bin");
+    std::fs::write(&p, &src[..src.len() / 2]).unwrap();
+    assert!(store::read_traces(&p).is_err());
+}
+
+#[test]
+fn out_of_range_expert_id_rejected() {
+    let Some(root) = real_artifacts() else { return };
+    let mut src = std::fs::read(root.join("traces/val.bin")).unwrap();
+    // corrupt one expert byte past the embeddings of the first prompt:
+    // header 24B + pid/ntok 8B; tokens + embeddings follow — flip the LAST
+    // byte of the file (inside the final prompt's expert array)
+    let n = src.len();
+    src[n - 1] = 255;
+    let dir = temp_dir("range");
+    let p = dir.join("t.bin");
+    std::fs::write(&p, &src).unwrap();
+    assert!(store::read_traces(&p).is_err());
+}
+
+#[test]
+fn weights_manifest_total_mismatch_rejected() {
+    let Some(root) = real_artifacts() else { return };
+    let dir = temp_dir("weights");
+    std::fs::copy(
+        root.join("predictor_weights.bin"),
+        dir.join("w.bin"),
+    )
+    .unwrap();
+    let man = std::fs::read_to_string(root.join("predictor_weights.bin.json")).unwrap();
+    // inflate total_f32 so it no longer matches the file
+    let bad = man.replacen("\"total_f32\":", "\"total_f32\": 1 +", 1)
+        .replace("+", "");
+    // simpler: just truncate the bin instead
+    let raw = std::fs::read(dir.join("w.bin")).unwrap();
+    std::fs::write(dir.join("w.bin"), &raw[..raw.len() - 4]).unwrap();
+    std::fs::write(dir.join("w.bin.json"), &bad).unwrap();
+    assert!(WeightBlob::load(dir.join("w.bin")).is_err());
+}
+
+#[test]
+fn fingerprint_mismatch_rejected() {
+    let Some(root) = real_artifacts() else { return };
+    let dir = temp_dir("fp");
+    // copy the manifest tree but lie about the predictor fingerprint
+    for f in [
+        "artifacts.json",
+        "predictor.hlo.txt",
+        "predictor_batch.hlo.txt",
+        "backbone_prefill.hlo.txt",
+        "backbone_prefill_96.hlo.txt",
+        "backbone_decode.hlo.txt",
+        "head_extract.hlo.txt",
+    ] {
+        std::fs::copy(root.join(f), dir.join(f)).unwrap();
+    }
+    let man = std::fs::read_to_string(root.join("predictor_weights.bin.json")).unwrap();
+    let bad = man.replace("\"fingerprint\": \"w", "\"fingerprint\": \"DIFFERENT-w");
+    std::fs::write(dir.join("predictor_weights.bin.json"), bad).unwrap();
+    let arts = Artifacts::discover(&dir).unwrap();
+    assert!(arts.check_fingerprint().is_err());
+}
+
+#[test]
+fn missing_executable_rejected() {
+    let Some(root) = real_artifacts() else { return };
+    let dir = temp_dir("noexe");
+    std::fs::copy(root.join("artifacts.json"), dir.join("artifacts.json")).unwrap();
+    // no hlo files copied -> discover must fail
+    assert!(Artifacts::discover(&dir).is_err());
+}
+
+#[test]
+fn garbage_hlo_rejected_at_compile() {
+    let dir = temp_dir("badhlo");
+    let p = dir.join("bad.hlo.txt");
+    std::fs::write(&p, "HloModule not_really { this is not hlo }").unwrap();
+    let rt = moe_beyond::runtime::PjrtRuntime::cpu().unwrap();
+    assert!(rt.load_hlo_text(&p).is_err());
+}
