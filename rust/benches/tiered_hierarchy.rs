@@ -1,0 +1,207 @@
+//! Bench: the tiered expert-memory hierarchy (GPU VRAM ↔ host RAM ↔ SSD).
+//!
+//! Extends Fig 7 into a hit-rate × tier-latency surface: sweeps GPU
+//! capacity, host-RAM fraction, and SSD fetch cost, and checks that
+//!
+//! 1. the tiered path with a full-size host tier at PCIe cost reproduces
+//!    the flat (seed) sweep's hit rates exactly — tiered mode is opt-in
+//!    and changes nothing until configured,
+//! 2. shrinking GPU capacity with a warm host tier degrades modeled
+//!    critical-path latency gracefully, while the same shrink over bare
+//!    flash blows up,
+//! 3. SSD bandwidth moves latency without touching hit rate (why
+//!    hit-rate-only evaluation mispredicts edge deployments).
+//!
+//! Self-contained: synthetic traces, no artifacts/PJRT required.
+//! `MOEB_BENCH_PROMPTS` scales the workload.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{env_usize, time_block};
+
+use moe_beyond::config::{EamConfig, SimConfig, TierConfig};
+use moe_beyond::sim::sweep::{sweep_capacities, sweep_tiered, PredictorKind, SweepInputs};
+use moe_beyond::tier::TierSpec;
+use moe_beyond::trace::PromptTrace;
+use moe_beyond::util::Rng;
+
+const N_LAYERS: usize = 4;
+const N_EXPERTS: usize = 64;
+
+/// Prompts with a per-prompt working set of ~10 experts per layer, the
+/// §2.2 sparsity structure that makes small caches viable at all.
+fn mk_traces(n: usize, n_tokens: usize, seed: u64) -> Vec<PromptTrace> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let base = rng.below(54) as u8;
+            let mut experts = Vec::new();
+            for _ in 0..n_tokens * N_LAYERS {
+                let a = base + rng.below(10) as u8;
+                let mut b = base + rng.below(10) as u8;
+                if b == a {
+                    b = base + ((a - base + 1) % 10);
+                }
+                experts.push(a);
+                experts.push(b);
+            }
+            PromptTrace {
+                prompt_id: i as u32,
+                n_layers: N_LAYERS as u16,
+                top_k: 2,
+                d_emb: 0,
+                tokens: vec![0; n_tokens],
+                embeddings: vec![],
+                experts,
+            }
+        })
+        .collect()
+}
+
+fn base_tiers() -> TierConfig {
+    TierConfig {
+        tiers: vec![
+            TierSpec::gpu(1),
+            TierSpec::host(1),
+            TierSpec::ssd(N_LAYERS * N_EXPERTS),
+        ],
+        policy: "lru".into(),
+    }
+}
+
+fn main() -> moe_beyond::Result<()> {
+    let n_prompts = env_usize("MOEB_BENCH_PROMPTS", 24);
+    let test = mk_traces(n_prompts, 40, 61);
+    let fit = mk_traces(n_prompts * 2, 40, 62);
+    let inputs = SweepInputs {
+        test_traces: &test,
+        fit_traces: &fit,
+        learned: None,
+        sim: SimConfig::default(),
+        eam: EamConfig::default(),
+        n_layers: N_LAYERS,
+        n_experts: N_EXPERTS,
+    };
+    let overlap_us = moe_beyond::config::CacheConfig::default().overlap_per_layer(N_LAYERS);
+    let gpu_fracs = [0.4, 0.2, 0.1, 0.05];
+
+    // -- 1) flat-path equivalence ------------------------------------------
+    let flat = time_block("flat Fig-7 sweep", || {
+        sweep_capacities(PredictorKind::None, &gpu_fracs, &inputs)
+    })?;
+    // full host at PCIe cost == the flat model's infinite host pool
+    let equiv_base = base_tiers().with_deepest_fetch_us(1400.0);
+    let equiv = time_block("tiered sweep (host=100% @ PCIe)", || {
+        sweep_tiered(
+            PredictorKind::None,
+            &gpu_fracs,
+            &[1.0],
+            &[1400.0],
+            &inputs,
+            &equiv_base,
+            overlap_us,
+        )
+    })?;
+    println!("\n== flat-path equivalence: GPU hit rate (%) ==");
+    println!("{:>10} {:>12} {:>12}", "capacity%", "flat", "tiered");
+    for (f, t) in flat.points.iter().zip(equiv.iter()) {
+        println!(
+            "{:>10.0} {:>12.1} {:>12.1}",
+            f.capacity_frac * 100.0,
+            f.hit_rate * 100.0,
+            t.gpu_hit_rate * 100.0
+        );
+        assert!(
+            (f.hit_rate - t.gpu_hit_rate).abs() < 1e-12,
+            "tiered mode changed the seed Fig-7 numbers at {}%",
+            f.capacity_frac * 100.0
+        );
+    }
+
+    // -- 2) GPU shrink × host fraction -------------------------------------
+    let host_fracs = [0.01, 0.25, 1.0];
+    let surface = time_block("tiered surface (gpu × host)", || {
+        sweep_tiered(
+            PredictorKind::None,
+            &gpu_fracs,
+            &host_fracs,
+            &[22_000.0],
+            &inputs,
+            &base_tiers(),
+            overlap_us,
+        )
+    })?;
+    println!("\n== modeled critical path (ms) vs GPU capacity × host RAM (ssd = 22 ms/expert) ==");
+    print!("{:>10}", "gpu%");
+    for hf in &host_fracs {
+        print!("{:>14}", format!("host={:.0}%", hf * 100.0));
+    }
+    println!("{:>14}", "gpu-hit%");
+    for (gi, gf) in gpu_fracs.iter().enumerate() {
+        print!("{:>10.0}", gf * 100.0);
+        let row: Vec<_> = (0..host_fracs.len())
+            .map(|hi| &surface[gi * host_fracs.len() + hi])
+            .collect();
+        for p in &row {
+            print!("{:>14.1}", p.critical_path_us / 1e3);
+        }
+        println!("{:>14.1}", row[0].gpu_hit_rate * 100.0);
+        // host fraction moves latency only; the GPU tier is identical
+        for p in &row {
+            assert!((p.gpu_hit_rate - row[0].gpu_hit_rate).abs() < 1e-12);
+        }
+        // warm host strictly dominates the starved one at equal GPU size
+        assert!(row[2].critical_path_us <= row[0].critical_path_us + 1e-9);
+    }
+    // graceful degradation: with a full host tier, shrinking the GPU
+    // 8x must cost less than the same shrink over bare flash
+    let crit = |gi: usize, hi: usize| surface[gi * host_fracs.len() + hi].critical_path_us;
+    let warm_blowup = crit(gpu_fracs.len() - 1, 2) / crit(0, 2).max(1e-9);
+    let starved_blowup = crit(gpu_fracs.len() - 1, 0) / crit(0, 0).max(1e-9);
+    println!(
+        "\nshrinking GPU {}% -> {}%: critical path x{:.1} with warm host, x{:.1} over flash",
+        gpu_fracs[0] * 100.0,
+        gpu_fracs[gpu_fracs.len() - 1] * 100.0,
+        warm_blowup,
+        starved_blowup
+    );
+    assert!(
+        crit(gpu_fracs.len() - 1, 2) <= crit(gpu_fracs.len() - 1, 0),
+        "warm host must not be slower than starved host"
+    );
+
+    // -- 3) SSD bandwidth sweep --------------------------------------------
+    let ssd_sweep = [8_000.0, 22_000.0, 44_000.0];
+    let ssd_pts = time_block("ssd bandwidth sweep", || {
+        sweep_tiered(
+            PredictorKind::None,
+            &[0.05],
+            &[0.1],
+            &ssd_sweep,
+            &inputs,
+            &base_tiers(),
+            overlap_us,
+        )
+    })?;
+    println!("\n== SSD bandwidth sweep (gpu=5%, host=10%) ==");
+    println!(
+        "{:>14} {:>18} {:>10} {:>12}",
+        "ssd µs/expert", "critical path ms", "gpu-hit%", "deep-miss%"
+    );
+    for p in &ssd_pts {
+        println!(
+            "{:>14.0} {:>18.1} {:>10.1} {:>12.1}",
+            p.ssd_us_per_expert,
+            p.critical_path_us / 1e3,
+            p.gpu_hit_rate * 100.0,
+            p.deep_miss_rate * 100.0
+        );
+    }
+    for w in ssd_pts.windows(2) {
+        assert!((w[0].gpu_hit_rate - w[1].gpu_hit_rate).abs() < 1e-12);
+        assert!(w[0].critical_path_us <= w[1].critical_path_us + 1e-9);
+    }
+
+    println!("\nshape check: PASS");
+    Ok(())
+}

@@ -77,7 +77,7 @@ mod tests {
             capacity_experts: 16,
             pcie_us_per_expert: 100.0,
             hit_us: 1.0,
-            pin_shared: true,
+            ..Default::default()
         }
     }
 

@@ -2,6 +2,7 @@
 //! with builder-style construction and validation.
 
 use anyhow::ensure;
+use crate::tier::TierSpec;
 use crate::Result;
 
 /// Expert-cache configuration (the simulated GPU VRAM).
@@ -18,6 +19,12 @@ pub struct CacheConfig {
     pub hit_us: f64,
     /// Pin shared experts (always resident, not counted against capacity).
     pub pin_shared: bool,
+    /// Modeled per-token decode compute available to hide prefetch DMA,
+    /// in µs; divided by the layer count for the per-layer overlap
+    /// window.  One knob shared by the simulator and the serving engine.
+    /// Default: the measured per-token decode wall of the reference
+    /// backbone (~30 ms).
+    pub overlap_decode_us: f64,
 }
 
 impl Default for CacheConfig {
@@ -27,6 +34,7 @@ impl Default for CacheConfig {
             pcie_us_per_expert: 1400.0,
             hit_us: 2.0,
             pin_shared: true,
+            overlap_decode_us: 30_000.0,
         }
     }
 }
@@ -44,9 +52,100 @@ impl CacheConfig {
         self
     }
 
+    /// Per-layer DMA overlap window (µs): one layer's share of the
+    /// per-token decode compute.
+    pub fn overlap_per_layer(&self, n_layers: usize) -> f64 {
+        self.overlap_decode_us / n_layers.max(1) as f64
+    }
+
     pub fn validate(&self) -> Result<()> {
         ensure!(self.capacity_experts > 0, "cache capacity must be > 0");
         ensure!(self.pcie_us_per_expert >= 0.0, "negative PCIe cost");
+        ensure!(self.overlap_decode_us >= 0.0, "negative overlap window");
+        Ok(())
+    }
+}
+
+/// Tiered expert-memory configuration (opt-in; see [`crate::tier`]).
+///
+/// When present, the expert weights are staged across the listed tiers
+/// (index 0 = GPU VRAM, then host RAM, then SSD) instead of the flat
+/// `CacheConfig` VRAM-vs-infinite-host model.
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    /// Ordered fastest to slowest.  An access that misses every tier is
+    /// charged the deepest tier's fetch cost (cold backing-store read).
+    pub tiers: Vec<TierSpec>,
+    /// Eviction policy instantiated per tier ("lru" | "lfu").
+    pub policy: String,
+}
+
+impl Default for TierConfig {
+    fn default() -> Self {
+        // DeepSeek-V2-Lite topology (27×64 = 1728 experts): 10% in VRAM,
+        // 25% in host RAM, everything on flash.
+        Self {
+            tiers: vec![
+                TierSpec::gpu(172),
+                TierSpec::host(432),
+                TierSpec::ssd(1728),
+            ],
+            policy: "lru".to_string(),
+        }
+    }
+}
+
+impl TierConfig {
+    pub fn with_gpu_capacity(mut self, n: usize) -> Self {
+        self.tiers[0].capacity_experts = n.max(1);
+        self
+    }
+
+    pub fn with_host_capacity(mut self, n: usize) -> Self {
+        if let Some(t) = self.tiers.get_mut(1) {
+            t.capacity_experts = n.max(1);
+        }
+        self
+    }
+
+    /// Override the deepest tier's fetch cost (SSD bandwidth sweeps).
+    pub fn with_deepest_fetch_us(mut self, us: f64) -> Self {
+        if let Some(t) = self.tiers.last_mut() {
+            t.fetch_us_per_expert = us;
+        }
+        self
+    }
+
+    /// Size the deepest tier (normally the full expert pool: flash holds
+    /// every expert).
+    pub fn with_deepest_capacity(mut self, n: usize) -> Self {
+        if let Some(t) = self.tiers.last_mut() {
+            t.capacity_experts = n.max(1);
+        }
+        self
+    }
+
+    pub fn with_policy(mut self, policy: &str) -> Self {
+        self.policy = policy.to_string();
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.tiers.is_empty(), "tier config needs at least one tier");
+        for t in &self.tiers {
+            t.validate()?;
+        }
+        for w in self.tiers.windows(2) {
+            ensure!(
+                w[0].fetch_us_per_expert <= w[1].fetch_us_per_expert,
+                "tiers must be ordered fastest to slowest ({} serves faster than {})",
+                w[1].name,
+                w[0].name
+            );
+        }
+        // defer to build_policy as the single source of truth for which
+        // policy names exist (a capacity-1 probe is allocation-free)
+        crate::cache::build_policy(&self.policy, 1)?;
         Ok(())
     }
 }
@@ -180,6 +279,32 @@ mod tests {
         EamConfig::default().validate().unwrap();
         SimConfig::default().validate().unwrap();
         ServeConfig::default().validate().unwrap();
+        TierConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn overlap_window_divides_by_layers() {
+        let c = CacheConfig::default();
+        assert!((c.overlap_per_layer(27) - 30_000.0 / 27.0).abs() < 1e-9);
+        assert!(c.overlap_per_layer(0).is_finite()); // clamped divisor
+    }
+
+    #[test]
+    fn tier_config_builders_and_ordering() {
+        let t = TierConfig::default()
+            .with_gpu_capacity(86)
+            .with_host_capacity(864)
+            .with_deepest_fetch_us(44_000.0);
+        t.validate().unwrap();
+        assert_eq!(t.tiers[0].capacity_experts, 86);
+        assert_eq!(t.tiers[1].capacity_experts, 864);
+        assert_eq!(t.tiers[2].fetch_us_per_expert, 44_000.0);
+
+        // a "slow" tier above a faster one is a config bug
+        let bad = TierConfig::default().with_deepest_fetch_us(1.0);
+        assert!(bad.validate().is_err());
+        let bad = TierConfig::default().with_policy("magic");
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use crate::cache::build_policy;
-use crate::config::{Artifacts, CacheConfig, EamConfig, ServeConfig, SimConfig};
+use crate::config::{Artifacts, CacheConfig, EamConfig, ServeConfig, SimConfig, TierConfig};
 use crate::coordinator::expert_state::ExpertCacheManager;
 use crate::coordinator::request::{GenStats, Request, Response};
 use crate::coordinator::session::Session;
@@ -40,6 +40,9 @@ pub struct EngineConfig {
     pub eam: EamConfig,
     /// Cache policy name ("lru" | "lfu").
     pub policy: String,
+    /// Opt-in tiered expert memory (GPU ↔ host ↔ SSD); `None` keeps the
+    /// flat VRAM model.
+    pub tier: Option<TierConfig>,
 }
 
 impl Default for EngineConfig {
@@ -50,6 +53,7 @@ impl Default for EngineConfig {
             sim: SimConfig::default(),
             eam: EamConfig::default(),
             policy: "lru".into(),
+            tier: None,
         }
     }
 }
@@ -113,15 +117,18 @@ impl ModelEngine {
             other => anyhow::bail!("predictor {other} not servable (oracle is sim-only)"),
         };
 
-        // overlap budget: one layer's decode compute hides this much DMA.
-        // Estimated from the measured per-token decode wall / n_layers.
-        let overlap_us = 30_000.0 / n_layers as f64;
-        let cache_mgr = ExpertCacheManager::new(
-            build_policy(&cfg.policy, cfg.cache.capacity_experts)?,
-            cfg.cache.clone(),
-            n_experts,
-            overlap_us,
-        )
+        // overlap budget: one layer's decode compute hides this much DMA
+        // (the per-token decode wall is a validated CacheConfig knob).
+        let overlap_us = cfg.cache.overlap_per_layer(n_layers);
+        let cache_mgr = match &cfg.tier {
+            Some(tier_cfg) => ExpertCacheManager::new_tiered(tier_cfg, n_experts, overlap_us)?,
+            None => ExpertCacheManager::new(
+                build_policy(&cfg.policy, cfg.cache.capacity_experts)?,
+                cfg.cache.clone(),
+                n_experts,
+                overlap_us,
+            ),
+        }
         .with_prefetch_budget(cfg.sim.prefetch_budget);
 
         let n_layers_u16 = w.n_layers;
@@ -303,11 +310,20 @@ impl ModelEngine {
     /// their activation streams superpose — the ablation bench measures
     /// the resulting hit-rate collapse.
     pub fn process_batch(&mut self, requests: Vec<Request>) -> Result<Vec<Response>> {
-        let max_seq = self.backbone.world.max_seq as usize;
         // merged decoding computes each layer once for the whole batch, so
         // the per-layer prefetch DMA window is SHARED: each stream gets
-        // 1/B of it — the §5 hit-rate collapse under micro-batching
+        // 1/B of it — the §5 hit-rate collapse under micro-batching.
+        // The share MUST be restored on every exit path: a `?` that
+        // skipped `set_batch_share(1)` would corrupt the next request's
+        // prefetch window.
         self.cache_mgr.set_batch_share(requests.len());
+        let out = self.process_batch_inner(requests);
+        self.cache_mgr.set_batch_share(1);
+        out
+    }
+
+    fn process_batch_inner(&mut self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        let max_seq = self.backbone.world.max_seq as usize;
         let mut streams = Vec::with_capacity(requests.len());
         for r in requests {
             streams.push(Some(self.prefill_stream(r)?));
@@ -326,16 +342,19 @@ impl ModelEngine {
                 break;
             }
         }
-        let out = streams
+        Ok(streams
             .into_iter()
             .map(|s| self.finish_stream(s.unwrap()))
-            .collect();
-        self.cache_mgr.set_batch_share(1);
-        Ok(out)
+            .collect())
     }
 
     /// Reset cache residency between experiments.
     pub fn reset_cache(&mut self) {
         self.cache_mgr.clear();
+    }
+
+    /// Per-tier serve counters (None unless tiered mode is configured).
+    pub fn tier_stats(&self) -> Option<&crate::tier::TierStats> {
+        self.cache_mgr.tier_stats()
     }
 }

@@ -1,15 +1,29 @@
-//! Expert residency manager for the serving path: one cache policy + the
-//! VRAM transfer model + per-request accounting, shared by every predictor
-//! kind.
+//! Expert residency manager for the serving path: one cache backend (flat
+//! VRAM or the tiered GPU↔host↔SSD hierarchy) + the transfer-cost model +
+//! per-request accounting, shared by every predictor kind.
 
 use crate::cache::{policy, CachePolicy, VramModel};
-use crate::config::CacheConfig;
+use crate::config::{CacheConfig, SimConfig, TierConfig};
 use crate::coordinator::request::GenStats;
+use crate::tier::{TierCostModel, TierStats, TieredCache};
 use crate::util::ExpertSet;
 
+/// The residency/cost backend: the seed's flat VRAM model, or the
+/// opt-in tiered hierarchy (see [`crate::tier`]).
+enum Backend {
+    Flat {
+        cache: Box<dyn CachePolicy>,
+        vram: VramModel,
+    },
+    Tiered {
+        cache: TieredCache,
+        cost: TierCostModel,
+        stats: TierStats,
+    },
+}
+
 pub struct ExpertCacheManager {
-    cache: Box<dyn CachePolicy>,
-    vram: VramModel,
+    backend: Backend,
     n_experts: usize,
     /// Max DMA transfers that can land within one layer's compute window.
     prefetch_budget: usize,
@@ -23,13 +37,39 @@ impl ExpertCacheManager {
         n_experts: usize,
         overlap_budget_us: f64,
     ) -> Self {
+        // sim and serve share one knob: the SimConfig default, overridable
+        // via with_prefetch_budget
+        let budget = SimConfig::default().prefetch_budget;
         Self {
-            cache,
-            vram: VramModel::new(cfg, overlap_budget_us),
+            backend: Backend::Flat {
+                cache,
+                vram: VramModel::new(cfg, overlap_budget_us),
+            },
             n_experts,
-            prefetch_budget: 12,
-            base_budget: 12,
+            prefetch_budget: budget,
+            base_budget: budget,
         }
+    }
+
+    /// Tiered mode: expert weights staged across GPU VRAM, host RAM and
+    /// SSD with promotion on miss and demotion on eviction.
+    pub fn new_tiered(
+        cfg: &TierConfig,
+        n_experts: usize,
+        overlap_budget_us: f64,
+    ) -> crate::Result<Self> {
+        cfg.validate()?;
+        let budget = SimConfig::default().prefetch_budget;
+        Ok(Self {
+            backend: Backend::Tiered {
+                cache: TieredCache::build(&cfg.policy, &cfg.tiers)?,
+                cost: TierCostModel::new(cfg.tiers.clone(), overlap_budget_us),
+                stats: TierStats::new(cfg.tiers.len()),
+            },
+            n_experts,
+            prefetch_budget: budget,
+            base_budget: budget,
+        })
     }
 
     pub fn with_prefetch_budget(mut self, budget: usize) -> Self {
@@ -45,6 +85,12 @@ impl ExpertCacheManager {
         self.prefetch_budget = (self.base_budget / batch.max(1)).max(1);
     }
 
+    /// The currently effective per-layer DMA budget (observable so the
+    /// engine's restore-after-error guarantee is testable).
+    pub fn effective_prefetch_budget(&self) -> usize {
+        self.prefetch_budget
+    }
+
     /// Prefetch a predicted set for `layer` (issued before the layer runs;
     /// DMA overlaps the previous layer's compute up to the budget).
     pub fn prefetch(&mut self, layer: usize, predicted: ExpertSet, stats: &mut GenStats) {
@@ -52,16 +98,39 @@ impl ExpertCacheManager {
         for e in predicted.iter() {
             let k = policy::key(layer, e, self.n_experts);
             stats.prefetches += 1;
-            if self.cache.contains(k) {
-                self.cache.touch(k);
-                continue;
+            match &mut self.backend {
+                Backend::Flat { cache, vram } => {
+                    if cache.contains(k) {
+                        cache.touch(k);
+                        continue;
+                    }
+                    if landed >= self.prefetch_budget {
+                        continue; // DMA window exhausted: arrives too late
+                    }
+                    landed += 1;
+                    vram.on_prefetch();
+                    cache.insert(k);
+                }
+                Backend::Tiered {
+                    cache,
+                    cost,
+                    stats: ts,
+                } => {
+                    if cache.locate(k) == Some(0) {
+                        cache.touch(k);
+                        continue;
+                    }
+                    if landed >= self.prefetch_budget {
+                        continue;
+                    }
+                    landed += 1;
+                    let deepest = cache.deepest();
+                    let promo = cache.promote(k);
+                    cost.on_prefetch(promo.found.unwrap_or(deepest));
+                    ts.prefetch_promotions += 1;
+                    cost.charge_demotions(ts, &promo);
+                }
             }
-            if landed >= self.prefetch_budget {
-                continue; // DMA window exhausted: arrives too late
-            }
-            landed += 1;
-            self.vram.on_prefetch();
-            self.cache.insert(k);
         }
     }
 
@@ -80,47 +149,106 @@ impl ExpertCacheManager {
     ) {
         for e in actual.iter() {
             let k = policy::key(layer, e, self.n_experts);
-            if self.cache.touch(k) {
+            let hit = match &mut self.backend {
+                Backend::Flat { cache, vram } => {
+                    if cache.touch(k) {
+                        vram.on_hit();
+                        true
+                    } else {
+                        vram.on_demand_miss();
+                        cache.insert(k);
+                        false
+                    }
+                }
+                Backend::Tiered {
+                    cache,
+                    cost,
+                    stats: ts,
+                } => {
+                    if cache.locate(k) == Some(0) {
+                        cache.touch(k);
+                        ts.record_served(0);
+                        cost.on_hit();
+                        true
+                    } else {
+                        // a miss in the GPU sense: promote from wherever
+                        // the expert was staged, charging the deepest
+                        // tier actually reached
+                        let deepest = cache.deepest();
+                        let promo = cache.promote(k);
+                        match promo.found {
+                            Some(d) => ts.record_served(d),
+                            None => ts.cold += 1,
+                        }
+                        cost.on_demand_fetch(promo.found.unwrap_or(deepest));
+                        ts.promotions += 1;
+                        cost.charge_demotions(ts, &promo);
+                        false
+                    }
+                }
+            };
+            if hit {
                 stats.cache_hits += 1;
                 if decode_phase {
                     stats.decode_cache_hits += 1;
                 }
-                self.vram.on_hit();
             } else {
                 stats.cache_misses += 1;
                 if decode_phase {
                     stats.decode_cache_misses += 1;
                 }
-                self.vram.on_demand_miss();
-                self.cache.insert(k);
             }
         }
-        self.vram.end_layer();
+        match &mut self.backend {
+            Backend::Flat { vram, .. } => vram.end_layer(),
+            Backend::Tiered { cost, .. } => cost.end_layer(),
+        }
     }
 
     /// Mark the start of a request (baseline for per-request modeled time).
     pub fn begin_request(&mut self) -> (f64, f64) {
-        (self.vram.demand_us, self.vram.stall_us)
+        match &self.backend {
+            Backend::Flat { vram, .. } => (vram.demand_us, vram.stall_us),
+            Backend::Tiered { cost, .. } => (cost.demand_total(), cost.stall_total()),
+        }
     }
 
     /// Snapshot per-request modeled time into the stats (request end).
     pub fn finish_from(&mut self, mark: (f64, f64), stats: &mut GenStats) {
-        stats.modeled_miss_us = self.vram.demand_us - mark.0;
-        stats.modeled_stall_us = self.vram.stall_us - mark.1;
+        let (demand, stall) = match &self.backend {
+            Backend::Flat { vram, .. } => (vram.demand_us, vram.stall_us),
+            Backend::Tiered { cost, .. } => (cost.demand_total(), cost.stall_total()),
+        };
+        stats.modeled_miss_us = demand - mark.0;
+        stats.modeled_stall_us = stall - mark.1;
     }
 
     /// Snapshot cumulative modeled time into the stats.
     pub fn finish(&mut self, stats: &mut GenStats) {
-        stats.modeled_miss_us = self.vram.demand_us;
-        stats.modeled_stall_us = self.vram.stall_us;
+        self.finish_from((0.0, 0.0), stats)
     }
 
+    /// Experts resident in GPU VRAM (tier 0 in tiered mode).
     pub fn resident_count(&self) -> usize {
-        self.cache.len()
+        match &self.backend {
+            Backend::Flat { cache, .. } => cache.len(),
+            Backend::Tiered { cache, .. } => cache.len_at(0),
+        }
+    }
+
+    /// Per-tier serve counters (None on the flat backend).
+    pub fn tier_stats(&self) -> Option<&TierStats> {
+        match &self.backend {
+            Backend::Flat { .. } => None,
+            Backend::Tiered { stats, .. } => Some(stats),
+        }
     }
 
     pub fn clear(&mut self) {
-        self.cache.clear();
+        match &mut self.backend {
+            Backend::Flat { cache, .. } => cache.clear(),
+            Backend::Tiered { cache, .. } => cache.clear(),
+        }
     }
 }
 
@@ -128,6 +256,7 @@ impl ExpertCacheManager {
 mod tests {
     use super::*;
     use crate::cache::LruCache;
+    use crate::tier::TierSpec;
 
     fn mgr(cap: usize) -> ExpertCacheManager {
         ExpertCacheManager::new(
@@ -136,11 +265,23 @@ mod tests {
                 capacity_experts: cap,
                 pcie_us_per_expert: 100.0,
                 hit_us: 1.0,
-                pin_shared: true,
+                ..Default::default()
             },
             64,
             1000.0,
         )
+    }
+
+    fn tiered_mgr(gpu: usize, host: usize) -> ExpertCacheManager {
+        let cfg = TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", gpu, 1.0, 0.0),
+                TierSpec::new("host", host, 100.0, 100.0),
+                TierSpec::new("ssd", 1728, 1000.0, 0.0),
+            ],
+            policy: "lru".into(),
+        };
+        ExpertCacheManager::new_tiered(&cfg, 64, 1000.0).unwrap()
     }
 
     #[test]
@@ -173,5 +314,76 @@ mod tests {
         // same expert id at a different layer is NOT resident
         m.observe_actual(1, ExpertSet::from_ids([7u8]), &mut stats);
         assert_eq!(stats.cache_misses, 1);
+    }
+
+    #[test]
+    fn default_budget_comes_from_sim_config() {
+        let m = mgr(16);
+        assert_eq!(
+            m.effective_prefetch_budget(),
+            SimConfig::default().prefetch_budget
+        );
+    }
+
+    /// `set_batch_share(1)` must restore the full window no matter what
+    /// share was in effect — the engine relies on this on error paths.
+    #[test]
+    fn batch_share_restores_after_any_division() {
+        let mut m = mgr(16).with_prefetch_budget(12);
+        assert_eq!(m.effective_prefetch_budget(), 12);
+        m.set_batch_share(4);
+        assert_eq!(m.effective_prefetch_budget(), 3);
+        m.set_batch_share(1);
+        assert_eq!(m.effective_prefetch_budget(), 12);
+        // degenerate shares clamp instead of zeroing the window
+        m.set_batch_share(100);
+        assert_eq!(m.effective_prefetch_budget(), 1);
+        m.set_batch_share(0);
+        assert_eq!(m.effective_prefetch_budget(), 12);
+    }
+
+    #[test]
+    fn batch_share_limits_landed_prefetches() {
+        let mut m = mgr(16).with_prefetch_budget(8);
+        m.set_batch_share(4); // effective window: 2 transfers
+        let mut stats = GenStats::default();
+        m.prefetch(0, ExpertSet::from_ids([1u8, 2, 3, 4, 5]), &mut stats);
+        assert_eq!(stats.prefetches, 5); // all issued ...
+        assert_eq!(m.resident_count(), 2); // ... but only 2 land
+    }
+
+    #[test]
+    fn tiered_miss_promotes_and_demotes() {
+        let mut m = tiered_mgr(2, 4);
+        let mut stats = GenStats::default();
+        // fill the 2-expert GPU tier, then miss a third: the LRU victim
+        // must fall to host instead of vanishing
+        m.observe_actual(0, ExpertSet::from_ids([1u8, 2, 3]), &mut stats);
+        assert_eq!(stats.cache_misses, 3);
+        assert_eq!(m.resident_count(), 2);
+        let ts = m.tier_stats().unwrap();
+        assert_eq!(ts.cold, 3);
+        assert_eq!(ts.demotions, 1);
+        // a host hit costs 100µs, not the 1000µs cold read
+        m.observe_actual(0, ExpertSet::from_ids([1u8]), &mut stats);
+        let ts = m.tier_stats().unwrap();
+        assert_eq!(ts.served[1], 1);
+        m.finish(&mut stats);
+        assert!((stats.modeled_miss_us - (3.0 * 1000.0 + 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiered_prefetch_from_host_is_cheap() {
+        let mut m = tiered_mgr(1, 4);
+        let mut stats = GenStats::default();
+        // 1 lands in GPU, then gets demoted by the next
+        m.observe_actual(0, ExpertSet::from_ids([1u8]), &mut stats);
+        m.observe_actual(0, ExpertSet::from_ids([2u8]), &mut stats);
+        // prefetching 1 back promotes from host
+        m.prefetch(0, ExpertSet::from_ids([1u8]), &mut stats);
+        m.observe_actual(0, ExpertSet::from_ids([1u8]), &mut stats);
+        assert_eq!(stats.cache_hits, 1);
+        let ts = m.tier_stats().unwrap();
+        assert_eq!(ts.prefetch_promotions, 1);
     }
 }

@@ -5,10 +5,12 @@
 //! three-layer stack:
 //!
 //! * **L3 (this crate)** — the serving coordinator: request router, decode
-//!   scheduler, simulated-VRAM expert cache, prefetch pipeline, the
-//!   MoE-Infinity / DeepSpeed-MoE / BrainStorm heuristic baselines, the
-//!   trace-driven cache simulator behind the paper's Fig. 7, and the
-//!   evaluation harness behind Table 1.
+//!   scheduler, simulated-VRAM expert cache, the [`tier`] memory
+//!   hierarchy (GPU VRAM ↔ host RAM ↔ SSD with promotion/demotion and
+//!   per-tier cost models), prefetch pipeline, the MoE-Infinity /
+//!   DeepSpeed-MoE / BrainStorm heuristic baselines, the trace-driven
+//!   cache simulator behind the paper's Fig. 7, and the evaluation
+//!   harness behind Table 1.
 //! * **L2 (JAX, build-time)** — the MoE backbone (DeepSeek-V2-Lite
 //!   stand-in) and the MoE-Beyond predictor transformer, AOT-lowered to
 //!   HLO text in `artifacts/`.
@@ -26,6 +28,9 @@
 //! let traces = store::read_traces(arts.path("traces/test.bin")).unwrap();
 //! println!("{} test prompts", traces.len());
 //! ```
+//!
+//! Every paper figure/table has a bench target under `benches/`; see
+//! `rust/BENCHMARKS.md` for what each one reproduces and how to run it.
 
 pub mod cache;
 pub mod config;
@@ -36,6 +41,7 @@ pub mod moe;
 pub mod predictor;
 pub mod runtime;
 pub mod sim;
+pub mod tier;
 pub mod trace;
 pub mod util;
 

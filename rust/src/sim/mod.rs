@@ -1,9 +1,10 @@
-//! Trace-driven cache simulator (paper §4.1.4) and the capacity-sweep
-//! harness behind Fig 7.
+//! Trace-driven cache simulator (paper §4.1.4), the capacity-sweep
+//! harness behind Fig 7, and the tiered-memory extension sweeping
+//! host-RAM fraction and SSD bandwidth.
 
 mod engine;
 pub mod harness;
 pub mod sweep;
 
-pub use engine::{simulate_prompt, SimEngine};
-pub use sweep::{sweep_capacities, PredictorKind, SweepPoint, SweepResult};
+pub use engine::{simulate_prompt, SimEngine, TieredSim};
+pub use sweep::{sweep_capacities, sweep_tiered, PredictorKind, SweepPoint, SweepResult, TierSweepPoint};

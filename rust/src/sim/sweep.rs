@@ -1,13 +1,16 @@
 //! Capacity-sweep harness — regenerates the paper's Fig 7 (cache hit rate
-//! vs GPU expert capacity) for every predictor.
+//! vs GPU expert capacity) for every predictor, and extends it into the
+//! tiered hit-rate × tier-latency surface (host-RAM fraction and SSD
+//! bandwidth as new sweep axes).
 
 use crate::cache::{CacheStats, LruCache};
-use crate::config::{CacheConfig, EamConfig, SimConfig};
+use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
 use crate::predictor::{
     CachedPredictor, EamPredictor, ExpertPredictor, NextLayerAll, NoPrefetch, OraclePredictor,
     PopularityPredictor, TracePredictions,
 };
 use crate::sim::SimEngine;
+use crate::tier::TierStats;
 use crate::trace::PromptTrace;
 use crate::Result;
 
@@ -158,6 +161,112 @@ pub fn sweep_capacities(
     })
 }
 
+/// One point of the tiered surface: a (GPU capacity, host capacity, SSD
+/// bandwidth) combination with both hit-rate and latency outcomes.
+#[derive(Debug, Clone)]
+pub struct TierSweepPoint {
+    pub gpu_frac: f64,
+    pub host_frac: f64,
+    pub ssd_us_per_expert: f64,
+    /// Fraction of lookups served from GPU VRAM (Fig-7's y-axis).
+    pub gpu_hit_rate: f64,
+    /// Fraction of lookups that had to go below the host tier (flash).
+    pub deep_miss_rate: f64,
+    /// Modeled critical-path µs summed over all replayed prompts.
+    pub critical_path_us: f64,
+    pub stats: CacheStats,
+    pub tiers: TierStats,
+}
+
+/// Sweep the tiered hierarchy over GPU capacity × host-RAM fraction ×
+/// SSD fetch cost, replaying every test prompt on a fresh hierarchy per
+/// prompt (batch-size-1 edge serving has no cross-request residency).
+///
+/// At `host_frac >= 1.0` with `ssd_us == pcie` cost this collapses to
+/// the flat Fig-7 sweep (see `tiered_matches_flat_at_full_host` below);
+/// the interesting region is small GPU + partial host, where hit-rate
+/// alone mispredicts latency.
+pub fn sweep_tiered(
+    kind: PredictorKind,
+    gpu_fracs: &[f64],
+    host_fracs: &[f64],
+    ssd_us: &[f64],
+    inputs: &SweepInputs<'_>,
+    base: &TierConfig,
+    overlap_budget_us: f64,
+) -> Result<Vec<TierSweepPoint>> {
+    // the gpu/host/deepest axes address tiers 0/1/last: a flatter base
+    // would silently sweep the wrong tier
+    anyhow::ensure!(
+        base.tiers.len() >= 3,
+        "sweep_tiered needs a gpu/host/deepest base config (got {} tiers)",
+        base.tiers.len()
+    );
+    let total = inputs.n_layers * inputs.n_experts;
+    let mut out = Vec::with_capacity(gpu_fracs.len() * host_fracs.len() * ssd_us.len());
+
+    for &gf in gpu_fracs {
+        for &hf in host_fracs {
+            for &ssd in ssd_us {
+                let gpu_cap = ((total as f64 * gf).round() as usize).max(1);
+                let host_cap = ((total as f64 * hf).round() as usize).max(1);
+                let cfg = base
+                    .clone()
+                    .with_gpu_capacity(gpu_cap)
+                    .with_host_capacity(host_cap)
+                    .with_deepest_fetch_us(ssd);
+                cfg.validate()?;
+
+                let mut stats = CacheStats::default();
+                let mut tiers = TierStats::new(cfg.tiers.len());
+                let mut critical_path_us = 0.0;
+
+                let mut predictor = if kind == PredictorKind::Learned {
+                    None
+                } else {
+                    Some(make_predictor(kind, inputs))
+                };
+
+                for (i, tr) in inputs.test_traces.iter().enumerate() {
+                    let mut engine = SimEngine::new(
+                        Box::new(LruCache::new(gpu_cap)),
+                        inputs.sim.clone(),
+                        CacheConfig::default().with_capacity(gpu_cap),
+                        inputs.n_experts,
+                    )
+                    .with_tiers(&cfg, overlap_budget_us)?;
+                    match (&mut predictor, kind) {
+                        (None, PredictorKind::Learned) => {
+                            let preds = &inputs.learned.ok_or_else(|| {
+                                anyhow::anyhow!("learned sweep needs precomputed predictions")
+                            })?[i];
+                            let mut p = CachedPredictor::new(preds);
+                            engine.run_prompt(tr, &mut p, &mut stats);
+                        }
+                        (Some(p), _) => engine.run_prompt(tr, p.as_mut(), &mut stats),
+                        _ => unreachable!(),
+                    }
+                    let t = engine.tier.take().expect("tiered engine lost its tiers");
+                    tiers.merge(&t.stats);
+                    critical_path_us += t.cost.critical_path_us();
+                }
+
+                out.push(TierSweepPoint {
+                    gpu_frac: gf,
+                    host_frac: hf,
+                    ssd_us_per_expert: ssd,
+                    gpu_hit_rate: stats.hit_rate(),
+                    deep_miss_rate: tiers.below_rate(1),
+                    critical_path_us,
+                    stats,
+                    tiers,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +354,118 @@ mod tests {
             eam.points[0].hit_rate,
             none.points[0].hit_rate
         );
+    }
+
+    fn base_tiers() -> TierConfig {
+        use crate::tier::TierSpec;
+        TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", 1, 2.0, 0.0),
+                // fetch matches CacheConfig::default().pcie_us_per_expert
+                // so the GPU tier sees exactly the flat model's world
+                TierSpec::new("host", 1, 1400.0, 0.0),
+                TierSpec::new("ssd", 192, 22_000.0, 0.0),
+            ],
+            policy: "lru".into(),
+        }
+    }
+
+    /// With a host tier big enough for every expert, the tiered sweep's
+    /// GPU hit rates must reproduce the flat Fig-7 sweep exactly.
+    #[test]
+    fn tiered_matches_flat_at_full_host() {
+        let test = mk_traces(5, 9);
+        let fit = mk_traces(8, 10);
+        let inp = inputs(&test, &fit);
+        let fracs = [0.05, 0.2, 0.8];
+        let flat = sweep_capacities(PredictorKind::None, &fracs, &inp).unwrap();
+        let tiered = sweep_tiered(
+            PredictorKind::None,
+            &fracs,
+            &[1.0],
+            &[22_000.0],
+            &inp,
+            &base_tiers(),
+            1_000.0,
+        )
+        .unwrap();
+        assert_eq!(tiered.len(), fracs.len());
+        for (f, t) in flat.points.iter().zip(tiered.iter()) {
+            assert!(
+                (f.hit_rate - t.gpu_hit_rate).abs() < 1e-12,
+                "flat {} vs tiered {} at {}%",
+                f.hit_rate,
+                t.gpu_hit_rate,
+                t.gpu_frac * 100.0
+            );
+            // full host never evicts, so the flash tier never serves
+            // (first-touch cold reads are the only deep accesses)
+            assert_eq!(t.tiers.served.get(2).copied().unwrap_or(0), 0);
+        }
+    }
+
+    /// Shrinking the GPU with a warm host degrades modeled latency far
+    /// more gracefully than with flash directly underneath.
+    #[test]
+    fn host_tier_softens_gpu_shrink() {
+        let test = mk_traces(5, 11);
+        let fit = mk_traces(8, 12);
+        let inp = inputs(&test, &fit);
+        let gpu = [0.2, 0.05];
+        let warm = sweep_tiered(
+            PredictorKind::None,
+            &gpu,
+            &[0.5],
+            &[22_000.0],
+            &inp,
+            &base_tiers(),
+            1_000.0,
+        )
+        .unwrap();
+        let starved = sweep_tiered(
+            PredictorKind::None,
+            &gpu,
+            &[0.01],
+            &[22_000.0],
+            &inp,
+            &base_tiers(),
+            1_000.0,
+        )
+        .unwrap();
+        // same GPU capacity -> same hit rate, host fraction only moves
+        // the latency surface
+        for (w, s) in warm.iter().zip(starved.iter()) {
+            assert!((w.gpu_hit_rate - s.gpu_hit_rate).abs() < 1e-12);
+            assert!(w.critical_path_us <= s.critical_path_us + 1e-9);
+        }
+        // at the starved point, the warm host absorbs the extra misses
+        // cheaply: the latency gap between big and small GPU is much
+        // smaller than without host backing
+        let warm_blowup = warm[1].critical_path_us / warm[0].critical_path_us.max(1e-9);
+        let starved_blowup = starved[1].critical_path_us / starved[0].critical_path_us.max(1e-9);
+        assert!(
+            warm_blowup <= starved_blowup + 1e-9,
+            "warm {warm_blowup} vs starved {starved_blowup}"
+        );
+    }
+
+    #[test]
+    fn ssd_bandwidth_moves_latency_not_hit_rate() {
+        let test = mk_traces(4, 13);
+        let fit = mk_traces(6, 14);
+        let inp = inputs(&test, &fit);
+        let pts = sweep_tiered(
+            PredictorKind::None,
+            &[0.05],
+            &[0.05],
+            &[8_000.0, 44_000.0],
+            &inp,
+            &base_tiers(),
+            1_000.0,
+        )
+        .unwrap();
+        assert!((pts[0].gpu_hit_rate - pts[1].gpu_hit_rate).abs() < 1e-12);
+        assert!(pts[0].critical_path_us <= pts[1].critical_path_us);
     }
 
     #[test]

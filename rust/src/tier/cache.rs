@@ -1,0 +1,255 @@
+//! `TieredCache` — an exclusive multi-level cache composing one
+//! [`CachePolicy`] per tier.
+//!
+//! Residency is exclusive: an expert lives in at most one tier at a
+//! time (plus the implicit flash backing store below the last tier).
+//! A lookup promotes the expert to tier 0 (GPU); the GPU's eviction
+//! victim demotes to tier 1 (host) instead of vanishing, tier 1's
+//! victim demotes to tier 2, and the last tier's victim drops — the
+//! weights are still on flash, just no longer staged.
+
+use crate::cache::{build_policy, CachePolicy, ExpertKey};
+use crate::tier::TierSpec;
+use crate::Result;
+
+/// One demotion caused by a promotion's eviction chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Demotion {
+    pub key: ExpertKey,
+    /// Tier the key was evicted from.
+    pub from: usize,
+    /// Tier the key landed in; `None` = dropped past the last tier.
+    pub to: Option<usize>,
+}
+
+/// Outcome of promoting one key to tier 0.
+#[derive(Debug, Clone)]
+pub struct Promotion {
+    /// Depth the key was found at before promotion (`None` = cold, i.e.
+    /// fetched from the backing store below the deepest tier).
+    pub found: Option<usize>,
+    /// Demotions triggered by the insert chain (at most one per tier).
+    pub demoted: Vec<Demotion>,
+}
+
+pub struct TieredCache {
+    tiers: Vec<Box<dyn CachePolicy>>,
+}
+
+impl TieredCache {
+    /// Compose pre-built per-tier policies (index 0 = GPU).
+    pub fn new(tiers: Vec<Box<dyn CachePolicy>>) -> Self {
+        assert!(!tiers.is_empty(), "tiered cache needs at least one tier");
+        Self { tiers }
+    }
+
+    /// Build every tier with the same named policy ("lru" | "lfu") at the
+    /// capacities given by `specs`.
+    pub fn build(policy: &str, specs: &[TierSpec]) -> Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "tiered cache needs at least one tier");
+        let tiers = specs
+            .iter()
+            .map(|s| build_policy(policy, s.capacity_experts))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self::new(tiers))
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Index of the deepest tier (cold fetches are charged at its cost).
+    pub fn deepest(&self) -> usize {
+        self.tiers.len() - 1
+    }
+
+    /// Depth at which `k` is resident (0 = GPU), or `None` if cold.
+    pub fn locate(&self, k: ExpertKey) -> Option<usize> {
+        self.tiers.iter().position(|t| t.contains(k))
+    }
+
+    /// Bump recency/frequency at whichever tier holds `k`.
+    pub fn touch(&mut self, k: ExpertKey) -> Option<usize> {
+        let depth = self.locate(k)?;
+        self.tiers[depth].touch(k);
+        Some(depth)
+    }
+
+    /// Move `k` to tier 0, rippling eviction victims down the hierarchy.
+    ///
+    /// Invariants (checked by the property tests below):
+    /// * afterwards `k` is resident in tier 0 and nowhere else,
+    /// * each tier evicts at most once per promotion,
+    /// * every tier stays within capacity.
+    pub fn promote(&mut self, k: ExpertKey) -> Promotion {
+        let found = self.locate(k);
+        if found == Some(0) {
+            self.tiers[0].touch(k);
+            return Promotion {
+                found,
+                demoted: Vec::new(),
+            };
+        }
+        if let Some(d) = found {
+            self.tiers[d].evict(k);
+        }
+        let mut demoted = Vec::new();
+        let mut level = 0;
+        let mut victim = self.tiers[0].insert(k);
+        while let Some(v) = victim {
+            let dest = level + 1;
+            if dest >= self.tiers.len() {
+                demoted.push(Demotion {
+                    key: v,
+                    from: level,
+                    to: None,
+                });
+                break;
+            }
+            demoted.push(Demotion {
+                key: v,
+                from: level,
+                to: Some(dest),
+            });
+            victim = self.tiers[dest].insert(v);
+            level = dest;
+        }
+        Promotion { found, demoted }
+    }
+
+    /// Resident count at a depth.
+    pub fn len_at(&self, depth: usize) -> usize {
+        self.tiers[depth].len()
+    }
+
+    pub fn capacity_at(&self, depth: usize) -> usize {
+        self.tiers[depth].capacity()
+    }
+
+    /// Per-tier view for diagnostics and invariant checks.
+    pub fn tier(&self, depth: usize) -> &dyn CachePolicy {
+        self.tiers[depth].as_ref()
+    }
+
+    pub fn resident_total(&self) -> usize {
+        self.tiers.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn clear(&mut self) {
+        for t in &mut self.tiers {
+            t.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::LruCache;
+
+    fn three_tier(caps: [usize; 3]) -> TieredCache {
+        TieredCache::new(vec![
+            Box::new(LruCache::new(caps[0])),
+            Box::new(LruCache::new(caps[1])),
+            Box::new(LruCache::new(caps[2])),
+        ])
+    }
+
+    #[test]
+    fn cold_promote_lands_in_gpu() {
+        let mut c = three_tier([2, 2, 4]);
+        let p = c.promote(7);
+        assert_eq!(p.found, None);
+        assert!(p.demoted.is_empty());
+        assert_eq!(c.locate(7), Some(0));
+    }
+
+    #[test]
+    fn gpu_eviction_demotes_to_host() {
+        let mut c = three_tier([2, 2, 4]);
+        c.promote(1);
+        c.promote(2);
+        let p = c.promote(3); // GPU full: 1 is LRU, falls to host
+        assert_eq!(
+            p.demoted,
+            vec![Demotion {
+                key: 1,
+                from: 0,
+                to: Some(1)
+            }]
+        );
+        assert_eq!(c.locate(1), Some(1));
+        assert_eq!(c.locate(3), Some(0));
+    }
+
+    #[test]
+    fn promotion_from_host_is_a_swap() {
+        let mut c = three_tier([2, 2, 4]);
+        c.promote(1);
+        c.promote(2);
+        c.promote(3); // 1 now in host
+        let p = c.promote(1); // back up: 2 is the GPU victim
+        assert_eq!(p.found, Some(1));
+        assert_eq!(c.locate(1), Some(0));
+        assert_eq!(c.locate(2), Some(1));
+        // exclusive: 1 left the host tier
+        assert_eq!(c.len_at(1), 1);
+    }
+
+    #[test]
+    fn chain_drops_past_last_tier() {
+        let mut c = three_tier([1, 1, 1]);
+        c.promote(1);
+        c.promote(2); // 1 -> host
+        c.promote(3); // 2 -> host, 1 -> ssd
+        let p = c.promote(4); // 3 -> host, 2 -> ssd, 1 dropped
+        assert_eq!(p.demoted.len(), 3);
+        assert_eq!(p.demoted[2].to, None);
+        assert_eq!(p.demoted[2].key, 1);
+        assert_eq!(c.locate(1), None);
+        assert_eq!(c.resident_total(), 3);
+    }
+
+    #[test]
+    fn gpu_hit_only_refreshes() {
+        let mut c = three_tier([2, 2, 4]);
+        c.promote(1);
+        c.promote(2);
+        let p = c.promote(2);
+        assert_eq!(p.found, Some(0));
+        assert!(p.demoted.is_empty());
+        assert_eq!(c.len_at(0), 2);
+    }
+
+    /// Exclusivity + capacity + one-eviction-per-tier under random
+    /// promotion streams.
+    #[test]
+    fn prop_hierarchy_invariants() {
+        let mut rng = crate::util::Rng::new(91);
+        for _case in 0..100 {
+            let caps = [rng.range(1, 4), rng.range(1, 6), rng.range(1, 8)];
+            let mut c = three_tier(caps);
+            for _ in 0..rng.range(1, 200) {
+                let k = rng.below(24) as u32;
+                let p = c.promote(k);
+                // promoted key is at the top and nowhere else
+                assert_eq!(c.locate(k), Some(0));
+                // at most one demotion per tier
+                assert!(p.demoted.len() <= 3);
+                for (i, d) in p.demoted.iter().enumerate() {
+                    assert_eq!(d.from, i);
+                }
+                for depth in 0..3 {
+                    assert!(c.len_at(depth) <= caps[depth]);
+                }
+                // exclusivity: no key resident in two tiers
+                let mut seen = std::collections::HashSet::new();
+                for depth in 0..3 {
+                    for r in c.tier(depth).resident() {
+                        assert!(seen.insert(r), "key {r} resident in two tiers");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Tier-aware transfer-cost accounting — the multi-level generalization
+//! of [`crate::cache::VramModel`].
+//!
+//! A demand miss charges the fetch cost of the *deepest* tier it had to
+//! reach (hit-rate alone mispredicts latency once tiers have asymmetric
+//! bandwidths).  Prefetch and demotion-writeback DMA overlap compute
+//! per tier: the PCIe link and the SSD channel are independent, so each
+//! tier gets the full per-layer overlap window; whatever exceeds a
+//! tier's window in a layer becomes stall time on the critical path.
+
+use crate::tier::{Promotion, TierSpec, TierStats};
+
+/// Per-tier cost accumulators (all µs, modeled virtual time).
+#[derive(Debug, Clone, Default)]
+pub struct TierCost {
+    /// Demand fetches served from this tier (critical path).
+    pub demand_us: f64,
+    /// Prefetch DMA reading from this tier (overlapped up to the window).
+    pub prefetch_us: f64,
+    /// Demotion writeback DMA into this tier (overlapped up to the window).
+    pub writeback_us: f64,
+    /// DMA beyond this tier's per-layer overlap window (critical path).
+    pub stall_us: f64,
+    /// This layer's in-flight DMA on this tier's channel.
+    layer_dma_us: f64,
+}
+
+/// Accumulates modeled transfer time across the hierarchy.
+#[derive(Debug, Clone)]
+pub struct TierCostModel {
+    specs: Vec<TierSpec>,
+    pub tiers: Vec<TierCost>,
+    /// Per-layer compute window available to hide each tier's DMA (µs).
+    pub overlap_budget_us: f64,
+}
+
+impl TierCostModel {
+    pub fn new(specs: Vec<TierSpec>, overlap_budget_us: f64) -> Self {
+        assert!(!specs.is_empty(), "cost model needs at least one tier");
+        let tiers = vec![TierCost::default(); specs.len()];
+        Self {
+            specs,
+            tiers,
+            overlap_budget_us,
+        }
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Fetch cost of serving one expert from `depth` (µs).
+    pub fn fetch_us(&self, depth: usize) -> f64 {
+        self.specs[depth].fetch_us_per_expert
+    }
+
+    /// A GPU-resident hit on the critical path.
+    pub fn on_hit(&mut self) {
+        self.on_demand_fetch(0);
+    }
+
+    /// A demand fetch served from `depth` (0 = GPU hit; pass the deepest
+    /// tier for cold reads from the backing store).  Synchronous: the
+    /// layer stalls for the full fetch.
+    pub fn on_demand_fetch(&mut self, depth: usize) {
+        self.tiers[depth].demand_us += self.specs[depth].fetch_us_per_expert;
+    }
+
+    /// A prefetch reading one expert from `depth`, overlapped with the
+    /// previous layer's compute on that tier's channel.
+    pub fn on_prefetch(&mut self, depth: usize) {
+        let us = self.specs[depth].fetch_us_per_expert;
+        self.tiers[depth].prefetch_us += us;
+        self.tiers[depth].layer_dma_us += us;
+    }
+
+    /// A demotion writing one expert into tier `dest`, sharing that
+    /// tier's DMA channel with prefetches.
+    pub fn on_writeback(&mut self, dest: usize) {
+        let us = self.specs[dest].writeback_us_per_expert;
+        self.tiers[dest].writeback_us += us;
+        self.tiers[dest].layer_dma_us += us;
+    }
+
+    /// Charge a promotion's demotion chain: a writeback into each
+    /// destination tier (sharing its DMA window) plus the demotion/drop
+    /// counters.  The single accounting point for both the simulator and
+    /// the serving path.
+    pub fn charge_demotions(&mut self, stats: &mut TierStats, promo: &Promotion) {
+        for d in &promo.demoted {
+            match d.to {
+                Some(dest) => {
+                    self.on_writeback(dest);
+                    stats.demotions += 1;
+                }
+                None => stats.dropped += 1,
+            }
+        }
+    }
+
+    /// Close out a layer: per tier, DMA beyond the overlap window becomes
+    /// stall time; every window then resets.
+    pub fn end_layer(&mut self) {
+        for t in &mut self.tiers {
+            if t.layer_dma_us > self.overlap_budget_us {
+                t.stall_us += t.layer_dma_us - self.overlap_budget_us;
+            }
+            t.layer_dma_us = 0.0;
+        }
+    }
+
+    pub fn demand_total(&self) -> f64 {
+        self.tiers.iter().map(|t| t.demand_us).sum()
+    }
+
+    pub fn stall_total(&self) -> f64 {
+        self.tiers.iter().map(|t| t.stall_us).sum()
+    }
+
+    /// Total modeled critical-path microseconds.
+    pub fn critical_path_us(&self) -> f64 {
+        self.demand_total() + self.stall_total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::VramModel;
+    use crate::config::CacheConfig;
+
+    fn two_tier() -> TierCostModel {
+        // mirrors a flat VramModel: GPU hit 1µs, host fetch 100µs, no
+        // writeback cost
+        TierCostModel::new(
+            vec![
+                TierSpec::new("gpu", 16, 1.0, 0.0),
+                TierSpec::new("host", 1000, 100.0, 0.0),
+            ],
+            250.0,
+        )
+    }
+
+    /// The two-tier model reproduces VramModel trajectories exactly.
+    #[test]
+    fn matches_flat_vram_model() {
+        let cfg = CacheConfig {
+            capacity_experts: 16,
+            pcie_us_per_expert: 100.0,
+            hit_us: 1.0,
+            ..Default::default()
+        };
+        let mut flat = VramModel::new(cfg, 250.0);
+        let mut tiered = two_tier();
+        // hit, miss, 4 prefetches (2 layers), another layer of 1 prefetch
+        flat.on_hit();
+        tiered.on_hit();
+        flat.on_demand_miss();
+        tiered.on_demand_fetch(1);
+        for _ in 0..4 {
+            flat.on_prefetch();
+            tiered.on_prefetch(1);
+        }
+        flat.end_layer();
+        tiered.end_layer();
+        flat.on_prefetch();
+        tiered.on_prefetch(1);
+        flat.end_layer();
+        tiered.end_layer();
+        assert_eq!(flat.demand_us, tiered.demand_total());
+        assert_eq!(flat.stall_us, tiered.stall_total());
+        assert_eq!(flat.critical_path_us(), tiered.critical_path_us());
+    }
+
+    #[test]
+    fn deepest_tier_charged() {
+        let mut m = TierCostModel::new(
+            vec![
+                TierSpec::new("gpu", 4, 1.0, 0.0),
+                TierSpec::new("host", 8, 100.0, 50.0),
+                TierSpec::new("ssd", 16, 1000.0, 0.0),
+            ],
+            1_000.0,
+        );
+        m.on_demand_fetch(2); // cold read: SSD cost, not PCIe
+        m.on_demand_fetch(1);
+        assert_eq!(m.tiers[2].demand_us, 1000.0);
+        assert_eq!(m.tiers[1].demand_us, 100.0);
+        assert_eq!(m.demand_total(), 1100.0);
+    }
+
+    #[test]
+    fn per_tier_windows_are_independent() {
+        let mut m = TierCostModel::new(
+            vec![
+                TierSpec::new("gpu", 4, 0.0, 0.0),
+                TierSpec::new("host", 8, 100.0, 100.0),
+                TierSpec::new("ssd", 16, 300.0, 0.0),
+            ],
+            250.0,
+        );
+        // 3 host prefetches (300 > 250: 50 stalls) + 1 SSD prefetch
+        // (300 > 250: 50 stalls) — the channels do NOT share a window
+        for _ in 0..3 {
+            m.on_prefetch(1);
+        }
+        m.on_prefetch(2);
+        m.end_layer();
+        assert_eq!(m.tiers[1].stall_us, 50.0);
+        assert_eq!(m.tiers[2].stall_us, 50.0);
+        assert_eq!(m.stall_total(), 100.0);
+    }
+
+    #[test]
+    fn charge_demotions_writes_back_and_counts() {
+        use crate::tier::Demotion;
+        let mut m = TierCostModel::new(
+            vec![
+                TierSpec::new("gpu", 4, 0.0, 0.0),
+                TierSpec::new("host", 8, 100.0, 100.0),
+            ],
+            250.0,
+        );
+        let mut stats = TierStats::new(2);
+        let promo = Promotion {
+            found: None,
+            demoted: vec![
+                Demotion {
+                    key: 3,
+                    from: 0,
+                    to: Some(1),
+                },
+                Demotion {
+                    key: 4,
+                    from: 1,
+                    to: None,
+                },
+            ],
+        };
+        m.charge_demotions(&mut stats, &promo);
+        assert_eq!(stats.demotions, 1);
+        assert_eq!(stats.dropped, 1);
+        assert_eq!(m.tiers[1].writeback_us, 100.0);
+    }
+
+    #[test]
+    fn writeback_shares_the_dest_window() {
+        let mut m = TierCostModel::new(
+            vec![
+                TierSpec::new("gpu", 4, 0.0, 0.0),
+                TierSpec::new("host", 8, 100.0, 100.0),
+            ],
+            250.0,
+        );
+        // 2 prefetches + 1 demotion writeback on the same PCIe channel:
+        // 300µs > 250µs window
+        m.on_prefetch(1);
+        m.on_prefetch(1);
+        m.on_writeback(1);
+        m.end_layer();
+        assert_eq!(m.tiers[1].stall_us, 50.0);
+        assert_eq!(m.tiers[1].writeback_us, 100.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Tiered expert memory hierarchy (GPU VRAM ↔ host RAM ↔ SSD).
+//!
+//! The flat [`crate::cache`] model treats every miss as one PCIe fetch
+//! from an infinite host pool.  Real edge deployments stage expert
+//! weights across up to three tiers with wildly asymmetric bandwidths
+//! (FlashMoE: SSD I/O dominates MoE inference latency on edge devices),
+//! so hit-rate alone mispredicts end-to-end latency.  This module models
+//! the hierarchy explicitly:
+//!
+//! * [`TierSpec`] — one level: capacity in experts, fetch µs/expert
+//!   (cost of serving an expert *from* this tier into VRAM), writeback
+//!   µs/expert (cost of demoting an expert *into* this tier).
+//! * [`TieredCache`] — an exclusive hierarchy composing one
+//!   [`crate::cache::CachePolicy`] per tier: a lookup promotes the
+//!   expert to tier 0 (GPU), each tier's eviction victim demotes one
+//!   level down, and the last tier's victim drops (weights always
+//!   remain on flash).
+//! * [`TierCostModel`] — generalizes [`crate::cache::VramModel`]:
+//!   a demand miss charges the fetch cost of the *deepest* tier it had
+//!   to reach, and prefetch/writeback DMA overlaps compute per tier
+//!   (the PCIe and SSD links are independent channels).
+//! * [`TierStats`] — per-depth serve counters (how many lookups each
+//!   tier absorbed), promotions, demotions, drops.
+//!
+//! Tiered mode is opt-in everywhere: [`crate::sim::SimEngine`] and
+//! [`crate::coordinator::ExpertCacheManager`] keep their flat path
+//! bit-identical unless a [`crate::config::TierConfig`] is supplied.
+
+mod cache;
+mod cost;
+mod spec;
+mod stats;
+
+pub use cache::{Demotion, Promotion, TieredCache};
+pub use cost::{TierCost, TierCostModel};
+pub use spec::TierSpec;
+pub use stats::TierStats;

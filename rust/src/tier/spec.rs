@@ -1,0 +1,96 @@
+//! Per-tier specification: capacity and transfer costs.
+
+use anyhow::ensure;
+
+use crate::Result;
+
+/// One level of the expert-weight memory hierarchy.
+///
+/// Tiers are ordered fastest (index 0 = GPU VRAM) to slowest; an access
+/// that misses every tier is charged the deepest tier's fetch cost (a
+/// cold read from the backing store, which holds every expert).
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    /// Human name for reports ("gpu", "host", "ssd").
+    pub name: String,
+    /// Experts this tier can hold.
+    pub capacity_experts: usize,
+    /// Modeled cost of serving one expert FROM this tier into GPU VRAM,
+    /// in µs.  For tier 0 (the GPU itself) this is the in-VRAM hit cost.
+    pub fetch_us_per_expert: f64,
+    /// Modeled cost of writing one expert INTO this tier on demotion, in
+    /// µs.  0 for tiers that already hold every expert persistently
+    /// (flash backing store: demotion is just dropping the cached copy).
+    pub writeback_us_per_expert: f64,
+}
+
+impl TierSpec {
+    pub fn new(
+        name: impl Into<String>,
+        capacity_experts: usize,
+        fetch_us_per_expert: f64,
+        writeback_us_per_expert: f64,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            capacity_experts,
+            fetch_us_per_expert,
+            writeback_us_per_expert,
+        }
+    }
+
+    /// GPU VRAM: residency is the cache itself, a hit is ~free.
+    pub fn gpu(capacity_experts: usize) -> Self {
+        Self::new("gpu", capacity_experts, 2.0, 0.0)
+    }
+
+    /// Host (pinned) RAM behind PCIe 4.0 x16: one expert ≈ 1.4 ms, both
+    /// directions (matches `CacheConfig::pcie_us_per_expert`).
+    pub fn host(capacity_experts: usize) -> Self {
+        Self::new("host", capacity_experts, 1400.0, 1400.0)
+    }
+
+    /// Edge flash/NVMe at ~2 GB/s sustained: one ~44 MB expert ≈ 22 ms.
+    /// Weights live on flash permanently, so demotion writes nothing.
+    pub fn ssd(capacity_experts: usize) -> Self {
+        Self::new("ssd", capacity_experts, 22_000.0, 0.0)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "tier needs a name");
+        ensure!(
+            self.capacity_experts > 0,
+            "tier {} capacity must be > 0",
+            self.name
+        );
+        ensure!(
+            self.fetch_us_per_expert >= 0.0,
+            "tier {} has a negative fetch cost",
+            self.name
+        );
+        ensure!(
+            self.writeback_us_per_expert >= 0.0,
+            "tier {} has a negative writeback cost",
+            self.name
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canned_specs_validate() {
+        TierSpec::gpu(172).validate().unwrap();
+        TierSpec::host(432).validate().unwrap();
+        TierSpec::ssd(1728).validate().unwrap();
+    }
+
+    #[test]
+    fn zero_capacity_rejected() {
+        assert!(TierSpec::gpu(0).validate().is_err());
+        assert!(TierSpec::new("x", 4, -1.0, 0.0).validate().is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Per-tier serve counters for the hierarchy.
+
+/// Where lookups were served from, plus promotion/demotion traffic.
+#[derive(Debug, Clone, Default)]
+pub struct TierStats {
+    /// Measured lookups served at each depth: `served[0]` = GPU hits,
+    /// `served[d]` = found at depth `d` and promoted.
+    pub served: Vec<u64>,
+    /// Measured lookups that missed every tier (cold backing-store read).
+    pub cold: u64,
+    /// Demand promotions into the GPU tier (misses in the GPU sense).
+    pub promotions: u64,
+    /// Prefetch-driven promotions into the GPU tier.
+    pub prefetch_promotions: u64,
+    /// Evictions that landed one tier down.
+    pub demotions: u64,
+    /// Evictions that fell past the last tier (copy dropped).
+    pub dropped: u64,
+}
+
+impl TierStats {
+    pub fn new(n_tiers: usize) -> Self {
+        Self {
+            served: vec![0; n_tiers],
+            ..Default::default()
+        }
+    }
+
+    pub fn record_served(&mut self, depth: usize) {
+        if depth >= self.served.len() {
+            self.served.resize(depth + 1, 0);
+        }
+        self.served[depth] += 1;
+    }
+
+    /// Measured lookups across every tier plus cold reads.
+    pub fn lookups(&self) -> u64 {
+        self.served.iter().sum::<u64>() + self.cold
+    }
+
+    /// Fraction of lookups served from the GPU tier (Fig-7's y-axis).
+    pub fn gpu_hit_rate(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            0.0
+        } else {
+            self.served.first().copied().unwrap_or(0) as f64 / n as f64
+        }
+    }
+
+    /// Fraction of lookups that had to go below depth `d` (deep misses).
+    pub fn below_rate(&self, d: usize) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            return 0.0;
+        }
+        let deep: u64 = self.served.iter().skip(d + 1).sum::<u64>() + self.cold;
+        deep as f64 / n as f64
+    }
+
+    pub fn merge(&mut self, other: &TierStats) {
+        if self.served.len() < other.served.len() {
+            self.served.resize(other.served.len(), 0);
+        }
+        for (a, b) in self.served.iter_mut().zip(other.served.iter()) {
+            *a += b;
+        }
+        self.cold += other.cold;
+        self.promotions += other.promotions;
+        self.prefetch_promotions += other.prefetch_promotions;
+        self.demotions += other.demotions;
+        self.dropped += other.dropped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let mut s = TierStats::new(3);
+        for _ in 0..6 {
+            s.record_served(0);
+        }
+        s.record_served(1);
+        s.record_served(1);
+        s.record_served(2);
+        s.cold = 1;
+        assert_eq!(s.lookups(), 10);
+        assert!((s.gpu_hit_rate() - 0.6).abs() < 1e-12);
+        assert!((s.below_rate(0) - 0.4).abs() < 1e-12);
+        assert!((s.below_rate(1) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_elementwise() {
+        let mut a = TierStats::new(2);
+        a.record_served(0);
+        let mut b = TierStats::new(3);
+        b.record_served(2);
+        b.demotions = 4;
+        a.merge(&b);
+        assert_eq!(a.served, vec![1, 0, 1]);
+        assert_eq!(a.demotions, 4);
+    }
+}

@@ -1,0 +1,199 @@
+//! Cache-policy contract invariants (the `CachePolicy` trait docs) run
+//! against EVERY implementation — LRU, LFU, and the offline Belady
+//! policy — plus hierarchy invariants for `TieredCache` and the
+//! engine's batch-share restore-after-error guarantee.
+
+use moe_beyond::cache::{BeladyCache, CachePolicy, LfuCache, LruCache};
+use moe_beyond::config::{CacheConfig, SimConfig, TierConfig};
+use moe_beyond::coordinator::{ExpertCacheManager, GenStats};
+use moe_beyond::tier::{TierSpec, TieredCache};
+use moe_beyond::util::{ExpertSet, Rng};
+
+/// Drive a policy with a random op mix, checking after every op:
+/// * `len() <= capacity()`,
+/// * `insert` of a resident key only refreshes (no eviction, no growth),
+/// * evictions happen only on insert into a full cache, one per insert,
+/// * `resident()` agrees with `len()` and `contains()`.
+fn check_contract(name: &str, mk: &dyn Fn(usize) -> Box<dyn CachePolicy>, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _case in 0..60 {
+        let cap = rng.range(1, 10);
+        let mut c = mk(cap);
+        assert_eq!(c.capacity(), cap, "{name}: capacity mismatch");
+        for _ in 0..rng.range(1, 150) {
+            let k = rng.below(25) as u32;
+            match rng.below(3) {
+                0 => {
+                    let was_resident = c.contains(k);
+                    let len_before = c.len();
+                    let evicted = c.insert(k);
+                    if was_resident {
+                        assert_eq!(evicted, None, "{name}: refresh must not evict");
+                        assert_eq!(c.len(), len_before, "{name}: refresh must not grow");
+                    } else if len_before == cap {
+                        let v = evicted.unwrap_or_else(|| {
+                            panic!("{name}: full insert must evict exactly one")
+                        });
+                        assert_ne!(v, k, "{name}: evicted the key being inserted");
+                        assert!(!c.contains(v), "{name}: victim still resident");
+                        assert_eq!(c.len(), cap);
+                    } else {
+                        assert_eq!(evicted, None, "{name}: evicted below capacity");
+                        assert_eq!(c.len(), len_before + 1);
+                    }
+                    assert!(c.contains(k), "{name}: inserted key not resident");
+                }
+                1 => {
+                    let hit = c.touch(k);
+                    assert_eq!(hit, c.contains(k), "{name}: touch() vs contains()");
+                }
+                _ => {
+                    let was = c.contains(k);
+                    assert_eq!(c.evict(k), was, "{name}: evict() return value");
+                    assert!(!c.contains(k), "{name}: evicted key still resident");
+                }
+            }
+            assert!(c.len() <= c.capacity(), "{name}: len exceeds capacity");
+            let resident = c.resident();
+            assert_eq!(resident.len(), c.len(), "{name}: resident()/len() disagree");
+            for &r in &resident {
+                assert!(c.contains(r), "{name}: resident key not contained");
+            }
+        }
+    }
+}
+
+#[test]
+fn lru_satisfies_contract() {
+    check_contract("lru", &|cap| Box::new(LruCache::new(cap)), 101);
+}
+
+#[test]
+fn lfu_satisfies_contract() {
+    check_contract("lfu", &|cap| Box::new(LfuCache::new(cap)), 102);
+}
+
+#[test]
+fn belady_satisfies_contract() {
+    // unprimed: every next-use is "never", eviction order is arbitrary
+    // but the contract must still hold
+    check_contract("belady", &|cap| Box::new(BeladyCache::new(cap)), 103);
+    // primed with a future reference string
+    check_contract(
+        "belady-primed",
+        &|cap| {
+            let mut c = BeladyCache::new(cap);
+            let mut rng = Rng::new(cap as u64);
+            let reference: Vec<u32> = (0..200).map(|_| rng.below(25) as u32).collect();
+            c.prime(&reference);
+            Box::new(c)
+        },
+        104,
+    );
+}
+
+/// TieredCache promotion/demotion invariants across random promote
+/// streams over a deep hierarchy.
+#[test]
+fn tiered_cache_promotion_demotion_invariants() {
+    let mut rng = Rng::new(105);
+    for _case in 0..60 {
+        let caps = [rng.range(1, 4), rng.range(1, 6), rng.range(1, 8)];
+        let mut c = TieredCache::new(vec![
+            Box::new(LruCache::new(caps[0])),
+            Box::new(LfuCache::new(caps[1])),
+            Box::new(LruCache::new(caps[2])),
+        ]);
+        let mut total_before = 0usize;
+        for _ in 0..rng.range(1, 150) {
+            let k = rng.below(30) as u32;
+            let was_cold = c.locate(k).is_none();
+            let p = c.promote(k);
+            assert_eq!(p.found.is_none(), was_cold);
+            assert_eq!(c.locate(k), Some(0), "promoted key must be at the top");
+            // at most one demotion per tier, strictly downward
+            assert!(p.demoted.len() <= 3);
+            for d in &p.demoted {
+                if let Some(to) = d.to {
+                    assert_eq!(to, d.from + 1, "demotion must go one tier down");
+                    assert_eq!(c.locate(d.key), Some(to));
+                } else {
+                    assert!(c.locate(d.key).is_none(), "dropped key still resident");
+                }
+            }
+            // conservation: a promotion adds at most one resident copy
+            let total = c.resident_total();
+            assert!(total <= total_before + 1);
+            total_before = total;
+            for (depth, &cap) in caps.iter().enumerate() {
+                assert!(c.len_at(depth) <= cap);
+            }
+        }
+    }
+}
+
+/// The engine restores the full prefetch window after batch processing
+/// even on error paths (`process_batch` restructures around a single
+/// restore point); the manager-level restore must therefore be exact
+/// and idempotent from any prior share.
+#[test]
+fn batch_share_restore_after_error_semantics() {
+    let mut m = ExpertCacheManager::new(
+        Box::new(LruCache::new(32)),
+        CacheConfig::default(),
+        64,
+        1_000.0,
+    )
+    .with_prefetch_budget(12);
+
+    // simulate the error path: share set for a batch, "error", restore
+    for batch in [2usize, 3, 7, 64] {
+        m.set_batch_share(batch);
+        assert_eq!(m.effective_prefetch_budget(), (12 / batch).max(1));
+        m.set_batch_share(1);
+        assert_eq!(
+            m.effective_prefetch_budget(),
+            12,
+            "window not restored after batch={batch}"
+        );
+    }
+
+    // the default budget is the shared SimConfig knob, not a magic 12
+    let fresh = ExpertCacheManager::new(
+        Box::new(LruCache::new(32)),
+        CacheConfig::default(),
+        64,
+        1_000.0,
+    );
+    assert_eq!(
+        fresh.effective_prefetch_budget(),
+        SimConfig::default().prefetch_budget
+    );
+}
+
+/// End-to-end tiered manager: a demand miss on a GPU-full cache demotes
+/// into the host tier, and a later access to the demoted expert is
+/// served from host (cheap) rather than flash (expensive).
+#[test]
+fn tiered_manager_promotion_path() {
+    let cfg = TierConfig {
+        tiers: vec![
+            TierSpec::new("gpu", 2, 1.0, 0.0),
+            TierSpec::new("host", 8, 100.0, 100.0),
+            TierSpec::new("ssd", 64, 1000.0, 0.0),
+        ],
+        policy: "lru".into(),
+    };
+    let mut m = ExpertCacheManager::new_tiered(&cfg, 64, 10_000.0).unwrap();
+    let mut stats = GenStats::default();
+    m.observe_actual(0, ExpertSet::from_ids([1u8, 2, 3]), &mut stats);
+    // expert 1 was demoted to host; touching it again promotes it back
+    m.observe_actual(0, ExpertSet::from_ids([1u8]), &mut stats);
+    let ts = m.tier_stats().unwrap();
+    assert_eq!(ts.cold, 3);
+    assert_eq!(ts.served[1], 1);
+    assert!(ts.demotions >= 1);
+    m.finish(&mut stats);
+    // 3 cold reads at 1000µs + 1 host fetch at 100µs
+    assert!((stats.modeled_miss_us - 3100.0).abs() < 1e-9);
+}
