@@ -36,7 +36,7 @@ fn main() -> moe_beyond::Result<()> {
             for tr in test {
                 let preds = learned::precompute(&model, tr, stride, 6)?;
                 let mut p = CachedPredictor::new(&preds);
-                let mut engine = SimEngine::new(
+                let mut engine = SimEngine::flat(
                     Box::new(LruCache::new(capacity)),
                     SimConfig { predictor_stride: stride, ..Default::default() },
                     CacheConfig::default().with_capacity(capacity),
@@ -59,7 +59,7 @@ fn main() -> moe_beyond::Result<()> {
         let mut stats = CacheStats::default();
         for tr in test {
             let mut p = OraclePredictor { horizon: h };
-            let mut engine = SimEngine::new(
+            let mut engine = SimEngine::flat(
                 Box::new(LruCache::new(capacity)),
                 SimConfig::default(),
                 CacheConfig::default().with_capacity(capacity),

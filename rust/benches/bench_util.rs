@@ -48,5 +48,43 @@ pub fn env_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
+/// Synthetic reuse-heavy prompts over 64 experts: each prompt draws from
+/// a ~10-expert working set (the §2.2 sparsity structure that makes
+/// small caches viable at all).  Shared by the self-contained sweep
+/// benches so the generators cannot drift.
+#[allow(dead_code)]
+pub fn mk_reuse_traces(
+    n: usize,
+    n_tokens: usize,
+    n_layers: u16,
+    seed: u64,
+) -> Vec<moe_beyond::trace::PromptTrace> {
+    let mut rng = moe_beyond::util::Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let base = rng.below(54) as u8;
+            let mut experts = Vec::new();
+            for _ in 0..n_tokens * n_layers as usize {
+                let a = base + rng.below(10) as u8;
+                let mut b = base + rng.below(10) as u8;
+                if b == a {
+                    b = base + ((a - base + 1) % 10);
+                }
+                experts.push(a);
+                experts.push(b);
+            }
+            moe_beyond::trace::PromptTrace {
+                prompt_id: i as u32,
+                n_layers,
+                top_k: 2,
+                d_emb: 0,
+                tokens: vec![0; n_tokens],
+                embeddings: vec![],
+                experts,
+            }
+        })
+        .collect()
+}
+
 #[allow(dead_code)]
 fn main() {} // not a real bench target; included via #[path] by the others

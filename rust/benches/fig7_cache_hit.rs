@@ -1,6 +1,8 @@
 //! Bench: regenerate the paper's Fig 7 — GPU cache hit rate vs expert
 //! capacity for MoE-Beyond vs MoE-Infinity (plus LRU-only and the oracle
-//! upper bound).
+//! upper bound) — and measure the sweep harness's parallelization
+//! (serial vs threaded wall-clock on the same grid, outputs asserted
+//! identical).
 //!
 //! Paper reference points: at 10% capacity MoE-Beyond >70% vs
 //! MoE-Infinity 17%; MoE-Beyond keeps a 10-25pt lead and converges to
@@ -8,14 +10,67 @@
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::{env_usize, time_block};
+use bench_util::{env_usize, mk_reuse_traces, time_block};
 
-use moe_beyond::config::SimConfig;
+use std::time::Instant;
+
+use moe_beyond::config::{EamConfig, SimConfig};
 use moe_beyond::runtime::PjrtRuntime;
 use moe_beyond::sim::harness;
+use moe_beyond::sim::sweep::{sweep_capacities_threaded, sweep_threads, SweepInputs};
 use moe_beyond::sim::PredictorKind;
 
+/// Serial vs threaded sweep on an identical grid of synthetic
+/// reuse-heavy prompts (self-contained — no artifacts needed for this
+/// section): report the wall-clock speedup and assert the outputs are
+/// bit-identical (the determinism guarantee of the grid-indexed
+/// write-back).
+fn report_sweep_speedup() -> moe_beyond::Result<()> {
+    let test = mk_reuse_traces(24, 48, 6, 71);
+    let fit = mk_reuse_traces(48, 48, 6, 72);
+    let inputs = SweepInputs {
+        test_traces: &test,
+        fit_traces: &fit,
+        learned: None,
+        sim: SimConfig::default(),
+        eam: EamConfig::default(),
+        n_layers: 6,
+        n_experts: 64,
+    };
+    let fracs = harness::FIG7_FRACS;
+    let threads = sweep_threads();
+
+    let t0 = Instant::now();
+    let serial = sweep_capacities_threaded(PredictorKind::Eam, fracs, &inputs, 1)?;
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let threaded = sweep_capacities_threaded(PredictorKind::Eam, fracs, &inputs, threads)?;
+    let threaded_s = t1.elapsed().as_secs_f64();
+
+    for (s, p) in serial.points.iter().zip(threaded.points.iter()) {
+        assert_eq!(
+            s.hit_rate.to_bits(),
+            p.hit_rate.to_bits(),
+            "threaded sweep diverged from serial at {}%",
+            s.capacity_frac * 100.0
+        );
+        assert_eq!(s.stats.hits, p.stats.hits);
+        assert_eq!(s.stats.misses, p.stats.misses);
+    }
+    println!(
+        "sweep parallelization ({} capacities x {} prompts, eam): serial {serial_s:.2}s vs \
+         threaded {threaded_s:.2}s on {threads} workers ({:.1}x), outputs identical",
+        fracs.len(),
+        test.len(),
+        serial_s / threaded_s.max(1e-9)
+    );
+    Ok(())
+}
+
 fn main() -> moe_beyond::Result<()> {
+    println!("== sweep harness: serial vs threaded ==");
+    report_sweep_speedup()?;
+
     let n_prompts = env_usize("MOEB_BENCH_PROMPTS", 40);
     let arts = harness::load_artifacts()?;
     let rt = PjrtRuntime::cpu()?;

@@ -17,46 +17,14 @@
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::{env_usize, time_block};
+use bench_util::{env_usize, mk_reuse_traces, time_block};
 
 use moe_beyond::config::{EamConfig, SimConfig, TierConfig};
 use moe_beyond::sim::sweep::{sweep_capacities, sweep_tiered, PredictorKind, SweepInputs};
 use moe_beyond::tier::TierSpec;
-use moe_beyond::trace::PromptTrace;
-use moe_beyond::util::Rng;
 
 const N_LAYERS: usize = 4;
 const N_EXPERTS: usize = 64;
-
-/// Prompts with a per-prompt working set of ~10 experts per layer, the
-/// §2.2 sparsity structure that makes small caches viable at all.
-fn mk_traces(n: usize, n_tokens: usize, seed: u64) -> Vec<PromptTrace> {
-    let mut rng = Rng::new(seed);
-    (0..n)
-        .map(|i| {
-            let base = rng.below(54) as u8;
-            let mut experts = Vec::new();
-            for _ in 0..n_tokens * N_LAYERS {
-                let a = base + rng.below(10) as u8;
-                let mut b = base + rng.below(10) as u8;
-                if b == a {
-                    b = base + ((a - base + 1) % 10);
-                }
-                experts.push(a);
-                experts.push(b);
-            }
-            PromptTrace {
-                prompt_id: i as u32,
-                n_layers: N_LAYERS as u16,
-                top_k: 2,
-                d_emb: 0,
-                tokens: vec![0; n_tokens],
-                embeddings: vec![],
-                experts,
-            }
-        })
-        .collect()
-}
 
 fn base_tiers() -> TierConfig {
     TierConfig {
@@ -71,8 +39,8 @@ fn base_tiers() -> TierConfig {
 
 fn main() -> moe_beyond::Result<()> {
     let n_prompts = env_usize("MOEB_BENCH_PROMPTS", 24);
-    let test = mk_traces(n_prompts, 40, 61);
-    let fit = mk_traces(n_prompts * 2, 40, 62);
+    let test = mk_reuse_traces(n_prompts, 40, N_LAYERS as u16, 61);
+    let fit = mk_reuse_traces(n_prompts * 2, 40, N_LAYERS as u16, 62);
     let inputs = SweepInputs {
         test_traces: &test,
         fit_traces: &fit,

@@ -97,7 +97,9 @@ impl Default for TierConfig {
 
 impl TierConfig {
     pub fn with_gpu_capacity(mut self, n: usize) -> Self {
-        self.tiers[0].capacity_experts = n.max(1);
+        if let Some(t) = self.tiers.first_mut() {
+            t.capacity_experts = n.max(1);
+        }
         self
     }
 
@@ -259,9 +261,10 @@ impl ServeConfig {
         ensure!(self.max_new_tokens > 0, "max_new_tokens must be > 0");
         ensure!(self.batch_size >= 1, "batch_size must be >= 1");
         ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        // PredictorKind is the single source of truth for which
+        // predictor names exist
         ensure!(
-            ["learned", "eam", "next-layer", "popularity", "oracle", "none"]
-                .contains(&self.predictor.as_str()),
+            crate::predictor::PredictorKind::parse(&self.predictor).is_some(),
             "unknown predictor {}",
             self.predictor
         );

@@ -16,15 +16,14 @@
 
 use std::time::Instant;
 
-use crate::cache::build_policy;
 use crate::config::{Artifacts, CacheConfig, EamConfig, ServeConfig, SimConfig, TierConfig};
 use crate::coordinator::expert_state::ExpertCacheManager;
 use crate::coordinator::request::{GenStats, Request, Response};
 use crate::coordinator::session::Session;
+use crate::memory;
 use crate::moe::{sample_token, Backbone};
 use crate::predictor::{
-    DecodeContext, EamPredictor, ExpertPredictor, LearnedModel, NextLayerAll,
-    PopularityPredictor,
+    factory, DecodeContext, ExpertPredictor, LearnedModel, PredictorKind, PredictorParams,
 };
 use crate::runtime::PjrtRuntime;
 use crate::trace::PromptTrace;
@@ -98,38 +97,40 @@ impl ModelEngine {
         let w = &arts.world;
         let (n_layers, n_experts) = (w.n_layers as usize, w.n_experts as usize);
 
-        let predictor = match cfg.serve.predictor.as_str() {
-            "learned" => EnginePredictor::Learned(LearnedModel::load(rt, arts)?),
-            "eam" => EnginePredictor::Heuristic(Box::new(EamPredictor::new(
-                cfg.eam.clone(),
-                n_layers,
-                n_experts,
-            ))),
-            "next-layer" => {
-                EnginePredictor::Heuristic(Box::new(NextLayerAll::new(n_experts as u16)))
+        let kind = PredictorKind::parse(&cfg.serve.predictor)
+            .ok_or_else(|| anyhow::anyhow!("unknown predictor {}", cfg.serve.predictor))?;
+        let predictor = match kind {
+            PredictorKind::Learned => EnginePredictor::Learned(LearnedModel::load(rt, arts)?),
+            PredictorKind::None => EnginePredictor::None,
+            PredictorKind::Oracle => {
+                anyhow::bail!("predictor oracle not servable (oracle is sim-only)")
             }
-            "popularity" => EnginePredictor::Heuristic(Box::new(PopularityPredictor::new(
-                n_layers,
-                n_experts,
-                cfg.sim.predict_top_k,
-            ))),
-            "none" => EnginePredictor::None,
-            other => anyhow::bail!("predictor {other} not servable (oracle is sim-only)"),
+            k => EnginePredictor::Heuristic(factory::build(
+                k,
+                &PredictorParams {
+                    eam: &cfg.eam,
+                    predict_top_k: cfg.sim.predict_top_k,
+                    n_layers,
+                    n_experts,
+                    // online serving fits through the observers instead
+                    fit_traces: &[],
+                },
+            )?),
         };
 
         // overlap budget: one layer's decode compute hides this much DMA
         // (the per-token decode wall is a validated CacheConfig knob).
+        // memory::build threads the engine's REAL SimConfig (its
+        // prefetch_budget), so sim and serve cannot drift.
         let overlap_us = cfg.cache.overlap_per_layer(n_layers);
-        let cache_mgr = match &cfg.tier {
-            Some(tier_cfg) => ExpertCacheManager::new_tiered(tier_cfg, n_experts, overlap_us)?,
-            None => ExpertCacheManager::new(
-                build_policy(&cfg.policy, cfg.cache.capacity_experts)?,
-                cfg.cache.clone(),
-                n_experts,
-                overlap_us,
-            ),
-        }
-        .with_prefetch_budget(cfg.sim.prefetch_budget);
+        let cache_mgr = ExpertCacheManager::from_memory(memory::build(
+            &cfg.policy,
+            &cfg.cache,
+            cfg.tier.as_ref(),
+            &cfg.sim,
+            n_experts,
+            overlap_us,
+        )?);
 
         let n_layers_u16 = w.n_layers;
         Ok(Self {

@@ -1,80 +1,65 @@
-//! Expert residency manager for the serving path: one cache backend (flat
-//! VRAM or the tiered GPU↔host↔SSD hierarchy) + the transfer-cost model +
-//! per-request accounting, shared by every predictor kind.
+//! Expert residency for the serving path — a thin shim translating the
+//! engine's per-request accounting ([`GenStats`]) onto the unified
+//! [`ExpertMemory`] contract.  All flat-vs-tiered dispatch lives in
+//! [`crate::memory`]; this file no longer contains a backend branch.
 
-use crate::cache::{policy, CachePolicy, VramModel};
+use crate::cache::CachePolicy;
 use crate::config::{CacheConfig, SimConfig, TierConfig};
 use crate::coordinator::request::GenStats;
-use crate::tier::{TierCostModel, TierStats, TieredCache};
+use crate::memory::{self, ExpertMemory, FlatMemory, TieredMemory};
+use crate::tier::TierStats;
 use crate::util::ExpertSet;
 
-/// The residency/cost backend: the seed's flat VRAM model, or the
-/// opt-in tiered hierarchy (see [`crate::tier`]).
-enum Backend {
-    Flat {
-        cache: Box<dyn CachePolicy>,
-        vram: VramModel,
-    },
-    Tiered {
-        cache: TieredCache,
-        cost: TierCostModel,
-        stats: TierStats,
-    },
-}
-
 pub struct ExpertCacheManager {
-    backend: Backend,
-    n_experts: usize,
-    /// Max DMA transfers that can land within one layer's compute window.
-    prefetch_budget: usize,
-    base_budget: usize,
+    memory: Box<dyn ExpertMemory>,
 }
 
 impl ExpertCacheManager {
+    /// Wrap a pre-built residency backend (the engine builds one via
+    /// [`memory::build`] from its real config — see
+    /// [`crate::coordinator::ModelEngine::load`]).
+    pub fn from_memory(memory: Box<dyn ExpertMemory>) -> Self {
+        Self { memory }
+    }
+
+    /// Flat backend from parts.  The DMA budget comes from the caller's
+    /// `SimConfig` (no silent default — the sim-vs-serve drift trap this
+    /// signature used to carry); the engine path builds via
+    /// [`memory::build`] instead.
     pub fn new(
         cache: Box<dyn CachePolicy>,
         cfg: CacheConfig,
+        sim: &SimConfig,
         n_experts: usize,
         overlap_budget_us: f64,
     ) -> Self {
-        // sim and serve share one knob: the SimConfig default, overridable
-        // via with_prefetch_budget
-        let budget = SimConfig::default().prefetch_budget;
-        Self {
-            backend: Backend::Flat {
-                cache,
-                vram: VramModel::new(cfg, overlap_budget_us),
-            },
+        Self::from_memory(Box::new(FlatMemory::new(
+            cache,
+            cfg,
             n_experts,
-            prefetch_budget: budget,
-            base_budget: budget,
-        }
+            sim.prefetch_budget,
+            overlap_budget_us,
+        )))
     }
 
     /// Tiered mode: expert weights staged across GPU VRAM, host RAM and
     /// SSD with promotion on miss and demotion on eviction.
     pub fn new_tiered(
         cfg: &TierConfig,
+        sim: &SimConfig,
         n_experts: usize,
         overlap_budget_us: f64,
     ) -> crate::Result<Self> {
-        cfg.validate()?;
-        let budget = SimConfig::default().prefetch_budget;
-        Ok(Self {
-            backend: Backend::Tiered {
-                cache: TieredCache::build(&cfg.policy, &cfg.tiers)?,
-                cost: TierCostModel::new(cfg.tiers.clone(), overlap_budget_us),
-                stats: TierStats::new(cfg.tiers.len()),
-            },
+        Ok(Self::from_memory(Box::new(TieredMemory::new(
+            cfg,
             n_experts,
-            prefetch_budget: budget,
-            base_budget: budget,
-        })
+            sim.prefetch_budget,
+            overlap_budget_us,
+        )?)))
     }
 
     pub fn with_prefetch_budget(mut self, budget: usize) -> Self {
-        self.prefetch_budget = budget.max(1);
-        self.base_budget = self.prefetch_budget;
+        self.memory.set_prefetch_budget(budget);
         self
     }
 
@@ -82,56 +67,20 @@ impl ExpertCacheManager {
     /// (each layer computes once for all streams, so its prefetch window
     /// is divided): effective budget = base / batch (paper §5 ablation).
     pub fn set_batch_share(&mut self, batch: usize) {
-        self.prefetch_budget = (self.base_budget / batch.max(1)).max(1);
+        self.memory.set_batch_share(batch);
     }
 
     /// The currently effective per-layer DMA budget (observable so the
     /// engine's restore-after-error guarantee is testable).
     pub fn effective_prefetch_budget(&self) -> usize {
-        self.prefetch_budget
+        self.memory.effective_prefetch_budget()
     }
 
     /// Prefetch a predicted set for `layer` (issued before the layer runs;
     /// DMA overlaps the previous layer's compute up to the budget).
     pub fn prefetch(&mut self, layer: usize, predicted: ExpertSet, stats: &mut GenStats) {
-        let mut landed = 0usize;
-        for e in predicted.iter() {
-            let k = policy::key(layer, e, self.n_experts);
-            stats.prefetches += 1;
-            match &mut self.backend {
-                Backend::Flat { cache, vram } => {
-                    if cache.contains(k) {
-                        cache.touch(k);
-                        continue;
-                    }
-                    if landed >= self.prefetch_budget {
-                        continue; // DMA window exhausted: arrives too late
-                    }
-                    landed += 1;
-                    vram.on_prefetch();
-                    cache.insert(k);
-                }
-                Backend::Tiered {
-                    cache,
-                    cost,
-                    stats: ts,
-                } => {
-                    if cache.locate(k) == Some(0) {
-                        cache.touch(k);
-                        continue;
-                    }
-                    if landed >= self.prefetch_budget {
-                        continue;
-                    }
-                    landed += 1;
-                    let deepest = cache.deepest();
-                    let promo = cache.promote(k);
-                    cost.on_prefetch(promo.found.unwrap_or(deepest));
-                    ts.prefetch_promotions += 1;
-                    cost.charge_demotions(ts, &promo);
-                }
-            }
-        }
+        let pf = self.memory.prefetch(layer, predicted);
+        stats.prefetches += pf.issued;
     }
 
     /// Account the ground-truth experts of an executed layer.
@@ -148,46 +97,7 @@ impl ExpertCacheManager {
         decode_phase: bool,
     ) {
         for e in actual.iter() {
-            let k = policy::key(layer, e, self.n_experts);
-            let hit = match &mut self.backend {
-                Backend::Flat { cache, vram } => {
-                    if cache.touch(k) {
-                        vram.on_hit();
-                        true
-                    } else {
-                        vram.on_demand_miss();
-                        cache.insert(k);
-                        false
-                    }
-                }
-                Backend::Tiered {
-                    cache,
-                    cost,
-                    stats: ts,
-                } => {
-                    if cache.locate(k) == Some(0) {
-                        cache.touch(k);
-                        ts.record_served(0);
-                        cost.on_hit();
-                        true
-                    } else {
-                        // a miss in the GPU sense: promote from wherever
-                        // the expert was staged, charging the deepest
-                        // tier actually reached
-                        let deepest = cache.deepest();
-                        let promo = cache.promote(k);
-                        match promo.found {
-                            Some(d) => ts.record_served(d),
-                            None => ts.cold += 1,
-                        }
-                        cost.on_demand_fetch(promo.found.unwrap_or(deepest));
-                        ts.promotions += 1;
-                        cost.charge_demotions(ts, &promo);
-                        false
-                    }
-                }
-            };
-            if hit {
+            if self.memory.lookup(layer, e, true).hit {
                 stats.cache_hits += 1;
                 if decode_phase {
                     stats.decode_cache_hits += 1;
@@ -199,26 +109,17 @@ impl ExpertCacheManager {
                 }
             }
         }
-        match &mut self.backend {
-            Backend::Flat { vram, .. } => vram.end_layer(),
-            Backend::Tiered { cost, .. } => cost.end_layer(),
-        }
+        self.memory.end_layer();
     }
 
     /// Mark the start of a request (baseline for per-request modeled time).
     pub fn begin_request(&mut self) -> (f64, f64) {
-        match &self.backend {
-            Backend::Flat { vram, .. } => (vram.demand_us, vram.stall_us),
-            Backend::Tiered { cost, .. } => (cost.demand_total(), cost.stall_total()),
-        }
+        self.memory.cost_marks()
     }
 
     /// Snapshot per-request modeled time into the stats (request end).
     pub fn finish_from(&mut self, mark: (f64, f64), stats: &mut GenStats) {
-        let (demand, stall) = match &self.backend {
-            Backend::Flat { vram, .. } => (vram.demand_us, vram.stall_us),
-            Backend::Tiered { cost, .. } => (cost.demand_total(), cost.stall_total()),
-        };
+        let (demand, stall) = self.memory.cost_marks();
         stats.modeled_miss_us = demand - mark.0;
         stats.modeled_stall_us = stall - mark.1;
     }
@@ -230,25 +131,21 @@ impl ExpertCacheManager {
 
     /// Experts resident in GPU VRAM (tier 0 in tiered mode).
     pub fn resident_count(&self) -> usize {
-        match &self.backend {
-            Backend::Flat { cache, .. } => cache.len(),
-            Backend::Tiered { cache, .. } => cache.len_at(0),
-        }
+        self.memory.resident_count()
     }
 
     /// Per-tier serve counters (None on the flat backend).
     pub fn tier_stats(&self) -> Option<&TierStats> {
-        match &self.backend {
-            Backend::Flat { .. } => None,
-            Backend::Tiered { stats, .. } => Some(stats),
-        }
+        self.memory.tier_stats()
+    }
+
+    /// Unified residency/cost snapshot of the underlying backend.
+    pub fn memory_stats(&self) -> memory::MemoryStats {
+        self.memory.stats()
     }
 
     pub fn clear(&mut self) {
-        match &mut self.backend {
-            Backend::Flat { cache, .. } => cache.clear(),
-            Backend::Tiered { cache, .. } => cache.clear(),
-        }
+        self.memory.clear();
     }
 }
 
@@ -267,6 +164,7 @@ mod tests {
                 hit_us: 1.0,
                 ..Default::default()
             },
+            &SimConfig::default(),
             64,
             1000.0,
         )
@@ -281,7 +179,7 @@ mod tests {
             ],
             policy: "lru".into(),
         };
-        ExpertCacheManager::new_tiered(&cfg, 64, 1000.0).unwrap()
+        ExpertCacheManager::new_tiered(&cfg, &SimConfig::default(), 64, 1000.0).unwrap()
     }
 
     #[test]
@@ -317,12 +215,27 @@ mod tests {
     }
 
     #[test]
-    fn default_budget_comes_from_sim_config() {
+    fn budget_comes_from_the_callers_sim_config() {
+        // the default grabs the shared knob ...
         let m = mgr(16);
         assert_eq!(
             m.effective_prefetch_budget(),
             SimConfig::default().prefetch_budget
         );
+        // ... and a custom SimConfig is honored, not silently replaced
+        // by the default (the old drift bug)
+        let sim = SimConfig {
+            prefetch_budget: 3,
+            ..Default::default()
+        };
+        let m = ExpertCacheManager::new(
+            Box::new(LruCache::new(16)),
+            CacheConfig::default(),
+            &sim,
+            64,
+            1000.0,
+        );
+        assert_eq!(m.effective_prefetch_budget(), 3);
     }
 
     /// `set_batch_share(1)` must restore the full window no matter what

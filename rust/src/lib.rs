@@ -5,10 +5,12 @@
 //! three-layer stack:
 //!
 //! * **L3 (this crate)** — the serving coordinator: request router, decode
-//!   scheduler, simulated-VRAM expert cache, the [`tier`] memory
-//!   hierarchy (GPU VRAM ↔ host RAM ↔ SSD with promotion/demotion and
-//!   per-tier cost models), prefetch pipeline, the MoE-Infinity /
-//!   DeepSpeed-MoE / BrainStorm heuristic baselines, the trace-driven
+//!   scheduler, the unified [`memory`] expert-residency subsystem (one
+//!   `ExpertMemory` contract over the flat simulated-VRAM [`cache`] and
+//!   the [`tier`] GPU VRAM ↔ host RAM ↔ SSD hierarchy, with
+//!   promotion/demotion and per-tier cost models), prefetch pipeline, the
+//!   [`predictor`] factory over the MoE-Infinity / DeepSpeed-MoE /
+//!   BrainStorm heuristic baselines, the trace-driven, thread-parallel
 //!   cache simulator behind the paper's Fig. 7, and the evaluation
 //!   harness behind Table 1.
 //! * **L2 (JAX, build-time)** — the MoE backbone (DeepSeek-V2-Lite
@@ -36,6 +38,7 @@ pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod memory;
 pub mod metrics;
 pub mod moe;
 pub mod predictor;

@@ -78,6 +78,7 @@ COMMANDS:
                     --batch-size 1    --prompt-tokens 48
   sweep             Fig 7: cache hit rate vs capacity
                     --predictors learned,eam,none   --prompts 40   --out -
+                    --fracs 0.05,0.10,...  (default: the paper's Fig-7 grid)
   eval              Table 1: predictor accuracy/F1
                     --split test   --prompts 100
   analyze           Figs 1-3: activation sparsity analysis
@@ -220,6 +221,17 @@ fn sweep(args: &Args) -> Result<()> {
     let predictors = args.get("predictors", "learned,eam,none");
     let prompts = args.get_usize("prompts", 40)?;
     let out = args.get("out", "-");
+    let fracs: Vec<f64> = match args.flags.get("fracs") {
+        None => harness::FIG7_FRACS.to_vec(),
+        Some(v) => v
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--fracs must be comma-separated numbers"))
+            })
+            .collect::<Result<_>>()?,
+    };
 
     let arts = harness::load_artifacts()?;
     let rt = PjrtRuntime::cpu()?;
@@ -229,33 +241,32 @@ fn sweep(args: &Args) -> Result<()> {
             PredictorKind::parse(s.trim()).ok_or_else(|| anyhow::anyhow!("unknown predictor {s}"))
         })
         .collect::<Result<_>>()?;
-    let results = harness::run_fig7(
-        &rt,
-        &arts,
-        &kinds,
-        harness::FIG7_FRACS,
-        prompts,
-        SimConfig::default(),
-    )?;
+    let results = harness::run_fig7(&rt, &arts, &kinds, &fracs, prompts, SimConfig::default())?;
     println!("\nFig 7 — GPU cache hit rate (%) vs expert capacity (%):");
     print!("{:>10}", "capacity%");
     for r in &results {
         print!("{:>22}", r.predictor);
     }
     println!();
-    for (i, frac) in harness::FIG7_FRACS.iter().enumerate() {
+    for (i, frac) in fracs.iter().enumerate() {
         print!("{:>10.0}", frac * 100.0);
         for r in &results {
             print!("{:>22.1}", r.points[i].hit_rate * 100.0);
         }
         println!();
     }
-    println!("\nprediction hit rate @10% capacity:");
+    // the paper's headline point is index 1 (10%) on the default grid;
+    // a single-point --fracs grid reports its only point
+    let headline = 1.min(fracs.len().saturating_sub(1));
+    println!(
+        "\nprediction hit rate @{:.0}% capacity:",
+        fracs[headline] * 100.0
+    );
     for r in &results {
         println!(
             "  {:>22}: {:.1}%",
             r.predictor,
-            r.points[1].prediction_hit_rate * 100.0
+            r.points[headline].prediction_hit_rate * 100.0
         );
     }
     if out != "-" {

@@ -1,0 +1,198 @@
+//! [`FlatMemory`] — the seed residency model: one bounded GPU cache over
+//! an infinite host pool, every miss a full PCIe fetch.
+
+use crate::cache::{policy, CachePolicy, VramModel};
+use crate::config::CacheConfig;
+use crate::memory::{DmaBudget, ExpertMemory, Lookup, MemoryStats, Prefetched};
+use crate::tier::TierStats;
+use crate::util::ExpertSet;
+
+/// Flat VRAM residency: a [`CachePolicy`] for what is resident plus a
+/// [`VramModel`] for what each access costs.
+pub struct FlatMemory {
+    cache: Box<dyn CachePolicy>,
+    vram: VramModel,
+    /// Demand-fetch cost reported per miss (the config knob, kept out of
+    /// the `VramModel`-owned copy of the config).
+    pcie_us_per_expert: f64,
+    n_experts: usize,
+    budget: DmaBudget,
+}
+
+impl FlatMemory {
+    pub fn new(
+        cache: Box<dyn CachePolicy>,
+        cfg: CacheConfig,
+        n_experts: usize,
+        prefetch_budget: usize,
+        overlap_budget_us: f64,
+    ) -> Self {
+        Self {
+            pcie_us_per_expert: cfg.pcie_us_per_expert,
+            vram: VramModel::new(cfg, overlap_budget_us),
+            cache,
+            n_experts,
+            budget: DmaBudget::new(prefetch_budget),
+        }
+    }
+}
+
+impl ExpertMemory for FlatMemory {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+
+    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+        let k = policy::key(layer, expert, self.n_experts);
+        if self.cache.touch(k) {
+            if measured {
+                self.vram.on_hit();
+            }
+            Lookup {
+                hit: true,
+                fetch_us: 0.0,
+            }
+        } else {
+            if measured {
+                self.vram.on_demand_miss();
+            }
+            self.cache.insert(k);
+            Lookup {
+                hit: false,
+                fetch_us: self.pcie_us_per_expert,
+            }
+        }
+    }
+
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
+        let mut out = Prefetched::default();
+        let mut landed = 0usize;
+        for e in predicted.iter() {
+            out.issued += 1;
+            let k = policy::key(layer, e, self.n_experts);
+            if self.cache.contains(k) {
+                self.cache.touch(k);
+                continue;
+            }
+            if landed >= self.budget.effective() {
+                out.too_late += 1;
+                continue;
+            }
+            landed += 1;
+            self.vram.on_prefetch();
+            self.cache.insert(k);
+        }
+        out.landed = landed as u64;
+        out
+    }
+
+    fn end_layer(&mut self) {
+        self.vram.end_layer();
+    }
+
+    fn cost_marks(&self) -> (f64, f64) {
+        (self.vram.demand_us, self.vram.stall_us)
+    }
+
+    fn set_prefetch_budget(&mut self, budget: usize) {
+        self.budget.set_base(budget);
+    }
+
+    fn set_batch_share(&mut self, batch: usize) {
+        self.budget.set_batch_share(batch);
+    }
+
+    fn effective_prefetch_budget(&self) -> usize {
+        self.budget.effective()
+    }
+
+    fn resident_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn tier_stats(&self) -> Option<&TierStats> {
+        None
+    }
+
+    fn stats(&self) -> MemoryStats {
+        MemoryStats {
+            demand_us: self.vram.demand_us,
+            prefetch_us: self.vram.prefetch_us,
+            stall_us: self.vram.stall_us,
+            resident: self.cache.len(),
+            resident_per_depth: vec![self.cache.len()],
+            tiers: None,
+        }
+    }
+
+    fn clear(&mut self) {
+        self.cache.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::LruCache;
+
+    fn mem(cap: usize, budget: usize) -> FlatMemory {
+        FlatMemory::new(
+            Box::new(LruCache::new(cap)),
+            CacheConfig {
+                capacity_experts: cap,
+                pcie_us_per_expert: 100.0,
+                hit_us: 1.0,
+                ..Default::default()
+            },
+            64,
+            budget,
+            250.0,
+        )
+    }
+
+    #[test]
+    fn miss_then_hit_with_costs() {
+        let mut m = mem(4, 12);
+        let miss = m.lookup(0, 7, true);
+        assert!(!miss.hit);
+        assert_eq!(miss.fetch_us, 100.0);
+        let hit = m.lookup(0, 7, true);
+        assert!(hit.hit);
+        assert_eq!(hit.fetch_us, 0.0);
+        let (demand, _) = m.cost_marks();
+        assert_eq!(demand, 101.0); // 100µs miss + 1µs hit
+    }
+
+    #[test]
+    fn unmeasured_lookup_moves_residency_without_cost() {
+        let mut m = mem(4, 12);
+        assert!(!m.lookup(0, 3, false).hit);
+        assert_eq!(m.cost_marks(), (0.0, 0.0));
+        assert_eq!(m.resident_count(), 1);
+        // the warm-up insert is real: measured phase hits it
+        assert!(m.lookup(0, 3, true).hit);
+    }
+
+    #[test]
+    fn prefetch_respects_budget_and_refreshes_residents() {
+        let mut m = mem(16, 2);
+        m.lookup(0, 1, false);
+        let pf = m.prefetch(0, ExpertSet::from_ids([1u8, 2, 3, 4]));
+        assert_eq!(pf.issued, 4);
+        assert_eq!(pf.landed, 2); // 2 and 3 land, 1 was resident
+        assert_eq!(pf.too_late, 1); // 4 misses the window
+        assert_eq!(m.resident_count(), 3);
+    }
+
+    #[test]
+    fn stall_accounting_per_layer() {
+        let mut m = mem(16, 12);
+        // 4 prefetches x 100µs > 250µs window -> 150µs stall
+        m.prefetch(0, ExpertSet::from_ids([1u8, 2, 3, 4]));
+        m.end_layer();
+        let s = m.stats();
+        assert_eq!(s.stall_us, 150.0);
+        assert_eq!(s.prefetch_us, 400.0);
+        assert_eq!(s.critical_path_us(), 150.0);
+    }
+}

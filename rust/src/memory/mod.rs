@@ -1,0 +1,309 @@
+//! Unified expert-residency subsystem: one [`ExpertMemory`] contract for
+//! every way expert weights can be staged for the GPU.
+//!
+//! Before this module existed, the simulator and the serving path each
+//! carried their own flat-vs-tiered dispatch (a `vram`/`tier` field pair
+//! in `SimEngine`, a private `enum Backend` in `ExpertCacheManager`) —
+//! two hand-synchronized copies of the same lookup/prefetch/cost logic.
+//! [`ExpertMemory`] is now the single place that dispatch lives:
+//!
+//! * [`FlatMemory`] — the seed model: one bounded GPU cache
+//!   ([`crate::cache::CachePolicy`]) over an infinite host pool, costs
+//!   from [`crate::cache::VramModel`].
+//! * [`TieredMemory`] — the GPU ↔ host RAM ↔ SSD hierarchy
+//!   ([`crate::tier`]): promotion on miss, demotion on eviction, per-tier
+//!   fetch/writeback costs and serve counters.
+//!
+//! Both the trace-driven simulator ([`crate::sim::SimEngine`]) and the
+//! serving coordinator ([`crate::coordinator::ExpertCacheManager`]) drive
+//! a `Box<dyn ExpertMemory>`, so their hit/miss/cost numbers come from
+//! the exact same code path — and every new residency scenario is one
+//! new impl of this trait, not two divergent branches.
+//!
+//! # Adding a third backend
+//!
+//! A new residency scheme (e.g. an ML-replacement cache over SSD, or a
+//! pinned-popular-experts layout) is one file implementing the trait:
+//!
+//! ```ignore
+//! pub struct PinnedMemory { pinned: ExpertSet, inner: FlatMemory }
+//!
+//! impl ExpertMemory for PinnedMemory {
+//!     fn name(&self) -> &'static str { "pinned" }
+//!     fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+//!         if self.pinned.contains(expert) {
+//!             return Lookup { hit: true, fetch_us: 0.0 }; // always resident
+//!         }
+//!         self.inner.lookup(layer, expert, measured)
+//!     }
+//!     // prefetch / end_layer / cost_marks / ... delegate to `inner`
+//! }
+//! ```
+//!
+//! then one arm in [`build`] to make it config-selectable.  The trait
+//! invariant suite in `tests/cache_contract.rs` runs against every impl;
+//! add the new backend to its constructor list.
+
+mod flat;
+mod tiered;
+
+pub use flat::FlatMemory;
+pub use tiered::TieredMemory;
+
+use crate::cache::build_policy;
+use crate::config::{CacheConfig, SimConfig, TierConfig};
+use crate::tier::TierStats;
+use crate::util::ExpertSet;
+use crate::Result;
+
+/// Outcome of one ground-truth expert lookup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Lookup {
+    /// Served from GPU residency (tier 0 / the flat cache).
+    pub hit: bool,
+    /// Demand-fetch cost of this access in µs (0 on a hit): the flat
+    /// PCIe cost, or the fetch cost of the deepest tier actually reached.
+    pub fetch_us: f64,
+}
+
+/// Outcome of one predicted-set prefetch call.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Prefetched {
+    /// Experts the predictor asked for (already-resident ones included).
+    pub issued: u64,
+    /// DMA transfers that landed within the per-layer budget.
+    pub landed: u64,
+    /// Transfers issued beyond the budget — they arrive too late to help
+    /// this layer (the simulator counts these as wasted).
+    pub too_late: u64,
+}
+
+/// Unified residency/cost snapshot across every backend.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryStats {
+    /// Modeled µs of demand fetches (critical path), cumulative.
+    pub demand_us: f64,
+    /// Modeled µs of prefetch DMA (overlapped up to the window).
+    pub prefetch_us: f64,
+    /// Modeled µs of DMA beyond the overlap window (critical path).
+    pub stall_us: f64,
+    /// Experts resident in GPU VRAM (tier 0).
+    pub resident: usize,
+    /// Residents per depth (single entry for flat backends).
+    pub resident_per_depth: Vec<usize>,
+    /// Per-tier serve/promotion/demotion counters (`None` on backends
+    /// without depth structure).
+    pub tiers: Option<TierStats>,
+}
+
+impl MemoryStats {
+    /// Total modeled critical-path microseconds.
+    pub fn critical_path_us(&self) -> f64 {
+        self.demand_us + self.stall_us
+    }
+}
+
+/// The full expert-residency contract shared by the simulator and the
+/// serving coordinator.
+///
+/// Call sequence per executed MoE layer:
+/// 1. [`prefetch`](ExpertMemory::prefetch) the predicted set (DMA
+///    overlapping the previous layer's compute, bounded by the budget),
+/// 2. [`lookup`](ExpertMemory::lookup) each ground-truth expert
+///    (`measured = false` during cache warm-up: residency moves, but no
+///    cost or counter is recorded),
+/// 3. [`end_layer`](ExpertMemory::end_layer) to close the DMA overlap
+///    window (excess becomes stall time).
+///
+/// Per-request cost accounting brackets the sequence with
+/// [`cost_marks`](ExpertMemory::cost_marks) deltas.
+pub trait ExpertMemory: Send {
+    /// Backend identifier for reports ("flat" | "tiered" | ...).
+    fn name(&self) -> &'static str;
+
+    /// Look up one ground-truth expert of an executed layer, admitting
+    /// it into GPU residency on miss.  `measured = false` updates
+    /// residency only (warm-up epoch): no cost, no counters.
+    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup;
+
+    /// Prefetch a predicted set for `layer`, issued before the layer
+    /// runs.  Already-resident experts are refreshed; at most the
+    /// effective DMA budget of transfers land, the rest are too late.
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched;
+
+    /// Close out a layer: DMA beyond the overlap window becomes stall
+    /// time and every per-layer window resets.
+    fn end_layer(&mut self);
+
+    /// Cumulative (demand µs, stall µs) — bracket a request with two
+    /// calls and subtract for per-request modeled time.
+    fn cost_marks(&self) -> (f64, f64);
+
+    /// Replace the base per-layer DMA budget (also resets the effective
+    /// budget).  Clamped to at least 1.
+    fn set_prefetch_budget(&mut self, budget: usize);
+
+    /// Micro-batching divides the per-layer DMA window across the batch:
+    /// effective budget = base / batch (clamped to at least 1).
+    /// `set_batch_share(1)` restores the full window from any prior
+    /// share — error paths rely on this being exact and idempotent.
+    fn set_batch_share(&mut self, batch: usize);
+
+    /// The currently effective per-layer DMA budget.
+    fn effective_prefetch_budget(&self) -> usize;
+
+    /// Experts resident in GPU VRAM (tier 0).
+    fn resident_count(&self) -> usize;
+
+    /// Per-tier serve counters (`None` on backends without tiers).
+    fn tier_stats(&self) -> Option<&TierStats>;
+
+    /// Unified residency/cost snapshot.
+    fn stats(&self) -> MemoryStats;
+
+    /// Drop all staged residency (cost accumulators are kept — they are
+    /// cumulative across a run).
+    fn clear(&mut self);
+}
+
+/// Per-layer DMA-budget bookkeeping shared by every backend — one source
+/// of truth for the base/effective clamp semantics.
+#[derive(Debug, Clone)]
+pub struct DmaBudget {
+    base: usize,
+    effective: usize,
+}
+
+impl DmaBudget {
+    pub fn new(budget: usize) -> Self {
+        let b = budget.max(1);
+        Self {
+            base: b,
+            effective: b,
+        }
+    }
+
+    pub fn set_base(&mut self, budget: usize) {
+        self.base = budget.max(1);
+        self.effective = self.base;
+    }
+
+    pub fn set_batch_share(&mut self, batch: usize) {
+        self.effective = (self.base / batch.max(1)).max(1);
+    }
+
+    #[inline]
+    pub fn effective(&self) -> usize {
+        self.effective
+    }
+}
+
+/// Build the configured [`ExpertMemory`] backend.  This is the single
+/// flat-vs-tiered dispatch point in the codebase: `tier: Some(_)` selects
+/// the hierarchy, otherwise the flat VRAM model.  The DMA budget comes
+/// from the caller's real `SimConfig` (not a default), so the simulator
+/// and the serving engine can never drift.
+pub fn build(
+    policy: &str,
+    cache: &CacheConfig,
+    tier: Option<&TierConfig>,
+    sim: &SimConfig,
+    n_experts: usize,
+    overlap_budget_us: f64,
+) -> Result<Box<dyn ExpertMemory>> {
+    match tier {
+        Some(cfg) => Ok(Box::new(TieredMemory::new(
+            cfg,
+            n_experts,
+            sim.prefetch_budget,
+            overlap_budget_us,
+        )?)),
+        None => Ok(Box::new(FlatMemory::new(
+            build_policy(policy, cache.capacity_experts)?,
+            cache.clone(),
+            n_experts,
+            sim.prefetch_budget,
+            overlap_budget_us,
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tier::TierSpec;
+
+    #[test]
+    fn dma_budget_clamp_and_restore() {
+        let mut b = DmaBudget::new(12);
+        assert_eq!(b.effective(), 12);
+        b.set_batch_share(4);
+        assert_eq!(b.effective(), 3);
+        b.set_batch_share(1);
+        assert_eq!(b.effective(), 12);
+        b.set_batch_share(100);
+        assert_eq!(b.effective(), 1);
+        b.set_batch_share(0);
+        assert_eq!(b.effective(), 12);
+        b.set_base(0);
+        assert_eq!(b.effective(), 1);
+    }
+
+    #[test]
+    fn build_selects_backend_from_config() {
+        let sim = SimConfig::default();
+        let flat = build(
+            "lru",
+            &CacheConfig::default().with_capacity(8),
+            None,
+            &sim,
+            64,
+            1_000.0,
+        )
+        .unwrap();
+        assert_eq!(flat.name(), "flat");
+        assert!(flat.tier_stats().is_none());
+        assert_eq!(flat.effective_prefetch_budget(), sim.prefetch_budget);
+
+        let tcfg = TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", 4, 1.0, 0.0),
+                TierSpec::new("host", 8, 100.0, 100.0),
+            ],
+            policy: "lru".into(),
+        };
+        let tiered = build(
+            "lru",
+            &CacheConfig::default(),
+            Some(&tcfg),
+            &sim,
+            64,
+            1_000.0,
+        )
+        .unwrap();
+        assert_eq!(tiered.name(), "tiered");
+        assert!(tiered.tier_stats().is_some());
+    }
+
+    #[test]
+    fn build_threads_the_callers_sim_config() {
+        // the budget must come from the SimConfig actually passed, not
+        // from SimConfig::default() (the config-drift bug this module
+        // fixed)
+        let sim = SimConfig {
+            prefetch_budget: 3,
+            ..Default::default()
+        };
+        assert_ne!(sim.prefetch_budget, SimConfig::default().prefetch_budget);
+        let m = build(
+            "lru",
+            &CacheConfig::default().with_capacity(8),
+            None,
+            &sim,
+            64,
+            1_000.0,
+        )
+        .unwrap();
+        assert_eq!(m.effective_prefetch_budget(), 3);
+    }
+}

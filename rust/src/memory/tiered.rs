@@ -1,0 +1,231 @@
+//! [`TieredMemory`] — expert weights staged across GPU VRAM ↔ host RAM ↔
+//! SSD, with promotion on access and demotion on eviction (see
+//! [`crate::tier`] for the hierarchy primitives).
+
+use crate::cache::policy;
+use crate::config::TierConfig;
+use crate::memory::{DmaBudget, ExpertMemory, Lookup, MemoryStats, Prefetched};
+use crate::tier::{TierCostModel, TierStats, TieredCache};
+use crate::util::ExpertSet;
+use crate::Result;
+
+/// Tiered residency: the [`TieredCache`] hierarchy, its cost model, and
+/// the per-depth serve counters.
+pub struct TieredMemory {
+    cache: TieredCache,
+    cost: TierCostModel,
+    tstats: TierStats,
+    n_experts: usize,
+    budget: DmaBudget,
+}
+
+impl TieredMemory {
+    pub fn new(
+        cfg: &TierConfig,
+        n_experts: usize,
+        prefetch_budget: usize,
+        overlap_budget_us: f64,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self {
+            cache: TieredCache::build(&cfg.policy, &cfg.tiers)?,
+            cost: TierCostModel::new(cfg.tiers.clone(), overlap_budget_us),
+            tstats: TierStats::new(cfg.tiers.len()),
+            n_experts,
+            budget: DmaBudget::new(prefetch_budget),
+        })
+    }
+}
+
+impl ExpertMemory for TieredMemory {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+        let k = policy::key(layer, expert, self.n_experts);
+        // promote() already handles the resident-at-GPU case as a pure
+        // recency touch (found = Some(0), no demotions), so one call
+        // covers both outcomes without a separate locate() scan.
+        let promo = self.cache.promote(k);
+        if promo.found == Some(0) {
+            if measured {
+                self.tstats.record_served(0);
+                self.cost.on_hit();
+            }
+            return Lookup {
+                hit: true,
+                fetch_us: 0.0,
+            };
+        }
+        // a miss in the GPU sense: promoted from wherever the expert was
+        // staged, charging the deepest tier actually reached.  Unmeasured
+        // (warm-up) promotions warm the hierarchy but record nothing, so
+        // every TierStats counter shares one epoch.
+        let depth = promo.found.unwrap_or(self.cache.deepest());
+        if measured {
+            match promo.found {
+                Some(d) => self.tstats.record_served(d),
+                None => self.tstats.cold += 1,
+            }
+            self.cost.on_demand_fetch(depth);
+            self.tstats.promotions += 1;
+            self.cost.charge_demotions(&mut self.tstats, &promo);
+        }
+        Lookup {
+            hit: false,
+            fetch_us: self.cost.fetch_us(depth),
+        }
+    }
+
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
+        let mut out = Prefetched::default();
+        let mut landed = 0usize;
+        for e in predicted.iter() {
+            out.issued += 1;
+            let k = policy::key(layer, e, self.n_experts);
+            if self.cache.locate(k) == Some(0) {
+                self.cache.touch(k);
+                continue;
+            }
+            if landed >= self.budget.effective() {
+                out.too_late += 1;
+                continue;
+            }
+            landed += 1;
+            let deepest = self.cache.deepest();
+            let promo = self.cache.promote(k);
+            self.cost.on_prefetch(promo.found.unwrap_or(deepest));
+            self.tstats.prefetch_promotions += 1;
+            self.cost.charge_demotions(&mut self.tstats, &promo);
+        }
+        out.landed = landed as u64;
+        out
+    }
+
+    fn end_layer(&mut self) {
+        self.cost.end_layer();
+    }
+
+    fn cost_marks(&self) -> (f64, f64) {
+        (self.cost.demand_total(), self.cost.stall_total())
+    }
+
+    fn set_prefetch_budget(&mut self, budget: usize) {
+        self.budget.set_base(budget);
+    }
+
+    fn set_batch_share(&mut self, batch: usize) {
+        self.budget.set_batch_share(batch);
+    }
+
+    fn effective_prefetch_budget(&self) -> usize {
+        self.budget.effective()
+    }
+
+    fn resident_count(&self) -> usize {
+        self.cache.len_at(0)
+    }
+
+    fn tier_stats(&self) -> Option<&TierStats> {
+        Some(&self.tstats)
+    }
+
+    fn stats(&self) -> MemoryStats {
+        MemoryStats {
+            demand_us: self.cost.demand_total(),
+            prefetch_us: self.cost.tiers.iter().map(|t| t.prefetch_us).sum(),
+            stall_us: self.cost.stall_total(),
+            resident: self.cache.len_at(0),
+            resident_per_depth: (0..self.cache.n_tiers())
+                .map(|d| self.cache.len_at(d))
+                .collect(),
+            tiers: Some(self.tstats.clone()),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.cache.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tier::TierSpec;
+
+    fn mem(gpu: usize, host: usize, budget: usize) -> TieredMemory {
+        TieredMemory::new(
+            &TierConfig {
+                tiers: vec![
+                    TierSpec::new("gpu", gpu, 1.0, 0.0),
+                    TierSpec::new("host", host, 100.0, 100.0),
+                    TierSpec::new("ssd", 1728, 1000.0, 0.0),
+                ],
+                policy: "lru".into(),
+            },
+            64,
+            budget,
+            1_000.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn miss_charges_deepest_tier_reached() {
+        let mut m = mem(2, 4, 12);
+        // cold read from the backing store below the last tier
+        let cold = m.lookup(0, 1, true);
+        assert!(!cold.hit);
+        assert_eq!(cold.fetch_us, 1000.0);
+        // evict 1 to host (gpu cap 2): 2, 3 fill the GPU
+        m.lookup(0, 2, true);
+        m.lookup(0, 3, true);
+        // now 1 is in host: served at host cost, not flash
+        let host = m.lookup(0, 1, true);
+        assert!(!host.hit);
+        assert_eq!(host.fetch_us, 100.0);
+        let ts = m.tier_stats().unwrap();
+        assert_eq!(ts.cold, 3);
+        assert_eq!(ts.served[1], 1);
+        assert!(ts.demotions >= 1);
+    }
+
+    #[test]
+    fn unmeasured_lookup_warms_without_counters() {
+        let mut m = mem(2, 4, 12);
+        m.lookup(0, 1, false);
+        m.lookup(0, 2, false);
+        m.lookup(0, 3, false); // demotes 1 — still uncounted
+        let ts = m.tier_stats().unwrap();
+        assert_eq!(ts.cold, 0);
+        assert_eq!(ts.promotions, 0);
+        assert_eq!(ts.demotions, 0);
+        assert_eq!(m.cost_marks(), (0.0, 0.0));
+        // but residency really moved
+        assert_eq!(m.resident_count(), 2);
+        assert_eq!(m.stats().resident_per_depth, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn prefetch_promotes_from_host_cheaply() {
+        let mut m = mem(1, 4, 12);
+        m.lookup(0, 1, true);
+        m.lookup(0, 2, true); // 1 -> host
+        let pf = m.prefetch(0, ExpertSet::from_ids([1u8]));
+        assert_eq!(pf.landed, 1);
+        let ts = m.tier_stats().unwrap();
+        assert_eq!(ts.prefetch_promotions, 1);
+        assert!(m.lookup(0, 1, true).hit);
+    }
+
+    #[test]
+    fn budget_bounds_prefetch_promotions() {
+        let mut m = mem(8, 8, 2);
+        let pf = m.prefetch(0, ExpertSet::from_ids([1u8, 2, 3, 4, 5]));
+        assert_eq!(pf.issued, 5);
+        assert_eq!(pf.landed, 2);
+        assert_eq!(pf.too_late, 3);
+        assert_eq!(m.resident_count(), 2);
+    }
+}

@@ -127,7 +127,7 @@ impl EamPredictor {
 
 impl ExpertPredictor for EamPredictor {
     fn name(&self) -> &'static str {
-        "eam"
+        crate::predictor::PredictorKind::Eam.id()
     }
 
     fn begin_prompt(&mut self, _tr: &PromptTrace) {

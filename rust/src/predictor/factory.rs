@@ -1,0 +1,157 @@
+//! Predictor selection and construction — the single source of truth
+//! for which predictors exist, what they are called, and how they are
+//! built.  Shared by the sweep harness ([`crate::sim::sweep`]) and the
+//! serving engine ([`crate::coordinator::ModelEngine`]), which previously
+//! each carried their own copy of this mapping.
+
+use crate::config::EamConfig;
+use crate::predictor::{
+    EamPredictor, ExpertPredictor, NextLayerAll, NoPrefetch, OraclePredictor, PopularityPredictor,
+};
+use crate::trace::PromptTrace;
+use crate::Result;
+
+/// Which predictor drives prefetch (config id + paper-facing name).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorKind {
+    Learned,
+    Eam,
+    NextLayer,
+    Popularity,
+    Oracle,
+    None,
+}
+
+impl PredictorKind {
+    /// Every kind, in report order.
+    pub const ALL: [PredictorKind; 6] = [
+        PredictorKind::Learned,
+        PredictorKind::Eam,
+        PredictorKind::NextLayer,
+        PredictorKind::Popularity,
+        PredictorKind::Oracle,
+        PredictorKind::None,
+    ];
+
+    /// Config identifier — the string accepted by `ServeConfig.predictor`
+    /// and returned by every [`ExpertPredictor::name`] impl.
+    pub fn id(&self) -> &'static str {
+        match self {
+            PredictorKind::Learned => "learned",
+            PredictorKind::Eam => "eam",
+            PredictorKind::NextLayer => "next-layer",
+            PredictorKind::Popularity => "popularity",
+            PredictorKind::Oracle => "oracle",
+            PredictorKind::None => "none",
+        }
+    }
+
+    /// Paper-facing display name (sweep tables, bench output).
+    pub fn display_name(&self) -> &'static str {
+        match self {
+            PredictorKind::Learned => "moe-beyond",
+            PredictorKind::Eam => "moe-infinity",
+            PredictorKind::NextLayer => "deepspeed-next-layer",
+            PredictorKind::Popularity => "brainstorm-popularity",
+            PredictorKind::Oracle => "oracle",
+            PredictorKind::None => "lru-only",
+        }
+    }
+
+    /// Parse a config id or display name (round-trips with both
+    /// [`id`](Self::id) and [`display_name`](Self::display_name)).
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "lru" {
+            // historical alias for reactive-caching-only
+            return Some(PredictorKind::None);
+        }
+        Self::ALL
+            .into_iter()
+            .find(|k| s == k.id() || s == k.display_name())
+    }
+}
+
+/// Everything a heuristic predictor needs at construction time.
+pub struct PredictorParams<'a> {
+    pub eam: &'a EamConfig,
+    /// Experts taken from the predictor per layer.
+    pub predict_top_k: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Training traces for offline-fitted baselines (EAMC, popularity).
+    /// Empty for online serving, where the observers fit incrementally.
+    pub fit_traces: &'a [PromptTrace],
+}
+
+/// Build a heuristic predictor.  `Learned` is not constructible here —
+/// it is either a precomputed prediction set (sweeps) or a PJRT
+/// [`crate::predictor::LearnedModel`] (serving); callers special-case it.
+pub fn build(kind: PredictorKind, p: &PredictorParams<'_>) -> Result<Box<dyn ExpertPredictor>> {
+    Ok(match kind {
+        PredictorKind::Learned => anyhow::bail!(
+            "the learned predictor is not factory-built (use precomputed predictions or LearnedModel)"
+        ),
+        PredictorKind::Eam => {
+            let mut pr = EamPredictor::new(p.eam.clone(), p.n_layers, p.n_experts);
+            pr.fit(p.fit_traces);
+            Box::new(pr)
+        }
+        PredictorKind::NextLayer => Box::new(NextLayerAll::new(p.n_experts as u16)),
+        PredictorKind::Popularity => {
+            let mut pr = PopularityPredictor::new(p.n_layers, p.n_experts, p.predict_top_k);
+            pr.fit(p.fit_traces);
+            Box::new(pr)
+        }
+        PredictorKind::Oracle => Box::new(OraclePredictor::new()),
+        PredictorKind::None => Box::new(NoPrefetch),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `parse` round-trips every kind through BOTH of its names.
+    #[test]
+    fn parse_round_trips_ids_and_display_names() {
+        for k in PredictorKind::ALL {
+            assert_eq!(PredictorKind::parse(k.id()), Some(k), "id {}", k.id());
+            assert_eq!(
+                PredictorKind::parse(k.display_name()),
+                Some(k),
+                "display {}",
+                k.display_name()
+            );
+        }
+        assert_eq!(PredictorKind::parse("lru"), Some(PredictorKind::None));
+        assert_eq!(PredictorKind::parse("nope"), None);
+    }
+
+    /// Factory-built predictors report the kind's config id — one source
+    /// of truth between `PredictorKind` and the trait `name()` methods.
+    #[test]
+    fn factory_names_match_kind_ids() {
+        let eam = EamConfig {
+            kmeans_clusters: 0,
+            ..Default::default()
+        };
+        let params = PredictorParams {
+            eam: &eam,
+            predict_top_k: 6,
+            n_layers: 3,
+            n_experts: 64,
+            fit_traces: &[],
+        };
+        for k in [
+            PredictorKind::Eam,
+            PredictorKind::NextLayer,
+            PredictorKind::Popularity,
+            PredictorKind::Oracle,
+            PredictorKind::None,
+        ] {
+            let p = build(k, &params).unwrap();
+            assert_eq!(p.name(), k.id(), "{k:?}");
+        }
+        assert!(build(PredictorKind::Learned, &params).is_err());
+    }
+}

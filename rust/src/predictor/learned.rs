@@ -246,7 +246,7 @@ impl<'a> CachedPredictor<'a> {
 
 impl ExpertPredictor for CachedPredictor<'_> {
     fn name(&self) -> &'static str {
-        "learned"
+        crate::predictor::PredictorKind::Learned.id()
     }
     fn begin_prompt(&mut self, _: &PromptTrace) {}
     fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {

@@ -11,12 +11,14 @@
 //! | `none`       | no prefetch (pure LRU reactive caching)            |
 
 pub mod eam;
+pub mod factory;
 pub mod learned;
 pub mod next_layer;
 pub mod oracle;
 pub mod popularity;
 
 pub use eam::EamPredictor;
+pub use factory::{PredictorKind, PredictorParams};
 pub use learned::{CachedPredictor, LearnedModel, TracePredictions};
 pub use next_layer::NextLayerAll;
 pub use oracle::OraclePredictor;
@@ -65,7 +67,7 @@ pub struct NoPrefetch;
 
 impl ExpertPredictor for NoPrefetch {
     fn name(&self) -> &'static str {
-        "none"
+        PredictorKind::None.id()
     }
     fn begin_prompt(&mut self, _: &PromptTrace) {}
     fn predict(&mut self, _: &DecodeContext<'_>, _: usize) -> ExpertSet {

@@ -33,7 +33,7 @@ impl NextLayerAll {
 
 impl ExpertPredictor for NextLayerAll {
     fn name(&self) -> &'static str {
-        "next-layer"
+        crate::predictor::PredictorKind::NextLayer.id()
     }
 
     fn begin_prompt(&mut self, _: &PromptTrace) {}

@@ -26,7 +26,7 @@ impl Default for OraclePredictor {
 
 impl ExpertPredictor for OraclePredictor {
     fn name(&self) -> &'static str {
-        "oracle"
+        crate::predictor::PredictorKind::Oracle.id()
     }
 
     fn begin_prompt(&mut self, _: &PromptTrace) {}

@@ -65,7 +65,7 @@ impl PopularityPredictor {
 
 impl ExpertPredictor for PopularityPredictor {
     fn name(&self) -> &'static str {
-        "popularity"
+        crate::predictor::PredictorKind::Popularity.id()
     }
 
     fn begin_prompt(&mut self, _: &PromptTrace) {

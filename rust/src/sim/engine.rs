@@ -11,111 +11,109 @@
 //!
 //! Generalized over `ExpertPredictor`, so the same engine scores
 //! MoE-Beyond, MoE-Infinity's EAM matching, DeepSpeed-MoE next-layer,
-//! BrainStorm popularity, the oracle, and pure LRU.
+//! BrainStorm popularity, the oracle, and pure LRU — and over
+//! [`ExpertMemory`], so the same replay loop drives the flat VRAM model
+//! and the tiered GPU ↔ host ↔ SSD hierarchy (or any future residency
+//! backend) without a second copy of itself.
 
-use crate::cache::{policy, CachePolicy, CacheStats, VramModel};
+use crate::cache::{CachePolicy, CacheStats};
 use crate::config::{CacheConfig, SimConfig, TierConfig};
+use crate::memory::{ExpertMemory, FlatMemory, TieredMemory};
 use crate::predictor::{DecodeContext, ExpertPredictor};
-use crate::tier::{TierCostModel, TierStats, TieredCache};
 use crate::trace::PromptTrace;
 
-/// Tiered-memory state for the simulator (opt-in via
-/// [`SimEngine::with_tiers`]): the hierarchy, its cost model, and the
-/// per-depth serve counters.
-pub struct TieredSim {
-    pub cache: TieredCache,
-    pub cost: TierCostModel,
-    pub stats: TierStats,
-}
-
-/// Reusable simulation engine (cache state persists across prompts unless
-/// `reset_between_prompts`).
+/// Reusable simulation engine (residency persists across prompts unless
+/// the caller builds a fresh engine per prompt).
 pub struct SimEngine {
-    pub cache: Box<dyn CachePolicy>,
+    /// The single residency backend: flat or tiered, the replay loop
+    /// cannot tell the difference.
+    pub memory: Box<dyn ExpertMemory>,
     pub sim: SimConfig,
-    pub cache_cfg: CacheConfig,
     pub n_experts: usize,
-    /// Model a PCIe/VRAM latency budget (None = pure hit-rate counting).
-    pub vram: Option<VramModel>,
-    /// Tiered-memory mode: when set, lookups go through the hierarchy
-    /// and `cache`/`vram` above are ignored.
-    pub tier: Option<TieredSim>,
 }
 
 impl SimEngine {
-    pub fn new(cache: Box<dyn CachePolicy>, sim: SimConfig, cache_cfg: CacheConfig, n_experts: usize) -> Self {
+    pub fn new(memory: Box<dyn ExpertMemory>, sim: SimConfig, n_experts: usize) -> Self {
         Self {
-            cache,
+            memory,
             sim,
-            cache_cfg,
             n_experts,
-            vram: None,
-            tier: None,
         }
     }
 
-    pub fn with_vram(mut self, overlap_budget_us: f64) -> Self {
-        self.vram = Some(VramModel::new(self.cache_cfg.clone(), overlap_budget_us));
-        self
+    /// Flat residency over `cache` (the seed Fig-7 configuration): pure
+    /// hit-rate counting, costs accumulate off the critical path with an
+    /// unbounded overlap window.
+    pub fn flat(
+        cache: Box<dyn CachePolicy>,
+        sim: SimConfig,
+        cache_cfg: CacheConfig,
+        n_experts: usize,
+    ) -> Self {
+        let budget = sim.prefetch_budget;
+        Self::new(
+            Box::new(FlatMemory::new(
+                cache,
+                cache_cfg,
+                n_experts,
+                budget,
+                f64::INFINITY,
+            )),
+            sim,
+            n_experts,
+        )
     }
 
-    /// Opt into tiered expert memory (GPU ↔ host ↔ SSD); the flat
-    /// `cache`/`vram` pair is bypassed entirely.
-    pub fn with_tiers(mut self, cfg: &TierConfig, overlap_budget_us: f64) -> crate::Result<Self> {
-        cfg.validate()?;
-        self.tier = Some(TieredSim {
-            cache: TieredCache::build(&cfg.policy, &cfg.tiers)?,
-            cost: TierCostModel::new(cfg.tiers.clone(), overlap_budget_us),
-            stats: TierStats::new(cfg.tiers.len()),
-        });
-        Ok(self)
+    /// Tiered residency (GPU ↔ host ↔ SSD; see [`crate::tier`]).
+    pub fn tiered(
+        cfg: &TierConfig,
+        sim: SimConfig,
+        n_experts: usize,
+        overlap_budget_us: f64,
+    ) -> crate::Result<Self> {
+        let budget = sim.prefetch_budget;
+        Ok(Self::new(
+            Box::new(TieredMemory::new(cfg, n_experts, budget, overlap_budget_us)?),
+            sim,
+            n_experts,
+        ))
     }
 
     /// Replay one prompt; counters accumulate into `stats`.
+    ///
+    /// Warm-up tokens "simply warm" the residency (paper §4.1.4): their
+    /// lookups move experts but are entirely unmeasured — no hit/miss
+    /// counters, no modeled cost.  `stats.hits`/`misses` keep their
+    /// Fig-7 meaning on every backend (served from GPU VRAM or not);
+    /// `stats.transfer_us` is the flat PCIe cost or the depth-dependent
+    /// tier fetch cost, whichever the backend models.
     pub fn run_prompt(
         &mut self,
         trace: &PromptTrace,
         predictor: &mut dyn ExpertPredictor,
         stats: &mut CacheStats,
     ) {
-        if self.tier.is_some() {
-            return self.run_prompt_tiered(trace, predictor, stats);
-        }
         let n_layers = trace.n_layers as usize;
         let warm = self.sim.warmup_tokens.min(trace.n_tokens());
         predictor.begin_prompt(trace);
 
         for t in 0..trace.n_tokens() {
             let ctx = DecodeContext { trace, t };
+            let measured = t >= warm;
             for l in 0..n_layers {
                 let truth = trace.expert_set(t, l);
 
-                if t >= warm {
+                if measured {
                     // predict + prefetch BEFORE the layer "executes";
                     // the prefetch horizon is `lookahead_layers` (paper: 1,
                     // issued while layer l-1 computes — here equivalently
-                    // just before l runs).  Only `prefetch_budget` DMA
+                    // just before l runs).  Only the DMA budget's worth of
                     // transfers can land within the window; later ones are
                     // issued but arrive too late to help this layer.
                     let predicted = predictor.predict(&ctx, l);
-                    let mut landed = 0usize;
-                    for e in predicted.iter() {
-                        stats.prefetches += 1;
-                        let k = policy::key(l, e, self.n_experts);
-                        if self.cache.contains(k) {
-                            self.cache.touch(k);
-                            continue;
-                        }
-                        if landed >= self.sim.prefetch_budget {
-                            stats.wasted_prefetches += 1;
-                            continue;
-                        }
-                        landed += 1;
-                        if let Some(v) = &mut self.vram {
-                            v.on_prefetch();
-                        }
-                        self.cache.insert(k);
-                    }
+                    let pf = self.memory.prefetch(l, predicted);
+                    stats.prefetches += pf.issued;
+                    stats.wasted_prefetches += pf.too_late;
                     // prediction hit accounting (per ground-truth expert)
                     for e in truth.iter() {
                         stats.prediction_total += 1;
@@ -126,126 +124,22 @@ impl SimEngine {
                 }
 
                 // the layer executes: look up each ground-truth expert.
-                // Warm-up tokens "simply warm" the cache (paper §4.1.4) —
-                // their lookups are not measured.
                 for e in truth.iter() {
-                    let k = policy::key(l, e, self.n_experts);
-                    if self.cache.touch(k) {
-                        if t >= warm {
+                    let r = self.memory.lookup(l, e, measured);
+                    if measured {
+                        if r.hit {
                             stats.hits += 1;
-                            if let Some(v) = &mut self.vram {
-                                v.on_hit();
-                            }
-                        }
-                    } else {
-                        if t >= warm {
+                        } else {
                             stats.misses += 1;
-                            stats.transfer_us += self.cache_cfg.pcie_us_per_expert;
-                            if let Some(v) = &mut self.vram {
-                                v.on_demand_miss();
-                            }
+                            stats.transfer_us += r.fetch_us;
                         }
-                        self.cache.insert(k);
                     }
                 }
-                if let Some(v) = &mut self.vram {
-                    v.end_layer();
-                }
+                self.memory.end_layer();
                 predictor.observe(&ctx, l, truth);
             }
         }
         predictor.end_prompt(trace);
-    }
-
-    /// The tiered twin of the loop above: same warm-up and prefetch-budget
-    /// semantics, but lookups promote through the hierarchy and misses
-    /// charge the deepest tier actually reached.  `stats.hits`/`misses`
-    /// keep their Fig-7 meaning (served from GPU VRAM or not);
-    /// `stats.transfer_us` becomes depth-dependent.
-    fn run_prompt_tiered(
-        &mut self,
-        trace: &PromptTrace,
-        predictor: &mut dyn ExpertPredictor,
-        stats: &mut CacheStats,
-    ) {
-        let mut tier = self.tier.take().expect("tiered mode not configured");
-        let n_layers = trace.n_layers as usize;
-        let warm = self.sim.warmup_tokens.min(trace.n_tokens());
-        let budget = self.sim.prefetch_budget;
-        let n_experts = self.n_experts;
-        let deepest = tier.cache.deepest();
-        predictor.begin_prompt(trace);
-
-        for t in 0..trace.n_tokens() {
-            let ctx = DecodeContext { trace, t };
-            for l in 0..n_layers {
-                let truth = trace.expert_set(t, l);
-
-                if t >= warm {
-                    let predicted = predictor.predict(&ctx, l);
-                    let mut landed = 0usize;
-                    for e in predicted.iter() {
-                        stats.prefetches += 1;
-                        let k = policy::key(l, e, n_experts);
-                        if tier.cache.locate(k) == Some(0) {
-                            tier.cache.touch(k);
-                            continue;
-                        }
-                        if landed >= budget {
-                            stats.wasted_prefetches += 1;
-                            continue;
-                        }
-                        landed += 1;
-                        let promo = tier.cache.promote(k);
-                        tier.cost.on_prefetch(promo.found.unwrap_or(deepest));
-                        tier.stats.prefetch_promotions += 1;
-                        tier.cost.charge_demotions(&mut tier.stats, &promo);
-                    }
-                    for e in truth.iter() {
-                        stats.prediction_total += 1;
-                        if predicted.contains(e) {
-                            stats.prediction_hits += 1;
-                        }
-                    }
-                }
-
-                // the layer executes: each ground-truth expert is served
-                // from whatever depth holds it and promoted to the GPU.
-                // Warm-up lookups warm the hierarchy but are unmeasured.
-                for e in truth.iter() {
-                    let k = policy::key(l, e, n_experts);
-                    if tier.cache.locate(k) == Some(0) {
-                        tier.cache.touch(k);
-                        if t >= warm {
-                            stats.hits += 1;
-                            tier.stats.record_served(0);
-                            tier.cost.on_hit();
-                        }
-                    } else {
-                        // warm-up promotions warm the hierarchy but are
-                        // entirely unmeasured (no cost, no counters), so
-                        // every TierStats counter shares one epoch
-                        let promo = tier.cache.promote(k);
-                        if t >= warm {
-                            let depth = promo.found.unwrap_or(deepest);
-                            stats.misses += 1;
-                            stats.transfer_us += tier.cost.fetch_us(depth);
-                            match promo.found {
-                                Some(d) => tier.stats.record_served(d),
-                                None => tier.stats.cold += 1,
-                            }
-                            tier.cost.on_demand_fetch(depth);
-                            tier.stats.promotions += 1;
-                            tier.cost.charge_demotions(&mut tier.stats, &promo);
-                        }
-                    }
-                }
-                tier.cost.end_layer();
-                predictor.observe(&ctx, l, truth);
-            }
-        }
-        predictor.end_prompt(trace);
-        self.tier = Some(tier);
     }
 }
 
@@ -258,7 +152,7 @@ pub fn simulate_prompt(
     n_experts: usize,
 ) -> CacheStats {
     let mut stats = CacheStats::default();
-    let mut engine = SimEngine::new(
+    let mut engine = SimEngine::flat(
         Box::new(crate::cache::LruCache::new(capacity)),
         sim,
         CacheConfig::default().with_capacity(capacity),
@@ -360,7 +254,7 @@ mod tests {
                 prompt_id: 0, n_layers, top_k, d_emb: 0,
                 tokens: vec![0; n_tokens], embeddings: vec![], experts,
             };
-            let mut engine = SimEngine::new(
+            let mut engine = SimEngine::flat(
                 Box::new(crate::cache::LruCache::new(cap)),
                 SimConfig::default(),
                 crate::config::CacheConfig::default().with_capacity(cap),
@@ -370,22 +264,18 @@ mod tests {
             engine.run_prompt(&tr, &mut NoPrefetch, &mut stats);
             let measured = n_tokens.saturating_sub(SimConfig::default().warmup_tokens);
             assert_eq!(stats.lookups(), (measured * 3 * 2) as u64);
-            assert!(engine.cache.len() <= cap);
+            assert!(engine.memory.resident_count() <= cap);
         }
     }
 
-    fn tiered_engine(cap: usize, tiers: Vec<crate::tier::TierSpec>) -> SimEngine {
-        SimEngine::new(
-            Box::new(crate::cache::LruCache::new(cap)),
-            SimConfig::default(),
-            crate::config::CacheConfig::default().with_capacity(cap),
-            64,
-        )
-        .with_tiers(
+    fn tiered_engine(tiers: Vec<crate::tier::TierSpec>) -> SimEngine {
+        SimEngine::tiered(
             &TierConfig {
                 tiers,
                 policy: "lru".into(),
             },
+            SimConfig::default(),
+            64,
             1_000.0,
         )
         .unwrap()
@@ -400,21 +290,18 @@ mod tests {
         let tr = toy_trace(48);
         let flat = simulate_prompt(&tr, &mut NoPrefetch, 4, SimConfig::default(), 64);
 
-        let mut engine = tiered_engine(
-            4,
-            vec![
-                TierSpec::new("gpu", 4, 2.0, 0.0),
-                // same fetch cost as CacheConfig::default().pcie_us_per_expert
-                TierSpec::new("host", 2 * 64, 1400.0, 0.0),
-            ],
-        );
+        let mut engine = tiered_engine(vec![
+            TierSpec::new("gpu", 4, 2.0, 0.0),
+            // same fetch cost as CacheConfig::default().pcie_us_per_expert
+            TierSpec::new("host", 2 * 64, 1400.0, 0.0),
+        ]);
         let mut stats = CacheStats::default();
         engine.run_prompt(&tr, &mut NoPrefetch, &mut stats);
         assert_eq!(stats.hits, flat.hits);
         assert_eq!(stats.misses, flat.misses);
         assert!((stats.transfer_us - flat.transfer_us).abs() < 1e-9);
-        let t = engine.tier.as_ref().unwrap();
-        assert_eq!(t.stats.served[0], stats.hits);
+        let m = engine.memory.stats();
+        assert_eq!(m.tiers.unwrap().served[0], stats.hits);
     }
 
     /// Shrinking the GPU below the working set degrades gracefully when a
@@ -424,21 +311,15 @@ mod tests {
     fn warm_host_tier_degrades_gracefully() {
         use crate::tier::TierSpec;
         let tr = toy_trace(64); // 16-key working set (8 experts × 2 layers)
-        let mut warm_host = tiered_engine(
-            4,
-            vec![
-                TierSpec::new("gpu", 4, 2.0, 0.0),
-                TierSpec::new("host", 16, 1400.0, 0.0),
-                TierSpec::new("ssd", 128, 22_000.0, 0.0),
-            ],
-        );
-        let mut ssd_only = tiered_engine(
-            4,
-            vec![
-                TierSpec::new("gpu", 4, 2.0, 0.0),
-                TierSpec::new("ssd", 128, 22_000.0, 0.0),
-            ],
-        );
+        let mut warm_host = tiered_engine(vec![
+            TierSpec::new("gpu", 4, 2.0, 0.0),
+            TierSpec::new("host", 16, 1400.0, 0.0),
+            TierSpec::new("ssd", 128, 22_000.0, 0.0),
+        ]);
+        let mut ssd_only = tiered_engine(vec![
+            TierSpec::new("gpu", 4, 2.0, 0.0),
+            TierSpec::new("ssd", 128, 22_000.0, 0.0),
+        ]);
         let mut s1 = CacheStats::default();
         let mut s2 = CacheStats::default();
         warm_host.run_prompt(&tr, &mut NoPrefetch, &mut s1);
@@ -447,18 +328,19 @@ mod tests {
         assert_eq!(s1.hits, s2.hits);
         // ... but very different modeled latency: the host tier serves
         // the deep misses at 1400µs instead of 22000µs
-        let warm = warm_host.tier.as_ref().unwrap();
-        let cold = ssd_only.tier.as_ref().unwrap();
-        assert!(warm.stats.served[1] > 0, "host tier never used");
+        let warm = warm_host.memory.stats();
+        let cold = ssd_only.memory.stats();
+        let warm_tiers = warm.tiers.as_ref().unwrap();
+        assert!(warm_tiers.served[1] > 0, "host tier never used");
         assert!(
-            warm.cost.critical_path_us() < cold.cost.critical_path_us() / 4.0,
+            warm.critical_path_us() < cold.critical_path_us() / 4.0,
             "warm host {} vs ssd-only {}",
-            warm.cost.critical_path_us(),
-            cold.cost.critical_path_us()
+            warm.critical_path_us(),
+            cold.critical_path_us()
         );
         // demotion-on-eviction keeps copies alive: after warm-up nothing
         // should fall back to a cold backing-store read
-        assert_eq!(warm.stats.cold, 0);
+        assert_eq!(warm_tiers.cold, 0);
     }
 
     /// Hierarchy invariants survive a full tiered replay.
@@ -466,24 +348,22 @@ mod tests {
     fn tiered_replay_respects_capacities() {
         use crate::tier::TierSpec;
         let tr = toy_trace(40);
-        let mut engine = tiered_engine(
-            2,
-            vec![
-                TierSpec::new("gpu", 2, 2.0, 0.0),
-                TierSpec::new("host", 5, 1400.0, 1400.0),
-                TierSpec::new("ssd", 7, 22_000.0, 0.0),
-            ],
-        );
+        let mut engine = tiered_engine(vec![
+            TierSpec::new("gpu", 2, 2.0, 0.0),
+            TierSpec::new("host", 5, 1400.0, 1400.0),
+            TierSpec::new("ssd", 7, 22_000.0, 0.0),
+        ]);
         let mut stats = CacheStats::default();
         engine.run_prompt(&tr, &mut OraclePredictor::new(), &mut stats);
-        let t = engine.tier.as_ref().unwrap();
-        assert!(t.cache.len_at(0) <= 2);
-        assert!(t.cache.len_at(1) <= 5);
-        assert!(t.cache.len_at(2) <= 7);
+        let m = engine.memory.stats();
+        assert!(m.resident_per_depth[0] <= 2);
+        assert!(m.resident_per_depth[1] <= 5);
+        assert!(m.resident_per_depth[2] <= 7);
         // 16-key working set vs 14 total slots: evictions ripple down and
         // some copies fall off the bottom of the hierarchy
-        assert!(t.stats.demotions > 0);
-        assert!(t.stats.dropped > 0);
+        let t = m.tiers.unwrap();
+        assert!(t.demotions > 0);
+        assert!(t.dropped > 0);
     }
 
     /// The oracle dominates no-prefetch at equal capacity.

@@ -1,10 +1,16 @@
 //! Trace-driven cache simulator (paper §4.1.4), the capacity-sweep
 //! harness behind Fig 7, and the tiered-memory extension sweeping
-//! host-RAM fraction and SSD bandwidth.
+//! host-RAM fraction and SSD bandwidth.  The replay loop drives a
+//! [`crate::memory::ExpertMemory`] backend, so flat and tiered residency
+//! share one engine; the sweep harness fans grid points out across
+//! scoped worker threads with deterministic output.
 
 mod engine;
 pub mod harness;
 pub mod sweep;
 
-pub use engine::{simulate_prompt, SimEngine, TieredSim};
-pub use sweep::{sweep_capacities, sweep_tiered, PredictorKind, SweepPoint, SweepResult, TierSweepPoint};
+pub use engine::{simulate_prompt, SimEngine};
+pub use sweep::{
+    sweep_capacities, sweep_capacities_threaded, sweep_threads, sweep_tiered,
+    sweep_tiered_threaded, PredictorKind, SweepPoint, SweepResult, TierSweepPoint,
+};

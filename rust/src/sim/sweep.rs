@@ -2,53 +2,26 @@
 //! vs GPU expert capacity) for every predictor, and extends it into the
 //! tiered hit-rate × tier-latency surface (host-RAM fraction and SSD
 //! bandwidth as new sweep axes).
+//!
+//! Every grid point is independent (its own predictor state, a fresh
+//! residency backend per prompt), so the harness fans the grid out
+//! across `std::thread::scope` workers.  Results are written back by
+//! grid index, so the output is deterministic and identical to a serial
+//! run regardless of scheduling; `MOEB_SWEEP_THREADS` (or the
+//! `*_threaded` variants) pins the worker count, `1` forces serial.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::cache::{CacheStats, LruCache};
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
-use crate::predictor::{
-    CachedPredictor, EamPredictor, ExpertPredictor, NextLayerAll, NoPrefetch, OraclePredictor,
-    PopularityPredictor, TracePredictions,
-};
+use crate::predictor::{factory, CachedPredictor, ExpertPredictor, PredictorParams, TracePredictions};
 use crate::sim::SimEngine;
 use crate::tier::TierStats;
 use crate::trace::PromptTrace;
 use crate::Result;
 
-/// Which predictor drives prefetch in a sweep.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum PredictorKind {
-    Learned,
-    Eam,
-    NextLayer,
-    Popularity,
-    Oracle,
-    None,
-}
-
-impl PredictorKind {
-    pub fn name(&self) -> &'static str {
-        match self {
-            PredictorKind::Learned => "moe-beyond",
-            PredictorKind::Eam => "moe-infinity",
-            PredictorKind::NextLayer => "deepspeed-next-layer",
-            PredictorKind::Popularity => "brainstorm-popularity",
-            PredictorKind::Oracle => "oracle",
-            PredictorKind::None => "lru-only",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        Some(match s {
-            "learned" | "moe-beyond" => PredictorKind::Learned,
-            "eam" | "moe-infinity" => PredictorKind::Eam,
-            "next-layer" => PredictorKind::NextLayer,
-            "popularity" => PredictorKind::Popularity,
-            "oracle" => PredictorKind::Oracle,
-            "none" | "lru" => PredictorKind::None,
-            _ => return None,
-        })
-    }
-}
+pub use crate::predictor::PredictorKind;
 
 /// One (capacity, predictor) measurement.
 #[derive(Debug, Clone)]
@@ -82,81 +55,164 @@ pub struct SweepInputs<'a> {
     pub n_experts: usize,
 }
 
-fn make_predictor<'a>(
-    kind: PredictorKind,
-    inputs: &SweepInputs<'a>,
-) -> Box<dyn ExpertPredictor + 'a> {
-    match kind {
-        PredictorKind::Learned => unreachable!("learned handled per-trace"),
-        PredictorKind::Eam => {
-            let mut p = EamPredictor::new(inputs.eam.clone(), inputs.n_layers, inputs.n_experts);
-            p.fit(inputs.fit_traces);
-            Box::new(p)
-        }
-        PredictorKind::NextLayer => Box::new(NextLayerAll::new(inputs.n_experts as u16)),
-        PredictorKind::Popularity => {
-            let mut p = PopularityPredictor::new(inputs.n_layers, inputs.n_experts, inputs.sim.predict_top_k);
-            p.fit(inputs.fit_traces);
-            Box::new(p)
-        }
-        PredictorKind::Oracle => Box::new(OraclePredictor::new()),
-        PredictorKind::None => Box::new(NoPrefetch),
+fn make_predictor(kind: PredictorKind, inputs: &SweepInputs<'_>) -> Result<Box<dyn ExpertPredictor>> {
+    factory::build(
+        kind,
+        &PredictorParams {
+            eam: &inputs.eam,
+            predict_top_k: inputs.sim.predict_top_k,
+            n_layers: inputs.n_layers,
+            n_experts: inputs.n_experts,
+            fit_traces: inputs.fit_traces,
+        },
+    )
+}
+
+/// Worker count for the sweep harness: `MOEB_SWEEP_THREADS` if set (>= 1),
+/// else the machine's available parallelism.
+pub fn sweep_threads() -> usize {
+    match std::env::var("MOEB_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
     }
 }
 
-/// Run the Fig-7 sweep: for each capacity fraction, replay every test
-/// prompt on a fresh LRU cache and aggregate hit rates.
+/// Map `f` over `jobs` on `threads` scoped workers.  Workers claim jobs
+/// from an atomic cursor and write results back by index, so the output
+/// order (and content — each job is self-contained) is identical to the
+/// serial `jobs.iter().map(f)`.
+fn parallel_map<J, R, F>(jobs: &[J], threads: usize, f: F) -> Result<Vec<R>>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> Result<R> + Sync,
+{
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        return jobs.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<R>>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let r = f(&jobs[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("sweep worker exited without writing its slot")
+        })
+        .collect()
+}
+
+/// Replay every test prompt through a fresh engine each (batch-size-1
+/// edge serving has no cross-request residency; predictor state
+/// persists across prompts, as in the paper: the EAMC grows online).
+/// `after_prompt` collects per-engine state (tier counters, cost) before
+/// the engine is dropped.  The single Learned-vs-heuristic dispatch for
+/// both the flat and tiered sweeps.
+fn replay_traces(
+    kind: PredictorKind,
+    inputs: &SweepInputs<'_>,
+    stats: &mut CacheStats,
+    mut mk_engine: impl FnMut() -> Result<SimEngine>,
+    mut after_prompt: impl FnMut(&mut SimEngine),
+) -> Result<()> {
+    let mut predictor = if kind == PredictorKind::Learned {
+        None
+    } else {
+        Some(make_predictor(kind, inputs)?)
+    };
+    for (i, tr) in inputs.test_traces.iter().enumerate() {
+        let mut engine = mk_engine()?;
+        match (&mut predictor, kind) {
+            (None, PredictorKind::Learned) => {
+                let preds = &inputs
+                    .learned
+                    .ok_or_else(|| anyhow::anyhow!("learned sweep needs precomputed predictions"))?[i];
+                let mut p = CachedPredictor::new(preds);
+                engine.run_prompt(tr, &mut p, stats);
+            }
+            (Some(p), _) => engine.run_prompt(tr, p.as_mut(), stats),
+            _ => unreachable!(),
+        }
+        after_prompt(&mut engine);
+    }
+    Ok(())
+}
+
+/// One capacity of the Fig-7 sweep.
+fn run_capacity_point(
+    kind: PredictorKind,
+    frac: f64,
+    inputs: &SweepInputs<'_>,
+) -> Result<SweepPoint> {
+    let total = inputs.n_layers * inputs.n_experts;
+    let capacity = ((total as f64 * frac).round() as usize).max(1);
+    let mut stats = CacheStats::default();
+
+    replay_traces(
+        kind,
+        inputs,
+        &mut stats,
+        || {
+            Ok(SimEngine::flat(
+                Box::new(LruCache::new(capacity)),
+                inputs.sim.clone(),
+                CacheConfig::default().with_capacity(capacity),
+                inputs.n_experts,
+            ))
+        },
+        |_| {},
+    )?;
+
+    Ok(SweepPoint {
+        capacity_frac: frac,
+        capacity_experts: capacity,
+        hit_rate: stats.hit_rate(),
+        prediction_hit_rate: stats.prediction_hit_rate(),
+        stats,
+    })
+}
+
+/// Run the Fig-7 sweep with the default worker count (see
+/// [`sweep_threads`]).
 pub fn sweep_capacities(
     kind: PredictorKind,
     fracs: &[f64],
     inputs: &SweepInputs<'_>,
 ) -> Result<SweepResult> {
-    let total = inputs.n_layers * inputs.n_experts;
-    let mut points = Vec::with_capacity(fracs.len());
+    sweep_capacities_threaded(kind, fracs, inputs, sweep_threads())
+}
 
-    for &frac in fracs {
-        let capacity = ((total as f64 * frac).round() as usize).max(1);
-        let mut stats = CacheStats::default();
-
-        // persistent predictor state across prompts (EAMC grows online,
-        // as in the paper); the cache itself restarts per prompt —
-        // batch-size-1 edge serving has no cross-request residency.
-        let mut predictor = if kind == PredictorKind::Learned {
-            None
-        } else {
-            Some(make_predictor(kind, inputs))
-        };
-
-        for (i, tr) in inputs.test_traces.iter().enumerate() {
-            let mut engine = SimEngine::new(
-                Box::new(LruCache::new(capacity)),
-                inputs.sim.clone(),
-                CacheConfig::default().with_capacity(capacity),
-                inputs.n_experts,
-            );
-            match (&mut predictor, kind) {
-                (None, PredictorKind::Learned) => {
-                    let preds = &inputs
-                        .learned
-                        .ok_or_else(|| anyhow::anyhow!("learned sweep needs precomputed predictions"))?[i];
-                    let mut p = CachedPredictor::new(preds);
-                    engine.run_prompt(tr, &mut p, &mut stats);
-                }
-                (Some(p), _) => engine.run_prompt(tr, p.as_mut(), &mut stats),
-                _ => unreachable!(),
-            }
-        }
-
-        points.push(SweepPoint {
-            capacity_frac: frac,
-            capacity_experts: capacity,
-            hit_rate: stats.hit_rate(),
-            prediction_hit_rate: stats.prediction_hit_rate(),
-            stats,
-        });
-    }
+/// Run the Fig-7 sweep on an explicit number of workers (`1` = serial).
+/// Output is deterministic: identical to the serial run for any count.
+pub fn sweep_capacities_threaded(
+    kind: PredictorKind,
+    fracs: &[f64],
+    inputs: &SweepInputs<'_>,
+    threads: usize,
+) -> Result<SweepResult> {
+    let points = parallel_map(fracs, threads, |&frac| {
+        run_capacity_point(kind, frac, inputs)
+    })?;
     Ok(SweepResult {
-        predictor: kind.name().to_string(),
+        predictor: kind.display_name().to_string(),
         points,
     })
 }
@@ -178,6 +234,51 @@ pub struct TierSweepPoint {
     pub tiers: TierStats,
 }
 
+fn run_tier_point(
+    kind: PredictorKind,
+    (gf, hf, ssd): (f64, f64, f64),
+    inputs: &SweepInputs<'_>,
+    base: &TierConfig,
+    overlap_budget_us: f64,
+) -> Result<TierSweepPoint> {
+    let total = inputs.n_layers * inputs.n_experts;
+    let gpu_cap = ((total as f64 * gf).round() as usize).max(1);
+    let host_cap = ((total as f64 * hf).round() as usize).max(1);
+    let cfg = base
+        .clone()
+        .with_gpu_capacity(gpu_cap)
+        .with_host_capacity(host_cap)
+        .with_deepest_fetch_us(ssd);
+    cfg.validate()?;
+
+    let mut stats = CacheStats::default();
+    let mut tiers = TierStats::new(cfg.tiers.len());
+    let mut critical_path_us = 0.0;
+
+    replay_traces(
+        kind,
+        inputs,
+        &mut stats,
+        || SimEngine::tiered(&cfg, inputs.sim.clone(), inputs.n_experts, overlap_budget_us),
+        |engine| {
+            let m = engine.memory.stats();
+            tiers.merge(m.tiers.as_ref().expect("tiered engine lost its tiers"));
+            critical_path_us += m.critical_path_us();
+        },
+    )?;
+
+    Ok(TierSweepPoint {
+        gpu_frac: gf,
+        host_frac: hf,
+        ssd_us_per_expert: ssd,
+        gpu_hit_rate: stats.hit_rate(),
+        deep_miss_rate: tiers.below_rate(1),
+        critical_path_us,
+        stats,
+        tiers,
+    })
+}
+
 /// Sweep the tiered hierarchy over GPU capacity × host-RAM fraction ×
 /// SSD fetch cost, replaying every test prompt on a fresh hierarchy per
 /// prompt (batch-size-1 edge serving has no cross-request residency).
@@ -195,6 +296,30 @@ pub fn sweep_tiered(
     base: &TierConfig,
     overlap_budget_us: f64,
 ) -> Result<Vec<TierSweepPoint>> {
+    sweep_tiered_threaded(
+        kind,
+        gpu_fracs,
+        host_fracs,
+        ssd_us,
+        inputs,
+        base,
+        overlap_budget_us,
+        sweep_threads(),
+    )
+}
+
+/// [`sweep_tiered`] on an explicit number of workers (`1` = serial).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_tiered_threaded(
+    kind: PredictorKind,
+    gpu_fracs: &[f64],
+    host_fracs: &[f64],
+    ssd_us: &[f64],
+    inputs: &SweepInputs<'_>,
+    base: &TierConfig,
+    overlap_budget_us: f64,
+    threads: usize,
+) -> Result<Vec<TierSweepPoint>> {
     // the gpu/host/deepest axes address tiers 0/1/last: a flatter base
     // would silently sweep the wrong tier
     anyhow::ensure!(
@@ -202,69 +327,17 @@ pub fn sweep_tiered(
         "sweep_tiered needs a gpu/host/deepest base config (got {} tiers)",
         base.tiers.len()
     );
-    let total = inputs.n_layers * inputs.n_experts;
-    let mut out = Vec::with_capacity(gpu_fracs.len() * host_fracs.len() * ssd_us.len());
-
+    let mut grid = Vec::with_capacity(gpu_fracs.len() * host_fracs.len() * ssd_us.len());
     for &gf in gpu_fracs {
         for &hf in host_fracs {
             for &ssd in ssd_us {
-                let gpu_cap = ((total as f64 * gf).round() as usize).max(1);
-                let host_cap = ((total as f64 * hf).round() as usize).max(1);
-                let cfg = base
-                    .clone()
-                    .with_gpu_capacity(gpu_cap)
-                    .with_host_capacity(host_cap)
-                    .with_deepest_fetch_us(ssd);
-                cfg.validate()?;
-
-                let mut stats = CacheStats::default();
-                let mut tiers = TierStats::new(cfg.tiers.len());
-                let mut critical_path_us = 0.0;
-
-                let mut predictor = if kind == PredictorKind::Learned {
-                    None
-                } else {
-                    Some(make_predictor(kind, inputs))
-                };
-
-                for (i, tr) in inputs.test_traces.iter().enumerate() {
-                    let mut engine = SimEngine::new(
-                        Box::new(LruCache::new(gpu_cap)),
-                        inputs.sim.clone(),
-                        CacheConfig::default().with_capacity(gpu_cap),
-                        inputs.n_experts,
-                    )
-                    .with_tiers(&cfg, overlap_budget_us)?;
-                    match (&mut predictor, kind) {
-                        (None, PredictorKind::Learned) => {
-                            let preds = &inputs.learned.ok_or_else(|| {
-                                anyhow::anyhow!("learned sweep needs precomputed predictions")
-                            })?[i];
-                            let mut p = CachedPredictor::new(preds);
-                            engine.run_prompt(tr, &mut p, &mut stats);
-                        }
-                        (Some(p), _) => engine.run_prompt(tr, p.as_mut(), &mut stats),
-                        _ => unreachable!(),
-                    }
-                    let t = engine.tier.take().expect("tiered engine lost its tiers");
-                    tiers.merge(&t.stats);
-                    critical_path_us += t.cost.critical_path_us();
-                }
-
-                out.push(TierSweepPoint {
-                    gpu_frac: gf,
-                    host_frac: hf,
-                    ssd_us_per_expert: ssd,
-                    gpu_hit_rate: stats.hit_rate(),
-                    deep_miss_rate: tiers.below_rate(1),
-                    critical_path_us,
-                    stats,
-                    tiers,
-                });
+                grid.push((gf, hf, ssd));
             }
         }
     }
-    Ok(out)
+    parallel_map(&grid, threads, |&point| {
+        run_tier_point(kind, point, inputs, base, overlap_budget_us)
+    })
 }
 
 #[cfg(test)]
@@ -473,5 +546,70 @@ mod tests {
         assert_eq!(PredictorKind::parse("learned"), Some(PredictorKind::Learned));
         assert_eq!(PredictorKind::parse("moe-infinity"), Some(PredictorKind::Eam));
         assert_eq!(PredictorKind::parse("nope"), None);
+    }
+
+    fn assert_sweep_eq(a: &SweepResult, b: &SweepResult) {
+        assert_eq!(a.predictor, b.predictor);
+        assert_eq!(a.points.len(), b.points.len());
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(x.capacity_experts, y.capacity_experts);
+            assert_eq!(x.hit_rate.to_bits(), y.hit_rate.to_bits());
+            assert_eq!(x.prediction_hit_rate.to_bits(), y.prediction_hit_rate.to_bits());
+            assert_eq!(x.stats.hits, y.stats.hits);
+            assert_eq!(x.stats.misses, y.stats.misses);
+            assert_eq!(x.stats.prefetches, y.stats.prefetches);
+            assert_eq!(x.stats.wasted_prefetches, y.stats.wasted_prefetches);
+            assert_eq!(x.stats.transfer_us.to_bits(), y.stats.transfer_us.to_bits());
+        }
+    }
+
+    /// The threaded sweep is bit-identical to the serial sweep for any
+    /// worker count (deterministic grid-indexed write-back).
+    #[test]
+    fn threaded_sweep_matches_serial_exactly() {
+        let test = mk_traces(6, 21);
+        let fit = mk_traces(12, 22);
+        let inp = inputs(&test, &fit);
+        let fracs = [0.05, 0.1, 0.2, 0.4, 0.8];
+        for kind in [PredictorKind::None, PredictorKind::Eam, PredictorKind::Oracle] {
+            let serial = sweep_capacities_threaded(kind, &fracs, &inp, 1).unwrap();
+            for threads in [2usize, 4, 16] {
+                let par = sweep_capacities_threaded(kind, &fracs, &inp, threads).unwrap();
+                assert_sweep_eq(&serial, &par);
+            }
+        }
+    }
+
+    /// Tiered surface: same determinism guarantee over the 3-axis grid.
+    #[test]
+    fn threaded_tiered_sweep_matches_serial_exactly() {
+        let test = mk_traces(4, 31);
+        let fit = mk_traces(6, 32);
+        let inp = inputs(&test, &fit);
+        let run = |threads| {
+            sweep_tiered_threaded(
+                PredictorKind::Eam,
+                &[0.05, 0.2],
+                &[0.05, 0.5],
+                &[8_000.0, 22_000.0],
+                &inp,
+                &base_tiers(),
+                1_000.0,
+                threads,
+            )
+            .unwrap()
+        };
+        let serial = run(1);
+        let par = run(8);
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(par.iter()) {
+            assert_eq!(s.gpu_hit_rate.to_bits(), p.gpu_hit_rate.to_bits());
+            assert_eq!(s.deep_miss_rate.to_bits(), p.deep_miss_rate.to_bits());
+            assert_eq!(s.critical_path_us.to_bits(), p.critical_path_us.to_bits());
+            assert_eq!(s.tiers.served, p.tiers.served);
+            assert_eq!(s.tiers.cold, p.tiers.cold);
+            assert_eq!(s.tiers.demotions, p.tiers.demotions);
+            assert_eq!(s.tiers.dropped, p.tiers.dropped);
+        }
     }
 }

@@ -22,9 +22,10 @@
 //! * [`TierStats`] — per-depth serve counters (how many lookups each
 //!   tier absorbed), promotions, demotions, drops.
 //!
-//! Tiered mode is opt-in everywhere: [`crate::sim::SimEngine`] and
-//! [`crate::coordinator::ExpertCacheManager`] keep their flat path
-//! bit-identical unless a [`crate::config::TierConfig`] is supplied.
+//! Tiered mode is opt-in everywhere: [`crate::memory::build`] selects
+//! [`crate::memory::TieredMemory`] (which composes these primitives)
+//! only when a [`crate::config::TierConfig`] is supplied, keeping the
+//! flat path bit-identical otherwise.
 
 mod cache;
 mod cost;

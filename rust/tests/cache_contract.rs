@@ -1,12 +1,19 @@
 //! Cache-policy contract invariants (the `CachePolicy` trait docs) run
 //! against EVERY implementation — LRU, LFU, and the offline Belady
-//! policy — plus hierarchy invariants for `TieredCache` and the
-//! engine's batch-share restore-after-error guarantee.
+//! policy — plus hierarchy invariants for `TieredCache`, the engine's
+//! batch-share restore-after-error guarantee, the `ExpertMemory` parity
+//! suite (the refactored flat and tiered paths must reproduce the
+//! pre-refactor replay loops' numbers exactly), and the `ExpertMemory`
+//! trait-level invariant suite run against every backend.
 
-use moe_beyond::cache::{BeladyCache, CachePolicy, LfuCache, LruCache};
+use moe_beyond::cache::{policy, BeladyCache, CachePolicy, CacheStats, LfuCache, LruCache};
 use moe_beyond::config::{CacheConfig, SimConfig, TierConfig};
 use moe_beyond::coordinator::{ExpertCacheManager, GenStats};
-use moe_beyond::tier::{TierSpec, TieredCache};
+use moe_beyond::memory::{ExpertMemory, FlatMemory, TieredMemory};
+use moe_beyond::predictor::{DecodeContext, ExpertPredictor, NoPrefetch, OraclePredictor};
+use moe_beyond::sim::SimEngine;
+use moe_beyond::tier::{TierCostModel, TierSpec, TierStats, TieredCache};
+use moe_beyond::trace::PromptTrace;
 use moe_beyond::util::{ExpertSet, Rng};
 
 /// Drive a policy with a random op mix, checking after every op:
@@ -141,6 +148,7 @@ fn batch_share_restore_after_error_semantics() {
     let mut m = ExpertCacheManager::new(
         Box::new(LruCache::new(32)),
         CacheConfig::default(),
+        &SimConfig::default(),
         64,
         1_000.0,
     )
@@ -158,10 +166,11 @@ fn batch_share_restore_after_error_semantics() {
         );
     }
 
-    // the default budget is the shared SimConfig knob, not a magic 12
+    // the budget is the caller's SimConfig knob, not a magic 12
     let fresh = ExpertCacheManager::new(
         Box::new(LruCache::new(32)),
         CacheConfig::default(),
+        &SimConfig::default(),
         64,
         1_000.0,
     );
@@ -184,7 +193,7 @@ fn tiered_manager_promotion_path() {
         ],
         policy: "lru".into(),
     };
-    let mut m = ExpertCacheManager::new_tiered(&cfg, 64, 10_000.0).unwrap();
+    let mut m = ExpertCacheManager::new_tiered(&cfg, &SimConfig::default(), 64, 10_000.0).unwrap();
     let mut stats = GenStats::default();
     m.observe_actual(0, ExpertSet::from_ids([1u8, 2, 3]), &mut stats);
     // expert 1 was demoted to host; touching it again promotes it back
@@ -196,4 +205,434 @@ fn tiered_manager_promotion_path() {
     m.finish(&mut stats);
     // 3 cold reads at 1000µs + 1 host fetch at 100µs
     assert!((stats.modeled_miss_us - 3100.0).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// ExpertMemory parity suite: the refactored replay loop (one loop over a
+// `Box<dyn ExpertMemory>`) must reproduce the PRE-refactor engine's
+// numbers exactly.  The reference implementations below are verbatim
+// ports of the seed `SimEngine::run_prompt` flat branch and its
+// `run_prompt_tiered` twin, rebuilt from the same public primitives.
+// ---------------------------------------------------------------------------
+
+fn random_trace(rng: &mut Rng, n_tokens: usize, n_layers: u16, pool: u8) -> PromptTrace {
+    let mut experts = Vec::new();
+    for _ in 0..n_tokens * n_layers as usize {
+        let a = rng.below(pool as usize) as u8;
+        let b = (a + 1 + rng.below(pool as usize - 2) as u8) % pool;
+        experts.push(a);
+        experts.push(b);
+    }
+    PromptTrace {
+        prompt_id: 0,
+        n_layers,
+        top_k: 2,
+        d_emb: 0,
+        tokens: vec![0; n_tokens],
+        embeddings: vec![],
+        experts,
+    }
+}
+
+/// Pre-refactor flat replay: one `CachePolicy` + the flat PCIe cost,
+/// warm-up tokens unmeasured (port of the seed `run_prompt`).
+fn reference_flat_replay(
+    trace: &PromptTrace,
+    predictor: &mut dyn ExpertPredictor,
+    capacity: usize,
+    sim: &SimConfig,
+    n_experts: usize,
+) -> CacheStats {
+    let mut cache = LruCache::new(capacity);
+    let cache_cfg = CacheConfig::default().with_capacity(capacity);
+    let mut stats = CacheStats::default();
+    let n_layers = trace.n_layers as usize;
+    let warm = sim.warmup_tokens.min(trace.n_tokens());
+    predictor.begin_prompt(trace);
+    for t in 0..trace.n_tokens() {
+        let ctx = DecodeContext { trace, t };
+        for l in 0..n_layers {
+            let truth = trace.expert_set(t, l);
+            if t >= warm {
+                let predicted = predictor.predict(&ctx, l);
+                let mut landed = 0usize;
+                for e in predicted.iter() {
+                    stats.prefetches += 1;
+                    let k = policy::key(l, e, n_experts);
+                    if cache.contains(k) {
+                        cache.touch(k);
+                        continue;
+                    }
+                    if landed >= sim.prefetch_budget {
+                        stats.wasted_prefetches += 1;
+                        continue;
+                    }
+                    landed += 1;
+                    cache.insert(k);
+                }
+                for e in truth.iter() {
+                    stats.prediction_total += 1;
+                    if predicted.contains(e) {
+                        stats.prediction_hits += 1;
+                    }
+                }
+            }
+            for e in truth.iter() {
+                let k = policy::key(l, e, n_experts);
+                if cache.touch(k) {
+                    if t >= warm {
+                        stats.hits += 1;
+                    }
+                } else {
+                    if t >= warm {
+                        stats.misses += 1;
+                        stats.transfer_us += cache_cfg.pcie_us_per_expert;
+                    }
+                    cache.insert(k);
+                }
+            }
+            predictor.observe(&ctx, l, truth);
+        }
+    }
+    predictor.end_prompt(trace);
+    stats
+}
+
+/// Pre-refactor tiered replay: `TieredCache` + `TierCostModel` +
+/// `TierStats` driven directly (port of the seed `run_prompt_tiered`).
+fn reference_tiered_replay(
+    trace: &PromptTrace,
+    predictor: &mut dyn ExpertPredictor,
+    cfg: &TierConfig,
+    overlap_budget_us: f64,
+    sim: &SimConfig,
+    n_experts: usize,
+) -> (CacheStats, TierStats, f64) {
+    let mut cache = TieredCache::build(&cfg.policy, &cfg.tiers).unwrap();
+    let mut cost = TierCostModel::new(cfg.tiers.clone(), overlap_budget_us);
+    let mut tstats = TierStats::new(cfg.tiers.len());
+    let mut stats = CacheStats::default();
+    let n_layers = trace.n_layers as usize;
+    let warm = sim.warmup_tokens.min(trace.n_tokens());
+    let deepest = cache.deepest();
+    predictor.begin_prompt(trace);
+    for t in 0..trace.n_tokens() {
+        let ctx = DecodeContext { trace, t };
+        for l in 0..n_layers {
+            let truth = trace.expert_set(t, l);
+            if t >= warm {
+                let predicted = predictor.predict(&ctx, l);
+                let mut landed = 0usize;
+                for e in predicted.iter() {
+                    stats.prefetches += 1;
+                    let k = policy::key(l, e, n_experts);
+                    if cache.locate(k) == Some(0) {
+                        cache.touch(k);
+                        continue;
+                    }
+                    if landed >= sim.prefetch_budget {
+                        stats.wasted_prefetches += 1;
+                        continue;
+                    }
+                    landed += 1;
+                    let promo = cache.promote(k);
+                    cost.on_prefetch(promo.found.unwrap_or(deepest));
+                    tstats.prefetch_promotions += 1;
+                    cost.charge_demotions(&mut tstats, &promo);
+                }
+                for e in truth.iter() {
+                    stats.prediction_total += 1;
+                    if predicted.contains(e) {
+                        stats.prediction_hits += 1;
+                    }
+                }
+            }
+            for e in truth.iter() {
+                let k = policy::key(l, e, n_experts);
+                if cache.locate(k) == Some(0) {
+                    cache.touch(k);
+                    if t >= warm {
+                        stats.hits += 1;
+                        tstats.record_served(0);
+                        cost.on_hit();
+                    }
+                } else {
+                    let promo = cache.promote(k);
+                    if t >= warm {
+                        let depth = promo.found.unwrap_or(deepest);
+                        stats.misses += 1;
+                        stats.transfer_us += cost.fetch_us(depth);
+                        match promo.found {
+                            Some(d) => tstats.record_served(d),
+                            None => tstats.cold += 1,
+                        }
+                        cost.on_demand_fetch(depth);
+                        tstats.promotions += 1;
+                        cost.charge_demotions(&mut tstats, &promo);
+                    }
+                }
+            }
+            cost.end_layer();
+            predictor.observe(&ctx, l, truth);
+        }
+    }
+    predictor.end_prompt(trace);
+    let critical = cost.critical_path_us();
+    (stats, tstats, critical)
+}
+
+fn assert_cache_stats_identical(label: &str, a: &CacheStats, b: &CacheStats) {
+    assert_eq!(a.hits, b.hits, "{label}: hits");
+    assert_eq!(a.misses, b.misses, "{label}: misses");
+    assert_eq!(a.prefetches, b.prefetches, "{label}: prefetches");
+    assert_eq!(
+        a.wasted_prefetches, b.wasted_prefetches,
+        "{label}: wasted_prefetches"
+    );
+    assert_eq!(a.prediction_hits, b.prediction_hits, "{label}: pred hits");
+    assert_eq!(a.prediction_total, b.prediction_total, "{label}: pred total");
+    assert_eq!(
+        a.transfer_us.to_bits(),
+        b.transfer_us.to_bits(),
+        "{label}: transfer_us ({} vs {})",
+        a.transfer_us,
+        b.transfer_us
+    );
+}
+
+/// Identical traces replayed through `FlatMemory` (via the unified
+/// engine) and the pre-refactor flat path produce byte-identical
+/// hit/miss/cost numbers, with and without prefetch.
+#[test]
+fn flat_memory_parity_with_pre_refactor_path() {
+    let mut rng = Rng::new(301);
+    for case in 0..40 {
+        let n_tokens = rng.range(4, 48);
+        let tr = random_trace(&mut rng, n_tokens, 3, 16);
+        let cap = rng.range(1, 24);
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            ..Default::default()
+        };
+        for oracle in [false, true] {
+            let reference = if oracle {
+                reference_flat_replay(&tr, &mut OraclePredictor::new(), cap, &sim, 16)
+            } else {
+                reference_flat_replay(&tr, &mut NoPrefetch, cap, &sim, 16)
+            };
+            let mut engine = SimEngine::flat(
+                Box::new(LruCache::new(cap)),
+                sim.clone(),
+                CacheConfig::default().with_capacity(cap),
+                16,
+            );
+            let mut got = CacheStats::default();
+            if oracle {
+                engine.run_prompt(&tr, &mut OraclePredictor::new(), &mut got);
+            } else {
+                engine.run_prompt(&tr, &mut NoPrefetch, &mut got);
+            }
+            assert_cache_stats_identical(
+                &format!("flat case {case} oracle={oracle}"),
+                &reference,
+                &got,
+            );
+        }
+    }
+}
+
+fn parity_tier_config(rng: &mut Rng) -> TierConfig {
+    TierConfig {
+        tiers: vec![
+            TierSpec::new("gpu", rng.range(1, 6), 2.0, 0.0),
+            TierSpec::new("host", rng.range(2, 12), 1400.0, 1400.0),
+            TierSpec::new("ssd", rng.range(12, 64), 22_000.0, 0.0),
+        ],
+        policy: "lru".into(),
+    }
+}
+
+/// Same parity guarantee for the tiered path, including the per-tier
+/// serve counters and the modeled critical path.
+#[test]
+fn tiered_memory_parity_with_pre_refactor_path() {
+    let mut rng = Rng::new(302);
+    for case in 0..40 {
+        let n_tokens = rng.range(4, 48);
+        let tr = random_trace(&mut rng, n_tokens, 3, 16);
+        let cfg = parity_tier_config(&mut rng);
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            ..Default::default()
+        };
+        for oracle in [false, true] {
+            let (ref_stats, ref_tiers, ref_critical) = if oracle {
+                reference_tiered_replay(&tr, &mut OraclePredictor::new(), &cfg, 1_000.0, &sim, 16)
+            } else {
+                reference_tiered_replay(&tr, &mut NoPrefetch, &cfg, 1_000.0, &sim, 16)
+            };
+            let mut engine = SimEngine::tiered(&cfg, sim.clone(), 16, 1_000.0).unwrap();
+            let mut got = CacheStats::default();
+            if oracle {
+                engine.run_prompt(&tr, &mut OraclePredictor::new(), &mut got);
+            } else {
+                engine.run_prompt(&tr, &mut NoPrefetch, &mut got);
+            }
+            let label = format!("tiered case {case} oracle={oracle}");
+            assert_cache_stats_identical(&label, &ref_stats, &got);
+            let m = engine.memory.stats();
+            let got_tiers = m.tiers.as_ref().unwrap();
+            assert_eq!(ref_tiers.served, got_tiers.served, "{label}: served");
+            assert_eq!(ref_tiers.cold, got_tiers.cold, "{label}: cold");
+            assert_eq!(ref_tiers.promotions, got_tiers.promotions, "{label}: promotions");
+            assert_eq!(
+                ref_tiers.prefetch_promotions, got_tiers.prefetch_promotions,
+                "{label}: prefetch_promotions"
+            );
+            assert_eq!(ref_tiers.demotions, got_tiers.demotions, "{label}: demotions");
+            assert_eq!(ref_tiers.dropped, got_tiers.dropped, "{label}: dropped");
+            assert_eq!(
+                ref_critical.to_bits(),
+                m.critical_path_us().to_bits(),
+                "{label}: critical path {} vs {}",
+                ref_critical,
+                m.critical_path_us()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ExpertMemory trait-level invariant suite, run against every backend.
+// A third backend gets added to `memory_backends()` and inherits all of
+// these checks for free.
+// ---------------------------------------------------------------------------
+
+fn memory_backends() -> Vec<(&'static str, Box<dyn Fn() -> Box<dyn ExpertMemory>>)> {
+    vec![
+        (
+            "flat",
+            Box::new(|| -> Box<dyn ExpertMemory> {
+                Box::new(FlatMemory::new(
+                    Box::new(LruCache::new(8)),
+                    CacheConfig {
+                        capacity_experts: 8,
+                        pcie_us_per_expert: 100.0,
+                        hit_us: 1.0,
+                        ..Default::default()
+                    },
+                    64,
+                    12,
+                    1_000.0,
+                ))
+            }),
+        ),
+        (
+            "tiered",
+            Box::new(|| -> Box<dyn ExpertMemory> {
+                Box::new(
+                    TieredMemory::new(
+                        &TierConfig {
+                            tiers: vec![
+                                TierSpec::new("gpu", 8, 1.0, 0.0),
+                                TierSpec::new("host", 16, 100.0, 100.0),
+                                TierSpec::new("ssd", 64, 1000.0, 0.0),
+                            ],
+                            policy: "lru".into(),
+                        },
+                        64,
+                        12,
+                        1_000.0,
+                    )
+                    .unwrap(),
+                )
+            }),
+        ),
+    ]
+}
+
+#[test]
+fn expert_memory_trait_invariants() {
+    for (label, mk) in memory_backends() {
+        // fresh backend: empty, uncharged
+        let mut m = mk();
+        assert_eq!(m.resident_count(), 0, "{label}: fresh not empty");
+        assert_eq!(m.cost_marks(), (0.0, 0.0), "{label}: fresh cost");
+        assert_eq!(m.stats().resident, 0, "{label}: stats/resident disagree");
+
+        // unmeasured (warm-up) lookups move residency but charge nothing
+        let r = m.lookup(0, 1, false);
+        assert!(!r.hit, "{label}: cold lookup hit");
+        assert!(r.fetch_us > 0.0, "{label}: cold miss has no fetch cost");
+        assert_eq!(m.cost_marks(), (0.0, 0.0), "{label}: warm-up charged");
+        if let Some(ts) = m.tier_stats() {
+            assert_eq!(ts.lookups(), 0, "{label}: warm-up counted");
+            assert_eq!(ts.promotions, 0, "{label}: warm-up promotion counted");
+        }
+        assert_eq!(m.resident_count(), 1, "{label}: warm-up didn't admit");
+        assert!(m.lookup(0, 1, true).hit, "{label}: admitted key missed");
+
+        // a measured miss charges demand cost; a hit costs (almost) nothing
+        let miss = m.lookup(0, 2, true);
+        assert!(!miss.hit);
+        let (demand, _) = m.cost_marks();
+        assert!(demand >= miss.fetch_us, "{label}: miss under-charged");
+        assert_eq!(m.lookup(0, 2, true).fetch_us, 0.0, "{label}: hit charged fetch");
+
+        // prefetch: everything is issued, at most the budget lands, and
+        // exactly the landed experts become GPU hits
+        let mut m = mk();
+        m.set_prefetch_budget(2);
+        let pf = m.prefetch(3, ExpertSet::from_ids([1u8, 2, 3, 4, 5]));
+        assert_eq!(pf.issued, 5, "{label}: issued");
+        assert_eq!(pf.landed, 2, "{label}: landed over budget");
+        assert_eq!(pf.too_late, 3, "{label}: too_late");
+        assert_eq!(m.resident_count(), 2, "{label}: residency after prefetch");
+        assert!(m.lookup(3, 1, true).hit, "{label}: landed prefetch missed");
+        assert!(m.lookup(3, 2, true).hit, "{label}: landed prefetch missed");
+
+        // batch share divides the base budget and restores exactly
+        let mut m = mk();
+        m.set_prefetch_budget(12);
+        m.set_batch_share(5);
+        assert_eq!(m.effective_prefetch_budget(), 2, "{label}: share");
+        m.set_batch_share(1);
+        assert_eq!(m.effective_prefetch_budget(), 12, "{label}: restore");
+        m.set_batch_share(100);
+        assert_eq!(m.effective_prefetch_budget(), 1, "{label}: clamp");
+
+        // clear drops residency (cost accumulators are cumulative)
+        let mut m = mk();
+        m.lookup(0, 9, true);
+        m.prefetch(1, ExpertSet::from_ids([4u8, 5]));
+        m.clear();
+        assert_eq!(m.resident_count(), 0, "{label}: clear left residents");
+        let s = m.stats();
+        assert_eq!(
+            s.resident_per_depth.iter().sum::<usize>(),
+            0,
+            "{label}: clear left deep residents"
+        );
+
+        // stats snapshot coheres with the trait accessors
+        let mut m = mk();
+        m.lookup(0, 7, true);
+        m.end_layer();
+        let s = m.stats();
+        assert_eq!(s.resident, m.resident_count(), "{label}: stats.resident");
+        assert_eq!(
+            s.resident_per_depth[0],
+            m.resident_count(),
+            "{label}: depth-0 residents"
+        );
+        let (demand, stall) = m.cost_marks();
+        assert_eq!(s.demand_us.to_bits(), demand.to_bits(), "{label}: demand");
+        assert_eq!(s.stall_us.to_bits(), stall.to_bits(), "{label}: stall");
+        assert_eq!(
+            s.critical_path_us().to_bits(),
+            (demand + stall).to_bits(),
+            "{label}: critical path"
+        );
+        assert_eq!(s.tiers.is_some(), m.tier_stats().is_some(), "{label}: tiers");
+    }
 }
