@@ -1,0 +1,264 @@
+//! Bench + CI perf gate: multi-tenant contention through the workload
+//! simulator (`moe_beyond::workload`).
+//!
+//! Three tenants (chat / bursty agent / batch) share one expert cache
+//! while a virtual-time engine interleaves their decode streams.  The
+//! bench prints the scheduler-policy × backend headline table and a
+//! small load × cache-fraction × predictor sweep, asserts the scheduler
+//! invariants (work conservation, round-robin no-starvation, counter
+//! conservation), proves byte-identical determinism by running the whole
+//! pipeline twice, and then diffs the deterministic metrics JSON against
+//! the checked-in golden file `benches/golden/workload.json` — drift
+//! fails the bench, and with it the CI `perf-gate` job.
+//!
+//! Self-contained: synthetic traces, fixed seed, no artifacts, no PJRT.
+//! Deliberately NO scale knobs — the golden file pins this exact
+//! workload.  To refresh the golden after an intentional behavior
+//! change: `MOEB_GOLDEN_BLESS=1 cargo bench --bench workload_contention`
+//! and commit the rewritten file (procedure in `rust/BENCHMARKS.md`).
+//!
+//! Artifacts for CI upload land in `target/workload/` (report JSON +
+//! throughput–latency CSV).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::time_block;
+
+use std::path::Path;
+
+use moe_beyond::config::{EamConfig, SimConfig, TierConfig, WorkloadConfig};
+use moe_beyond::sim::PredictorKind;
+use moe_beyond::tier::TierSpec;
+use moe_beyond::util::json::Json;
+use moe_beyond::workload::{
+    report_json, synthetic_fit_pool, synthetic_pools, Backend, LoadPoint, LoadSweepInputs,
+    SchedPolicy, WorkloadSpec,
+};
+use moe_beyond::Result;
+
+const N_LAYERS: usize = 4;
+const N_EXPERTS: usize = 64;
+const SEED: u64 = 17;
+const HORIZON_SECS: f64 = 8.0;
+
+fn tier_base() -> TierConfig {
+    let total = N_LAYERS * N_EXPERTS;
+    TierConfig {
+        tiers: vec![
+            TierSpec::gpu(1), // resized per grid point
+            TierSpec::host(total / 4),
+            TierSpec::ssd(total),
+        ],
+        policy: "lru".into(),
+    }
+}
+
+/// Run the full pipeline once: (headline points, sweep points).
+fn run_all() -> Result<(Vec<LoadPoint>, Vec<LoadPoint>)> {
+    let spec = WorkloadSpec::example(3, SEED, HORIZON_SECS);
+    let pools = synthetic_pools(&spec, 6, N_LAYERS as u16, N_EXPERTS);
+    let fit = synthetic_fit_pool(&spec, 4, N_LAYERS as u16, N_EXPERTS);
+
+    let wcfg = WorkloadConfig::default();
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let sim = SimConfig::default();
+    let tiers = tier_base();
+    let inputs = LoadSweepInputs {
+        spec: &spec,
+        pools: &pools,
+        fit_traces: &fit,
+        workload: &wcfg,
+        sim: &sim,
+        eam: &eam,
+        n_layers: N_LAYERS,
+        n_experts: N_EXPERTS,
+        tier_base: &tiers,
+    };
+
+    // headline: every policy × both backends at one contended point
+    let headline = moe_beyond::workload::sweep_load(
+        &inputs,
+        &SchedPolicy::ALL,
+        &Backend::ALL,
+        &[PredictorKind::Eam],
+        &[2.0],
+        &[0.10],
+    )?;
+    // sweep: load × cache fraction × predictor under round-robin
+    let sweep = moe_beyond::workload::sweep_load(
+        &inputs,
+        &[SchedPolicy::RoundRobin],
+        &Backend::ALL,
+        &[PredictorKind::Eam, PredictorKind::None],
+        &[1.0, 4.0],
+        &[0.05, 0.20],
+    )?;
+    Ok((headline, sweep))
+}
+
+fn golden_json(headline: &[LoadPoint], sweep: &[LoadPoint]) -> String {
+    let enc = |pts: &[LoadPoint]| {
+        Json::Arr(
+            pts.iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("load_mult", Json::num(p.load_mult)),
+                        ("cache_frac", Json::num(p.cache_frac)),
+                        ("report", report_json(&p.report)),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    let mut s = Json::obj(vec![
+        ("blessed", Json::Bool(true)),
+        ("schema", Json::num(1.0)),
+        ("headline", enc(headline)),
+        ("sweep", enc(sweep)),
+    ])
+    .to_json_string();
+    s.push('\n');
+    s
+}
+
+fn check_invariants(points: &[LoadPoint]) {
+    for p in points {
+        let r = &p.report;
+        let c = &r.counters;
+        let a = &r.aggregate;
+        assert_eq!(c.idle_while_runnable, 0, "engine idled while runnable");
+        assert_eq!(c.completions, c.admissions, "admitted requests were lost");
+        assert_eq!(c.steps, a.tokens, "decode steps != decoded tokens");
+        assert_eq!(c.prefill_steps, c.admissions, "one prefill per request");
+        assert_eq!(a.ttft.count as u64, c.completions);
+        assert_eq!(a.request_latency.count as u64, c.completions);
+        assert_eq!(a.queue_delay.count as u64, c.admissions);
+        assert_eq!(a.tbt.count as u64, a.tokens - c.completions);
+        // every decode (token, layer) looks up exactly top_k=2 experts
+        assert_eq!(a.cache.lookups(), a.tokens * N_LAYERS as u64 * 2);
+        if p.policy == SchedPolicy::RoundRobin {
+            assert_eq!(c.repeat_pick_with_waiters, 0, "round-robin starved a stream");
+        }
+        assert!(a.cache.hit_rate() >= 0.0 && a.cache.hit_rate() <= 1.0);
+        assert!(r.virtual_secs > 0.0);
+    }
+}
+
+fn print_headline(points: &[LoadPoint]) {
+    println!("\n== contention headline (load 2.0x, cache 10%, predictor eam) ==");
+    println!(
+        "{:>12} {:>7} {:>6} {:>9} {:>12} {:>11} {:>13} {:>10}",
+        "policy",
+        "backend",
+        "hit%",
+        "done rps",
+        "p95 TTFT ms",
+        "p95 TBT ms",
+        "p95 late ms",
+        "stall ms"
+    );
+    for p in points {
+        let a = &p.report.aggregate;
+        println!(
+            "{:>12} {:>7} {:>6.1} {:>9.2} {:>12.1} {:>11.1} {:>13.1} {:>10.1}",
+            p.policy.id(),
+            p.backend.id(),
+            a.cache.hit_rate() * 100.0,
+            p.report.completed_rps,
+            a.ttft.p95_us / 1e3,
+            a.tbt.p95_us / 1e3,
+            a.request_latency.p95_us / 1e3,
+            p.report.memory.stall_us / 1e3,
+        );
+    }
+}
+
+fn main() -> Result<()> {
+    let (headline, sweep) = time_block("workload pipeline (run 1)", run_all)?;
+    check_invariants(&headline);
+    check_invariants(&sweep);
+    print_headline(&headline);
+
+    // FCFS preserves per-stream locality; print the interleaving cost
+    let fcfs = &headline[0];
+    let rr = headline
+        .iter()
+        .find(|p| p.policy == SchedPolicy::RoundRobin && p.backend == fcfs.backend)
+        .expect("round-robin headline point");
+    println!(
+        "\ninterleaving cost (flat backend): hit rate {:.1}% under fcfs vs {:.1}% under round-robin",
+        fcfs.report.aggregate.cache.hit_rate() * 100.0,
+        rr.report.aggregate.cache.hit_rate() * 100.0
+    );
+
+    // ---- determinism: the whole pipeline, byte for byte
+    let produced = golden_json(&headline, &sweep);
+    let (h2, s2) = time_block("workload pipeline (run 2, determinism)", run_all)?;
+    let produced2 = golden_json(&h2, &s2);
+    assert_eq!(
+        produced, produced2,
+        "fixed-seed workload metrics are not byte-identical across runs"
+    );
+    println!("determinism: two full runs serialized byte-identically");
+
+    // ---- artifacts for CI upload
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let out_dir = manifest.join("target/workload");
+    std::fs::create_dir_all(&out_dir)?;
+    std::fs::write(out_dir.join("report.json"), &produced)?;
+    std::fs::write(
+        out_dir.join("sweep_load.csv"),
+        moe_beyond::workload::load_csv(&sweep),
+    )?;
+    println!("artifacts: {}", out_dir.display());
+
+    // ---- perf gate: diff against the checked-in golden file
+    let golden_path = manifest.join("benches/golden/workload.json");
+    let existing = std::fs::read_to_string(&golden_path).ok();
+    let blessed = existing
+        .as_deref()
+        .and_then(|s| Json::parse(s).ok())
+        .and_then(|j| j.get("blessed").and_then(|b| b.as_bool().ok()))
+        .unwrap_or(false);
+    let force_bless = std::env::var("MOEB_GOLDEN_BLESS").is_ok_and(|v| v == "1");
+
+    if !blessed || force_bless {
+        std::fs::write(&golden_path, &produced)?;
+        println!(
+            "golden {} — BLESSED a fresh golden file; commit rust/benches/golden/workload.json \
+             to arm the perf gate",
+            if blessed { "refresh requested" } else { "was a bootstrap placeholder" }
+        );
+        return Ok(());
+    }
+
+    let want = existing.expect("blessed golden file exists");
+    if want.trim_end() != produced.trim_end() {
+        for (i, (w, p)) in want.lines().zip(produced.lines()).enumerate() {
+            if w != p {
+                let col = w
+                    .bytes()
+                    .zip(p.bytes())
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(w.len().min(p.len()));
+                eprintln!("golden drift at line {}, byte {}:", i + 1, col);
+                let lo = col.saturating_sub(60);
+                eprintln!("  golden  : ...{}", &w[lo..(col + 60).min(w.len())]);
+                eprintln!("  produced: ...{}", &p[lo..(col + 60).min(p.len())]);
+                break;
+            }
+        }
+        anyhow::bail!(
+            "workload_contention metrics drifted from benches/golden/workload.json \
+             (produced copy: {}). If the change is intentional, re-bless with \
+             MOEB_GOLDEN_BLESS=1 and commit the new golden file.",
+            out_dir.join("report.json").display()
+        );
+    }
+    println!("perf gate: metrics match the blessed golden file");
+    println!("\nshape check: PASS");
+    Ok(())
+}

@@ -5,4 +5,6 @@ mod artifacts;
 mod runtime_cfg;
 
 pub use artifacts::{Artifacts, ExecutableSig, PredictorMeta, SplitMeta, WorldMeta};
-pub use runtime_cfg::{CacheConfig, EamConfig, ServeConfig, SimConfig, TierConfig};
+pub use runtime_cfg::{
+    CacheConfig, EamConfig, ServeConfig, SimConfig, TierConfig, WorkloadConfig,
+};

@@ -237,6 +237,10 @@ pub struct ServeConfig {
     pub batch_size: usize,
     /// Request queue bound (admission control / backpressure).
     pub queue_depth: usize,
+    /// Dynamic-batching window (ms): after the first request of a batch
+    /// arrives, the engine worker waits up to this long for co-arriving
+    /// requests before launching (vLLM-style).  0 disables the wait.
+    pub batch_window_ms: u64,
     /// Sampling temperature for the backbone LM head (0 = greedy).
     pub temperature: f64,
     /// Which predictor drives prefetch: "learned", "eam", "next-layer",
@@ -250,6 +254,7 @@ impl Default for ServeConfig {
             max_new_tokens: 32,
             batch_size: 1,
             queue_depth: 64,
+            batch_window_ms: 20,
             temperature: 0.0,
             predictor: "learned".to_string(),
         }
@@ -261,12 +266,62 @@ impl ServeConfig {
         ensure!(self.max_new_tokens > 0, "max_new_tokens must be > 0");
         ensure!(self.batch_size >= 1, "batch_size must be >= 1");
         ensure!(self.queue_depth >= 1, "queue_depth must be >= 1");
+        ensure!(
+            self.batch_window_ms <= 1_000,
+            "batch_window_ms above 1s would stall admission"
+        );
         // PredictorKind is the single source of truth for which
         // predictor names exist
         ensure!(
             crate::predictor::PredictorKind::parse(&self.predictor).is_some(),
             "unknown predictor {}",
             self.predictor
+        );
+        Ok(())
+    }
+}
+
+/// Multi-tenant workload-simulator configuration (see
+/// [`crate::workload`]): how the virtual-time engine schedules and what
+/// one unit of work costs.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Max concurrently decoding streams; due arrivals beyond this wait
+    /// in the FIFO admission queue (modeled queueing delay).
+    pub max_concurrency: usize,
+    /// Scheduling policy id: "fcfs" | "round-robin" | "srd".
+    pub policy: String,
+    /// Modeled per-token decode compute (µs) — the engine occupancy of
+    /// one decode step.  Default matches
+    /// [`CacheConfig::overlap_decode_us`].
+    pub token_compute_us: f64,
+    /// Modeled prefill compute per prompt token (µs); prefill is one
+    /// batched pass, so this is well below the decode-step cost.
+    pub prefill_us_per_token: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            max_concurrency: 4,
+            policy: "round-robin".to_string(),
+            // one knob: the serving engine's per-token decode wall
+            token_compute_us: CacheConfig::default().overlap_decode_us,
+            prefill_us_per_token: 3_000.0,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_concurrency >= 1, "max_concurrency must be >= 1");
+        ensure!(self.token_compute_us >= 0.0, "negative token compute");
+        ensure!(self.prefill_us_per_token >= 0.0, "negative prefill cost");
+        // SchedPolicy is the single source of truth for policy names
+        ensure!(
+            crate::workload::SchedPolicy::parse(&self.policy).is_some(),
+            "unknown scheduler policy {}",
+            self.policy
         );
         Ok(())
     }
@@ -283,6 +338,22 @@ mod tests {
         SimConfig::default().validate().unwrap();
         ServeConfig::default().validate().unwrap();
         TierConfig::default().validate().unwrap();
+        WorkloadConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn workload_and_batch_window_bounds() {
+        let mut w = WorkloadConfig::default();
+        w.policy = "magic".into();
+        assert!(w.validate().is_err());
+        let mut w = WorkloadConfig::default();
+        w.max_concurrency = 0;
+        assert!(w.validate().is_err());
+        let mut s = ServeConfig::default();
+        s.batch_window_ms = 5_000;
+        assert!(s.validate().is_err());
+        s.batch_window_ms = 0; // disabling the wait is legal
+        s.validate().unwrap();
     }
 
     #[test]

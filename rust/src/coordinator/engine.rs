@@ -155,6 +155,12 @@ impl ModelEngine {
         &self.backbone.world
     }
 
+    /// The engine's validated configuration (the serving front-end reads
+    /// the dynamic-batching window from here).
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
     fn predictor_window(&self) -> usize {
         match &self.predictor {
             EnginePredictor::Learned(m) => m.window,

@@ -53,6 +53,10 @@ where
     // ---- engine worker thread
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = make_engine()?;
+        // dynamic-batching window: wait this long for co-arriving
+        // requests before launching the batch (vLLM-style).  A validated
+        // ServeConfig knob; 0 launches immediately.
+        let window = std::time::Duration::from_millis(engine.config().serve.batch_window_ms);
         let mut pending: Vec<Job> = Vec::new();
         loop {
             let first = match rx.recv() {
@@ -60,19 +64,29 @@ where
                 Err(_) => break,
             };
             pending.push(first);
-            // dynamic-batching window: wait briefly for co-arriving
-            // requests before launching the batch (vLLM-style)
-            let deadline = std::time::Instant::now() + std::time::Duration::from_millis(20);
+            // drain already-queued co-arrivals unconditionally, then
+            // block on the channel with the remaining window instead of
+            // a 1 ms sleep-poll: no busy-wait, a late co-arrival is
+            // batched the instant it lands, and a backlog fills the
+            // batch even with a zero window
+            let deadline = std::time::Instant::now() + window;
             while pending.len() < batch_size {
                 match rx.try_recv() {
-                    Ok(j) => pending.push(j),
-                    Err(mpsc::TryRecvError::Empty) => {
-                        if std::time::Instant::now() >= deadline {
-                            break;
-                        }
-                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    Ok(j) => {
+                        pending.push(j);
+                        continue;
                     }
                     Err(mpsc::TryRecvError::Disconnected) => break,
+                    Err(mpsc::TryRecvError::Empty) => {}
+                }
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => pending.push(j),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
                 }
             }
             let (reqs, senders): (Vec<_>, Vec<_>) = pending.drain(..).unzip();
@@ -98,15 +112,23 @@ where
         match tx.try_send((req, otx)) {
             Ok(()) => waiters.push(orx),
             Err(mpsc::TrySendError::Full(job)) => {
-                // backpressure: account the event, then block for capacity
+                // backpressure: the submission blocks and IS admitted —
+                // that is pressure, not a rejection (requests_rejected
+                // stays reserved for actual drops)
                 backpressured += 1;
-                metrics.requests_rejected.inc();
+                metrics.requests_backpressured.inc();
                 if tx.send(job).is_err() {
+                    // worker gone mid-block: this request was dropped
+                    metrics.requests_rejected.inc();
                     break;
                 }
                 waiters.push(orx);
             }
-            Err(mpsc::TrySendError::Disconnected(_)) => break,
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                // worker gone: the submission is an actual drop
+                metrics.requests_rejected.inc();
+                break;
+            }
         }
     }
     drop(tx);

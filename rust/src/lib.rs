@@ -11,8 +11,10 @@
 //!   promotion/demotion and per-tier cost models), prefetch pipeline, the
 //!   [`predictor`] factory over the MoE-Infinity / DeepSpeed-MoE /
 //!   BrainStorm heuristic baselines, the trace-driven, thread-parallel
-//!   cache simulator behind the paper's Fig. 7, and the evaluation
-//!   harness behind Table 1.
+//!   cache simulator behind the paper's Fig. 7, the [`workload`]
+//!   multi-tenant simulator (open-loop arrivals, shared-cache
+//!   contention, SLO metrics, throughput–latency load sweeps), and the
+//!   evaluation harness behind Table 1.
 //! * **L2 (JAX, build-time)** — the MoE backbone (DeepSeek-V2-Lite
 //!   stand-in) and the MoE-Beyond predictor transformer, AOT-lowered to
 //!   HLO text in `artifacts/`.
@@ -47,6 +49,7 @@ pub mod sim;
 pub mod tier;
 pub mod trace;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide result type (anyhow for rich error context).
 pub type Result<T> = anyhow::Result<T>;

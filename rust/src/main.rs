@@ -13,13 +13,17 @@
 //! Flag parsing is hand-rolled (offline build: no clap); every flag is
 //! `--name value`.
 
-use moe_beyond::config::{CacheConfig, ServeConfig, SimConfig};
+use moe_beyond::config::{
+    CacheConfig, EamConfig, ServeConfig, SimConfig, TierConfig, WorkloadConfig,
+};
 use moe_beyond::coordinator::{serve_requests, EngineConfig, ModelEngine, Request};
 use moe_beyond::runtime::PjrtRuntime;
 use moe_beyond::sim::harness;
 use moe_beyond::sim::PredictorKind;
 use moe_beyond::trace::corpus::{CorpusConfig, PromptSampler};
-use moe_beyond::trace::WorldModel;
+use moe_beyond::trace::generator::TraceGenerator;
+use moe_beyond::trace::{PromptTrace, WorldModel};
+use moe_beyond::workload;
 use moe_beyond::Result;
 
 /// Minimal `--flag value` argument map.
@@ -79,6 +83,13 @@ COMMANDS:
   sweep             Fig 7: cache hit rate vs capacity
                     --predictors learned,eam,none   --prompts 40   --out -
                     --fracs 0.05,0.10,...  (default: the paper's Fig-7 grid)
+  serve-sim         multi-tenant contention simulator: throughput-latency CSV
+                    over policy x backend x predictor x load x cache fraction
+                    --tenants 3        --horizon 12    --seed 7
+                    --policies fcfs,round-robin,srd   --backends flat,tiered
+                    --predictors eam,none             --loads 0.5,1,2,4
+                    --fracs 0.05,0.10,0.20            --max-concurrency 4
+                    --out serve_sim.csv   (synthetic corpora when no artifacts)
   eval              Table 1: predictor accuracy/F1
                     --split test   --prompts 100
   analyze           Figs 1-3: activation sparsity analysis
@@ -98,6 +109,7 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "info" => info(),
         "serve" => serve(&args),
+        "serve-sim" => serve_sim(&args),
         "sweep" => sweep(&args),
         "eval" => eval(&args),
         "analyze" => analyze(&args),
@@ -215,6 +227,164 @@ fn serve(args: &Args) -> Result<()> {
         stall_us / 1e3
     );
     Ok(())
+}
+
+/// Multi-tenant contention simulator (see `moe_beyond::workload`):
+/// extends Fig 7 into throughput–latency curves over a scheduler-policy
+/// × backend × predictor × offered-load × cache-fraction grid.  Runs
+/// self-contained on synthetic per-tenant corpora; with an artifact
+/// tree present the corpora come from `trace::corpus` instead.
+fn serve_sim(args: &Args) -> Result<()> {
+    let n_tenants = args.get_usize("tenants", 3)?;
+    let horizon = args.get_f64("horizon", 12.0)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    let max_concurrency = args.get_usize("max-concurrency", 4)?;
+    let out = args.get("out", "serve_sim.csv");
+
+    let policies: Vec<workload::SchedPolicy> = args
+        .get("policies", "fcfs,round-robin")
+        .split(',')
+        .map(|s| {
+            workload::SchedPolicy::parse(s.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown policy {s}"))
+        })
+        .collect::<Result<_>>()?;
+    let backends: Vec<workload::Backend> = args
+        .get("backends", "flat,tiered")
+        .split(',')
+        .map(|s| {
+            workload::Backend::parse(s.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown backend {s}"))
+        })
+        .collect::<Result<_>>()?;
+    let kinds: Vec<PredictorKind> = args
+        .get("predictors", "eam,none")
+        .split(',')
+        .map(|s| {
+            PredictorKind::parse(s.trim()).ok_or_else(|| anyhow::anyhow!("unknown predictor {s}"))
+        })
+        .collect::<Result<_>>()?;
+    let loads = parse_f64_list(&args.get("loads", "0.5,1,2,4"), "--loads")?;
+    let fracs = parse_f64_list(&args.get("fracs", "0.05,0.10,0.20"), "--fracs")?;
+
+    let spec = workload::WorkloadSpec::example(n_tenants, seed, horizon);
+
+    // tenant corpora: the artifact world's corpus sampler when present,
+    // the self-contained reuse-heavy generator otherwise
+    let (pools, fit, n_layers, n_experts): (Vec<Vec<PromptTrace>>, Vec<PromptTrace>, usize, usize) =
+        match harness::load_artifacts() {
+            Ok(arts) => {
+                let world = WorldModel::load(arts.path("world.json"))?;
+                let (nl, ne) = (
+                    world.meta.n_layers as usize,
+                    world.meta.n_experts as usize,
+                );
+                let mut pools = Vec::new();
+                let mut fit = Vec::new();
+                for t in &spec.tenants {
+                    let need = t.prompt_tokens.1 + t.decode_tokens.1;
+                    let corpus = CorpusConfig {
+                        seed: t.trace_seed,
+                        min_tokens: need,
+                        max_tokens: need,
+                        test_split: true,
+                        ..Default::default()
+                    };
+                    let mut g = TraceGenerator::new(&world, corpus, t.trace_seed);
+                    pools.push(g.generate(8));
+                    fit.extend(g.generate(4));
+                }
+                println!("tenant corpora: 8 traces/tenant from the artifact world");
+                (pools, fit, nl, ne)
+            }
+            Err(_) => {
+                println!("artifact tree absent — synthetic tenant corpora (4 layers x 64 experts)");
+                let pools = workload::synthetic_pools(&spec, 8, 4, 64);
+                let fit = workload::synthetic_fit_pool(&spec, 4, 4, 64);
+                (pools, fit, 4, 64)
+            }
+        };
+
+    let total = n_layers * n_experts;
+    let tier_base = TierConfig {
+        tiers: vec![
+            moe_beyond::tier::TierSpec::gpu(1), // resized per grid point
+            moe_beyond::tier::TierSpec::host((total / 4).max(1)),
+            moe_beyond::tier::TierSpec::ssd(total.max(1)),
+        ],
+        policy: "lru".into(),
+    };
+    let wcfg = WorkloadConfig {
+        max_concurrency,
+        ..Default::default()
+    };
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let inputs = workload::LoadSweepInputs {
+        spec: &spec,
+        pools: &pools,
+        fit_traces: &fit,
+        workload: &wcfg,
+        sim: &SimConfig::default(),
+        eam: &eam,
+        n_layers,
+        n_experts,
+        tier_base: &tier_base,
+    };
+    println!(
+        "serve-sim: {} tenants, horizon {:.0}s, base offered {:.2} rps; {} grid points",
+        spec.tenants.len(),
+        horizon,
+        spec.offered_rps(),
+        policies.len() * backends.len() * kinds.len() * loads.len() * fracs.len()
+    );
+    let points = workload::sweep_load(&inputs, &policies, &backends, &kinds, &loads, &fracs)?;
+
+    println!("\n== throughput-latency (aggregate across tenants) ==");
+    println!(
+        "{:>12} {:>7} {:>11} {:>5} {:>5} {:>10} {:>9} {:>12} {:>11} {:>6}",
+        "policy",
+        "backend",
+        "predictor",
+        "load",
+        "cap%",
+        "offer rps",
+        "done rps",
+        "p95 TTFT ms",
+        "p95 TBT ms",
+        "hit%"
+    );
+    for p in &points {
+        let a = &p.report.aggregate;
+        println!(
+            "{:>12} {:>7} {:>11} {:>5.2} {:>5.0} {:>10.2} {:>9.2} {:>12.1} {:>11.1} {:>6.1}",
+            p.policy.id(),
+            p.backend.id(),
+            p.predictor.id(),
+            p.load_mult,
+            p.cache_frac * 100.0,
+            p.report.offered_rps,
+            p.report.completed_rps,
+            a.ttft.p95_us / 1e3,
+            a.tbt.p95_us / 1e3,
+            a.cache.hit_rate() * 100.0
+        );
+    }
+    std::fs::write(&out, workload::load_csv(&points))?;
+    println!("\n{} rows written to {out}", points.len());
+    Ok(())
+}
+
+fn parse_f64_list(s: &str, flag: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{flag} must be comma-separated numbers"))
+        })
+        .collect()
 }
 
 fn sweep(args: &Args) -> Result<()> {

@@ -45,18 +45,7 @@ impl LatencyRecorder {
 
     pub fn report(&self) -> LatencyReport {
         let s = self.samples_us.lock().unwrap();
-        LatencyReport {
-            count: s.len(),
-            mean_us: if s.is_empty() {
-                0.0
-            } else {
-                s.iter().sum::<f64>() / s.len() as f64
-            },
-            p50_us: percentile(&s, 50.0),
-            p95_us: percentile(&s, 95.0),
-            p99_us: percentile(&s, 99.0),
-            max_us: s.iter().cloned().fold(0.0, f64::max),
-        }
+        LatencyReport::from_samples_us(&s)
     }
 }
 
@@ -68,6 +57,26 @@ pub struct LatencyReport {
     pub p95_us: f64,
     pub p99_us: f64,
     pub max_us: f64,
+}
+
+impl LatencyReport {
+    /// Build a report from raw µs samples — the path used by recorders
+    /// that never touch a wall clock (the virtual-time workload
+    /// simulator) as well as [`LatencyRecorder::report`].
+    pub fn from_samples_us(samples: &[f64]) -> Self {
+        LatencyReport {
+            count: samples.len(),
+            mean_us: if samples.is_empty() {
+                0.0
+            } else {
+                samples.iter().sum::<f64>() / samples.len() as f64
+            },
+            p50_us: percentile(samples, 50.0),
+            p95_us: percentile(samples, 95.0),
+            p99_us: percentile(samples, 99.0),
+            max_us: samples.iter().cloned().fold(0.0, f64::max),
+        }
+    }
 }
 
 impl std::fmt::Display for LatencyReport {
@@ -85,7 +94,13 @@ impl std::fmt::Display for LatencyReport {
 pub struct ServingMetrics {
     pub requests_admitted: Counter,
     pub requests_completed: Counter,
+    /// Requests actually dropped (never admitted).  Backpressured
+    /// submissions that block and then get in are NOT rejections — they
+    /// count under [`requests_backpressured`](Self::requests_backpressured).
     pub requests_rejected: Counter,
+    /// Submissions that found the queue full, blocked, and were then
+    /// admitted (admission-pressure signal, not a failure).
+    pub requests_backpressured: Counter,
     pub tokens_generated: Counter,
     pub cache_hits: Counter,
     pub cache_misses: Counter,
@@ -147,5 +162,30 @@ mod tests {
         m.cache_hits.add(3);
         m.cache_misses.add(1);
         assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_samples_matches_recorder() {
+        let samples: Vec<f64> = (1..=50).map(|x| x as f64).collect();
+        let r = LatencyRecorder::default();
+        for &s in &samples {
+            r.record_us(s);
+        }
+        let a = r.report();
+        let b = LatencyReport::from_samples_us(&samples);
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.p50_us, b.p50_us);
+        assert_eq!(a.p99_us, b.p99_us);
+        assert_eq!(a.mean_us, b.mean_us);
+        assert_eq!(LatencyReport::from_samples_us(&[]).count, 0);
+    }
+
+    #[test]
+    fn backpressure_is_not_rejection() {
+        let m = ServingMetrics::default();
+        m.requests_backpressured.inc();
+        m.requests_backpressured.inc();
+        assert_eq!(m.requests_backpressured.get(), 2);
+        assert_eq!(m.requests_rejected.get(), 0);
     }
 }

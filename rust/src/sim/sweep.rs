@@ -85,8 +85,10 @@ pub fn sweep_threads() -> usize {
 /// Map `f` over `jobs` on `threads` scoped workers.  Workers claim jobs
 /// from an atomic cursor and write results back by index, so the output
 /// order (and content — each job is self-contained) is identical to the
-/// serial `jobs.iter().map(f)`.
-fn parallel_map<J, R, F>(jobs: &[J], threads: usize, f: F) -> Result<Vec<R>>
+/// serial `jobs.iter().map(f)`.  Crate-visible: the workload load sweep
+/// (`crate::workload::sweep_load`) fans its grid out over the same
+/// workers.
+pub(crate) fn parallel_map<J, R, F>(jobs: &[J], threads: usize, f: F) -> Result<Vec<R>>
 where
     J: Sync,
     R: Send,

@@ -1,0 +1,45 @@
+//! Multi-tenant workload simulator: open-loop arrivals, shared-cache
+//! contention, SLO metrics.
+//!
+//! The paper (and the Fig-7 sweep) replays one stream at a time; the
+//! ROADMAP's north star is heavy multi-user traffic, where concurrent
+//! decode streams interleave on one engine and compete for one expert
+//! cache — the regime where recency heuristics lose their locality and
+//! a real predictor has to earn its keep.  This module makes that
+//! regime measurable, deterministically:
+//!
+//! * [`profile`] — who sends traffic: tenant profiles (Poisson / bursty
+//!   on-off arrival processes, prompt/decode length distributions,
+//!   per-tenant trace corpora) materialized into a seeded, open-loop
+//!   arrival [`Schedule`].
+//! * [`sched`] — the virtual-time engine: one shared
+//!   [`crate::memory::ExpertMemory`] (flat or tiered), pluggable
+//!   scheduling policies (FCFS / round-robin / shortest-remaining-
+//!   decode), a FIFO admission queue with modeled queueing delay, and
+//!   invariant counters (work conservation, starvation) the tests and
+//!   the CI perf gate assert on.
+//! * [`slo`] — per-tenant and aggregate TTFT / TBT / request-latency
+//!   percentiles, hit-rate-under-contention, and the deterministic JSON
+//!   encoding behind `benches/golden/workload.json`.
+//! * [`sweep_load`] — offered load × cache fraction × predictor (×
+//!   policy × backend) grids that extend Fig 7 into throughput–latency
+//!   curves, fanned out over the Fig-7 sweep's worker threads.
+//!
+//! Everything is virtual-time and seed-deterministic: no wall clock, no
+//! artifacts, no PJRT — `cargo bench --bench workload_contention` and
+//! the `serve-sim` CLI subcommand run self-contained.
+
+pub mod profile;
+pub mod sched;
+pub mod slo;
+pub mod sweep_load;
+
+pub use profile::{
+    synthetic_fit_pool, synthetic_pool, synthetic_pools, ArrivalEvent, ArrivalProcess, Schedule,
+    TenantProfile, WorkloadSpec,
+};
+pub use sched::{run_workload, SchedCounters, SchedPolicy, WorkloadInputs};
+pub use slo::{report_json, TenantSlo, WorkloadReport};
+pub use sweep_load::{
+    load_csv, sweep_load, sweep_load_threaded, Backend, LoadPoint, LoadSweepInputs,
+};

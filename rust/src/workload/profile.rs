@@ -1,0 +1,536 @@
+//! Tenant profiles and open-loop arrival generation.
+//!
+//! A [`WorkloadSpec`] describes *who* sends traffic (a set of
+//! [`TenantProfile`]s, each with its own arrival process and
+//! prompt/decode length distributions) independently of *how fast the
+//! engine drains it* — arrivals are open-loop: a tenant does not wait
+//! for its previous request to complete before sending the next one,
+//! which is what makes overload and queueing delay observable at all
+//! (the closed "submit everything up front" pattern can never show
+//! them).
+//!
+//! Everything is derived deterministically from `WorkloadSpec::seed`:
+//! the same spec always yields byte-identical arrival schedules, which
+//! is what the CI perf gate keys on.
+
+use anyhow::ensure;
+
+use crate::trace::PromptTrace;
+use crate::util::Rng;
+use crate::Result;
+
+/// Open-loop arrival process for one tenant.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `rate_rps` requests/second.
+    Poisson { rate_rps: f64 },
+    /// On/off-modulated Poisson: arrivals at `rate_rps` during `on_secs`
+    /// windows, silence for `off_secs` between them (bursty tenants —
+    /// agents, cron jobs — whose bursts are what break steady-state
+    /// cache locality).
+    Bursty {
+        rate_rps: f64,
+        on_secs: f64,
+        off_secs: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Mean offered rate in requests/second (burst rate × duty cycle).
+    pub fn mean_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => *rate_rps,
+            ArrivalProcess::Bursty {
+                rate_rps,
+                on_secs,
+                off_secs,
+            } => rate_rps * on_secs / (on_secs + off_secs),
+        }
+    }
+
+    /// Same process shape with every rate scaled by `mult` (the offered
+    /// load axis of `sweep_load`).
+    pub fn scaled(&self, mult: f64) -> Self {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => ArrivalProcess::Poisson {
+                rate_rps: rate_rps * mult,
+            },
+            ArrivalProcess::Bursty {
+                rate_rps,
+                on_secs,
+                off_secs,
+            } => ArrivalProcess::Bursty {
+                rate_rps: rate_rps * mult,
+                on_secs: *on_secs,
+                off_secs: *off_secs,
+            },
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                ensure!(*rate_rps > 0.0, "poisson rate must be > 0");
+            }
+            ArrivalProcess::Bursty {
+                rate_rps,
+                on_secs,
+                off_secs,
+            } => {
+                ensure!(*rate_rps > 0.0, "burst rate must be > 0");
+                ensure!(*on_secs > 0.0, "burst on-window must be > 0");
+                ensure!(*off_secs >= 0.0, "negative burst off-window");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One traffic class: arrival process plus request-shape distributions.
+#[derive(Debug, Clone)]
+pub struct TenantProfile {
+    pub name: String,
+    pub arrival: ArrivalProcess,
+    /// Prompt length drawn uniformly from this inclusive range.
+    pub prompt_tokens: (usize, usize),
+    /// `max_new_tokens` drawn uniformly from this inclusive range.
+    pub decode_tokens: (usize, usize),
+    /// Seeds this tenant's trace corpus (synthetic pool or
+    /// `trace::corpus` sampler) so tenants have distinct localities.
+    pub trace_seed: u64,
+}
+
+impl TenantProfile {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "tenant needs a name");
+        self.arrival.validate()?;
+        ensure!(
+            self.prompt_tokens.0 >= 1 && self.prompt_tokens.0 <= self.prompt_tokens.1,
+            "tenant {}: bad prompt_tokens range",
+            self.name
+        );
+        ensure!(
+            self.decode_tokens.0 >= 1 && self.decode_tokens.0 <= self.decode_tokens.1,
+            "tenant {}: bad decode_tokens range",
+            self.name
+        );
+        Ok(())
+    }
+}
+
+/// A full multi-tenant workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Master seed: arrival times, request shapes and trace choices all
+    /// derive from it.
+    pub seed: u64,
+    /// Arrivals are generated inside `[0, horizon_secs)`; the simulator
+    /// then drains the backlog past the horizon.
+    pub horizon_secs: f64,
+    pub tenants: Vec<TenantProfile>,
+}
+
+impl WorkloadSpec {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.horizon_secs > 0.0, "horizon must be > 0");
+        ensure!(!self.tenants.is_empty(), "spec needs at least one tenant");
+        for t in &self.tenants {
+            t.validate()?;
+        }
+        Ok(())
+    }
+
+    /// The spec with every tenant's arrival rate scaled by `mult`.
+    pub fn with_load(&self, mult: f64) -> WorkloadSpec {
+        let mut s = self.clone();
+        for t in &mut s.tenants {
+            t.arrival = t.arrival.scaled(mult);
+        }
+        s
+    }
+
+    /// Mean offered load across all tenants (requests/second).
+    pub fn offered_rps(&self) -> f64 {
+        self.tenants.iter().map(|t| t.arrival.mean_rps()).sum()
+    }
+
+    /// A deterministic n-tenant default mix cycling through three
+    /// archetypes — interactive chat (short, steady), an agent
+    /// (medium, bursty) and batch summarization (long prompts, slow) —
+    /// shared by the CLI, the bench, the example and the tests so they
+    /// all exercise the same traffic shape.
+    pub fn example(n_tenants: usize, seed: u64, horizon_secs: f64) -> WorkloadSpec {
+        let archetypes: [(&str, ArrivalProcess, (usize, usize), (usize, usize)); 3] = [
+            (
+                "chat",
+                ArrivalProcess::Poisson { rate_rps: 0.5 },
+                (24, 48),
+                (8, 16),
+            ),
+            (
+                "agent",
+                ArrivalProcess::Bursty {
+                    rate_rps: 1.0,
+                    on_secs: 2.0,
+                    off_secs: 2.0,
+                },
+                (32, 64),
+                (12, 24),
+            ),
+            (
+                "batch",
+                ArrivalProcess::Poisson { rate_rps: 0.2 },
+                (64, 96),
+                (16, 32),
+            ),
+        ];
+        let tenants = (0..n_tenants.max(1))
+            .map(|i| {
+                let (name, arrival, prompt, decode) = archetypes[i % 3].clone();
+                TenantProfile {
+                    name: format!("{}-{}", name, i),
+                    arrival,
+                    prompt_tokens: prompt,
+                    decode_tokens: decode,
+                    trace_seed: seed
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        .wrapping_add(i as u64 + 1),
+                }
+            })
+            .collect();
+        WorkloadSpec {
+            seed,
+            horizon_secs,
+            tenants,
+        }
+    }
+}
+
+/// One generated request arrival (times in virtual µs from run start).
+#[derive(Debug, Clone)]
+pub struct ArrivalEvent {
+    pub arrival_us: f64,
+    /// Index into `WorkloadSpec::tenants` / the trace pools.
+    pub tenant: usize,
+    /// Global id, assigned in arrival order after the tenant merge.
+    pub request_id: u64,
+    /// Index into the tenant's trace pool.
+    pub trace_idx: usize,
+    /// Prefill length (clamped so at least one decode token remains).
+    pub prompt_tokens: usize,
+    /// Decode length (clamped to the trace's remaining tokens).
+    pub decode_tokens: usize,
+}
+
+/// A fully materialized arrival schedule (sorted by arrival time).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub arrivals: Vec<ArrivalEvent>,
+    pub horizon_us: f64,
+    /// Realized offered load: arrivals / horizon.
+    pub offered_rps: f64,
+}
+
+impl WorkloadSpec {
+    /// Materialize the arrival schedule against per-tenant trace pools
+    /// (`pools[t]` backs tenant `t`; request lengths are clamped to the
+    /// chosen trace so every request has ≥ 1 prompt and ≥ 1 decode
+    /// token).  Deterministic in the spec seed.
+    pub fn generate(&self, pools: &[Vec<PromptTrace>]) -> Result<Schedule> {
+        self.validate()?;
+        ensure!(
+            pools.len() == self.tenants.len(),
+            "need one trace pool per tenant ({} pools for {} tenants)",
+            pools.len(),
+            self.tenants.len()
+        );
+        for (i, p) in pools.iter().enumerate() {
+            ensure!(!p.is_empty(), "tenant {} has an empty trace pool", i);
+            for tr in p {
+                ensure!(
+                    tr.n_tokens() >= 2,
+                    "tenant {} has a trace shorter than 2 tokens",
+                    i
+                );
+            }
+        }
+
+        let horizon_us = self.horizon_secs * 1e6;
+        let mut arrivals: Vec<ArrivalEvent> = Vec::new();
+        for (ti, tenant) in self.tenants.iter().enumerate() {
+            let mut rng = Rng::new(
+                self.seed
+                    .wrapping_mul(0x2545_F491_4F6C_DD1D)
+                    .wrapping_add((ti as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                    ^ tenant.trace_seed,
+            );
+            for t_us in arrival_times(&tenant.arrival, horizon_us, &mut rng) {
+                let trace_idx = rng.below(pools[ti].len());
+                let n = pools[ti][trace_idx].n_tokens();
+                let want_prompt = rng.range(tenant.prompt_tokens.0, tenant.prompt_tokens.1 + 1);
+                let want_decode = rng.range(tenant.decode_tokens.0, tenant.decode_tokens.1 + 1);
+                let prompt_tokens = want_prompt.clamp(1, n - 1);
+                let decode_tokens = want_decode.clamp(1, n - prompt_tokens);
+                arrivals.push(ArrivalEvent {
+                    arrival_us: t_us,
+                    tenant: ti,
+                    request_id: 0, // assigned after the merge
+                    trace_idx,
+                    prompt_tokens,
+                    decode_tokens,
+                });
+            }
+        }
+        // stable merge: arrival time, ties broken by tenant index so the
+        // schedule is identical regardless of float coincidences
+        arrivals.sort_by(|a, b| {
+            a.arrival_us
+                .partial_cmp(&b.arrival_us)
+                .unwrap()
+                .then(a.tenant.cmp(&b.tenant))
+        });
+        for (i, ev) in arrivals.iter_mut().enumerate() {
+            ev.request_id = i as u64;
+        }
+        let offered_rps = arrivals.len() as f64 / self.horizon_secs;
+        Ok(Schedule {
+            arrivals,
+            horizon_us,
+            offered_rps,
+        })
+    }
+}
+
+/// Sample one tenant's arrival times (µs) over `[0, horizon_us)`.
+fn arrival_times(process: &ArrivalProcess, horizon_us: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut out = Vec::new();
+    match *process {
+        ArrivalProcess::Poisson { rate_rps } => {
+            let mut clock = 0.0;
+            loop {
+                clock += exp_us(rate_rps, rng);
+                if clock >= horizon_us {
+                    break;
+                }
+                out.push(clock);
+            }
+        }
+        ArrivalProcess::Bursty {
+            rate_rps,
+            on_secs,
+            off_secs,
+        } => {
+            // exact on/off modulation: draw exponential inter-arrivals in
+            // "on-time" coordinates, then map on-time to wall time by
+            // inserting the off windows between bursts
+            let on_us = on_secs * 1e6;
+            let period_us = (on_secs + off_secs) * 1e6;
+            let mut on_time = 0.0;
+            loop {
+                on_time += exp_us(rate_rps, rng);
+                let cycles = (on_time / on_us).floor();
+                let wall = cycles * period_us + (on_time - cycles * on_us);
+                if wall >= horizon_us {
+                    break;
+                }
+                out.push(wall);
+            }
+        }
+    }
+    out
+}
+
+/// Exponential inter-arrival sample in µs for a rate in requests/second.
+fn exp_us(rate_rps: f64, rng: &mut Rng) -> f64 {
+    let u = (1.0 - rng.f64()).max(1e-300);
+    -u.ln() / rate_rps * 1e6
+}
+
+/// Reuse-heavy synthetic trace pool for one tenant: every prompt draws
+/// its experts from a ~10-wide working set inside the tenant's own
+/// 24-expert band, so concurrent tenants genuinely compete for cache
+/// instead of sharing one global working set.  Library twin of the
+/// bench-side `mk_reuse_traces`, kept here so the CLI, bench, example
+/// and tests cannot drift apart.
+pub fn synthetic_pool(
+    tenant_seed: u64,
+    n_traces: usize,
+    n_tokens: usize,
+    n_layers: u16,
+    n_experts: usize,
+) -> Vec<PromptTrace> {
+    assert!(
+        (24..=64).contains(&n_experts),
+        "synthetic pool needs 24..=64 experts"
+    );
+    let mut rng = Rng::new(tenant_seed);
+    let band_start = rng.below((n_experts - 24).max(1)) as u8;
+    (0..n_traces)
+        .map(|i| {
+            let base = band_start + rng.below(24 - 10) as u8;
+            let mut experts = Vec::with_capacity(n_tokens * n_layers as usize * 2);
+            for _ in 0..n_tokens * n_layers as usize {
+                let a = base + rng.below(10) as u8;
+                let mut b = base + rng.below(10) as u8;
+                if b == a {
+                    b = base + ((a - base + 1) % 10);
+                }
+                experts.push(a);
+                experts.push(b);
+            }
+            PromptTrace {
+                prompt_id: i as u32,
+                n_layers,
+                top_k: 2,
+                d_emb: 0,
+                tokens: vec![0; n_tokens],
+                embeddings: vec![],
+                experts,
+            }
+        })
+        .collect()
+}
+
+/// One synthetic pool per tenant of `spec`, each long enough for the
+/// tenant's largest prompt + decode draw.
+pub fn synthetic_pools(
+    spec: &WorkloadSpec,
+    n_traces: usize,
+    n_layers: u16,
+    n_experts: usize,
+) -> Vec<Vec<PromptTrace>> {
+    spec.tenants
+        .iter()
+        .map(|t| {
+            let n_tokens = t.prompt_tokens.1 + t.decode_tokens.1;
+            synthetic_pool(t.trace_seed, n_traces, n_tokens, n_layers, n_experts)
+        })
+        .collect()
+}
+
+/// Flattened fit corpus for offline-fitted predictors (EAMC,
+/// popularity): the same per-tenant generator at a fixed seed offset,
+/// so fit traces resemble — but never duplicate — each tenant's serving
+/// pool.  The one definition of that offset, shared by the CLI, bench,
+/// example and tests.
+pub fn synthetic_fit_pool(
+    spec: &WorkloadSpec,
+    n_traces: usize,
+    n_layers: u16,
+    n_experts: usize,
+) -> Vec<PromptTrace> {
+    let mut fit_spec = spec.clone();
+    for t in &mut fit_spec.tenants {
+        t.trace_seed = t.trace_seed.wrapping_add(0xF17);
+    }
+    synthetic_pools(&fit_spec, n_traces, n_layers, n_experts).concat()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec::example(3, 7, 10.0)
+    }
+
+    #[test]
+    fn example_spec_validates_and_mixes_archetypes() {
+        let s = spec();
+        s.validate().unwrap();
+        assert_eq!(s.tenants.len(), 3);
+        assert!(matches!(s.tenants[1].arrival, ArrivalProcess::Bursty { .. }));
+        assert!(s.offered_rps() > 0.0);
+    }
+
+    #[test]
+    fn load_scaling_scales_rates_only() {
+        let s = spec();
+        let s2 = s.with_load(4.0);
+        assert!((s2.offered_rps() - 4.0 * s.offered_rps()).abs() < 1e-9);
+        assert_eq!(s2.tenants[0].prompt_tokens, s.tenants[0].prompt_tokens);
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_sorted() {
+        let s = spec();
+        let pools = synthetic_pools(&s, 6, 4, 64);
+        let a = s.generate(&pools).unwrap();
+        let b = s.generate(&pools).unwrap();
+        assert!(!a.arrivals.is_empty());
+        assert_eq!(a.arrivals.len(), b.arrivals.len());
+        for (x, y) in a.arrivals.iter().zip(b.arrivals.iter()) {
+            assert_eq!(x.arrival_us.to_bits(), y.arrival_us.to_bits());
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.trace_idx, y.trace_idx);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.decode_tokens, y.decode_tokens);
+        }
+        for w in a.arrivals.windows(2) {
+            assert!(w[0].arrival_us <= w[1].arrival_us);
+        }
+        for (i, ev) in a.arrivals.iter().enumerate() {
+            assert_eq!(ev.request_id, i as u64);
+            assert!(ev.arrival_us < s.horizon_secs * 1e6);
+            let tr = &pools[ev.tenant][ev.trace_idx];
+            assert!(ev.prompt_tokens >= 1 && ev.decode_tokens >= 1);
+            assert!(ev.prompt_tokens + ev.decode_tokens <= tr.n_tokens());
+        }
+    }
+
+    #[test]
+    fn different_seed_changes_the_schedule() {
+        let s1 = spec();
+        let mut s2 = spec();
+        s2.seed = 8;
+        s2.tenants = WorkloadSpec::example(3, 8, 10.0).tenants;
+        let pools = synthetic_pools(&s1, 6, 4, 64);
+        let a = s1.generate(&pools).unwrap();
+        let b = s2.generate(&pools).unwrap();
+        let same = a.arrivals.len() == b.arrivals.len()
+            && a.arrivals
+                .iter()
+                .zip(b.arrivals.iter())
+                .all(|(x, y)| x.arrival_us.to_bits() == y.arrival_us.to_bits());
+        assert!(!same, "seed change left the schedule identical");
+    }
+
+    #[test]
+    fn bursty_arrivals_stay_inside_on_windows() {
+        let s = WorkloadSpec {
+            seed: 3,
+            horizon_secs: 40.0,
+            tenants: vec![TenantProfile {
+                name: "burst".into(),
+                arrival: ArrivalProcess::Bursty {
+                    rate_rps: 2.0,
+                    on_secs: 1.0,
+                    off_secs: 3.0,
+                },
+                prompt_tokens: (4, 8),
+                decode_tokens: (2, 4),
+                trace_seed: 9,
+            }],
+        };
+        let pools = synthetic_pools(&s, 4, 2, 64);
+        let sched = s.generate(&pools).unwrap();
+        assert!(sched.arrivals.len() >= 4, "burst tenant produced too few arrivals");
+        let period = 4.0 * 1e6;
+        let on = 1.0 * 1e6;
+        for ev in &sched.arrivals {
+            let pos = ev.arrival_us % period;
+            assert!(pos < on + 1e-3, "arrival at {} lands in the off window", ev.arrival_us);
+        }
+    }
+
+    #[test]
+    fn synthetic_pool_shapes() {
+        let p = synthetic_pool(5, 4, 30, 3, 64);
+        assert_eq!(p.len(), 4);
+        for tr in &p {
+            assert_eq!(tr.n_tokens(), 30);
+            assert_eq!(tr.experts.len(), 30 * 3 * 2);
+            assert!(tr.experts.iter().all(|&e| e < 64));
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! Virtual-time multi-tenant scheduler: interleaves the decode steps of
+//! every in-flight stream against ONE shared [`ExpertMemory`].
+//!
+//! The engine model matches the serving coordinator's reality (one edge
+//! accelerator == one execution stream): at any instant exactly one
+//! stream is either prefilling or decoding one token, and every stream's
+//! lookups/prefetches hit the same residency backend — so streams evict
+//! each other's experts, which is precisely the contention regime the
+//! single-stream Fig-7 replay cannot show.
+//!
+//! Time is virtual (µs): a decode step occupies the engine for
+//! `token_compute_us` plus the memory model's demand+stall delta for
+//! that token; prefill occupies `prefill_us_per_token × prompt` plus its
+//! fetch traffic.  No wall clock is ever read, so a seeded workload
+//! replays byte-identically — the CI perf gate depends on this.
+
+use crate::config::{EamConfig, SimConfig, WorkloadConfig};
+use crate::memory::ExpertMemory;
+use crate::predictor::{factory, DecodeContext, ExpertPredictor, PredictorKind, PredictorParams};
+use crate::trace::PromptTrace;
+use crate::workload::profile::{Schedule, WorkloadSpec};
+use crate::workload::slo::{TenantAcc, WorkloadReport};
+use crate::Result;
+
+/// Which in-flight stream decodes the next token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Run the earliest-admitted stream to completion (no interleaving —
+    /// the per-stream-locality-preserving baseline).
+    Fcfs,
+    /// One token per stream, cycling in admission order.
+    RoundRobin,
+    /// Step the stream with the fewest remaining decode tokens
+    /// (shortest-remaining-decode; ties broken by admission order).
+    ShortestRemaining,
+}
+
+impl SchedPolicy {
+    pub const ALL: [SchedPolicy; 3] = [
+        SchedPolicy::Fcfs,
+        SchedPolicy::RoundRobin,
+        SchedPolicy::ShortestRemaining,
+    ];
+
+    /// Config identifier (accepted by [`WorkloadConfig::policy`]).
+    pub fn id(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fcfs => "fcfs",
+            SchedPolicy::RoundRobin => "round-robin",
+            SchedPolicy::ShortestRemaining => "srd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fcfs" => Some(SchedPolicy::Fcfs),
+            "round-robin" | "rr" => Some(SchedPolicy::RoundRobin),
+            "srd" | "shortest-remaining" | "shortest-remaining-decode" => {
+                Some(SchedPolicy::ShortestRemaining)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Scheduler invariant counters — deterministic integers the perf gate
+/// and the invariant tests key on.
+#[derive(Debug, Clone, Default)]
+pub struct SchedCounters {
+    /// Decode steps executed (one token each).
+    pub steps: u64,
+    /// Prefill steps executed (one whole prompt each).
+    pub prefill_steps: u64,
+    pub admissions: u64,
+    pub completions: u64,
+    pub max_inflight: usize,
+    /// Largest number of arrived-but-unadmitted requests observed.
+    pub max_queue_depth: usize,
+    /// Virtual µs the engine spent executing.
+    pub busy_us: f64,
+    /// Virtual µs the engine sat idle waiting for the next arrival.
+    pub idle_us: f64,
+    /// Work-conservation violations: the engine idled while a runnable
+    /// stream or a due arrival existed.  Must stay 0.
+    pub idle_while_runnable: u64,
+    /// Picks of the same stream as the previous step while another
+    /// runnable stream existed.  Always 0 under round-robin (the
+    /// no-starvation guarantee); positive by design under FCFS.
+    pub repeat_pick_with_waiters: u64,
+}
+
+/// Everything one simulator run reads.
+pub struct WorkloadInputs<'a> {
+    pub spec: &'a WorkloadSpec,
+    pub schedule: &'a Schedule,
+    /// `pools[t]` backs tenant `t`'s requests.
+    pub pools: &'a [Vec<PromptTrace>],
+    /// Training traces for offline-fitted predictors (EAMC, popularity).
+    pub fit_traces: &'a [PromptTrace],
+    pub cfg: &'a WorkloadConfig,
+    pub sim: &'a SimConfig,
+    pub eam: &'a EamConfig,
+    pub n_layers: usize,
+    pub n_experts: usize,
+}
+
+/// One in-flight decode stream.
+struct Stream {
+    tenant: usize,
+    request_id: u64,
+    trace_idx: usize,
+    prompt: usize,
+    decode: usize,
+    arrival_us: f64,
+    slot: usize,
+    decoded: usize,
+    prefilled: bool,
+    last_token_us: f64,
+}
+
+/// Run one multi-tenant workload to drain against `memory`.
+///
+/// Per decode token the engine mirrors `SimEngine::run_prompt`'s
+/// measured phase (predict → prefetch → lookup ground truth →
+/// end_layer → observe); prefill mirrors the serving engine's warm-up
+/// (residency moves, hit/miss counters stay decode-only, fetch traffic
+/// still costs virtual time).  Predictor state lives in one replica per
+/// concurrency slot, so a slot's EAMC grows across the requests it
+/// serves exactly as a serial engine's would.
+pub fn run_workload(
+    inp: &WorkloadInputs<'_>,
+    kind: PredictorKind,
+    mut memory: Box<dyn ExpertMemory>,
+) -> Result<WorkloadReport> {
+    inp.cfg.validate()?;
+    inp.sim.validate()?;
+    anyhow::ensure!(
+        kind != PredictorKind::Learned,
+        "the learned predictor needs precomputed per-trace predictions; \
+         the workload simulator drives the heuristic kinds (eam, next-layer, \
+         popularity, oracle, none)"
+    );
+    anyhow::ensure!(
+        inp.pools.len() == inp.spec.tenants.len(),
+        "need one trace pool per tenant"
+    );
+    let policy = SchedPolicy::parse(&inp.cfg.policy)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheduler policy '{}'", inp.cfg.policy))?;
+
+    let backend = memory.name().to_string();
+    let n_layers = inp.n_layers;
+    let n_slots = inp.cfg.max_concurrency;
+    let params = PredictorParams {
+        eam: inp.eam,
+        predict_top_k: inp.sim.predict_top_k,
+        n_layers,
+        n_experts: inp.n_experts,
+        fit_traces: inp.fit_traces,
+    };
+    let mut predictors: Vec<Box<dyn ExpertPredictor>> = (0..n_slots)
+        .map(|_| factory::build(kind, &params))
+        .collect::<Result<_>>()?;
+    let mut slot_busy = vec![false; n_slots];
+
+    let mut acc: Vec<TenantAcc> = inp
+        .spec
+        .tenants
+        .iter()
+        .map(|_| TenantAcc::default())
+        .collect();
+    let mut counters = SchedCounters::default();
+    let mut completion_ids: Vec<u64> = Vec::new();
+
+    let arrivals = &inp.schedule.arrivals;
+    let mut clock = 0.0f64;
+    let mut next = 0usize; // next arrival to admit (FIFO admission queue)
+    let mut due = 0usize; // arrivals with arrival_us <= clock
+    let mut inflight: Vec<Stream> = Vec::new();
+    let mut rr_idx = 0usize;
+    let mut last_stepped: Option<u64> = None;
+
+    loop {
+        // ---- admit every due arrival up to the concurrency limit
+        while due < arrivals.len() && arrivals[due].arrival_us <= clock {
+            due += 1;
+        }
+        while next < due && inflight.len() < n_slots {
+            let ev = &arrivals[next];
+            let slot = slot_busy
+                .iter()
+                .position(|b| !*b)
+                .expect("free predictor slot under the concurrency limit");
+            slot_busy[slot] = true;
+            predictors[slot].begin_prompt(&inp.pools[ev.tenant][ev.trace_idx]);
+            acc[ev.tenant].queue.push(clock - ev.arrival_us);
+            inflight.push(Stream {
+                tenant: ev.tenant,
+                request_id: ev.request_id,
+                trace_idx: ev.trace_idx,
+                prompt: ev.prompt_tokens,
+                decode: ev.decode_tokens,
+                arrival_us: ev.arrival_us,
+                slot,
+                decoded: 0,
+                prefilled: false,
+                last_token_us: 0.0,
+            });
+            counters.admissions += 1;
+            next += 1;
+        }
+        counters.max_queue_depth = counters.max_queue_depth.max(due - next);
+        counters.max_inflight = counters.max_inflight.max(inflight.len());
+
+        // ---- idle: jump the virtual clock to the next arrival
+        if inflight.is_empty() {
+            if next >= arrivals.len() {
+                break; // drained
+            }
+            if due > next {
+                // defensive: a due arrival with a free engine must admit
+                counters.idle_while_runnable += 1;
+            }
+            let t = arrivals[next].arrival_us;
+            counters.idle_us += (t - clock).max(0.0);
+            clock = clock.max(t);
+            continue;
+        }
+
+        // ---- pick a stream
+        let i = match policy {
+            SchedPolicy::Fcfs => 0,
+            SchedPolicy::RoundRobin => {
+                if rr_idx >= inflight.len() {
+                    rr_idx = 0;
+                }
+                rr_idx
+            }
+            SchedPolicy::ShortestRemaining => {
+                let mut best = 0usize;
+                for j in 1..inflight.len() {
+                    let rj = inflight[j].decode - inflight[j].decoded;
+                    let rb = inflight[best].decode - inflight[best].decoded;
+                    if rj < rb {
+                        best = j;
+                    }
+                }
+                best
+            }
+        };
+        if inflight.len() >= 2 && last_stepped == Some(inflight[i].request_id) {
+            counters.repeat_pick_with_waiters += 1;
+        }
+        last_stepped = Some(inflight[i].request_id);
+
+        // ---- execute one unit of work (whole prefill or one token)
+        let was_decode;
+        let cost;
+        {
+            let s = &mut inflight[i];
+            let trace = &inp.pools[s.tenant][s.trace_idx];
+            let pred = predictors[s.slot].as_mut();
+            let ta = &mut acc[s.tenant];
+            was_decode = s.prefilled;
+            if !s.prefilled {
+                // prefill: warm the shared residency (unmeasured — the
+                // per-prompt warm-up epoch), still paying fetch traffic
+                let mut fetch_us = 0.0;
+                for t in 0..s.prompt {
+                    let ctx = DecodeContext { trace, t };
+                    for l in 0..n_layers {
+                        let truth = trace.expert_set(t, l);
+                        for e in truth.iter() {
+                            fetch_us += memory.lookup(l, e, false).fetch_us;
+                        }
+                        memory.end_layer();
+                        pred.observe(&ctx, l, truth);
+                    }
+                }
+                s.prefilled = true;
+                counters.prefill_steps += 1;
+                cost = inp.cfg.prefill_us_per_token * s.prompt as f64 + fetch_us;
+            } else {
+                // one decode token: predict → prefetch → reveal truth
+                let t = s.prompt + s.decoded;
+                let ctx = DecodeContext { trace, t };
+                let mark = memory.cost_marks();
+                for l in 0..n_layers {
+                    let truth = trace.expert_set(t, l);
+                    let predicted = pred.predict(&ctx, l);
+                    let pf = memory.prefetch(l, predicted);
+                    ta.cache.prefetches += pf.issued;
+                    ta.cache.wasted_prefetches += pf.too_late;
+                    for e in truth.iter() {
+                        ta.cache.prediction_total += 1;
+                        if predicted.contains(e) {
+                            ta.cache.prediction_hits += 1;
+                        }
+                    }
+                    for e in truth.iter() {
+                        let r = memory.lookup(l, e, true);
+                        if r.hit {
+                            ta.cache.hits += 1;
+                        } else {
+                            ta.cache.misses += 1;
+                            ta.cache.transfer_us += r.fetch_us;
+                        }
+                    }
+                    memory.end_layer();
+                    pred.observe(&ctx, l, truth);
+                }
+                let after = memory.cost_marks();
+                cost = inp.cfg.token_compute_us + (after.0 - mark.0) + (after.1 - mark.1);
+                s.decoded += 1;
+                counters.steps += 1;
+            }
+        }
+        clock += cost;
+        counters.busy_us += cost;
+
+        // ---- token SLO accounting + completion
+        let mut completed = false;
+        {
+            let s = &mut inflight[i];
+            if was_decode {
+                let ta = &mut acc[s.tenant];
+                if s.decoded == 1 {
+                    ta.ttft.push(clock - s.arrival_us);
+                } else {
+                    ta.tbt.push(clock - s.last_token_us);
+                }
+                s.last_token_us = clock;
+                completed = s.decoded == s.decode;
+            }
+        }
+        if completed {
+            let s = inflight.remove(i);
+            predictors[s.slot].end_prompt(&inp.pools[s.tenant][s.trace_idx]);
+            slot_busy[s.slot] = false;
+            let ta = &mut acc[s.tenant];
+            ta.latency.push(clock - s.arrival_us);
+            ta.completed += 1;
+            ta.tokens += s.decode as u64;
+            completion_ids.push(s.request_id);
+            counters.completions += 1;
+            if rr_idx > i {
+                rr_idx -= 1; // keep the cursor on the same logical stream
+            }
+        } else if policy == SchedPolicy::RoundRobin {
+            rr_idx = i + 1; // advance past the stream just stepped
+        }
+    }
+
+    // ---- fold the accumulators into the report
+    let virtual_secs = clock / 1e6;
+    let mut aggregate = TenantAcc::default();
+    for ta in &acc {
+        aggregate.merge(ta);
+    }
+    let total_tokens: u64 = acc.iter().map(|a| a.tokens).sum();
+    let tenants = acc
+        .into_iter()
+        .zip(inp.spec.tenants.iter())
+        .map(|(a, t)| a.into_slo(&t.name))
+        .collect();
+    let denom = virtual_secs.max(1e-9);
+    Ok(WorkloadReport {
+        policy: policy.id().to_string(),
+        backend,
+        predictor: kind.id().to_string(),
+        offered_rps: inp.schedule.offered_rps,
+        completed_rps: counters.completions as f64 / denom,
+        tokens_per_sec: total_tokens as f64 / denom,
+        virtual_secs,
+        counters,
+        aggregate: aggregate.into_slo("all"),
+        tenants,
+        memory: memory.stats(),
+        completion_ids,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_ids_round_trip() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(SchedPolicy::parse(p.id()), Some(p));
+        }
+        assert_eq!(SchedPolicy::parse("rr"), Some(SchedPolicy::RoundRobin));
+        assert_eq!(
+            SchedPolicy::parse("shortest-remaining"),
+            Some(SchedPolicy::ShortestRemaining)
+        );
+        assert_eq!(SchedPolicy::parse("magic"), None);
+    }
+}

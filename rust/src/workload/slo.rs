@@ -1,0 +1,223 @@
+//! SLO metrics for the multi-tenant simulator: per-tenant and aggregate
+//! TTFT / TBT / request-latency percentiles (virtual-time twins of the
+//! serving coordinator's wall-clock [`crate::metrics::LatencyReport`]s),
+//! hit-rate-under-contention, and the deterministic JSON encoding the CI
+//! perf gate diffs against its golden file.
+
+use crate::cache::CacheStats;
+use crate::memory::MemoryStats;
+use crate::metrics::LatencyReport;
+use crate::util::json::Json;
+use crate::workload::sched::SchedCounters;
+
+/// Raw per-tenant sample accumulation while the simulator runs.
+#[derive(Debug, Clone, Default)]
+pub struct TenantAcc {
+    /// Arrival → first decode token (µs); includes queueing + prefill.
+    pub ttft: Vec<f64>,
+    /// Time between consecutive decode tokens of one stream (µs); under
+    /// interleaving this is where contention shows first.
+    pub tbt: Vec<f64>,
+    /// Arrival → request completion (µs).
+    pub latency: Vec<f64>,
+    /// Arrival → admission (µs): modeled queueing delay.
+    pub queue: Vec<f64>,
+    /// Decode-phase hit/miss/prediction counters against the shared
+    /// expert memory.
+    pub cache: CacheStats,
+    pub completed: u64,
+    pub tokens: u64,
+}
+
+impl TenantAcc {
+    pub fn merge(&mut self, other: &TenantAcc) {
+        self.ttft.extend_from_slice(&other.ttft);
+        self.tbt.extend_from_slice(&other.tbt);
+        self.latency.extend_from_slice(&other.latency);
+        self.queue.extend_from_slice(&other.queue);
+        self.cache.merge(&other.cache);
+        self.completed += other.completed;
+        self.tokens += other.tokens;
+    }
+
+    /// Collapse the samples into percentile reports.
+    pub fn into_slo(self, name: &str) -> TenantSlo {
+        TenantSlo {
+            name: name.to_string(),
+            completed: self.completed,
+            tokens: self.tokens,
+            ttft: LatencyReport::from_samples_us(&self.ttft),
+            tbt: LatencyReport::from_samples_us(&self.tbt),
+            request_latency: LatencyReport::from_samples_us(&self.latency),
+            queue_delay: LatencyReport::from_samples_us(&self.queue),
+            cache: self.cache,
+        }
+    }
+}
+
+/// One tenant's (or the aggregate's) SLO outcome.
+#[derive(Debug, Clone)]
+pub struct TenantSlo {
+    pub name: String,
+    pub completed: u64,
+    pub tokens: u64,
+    pub ttft: LatencyReport,
+    pub tbt: LatencyReport,
+    pub request_latency: LatencyReport,
+    pub queue_delay: LatencyReport,
+    pub cache: CacheStats,
+}
+
+/// Everything one simulator run produced.
+#[derive(Debug, Clone)]
+pub struct WorkloadReport {
+    /// Scheduler policy id ("fcfs" | "round-robin" | "srd").
+    pub policy: String,
+    /// Residency backend name ("flat" | "tiered").
+    pub backend: String,
+    /// Predictor config id driving prefetch.
+    pub predictor: String,
+    /// Mean offered load of the generated schedule (requests/second).
+    pub offered_rps: f64,
+    /// Completions per virtual second (== offered below saturation).
+    pub completed_rps: f64,
+    /// Decode tokens per virtual second.
+    pub tokens_per_sec: f64,
+    /// Virtual clock at drain (seconds).
+    pub virtual_secs: f64,
+    pub counters: SchedCounters,
+    /// Cross-tenant aggregate (name "all").
+    pub aggregate: TenantSlo,
+    pub tenants: Vec<TenantSlo>,
+    /// Shared-memory cost/residency snapshot at drain.
+    pub memory: MemoryStats,
+    /// Request ids in completion order (scheduler-ordering tests; not
+    /// part of the JSON encoding).
+    pub completion_ids: Vec<u64>,
+}
+
+fn latency_json(r: &LatencyReport) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(r.count as f64)),
+        ("mean_us", Json::num(r.mean_us)),
+        ("p50_us", Json::num(r.p50_us)),
+        ("p95_us", Json::num(r.p95_us)),
+        ("p99_us", Json::num(r.p99_us)),
+        ("max_us", Json::num(r.max_us)),
+    ])
+}
+
+fn tenant_json(t: &TenantSlo) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&t.name)),
+        ("completed", Json::num(t.completed as f64)),
+        ("tokens", Json::num(t.tokens as f64)),
+        ("hits", Json::num(t.cache.hits as f64)),
+        ("misses", Json::num(t.cache.misses as f64)),
+        ("hit_rate", Json::num(t.cache.hit_rate())),
+        ("prediction_hits", Json::num(t.cache.prediction_hits as f64)),
+        ("prediction_total", Json::num(t.cache.prediction_total as f64)),
+        ("prefetches", Json::num(t.cache.prefetches as f64)),
+        ("wasted_prefetches", Json::num(t.cache.wasted_prefetches as f64)),
+        ("transfer_us", Json::num(t.cache.transfer_us)),
+        ("ttft", latency_json(&t.ttft)),
+        ("tbt", latency_json(&t.tbt)),
+        ("request_latency", latency_json(&t.request_latency)),
+        ("queue_delay", latency_json(&t.queue_delay)),
+    ])
+}
+
+/// Deterministic JSON encoding of a report: integer-valued floats print
+/// as integers, object keys are sorted (BTreeMap), and every number
+/// comes out of the same seeded virtual-time arithmetic — so two runs of
+/// the same workload serialize to byte-identical strings, which is the
+/// property the CI perf gate builds on.
+pub fn report_json(r: &WorkloadReport) -> Json {
+    let c = &r.counters;
+    Json::obj(vec![
+        ("policy", Json::str(&r.policy)),
+        ("backend", Json::str(&r.backend)),
+        ("predictor", Json::str(&r.predictor)),
+        ("offered_rps", Json::num(r.offered_rps)),
+        ("completed_rps", Json::num(r.completed_rps)),
+        ("tokens_per_sec", Json::num(r.tokens_per_sec)),
+        ("virtual_secs", Json::num(r.virtual_secs)),
+        (
+            "counters",
+            Json::obj(vec![
+                ("steps", Json::num(c.steps as f64)),
+                ("prefill_steps", Json::num(c.prefill_steps as f64)),
+                ("admissions", Json::num(c.admissions as f64)),
+                ("completions", Json::num(c.completions as f64)),
+                ("max_inflight", Json::num(c.max_inflight as f64)),
+                ("max_queue_depth", Json::num(c.max_queue_depth as f64)),
+                ("busy_us", Json::num(c.busy_us)),
+                ("idle_us", Json::num(c.idle_us)),
+                (
+                    "idle_while_runnable",
+                    Json::num(c.idle_while_runnable as f64),
+                ),
+                (
+                    "repeat_pick_with_waiters",
+                    Json::num(c.repeat_pick_with_waiters as f64),
+                ),
+            ]),
+        ),
+        (
+            "memory",
+            Json::obj(vec![
+                ("demand_us", Json::num(r.memory.demand_us)),
+                ("prefetch_us", Json::num(r.memory.prefetch_us)),
+                ("stall_us", Json::num(r.memory.stall_us)),
+            ]),
+        ),
+        ("aggregate", tenant_json(&r.aggregate)),
+        (
+            "tenants",
+            Json::Arr(r.tenants.iter().map(tenant_json).collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_concatenates_and_sums() {
+        let mut a = TenantAcc {
+            ttft: vec![1.0],
+            completed: 2,
+            tokens: 10,
+            ..Default::default()
+        };
+        let b = TenantAcc {
+            ttft: vec![3.0, 4.0],
+            completed: 1,
+            tokens: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.ttft, vec![1.0, 3.0, 4.0]);
+        assert_eq!(a.completed, 3);
+        assert_eq!(a.tokens, 15);
+    }
+
+    #[test]
+    fn into_slo_builds_percentiles() {
+        let acc = TenantAcc {
+            ttft: (1..=100).map(|x| x as f64).collect(),
+            completed: 100,
+            tokens: 400,
+            ..Default::default()
+        };
+        let slo = acc.into_slo("t0");
+        assert_eq!(slo.name, "t0");
+        assert_eq!(slo.ttft.count, 100);
+        assert!((slo.ttft.p50_us - 50.0).abs() <= 1.0);
+        assert_eq!(slo.ttft.max_us, 100.0);
+        // empty series stay well-defined
+        assert_eq!(slo.tbt.count, 0);
+        assert_eq!(slo.tbt.p95_us, 0.0);
+    }
+}

@@ -1,0 +1,277 @@
+//! `sweep_load` — Fig 7 extended into throughput–latency curves: a
+//! (scheduler policy × backend × predictor × offered load × cache
+//! fraction) grid, each point one full multi-tenant drain, fanned out
+//! over the same scoped worker threads as the Fig-7 capacity sweep
+//! (`sim::sweep::parallel_map`, index-keyed write-back, bit-identical to
+//! a serial run).
+
+use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
+use crate::memory;
+use crate::predictor::PredictorKind;
+use crate::sim::sweep::{parallel_map, sweep_threads};
+use crate::trace::PromptTrace;
+use crate::workload::profile::WorkloadSpec;
+use crate::workload::sched::{run_workload, SchedPolicy, WorkloadInputs};
+use crate::workload::slo::WorkloadReport;
+use crate::Result;
+
+/// Residency backend axis of the load sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Flat,
+    Tiered,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 2] = [Backend::Flat, Backend::Tiered];
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            Backend::Flat => "flat",
+            Backend::Tiered => "tiered",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "flat" => Some(Backend::Flat),
+            "tiered" => Some(Backend::Tiered),
+            _ => None,
+        }
+    }
+}
+
+/// Everything the grid shares.
+pub struct LoadSweepInputs<'a> {
+    pub spec: &'a WorkloadSpec,
+    pub pools: &'a [Vec<PromptTrace>],
+    pub fit_traces: &'a [PromptTrace],
+    /// Policy field is ignored — the policy is a grid axis.
+    pub workload: &'a WorkloadConfig,
+    pub sim: &'a SimConfig,
+    pub eam: &'a EamConfig,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// Base hierarchy for `Backend::Tiered` points; its GPU tier is
+    /// resized per cache fraction, host/SSD stay as configured.
+    pub tier_base: &'a TierConfig,
+}
+
+/// One grid point's outcome.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    pub policy: SchedPolicy,
+    pub backend: Backend,
+    pub predictor: PredictorKind,
+    pub load_mult: f64,
+    pub cache_frac: f64,
+    pub report: WorkloadReport,
+}
+
+type GridJob = (SchedPolicy, Backend, PredictorKind, f64, f64);
+
+fn run_load_point(inputs: &LoadSweepInputs<'_>, job: &GridJob) -> Result<LoadPoint> {
+    let &(policy, backend, kind, load_mult, cache_frac) = job;
+    let spec = inputs.spec.with_load(load_mult);
+    let schedule = spec.generate(inputs.pools)?;
+
+    let total = inputs.n_layers * inputs.n_experts;
+    let cap = ((total as f64 * cache_frac).round() as usize).max(1);
+    // DMA hides under one layer's share of the token compute, the same
+    // coupling the serving engine uses (CacheConfig::overlap_per_layer)
+    let overlap_us = inputs.workload.token_compute_us / inputs.n_layers.max(1) as f64;
+    let mem = match backend {
+        Backend::Flat => memory::build(
+            "lru",
+            &CacheConfig::default().with_capacity(cap),
+            None,
+            inputs.sim,
+            inputs.n_experts,
+            overlap_us,
+        )?,
+        Backend::Tiered => {
+            let cfg = inputs.tier_base.clone().with_gpu_capacity(cap);
+            memory::build(
+                "lru",
+                &CacheConfig::default(),
+                Some(&cfg),
+                inputs.sim,
+                inputs.n_experts,
+                overlap_us,
+            )?
+        }
+    };
+
+    let mut wcfg = inputs.workload.clone();
+    wcfg.policy = policy.id().to_string();
+    let winp = WorkloadInputs {
+        spec: &spec,
+        schedule: &schedule,
+        pools: inputs.pools,
+        fit_traces: inputs.fit_traces,
+        cfg: &wcfg,
+        sim: inputs.sim,
+        eam: inputs.eam,
+        n_layers: inputs.n_layers,
+        n_experts: inputs.n_experts,
+    };
+    let report = run_workload(&winp, kind, mem)?;
+    Ok(LoadPoint {
+        policy,
+        backend,
+        predictor: kind,
+        load_mult,
+        cache_frac,
+        report,
+    })
+}
+
+/// Run the load grid with the default worker count.
+pub fn sweep_load(
+    inputs: &LoadSweepInputs<'_>,
+    policies: &[SchedPolicy],
+    backends: &[Backend],
+    kinds: &[PredictorKind],
+    loads: &[f64],
+    fracs: &[f64],
+) -> Result<Vec<LoadPoint>> {
+    sweep_load_threaded(inputs, policies, backends, kinds, loads, fracs, sweep_threads())
+}
+
+/// [`sweep_load`] on an explicit worker count (`1` = serial).  Output is
+/// deterministic: identical to the serial run for any count.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_load_threaded(
+    inputs: &LoadSweepInputs<'_>,
+    policies: &[SchedPolicy],
+    backends: &[Backend],
+    kinds: &[PredictorKind],
+    loads: &[f64],
+    fracs: &[f64],
+    threads: usize,
+) -> Result<Vec<LoadPoint>> {
+    let mut grid: Vec<GridJob> = Vec::new();
+    for &p in policies {
+        for &b in backends {
+            for &k in kinds {
+                for &l in loads {
+                    for &f in fracs {
+                        grid.push((p, b, k, l, f));
+                    }
+                }
+            }
+        }
+    }
+    parallel_map(&grid, threads, |job| run_load_point(inputs, job))
+}
+
+/// Throughput–latency CSV over the grid (one row per point; fixed
+/// decimal places so the file is stable and diff-friendly).
+pub fn load_csv(points: &[LoadPoint]) -> String {
+    let mut out = String::from(
+        "policy,backend,predictor,load_mult,offered_rps,cache_frac,completed,completed_rps,\
+         tokens_per_sec,hit_rate,prediction_hit_rate,p50_ttft_ms,p95_ttft_ms,p50_tbt_ms,\
+         p95_tbt_ms,p50_latency_ms,p95_latency_ms,p95_queue_ms,demand_ms,stall_ms\n",
+    );
+    for p in points {
+        let r = &p.report;
+        let a = &r.aggregate;
+        out.push_str(&format!(
+            "{},{},{},{:.3},{:.4},{:.3},{},{:.4},{:.2},{:.4},{:.4},\
+             {:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3}\n",
+            p.policy.id(),
+            p.backend.id(),
+            p.predictor.id(),
+            p.load_mult,
+            r.offered_rps,
+            p.cache_frac,
+            a.completed,
+            r.completed_rps,
+            r.tokens_per_sec,
+            a.cache.hit_rate(),
+            a.cache.prediction_hit_rate(),
+            a.ttft.p50_us / 1e3,
+            a.ttft.p95_us / 1e3,
+            a.tbt.p50_us / 1e3,
+            a.tbt.p95_us / 1e3,
+            a.request_latency.p50_us / 1e3,
+            a.request_latency.p95_us / 1e3,
+            a.queue_delay.p95_us / 1e3,
+            r.memory.demand_us / 1e3,
+            r.memory.stall_us / 1e3,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::profile::{synthetic_fit_pool, synthetic_pools};
+
+    fn fixture() -> (WorkloadSpec, Vec<Vec<PromptTrace>>, Vec<PromptTrace>) {
+        let spec = WorkloadSpec::example(2, 11, 4.0);
+        let pools = synthetic_pools(&spec, 4, 3, 64);
+        let fit = synthetic_fit_pool(&spec, 2, 3, 64);
+        (spec, pools, fit)
+    }
+
+    #[test]
+    fn grid_covers_the_product_and_is_thread_invariant() {
+        let (spec, pools, fit) = fixture();
+        let wcfg = WorkloadConfig::default();
+        let tier = TierConfig::default();
+        let sim = SimConfig::default();
+        let eam = EamConfig {
+            kmeans_clusters: 0,
+            ..Default::default()
+        };
+        let inputs = LoadSweepInputs {
+            spec: &spec,
+            pools: &pools,
+            fit_traces: &fit,
+            workload: &wcfg,
+            sim: &sim,
+            eam: &eam,
+            n_layers: 3,
+            n_experts: 64,
+            tier_base: &tier,
+        };
+        let policies = [SchedPolicy::Fcfs, SchedPolicy::RoundRobin];
+        let backends = [Backend::Flat, Backend::Tiered];
+        let kinds = [PredictorKind::None];
+        let loads = [1.0, 2.0];
+        let fracs = [0.1];
+        let serial = sweep_load_threaded(
+            &inputs, &policies, &backends, &kinds, &loads, &fracs, 1,
+        )
+        .unwrap();
+        assert_eq!(serial.len(), 2 * 2 * 2);
+        let par = sweep_load_threaded(
+            &inputs, &policies, &backends, &kinds, &loads, &fracs, 4,
+        )
+        .unwrap();
+        for (s, p) in serial.iter().zip(par.iter()) {
+            assert_eq!(s.policy, p.policy);
+            assert_eq!(s.backend, p.backend);
+            assert_eq!(s.report.counters.completions, p.report.counters.completions);
+            assert_eq!(s.report.aggregate.cache.hits, p.report.aggregate.cache.hits);
+            assert_eq!(
+                s.report.virtual_secs.to_bits(),
+                p.report.virtual_secs.to_bits()
+            );
+        }
+        // every point drained its whole schedule
+        for pt in &serial {
+            assert_eq!(
+                pt.report.counters.completions,
+                pt.report.counters.admissions
+            );
+            assert_eq!(pt.report.counters.idle_while_runnable, 0);
+            assert_eq!(pt.report.backend, pt.backend.id());
+        }
+        let csv = load_csv(&serial);
+        assert_eq!(csv.lines().count(), serial.len() + 1);
+        assert!(csv.starts_with("policy,backend,predictor"));
+    }
+}
