@@ -7,6 +7,7 @@
 use std::time::Instant;
 
 /// Run `f` once, returning (result, seconds).
+#[allow(dead_code)] // shared via #[path]; not every bench uses every helper
 pub fn time_block<T>(name: &str, f: impl FnOnce() -> T) -> T {
     let t0 = Instant::now();
     let out = f();
@@ -16,6 +17,7 @@ pub fn time_block<T>(name: &str, f: impl FnOnce() -> T) -> T {
 
 /// Repeat `f` until ~`target_secs` elapsed (at least `min_iters`), print
 /// mean/std per iteration in µs, and return mean µs.
+#[allow(dead_code)] // shared via #[path]; not every bench uses every helper
 pub fn bench_loop(name: &str, min_iters: usize, target_secs: f64, mut f: impl FnMut()) -> f64 {
     // warmup
     f();
@@ -41,6 +43,7 @@ pub fn bench_loop(name: &str, min_iters: usize, target_secs: f64, mut f: impl Fn
 }
 
 /// Simple env-var knob for bench scale.
+#[allow(dead_code)] // shared via #[path]; not every bench uses every helper
 pub fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name)
         .ok()

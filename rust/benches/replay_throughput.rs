@@ -1,0 +1,232 @@
+//! Bench: replay-core throughput (perf tracking, no paper figure).
+//!
+//! Self-contained (synthetic reuse-heavy traces, fixed seeds, no
+//! artifacts/PJRT).  Two sections:
+//!
+//! 1. **LRU/no-prefetch capacity sweep** — the exact per-capacity replay
+//!    vs the Mattson stack-distance fast path over the same Fig-7
+//!    fraction grid.  Outputs are asserted bit-identical and the fast
+//!    path must be ≥ 3× faster (`MOEB_REPLAY_MIN_SPEEDUP` overrides the
+//!    gate); the structural argument is that the sweep does one corpus
+//!    pass instead of one per fraction.
+//! 2. **Predictor-driven replay** — the batched `lookup_set` hot path vs
+//!    the scalar delegation (`memory::ScalarPath`) on an oracle-driven
+//!    replay.  Outputs asserted identical; tokens/sec reported for both
+//!    (the gain here is per-expert virtual-call elimination, so it is
+//!    reported, not gated).
+//!
+//! Tokens/sec methodology: one "sweep token" is one decode token of one
+//! prompt at one grid point, so a capacity sweep covers
+//! `prompts × tokens × fracs` tokens regardless of which path computed
+//! it — the fast path is credited with the tokens it made redundant.
+//! Per-iteration wall times take the MINIMUM over `MOEB_REPLAY_REPS`
+//! repeats (the standard noise-robust estimator).
+//!
+//! Metrics land in `target/replay/metrics.json`; the CI perf-gate job
+//! uploads that file as a workflow artifact next to the workload golden.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{env_usize, mk_reuse_traces};
+
+use std::time::Instant;
+
+use moe_beyond::cache::{CacheStats, LruCache};
+use moe_beyond::config::{CacheConfig, EamConfig, SimConfig};
+use moe_beyond::memory::{ExpertMemory, FlatMemory, ScalarPath};
+use moe_beyond::predictor::OraclePredictor;
+use moe_beyond::sim::harness::FIG7_FRACS;
+use moe_beyond::sim::sweep::{
+    sweep_capacities_replay_threaded, sweep_capacities_threaded, SweepInputs,
+};
+use moe_beyond::sim::{PredictorKind, SimEngine};
+use moe_beyond::trace::{CompiledCorpus, PromptTrace};
+
+const N_LAYERS: usize = 6;
+const N_EXPERTS: usize = 64;
+
+/// Minimum wall-clock seconds of `f` over `reps` runs.
+fn min_secs(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn assert_points_identical(a: &moe_beyond::sim::SweepResult, b: &moe_beyond::sim::SweepResult) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (x, y) in a.points.iter().zip(b.points.iter()) {
+        assert_eq!(x.capacity_experts, y.capacity_experts);
+        assert_eq!(x.hit_rate.to_bits(), y.hit_rate.to_bits());
+        assert_eq!(x.stats.hits, y.stats.hits);
+        assert_eq!(x.stats.misses, y.stats.misses);
+        assert_eq!(x.stats.prediction_total, y.stats.prediction_total);
+        assert_eq!(x.stats.transfer_us.to_bits(), y.stats.transfer_us.to_bits());
+    }
+}
+
+fn oracle_replay(
+    scalar: bool,
+    traces: &[PromptTrace],
+    compiled: &CompiledCorpus,
+    capacity: usize,
+    sim: &SimConfig,
+) -> CacheStats {
+    let mut stats = CacheStats::default();
+    for (tr, ct) in traces.iter().zip(compiled.iter()) {
+        let flat = FlatMemory::new(
+            Box::new(LruCache::new(capacity)),
+            CacheConfig::default().with_capacity(capacity),
+            N_EXPERTS,
+            sim.prefetch_budget,
+            f64::INFINITY,
+        );
+        let mem: Box<dyn ExpertMemory> = if scalar {
+            Box::new(ScalarPath::new(Box::new(flat)))
+        } else {
+            Box::new(flat)
+        };
+        let mut engine = SimEngine::new(mem, sim.clone(), N_EXPERTS);
+        engine.run_prompt_compiled(tr, ct, &mut OraclePredictor::new(), &mut stats);
+    }
+    stats
+}
+
+fn main() -> moe_beyond::Result<()> {
+    let prompts = env_usize("MOEB_REPLAY_PROMPTS", 32);
+    let tokens = env_usize("MOEB_REPLAY_TOKENS", 64);
+    let reps = env_usize("MOEB_REPLAY_REPS", 10);
+    let min_speedup = env_usize("MOEB_REPLAY_MIN_SPEEDUP", 3) as f64;
+
+    let test = mk_reuse_traces(prompts, tokens, N_LAYERS as u16, 91);
+    let fit = mk_reuse_traces(8, tokens, N_LAYERS as u16, 92);
+    let inputs = SweepInputs {
+        test_traces: &test,
+        fit_traces: &fit,
+        learned: None,
+        sim: SimConfig::default(),
+        eam: EamConfig::default(),
+        n_layers: N_LAYERS,
+        n_experts: N_EXPERTS,
+    };
+    let fracs = FIG7_FRACS;
+    let sweep_tokens = (prompts * tokens * fracs.len()) as f64;
+
+    // ---- section 1: no-prefetch capacity sweep, exact vs stack-distance
+    println!("== LRU/no-prefetch capacity sweep: exact replay vs stack-distance ==");
+    let exact = sweep_capacities_replay_threaded(PredictorKind::None, fracs, &inputs, 1)?;
+    let fast = sweep_capacities_threaded(PredictorKind::None, fracs, &inputs, 1)?;
+    assert_points_identical(&exact, &fast);
+
+    let time_replay = |reps: usize| {
+        min_secs(reps, || {
+            let r =
+                sweep_capacities_replay_threaded(PredictorKind::None, fracs, &inputs, 1).unwrap();
+            std::hint::black_box(r);
+        })
+    };
+    let time_fast = |reps: usize| {
+        min_secs(reps, || {
+            let r = sweep_capacities_threaded(PredictorKind::None, fracs, &inputs, 1).unwrap();
+            std::hint::black_box(r);
+        })
+    };
+    let mut replay_s = time_replay(reps);
+    let mut fast_s = time_fast(reps);
+    let mut sweep_speedup = replay_s / fast_s.max(1e-12);
+    if sweep_speedup < min_speedup {
+        // one noise retry before failing the gate: a shared CI runner can
+        // starve one side's timing loop; keep each side's best time
+        replay_s = replay_s.min(time_replay(reps * 2));
+        fast_s = fast_s.min(time_fast(reps * 2));
+        sweep_speedup = replay_s / fast_s.max(1e-12);
+    }
+    println!(
+        "  grid: {} prompts x {} tokens x {} fracs ({} sweep tokens)",
+        prompts,
+        tokens,
+        fracs.len(),
+        sweep_tokens as u64
+    );
+    println!(
+        "  exact replay:   {:>9.2} ms/sweep  ({:>12.0} tokens/s)",
+        replay_s * 1e3,
+        sweep_tokens / replay_s
+    );
+    println!(
+        "  stack-distance: {:>9.2} ms/sweep  ({:>12.0} tokens/s)  => {:.1}x",
+        fast_s * 1e3,
+        sweep_tokens / fast_s,
+        sweep_speedup
+    );
+    assert!(
+        sweep_speedup >= min_speedup,
+        "stack-distance fast path only {sweep_speedup:.2}x over exact replay (gate: {min_speedup}x)"
+    );
+
+    // ---- section 2: predictor-driven replay, scalar vs batched lookups
+    println!("\n== predictor-driven replay (oracle): scalar vs batched lookup_set ==");
+    let capacity = ((N_LAYERS * N_EXPERTS) as f64 * 0.10).round() as usize;
+    let compiled = CompiledCorpus::compile(&test);
+    let sim = SimConfig::default();
+    let s_scalar = oracle_replay(true, &test, &compiled, capacity, &sim);
+    let s_batched = oracle_replay(false, &test, &compiled, capacity, &sim);
+    assert_eq!(s_scalar.hits, s_batched.hits);
+    assert_eq!(s_scalar.misses, s_batched.misses);
+    assert_eq!(s_scalar.prediction_hits, s_batched.prediction_hits);
+    assert_eq!(
+        s_scalar.transfer_us.to_bits(),
+        s_batched.transfer_us.to_bits()
+    );
+
+    let replay_tokens = (prompts * tokens) as f64;
+    let scalar_s = min_secs(reps, || {
+        std::hint::black_box(oracle_replay(true, &test, &compiled, capacity, &sim));
+    });
+    let batched_s = min_secs(reps, || {
+        std::hint::black_box(oracle_replay(false, &test, &compiled, capacity, &sim));
+    });
+    println!(
+        "  scalar path:  {:>9.2} ms/replay  ({:>12.0} tokens/s)",
+        scalar_s * 1e3,
+        replay_tokens / scalar_s
+    );
+    println!(
+        "  batched path: {:>9.2} ms/replay  ({:>12.0} tokens/s)  => {:.2}x",
+        batched_s * 1e3,
+        replay_tokens / batched_s,
+        scalar_s / batched_s.max(1e-12)
+    );
+
+    // ---- metrics artifact for the CI perf-gate job
+    let out_dir = std::path::Path::new("target/replay");
+    std::fs::create_dir_all(out_dir)?;
+    let json = format!(
+        "{{\"schema\":1,\"prompts\":{},\"tokens_per_prompt\":{},\"layers\":{},\"fracs\":{},\
+         \"replay_sweep_s\":{:.6},\"stackdist_sweep_s\":{:.6},\"stackdist_speedup\":{:.3},\
+         \"replay_tokens_per_sec\":{:.0},\"stackdist_tokens_per_sec\":{:.0},\
+         \"scalar_replay_s\":{:.6},\"batched_replay_s\":{:.6},\"batched_speedup\":{:.3},\
+         \"scalar_tokens_per_sec\":{:.0},\"batched_tokens_per_sec\":{:.0},\"parity\":true}}",
+        prompts,
+        tokens,
+        N_LAYERS,
+        fracs.len(),
+        replay_s,
+        fast_s,
+        sweep_speedup,
+        sweep_tokens / replay_s,
+        sweep_tokens / fast_s,
+        scalar_s,
+        batched_s,
+        scalar_s / batched_s.max(1e-12),
+        replay_tokens / scalar_s,
+        replay_tokens / batched_s,
+    );
+    std::fs::write(out_dir.join("metrics.json"), &json)?;
+    println!("\nmetrics written to target/replay/metrics.json");
+    println!("parity + speedup gate: PASS");
+    Ok(())
+}

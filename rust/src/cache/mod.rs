@@ -8,6 +8,7 @@ mod belady;
 mod lfu;
 mod lru;
 pub mod policy;
+pub mod stackdist;
 mod stats;
 mod vram;
 
@@ -15,6 +16,7 @@ pub use belady::{belady_hit_rate, BeladyCache};
 pub use lfu::LfuCache;
 pub use lru::LruCache;
 pub use policy::{CachePolicy, EvictionPolicy, ExpertKey};
+pub use stackdist::StackDistProfile;
 pub use stats::CacheStats;
 pub use vram::VramModel;
 

@@ -1,0 +1,318 @@
+//! Mattson stack-distance profiling — the whole LRU hit-rate-vs-capacity
+//! curve from ONE pass over a trace.
+//!
+//! LRU has the stack (inclusion) property: an access whose stack
+//! distance is `d` (the number of *distinct* keys referenced since the
+//! previous access to the same key) hits every LRU cache of capacity
+//! `> d` and misses every smaller one.  So a single replay that records
+//! the histogram of stack distances answers "how many hits at capacity
+//! C?" for EVERY C at once — the Fig-7 no-prefetch baseline axis costs
+//! one corpus pass instead of one replay per capacity fraction
+//! (`sim::sweep` wires this in as a fast path; see
+//! `sweep_capacities_replay_threaded` for the retained exact-replay
+//! fallback).
+//!
+//! The fast path only applies to *demand-only* LRU replay
+//! ([`crate::predictor::NoPrefetch`]): prefetching inserts keys the
+//! reference stream never touched, which breaks the inclusion property
+//! (a small cache can evict a prefetched key a big cache keeps), so
+//! predictor-driven sweep points always take the exact replay.
+//!
+//! Distances are computed with a Fenwick tree over access timestamps
+//! (the classic O(N log N) Mattson algorithm): each in-stack key is
+//! marked at its most recent access position, so the number of marks in
+//! `(last[k], now)` is exactly the number of distinct keys referenced
+//! since `last[k]`.
+
+use crate::cache::CacheStats;
+use crate::trace::CompiledTrace;
+
+/// Fenwick (binary indexed) tree over 1-based positions.
+struct Fenwick {
+    tree: Vec<u32>,
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Self {
+        Self {
+            tree: vec![0; n + 1],
+        }
+    }
+
+    fn add(&mut self, mut i: usize, delta: i32) {
+        while i < self.tree.len() {
+            self.tree[i] = (self.tree[i] as i32 + delta) as u32;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of marks in positions `1..=i`.
+    fn prefix(&self, mut i: usize) -> u32 {
+        let mut s = 0u32;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
+/// Stack-distance histogram of the *measured* accesses of one or more
+/// prompt replays (warm-up accesses shape the distances but are never
+/// recorded — exactly the simulator's warm-up epoch semantics).
+#[derive(Debug, Clone, Default)]
+pub struct StackDistProfile {
+    /// `hist[d]` = measured accesses at stack distance `d`; such an
+    /// access hits every LRU cache with capacity `> d`.
+    hist: Vec<u64>,
+    /// Measured first-touch accesses — a miss at every capacity.
+    pub cold: u64,
+    /// Total measured accesses (`hits_at(c) + misses` for any `c`).
+    pub measured: u64,
+}
+
+impl StackDistProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn record(&mut self, depth: usize) {
+        if self.hist.len() <= depth {
+            self.hist.resize(depth + 1, 0);
+        }
+        self.hist[depth] += 1;
+        self.measured += 1;
+    }
+
+    fn record_cold(&mut self) {
+        self.cold += 1;
+        self.measured += 1;
+    }
+
+    /// Fold another profile in (capacity curves are additive across
+    /// prompts because the sweep replays each prompt on a fresh cache).
+    pub fn merge(&mut self, other: &StackDistProfile) {
+        if self.hist.len() < other.hist.len() {
+            self.hist.resize(other.hist.len(), 0);
+        }
+        for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
+            *a += b;
+        }
+        self.cold += other.cold;
+        self.measured += other.measured;
+    }
+
+    /// Measured hits an LRU cache of `capacity` experts would serve.
+    pub fn hits_at(&self, capacity: usize) -> u64 {
+        self.hist.iter().take(capacity).sum()
+    }
+
+    /// The [`CacheStats`] a no-prefetch LRU replay at `capacity` would
+    /// produce: every measured access is also a prediction-total count
+    /// with zero prediction hits (the `NoPrefetch` predictor), and each
+    /// miss is charged `pcie_us_per_expert` of transfer time.
+    pub fn cache_stats(&self, capacity: usize, pcie_us_per_expert: f64) -> CacheStats {
+        let hits = self.hits_at(capacity);
+        let misses = self.measured - hits;
+        CacheStats {
+            hits,
+            misses,
+            prefetches: 0,
+            wasted_prefetches: 0,
+            prediction_hits: 0,
+            prediction_total: self.measured,
+            // n·cost is bit-identical to the replay's per-miss
+            // accumulation whenever partial sums are exactly
+            // representable (integer-valued µs costs, as configured
+            // throughout this crate)
+            transfer_us: misses as f64 * pcie_us_per_expert,
+        }
+    }
+}
+
+/// Profile one prompt's LRU reference stream (the exact stream
+/// `SimEngine::run_prompt` generates: token-major, then layer, then
+/// ascending expert id within each ground-truth set) into `out`.
+///
+/// `warmup_tokens` mirrors `SimConfig::warmup_tokens`: accesses of
+/// tokens `< warmup` move the (virtual) residency but are not recorded.
+pub fn profile_prompt(
+    trace: &CompiledTrace,
+    n_experts: usize,
+    warmup_tokens: usize,
+    out: &mut StackDistProfile,
+) {
+    let n_tokens = trace.n_tokens();
+    let n_layers = trace.n_layers();
+    let warm = warmup_tokens.min(n_tokens);
+    let n_refs = trace.total_activations();
+    let mut fen = Fenwick::new(n_refs);
+    // last access position per dense key (layer * n_experts + expert);
+    // 0 = never accessed (positions are 1-based)
+    let mut last = vec![0u32; n_layers * n_experts];
+    let mut pos = 0usize;
+    // all marks sit at positions < pos, so the full prefix sum is just
+    // the number of distinct keys seen so far — one counter instead of a
+    // second Fenwick query per access
+    let mut in_stack = 0u32;
+    for t in 0..n_tokens {
+        let measured = t >= warm;
+        for l in 0..n_layers {
+            for e in trace.set(t, l).iter() {
+                pos += 1;
+                let k = l * n_experts + e as usize;
+                let prev = last[k] as usize;
+                if prev == 0 {
+                    if measured {
+                        out.record_cold();
+                    }
+                    in_stack += 1;
+                } else {
+                    // distinct keys referenced since `prev`: every
+                    // in-stack key is marked at its latest position, so
+                    // count marks in (prev, pos) = in_stack - prefix(prev)
+                    let depth = (in_stack - fen.prefix(prev)) as usize;
+                    if measured {
+                        out.record(depth);
+                    }
+                    fen.add(prev, -1);
+                }
+                fen.add(pos, 1);
+                last[k] = pos as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{CachePolicy, LruCache};
+    use crate::trace::{CompiledTrace, PromptTrace};
+    use crate::util::Rng;
+
+    fn random_trace(rng: &mut Rng, n_tokens: usize, n_layers: u16, pool: u8) -> PromptTrace {
+        let mut experts = Vec::new();
+        for _ in 0..n_tokens * n_layers as usize {
+            let a = rng.below(pool as usize) as u8;
+            let b = (a + 1 + rng.below(pool as usize - 2) as u8) % pool;
+            experts.push(a);
+            experts.push(b);
+        }
+        PromptTrace {
+            prompt_id: 0,
+            n_layers,
+            top_k: 2,
+            d_emb: 0,
+            tokens: vec![0; n_tokens],
+            embeddings: vec![],
+            experts,
+        }
+    }
+
+    /// Brute-force LRU replay of the same reference stream at one
+    /// capacity (the definitionally-correct reference).
+    fn brute_force_hits(
+        trace: &CompiledTrace,
+        n_experts: usize,
+        warmup_tokens: usize,
+        capacity: usize,
+    ) -> (u64, u64) {
+        let mut cache = LruCache::new(capacity);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let warm = warmup_tokens.min(trace.n_tokens());
+        for t in 0..trace.n_tokens() {
+            for l in 0..trace.n_layers() {
+                for e in trace.set(t, l).iter() {
+                    let k = crate::cache::policy::key(l, e, n_experts);
+                    if cache.touch(k) {
+                        if t >= warm {
+                            hits += 1;
+                        }
+                    } else {
+                        if t >= warm {
+                            misses += 1;
+                        }
+                        cache.insert(k);
+                    }
+                }
+            }
+        }
+        (hits, misses)
+    }
+
+    #[test]
+    fn single_pass_curve_matches_brute_force_lru() {
+        let mut rng = Rng::new(401);
+        for _case in 0..30 {
+            let n_tokens = rng.range(2, 40);
+            let warmup = rng.below(12);
+            let tr = random_trace(&mut rng, n_tokens, 3, 16);
+            let ct = CompiledTrace::compile(&tr);
+            let mut p = StackDistProfile::new();
+            profile_prompt(&ct, 16, warmup, &mut p);
+            for capacity in 1..=40 {
+                let (hits, misses) = brute_force_hits(&ct, 16, warmup, capacity);
+                assert_eq!(
+                    p.hits_at(capacity),
+                    hits,
+                    "capacity {capacity} warmup {warmup}"
+                );
+                assert_eq!(p.measured - p.hits_at(capacity), misses);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_profiles_add_curves() {
+        let mut rng = Rng::new(402);
+        let a = random_trace(&mut rng, 20, 2, 12);
+        let b = random_trace(&mut rng, 15, 2, 12);
+        let (ca, cb) = (CompiledTrace::compile(&a), CompiledTrace::compile(&b));
+        let mut pa = StackDistProfile::new();
+        let mut pb = StackDistProfile::new();
+        profile_prompt(&ca, 12, 4, &mut pa);
+        profile_prompt(&cb, 12, 4, &mut pb);
+        let mut merged = pa.clone();
+        merged.merge(&pb);
+        for c in [1usize, 3, 8, 24] {
+            assert_eq!(merged.hits_at(c), pa.hits_at(c) + pb.hits_at(c));
+        }
+        assert_eq!(merged.measured, pa.measured + pb.measured);
+        assert_eq!(merged.cold, pa.cold + pb.cold);
+    }
+
+    #[test]
+    fn cache_stats_shape() {
+        let mut rng = Rng::new(403);
+        let tr = random_trace(&mut rng, 24, 3, 16);
+        let ct = CompiledTrace::compile(&tr);
+        let mut p = StackDistProfile::new();
+        profile_prompt(&ct, 16, 8, &mut p);
+        let s = p.cache_stats(6, 1400.0);
+        assert_eq!(s.lookups(), p.measured);
+        assert_eq!(s.prediction_total, p.measured);
+        assert_eq!(s.prediction_hits, 0);
+        assert_eq!(s.prefetches, 0);
+        assert_eq!(s.transfer_us, s.misses as f64 * 1400.0);
+        // monotone non-decreasing hits in capacity
+        let mut prev = 0;
+        for c in 1..32 {
+            let h = p.hits_at(c);
+            assert!(h >= prev);
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn fully_warm_prompt_records_nothing() {
+        let mut rng = Rng::new(404);
+        let tr = random_trace(&mut rng, 10, 2, 12);
+        let ct = CompiledTrace::compile(&tr);
+        let mut p = StackDistProfile::new();
+        profile_prompt(&ct, 12, 10, &mut p);
+        assert_eq!(p.measured, 0);
+        assert_eq!(p.cold, 0);
+        assert_eq!(p.hits_at(1000), 0);
+    }
+}

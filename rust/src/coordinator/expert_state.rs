@@ -96,18 +96,16 @@ impl ExpertCacheManager {
         stats: &mut GenStats,
         decode_phase: bool,
     ) {
-        for e in actual.iter() {
-            if self.memory.lookup(layer, e, true).hit {
-                stats.cache_hits += 1;
-                if decode_phase {
-                    stats.decode_cache_hits += 1;
-                }
-            } else {
-                stats.cache_misses += 1;
-                if decode_phase {
-                    stats.decode_cache_misses += 1;
-                }
-            }
+        // one set-level lookup for the whole layer (same residency/cost
+        // mutations as ascending-id scalar lookups — see ExpertMemory)
+        let batch = self.memory.lookup_set(layer, actual, true);
+        let hits = batch.hits.len() as u64;
+        let misses = actual.len() as u64 - hits;
+        stats.cache_hits += hits;
+        stats.cache_misses += misses;
+        if decode_phase {
+            stats.decode_cache_hits += hits;
+            stats.decode_cache_misses += misses;
         }
         self.memory.end_layer();
     }

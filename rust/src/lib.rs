@@ -11,7 +11,10 @@
 //!   promotion/demotion and per-tier cost models), prefetch pipeline, the
 //!   [`predictor`] factory over the MoE-Infinity / DeepSpeed-MoE /
 //!   BrainStorm heuristic baselines, the trace-driven, thread-parallel
-//!   cache simulator behind the paper's Fig. 7, the [`workload`]
+//!   cache simulator behind the paper's Fig. 7 (batched set-level replay
+//!   over pre-compiled [`trace::CompiledTrace`] tables, with a Mattson
+//!   stack-distance fast path for the whole LRU baseline capacity axis —
+//!   see [`cache::stackdist`]), the [`workload`]
 //!   multi-tenant simulator (open-loop arrivals, shared-cache
 //!   contention, SLO metrics, throughput–latency load sweeps), and the
 //!   evaluation harness behind Table 1.

@@ -3,7 +3,7 @@
 
 use crate::cache::{policy, CachePolicy, VramModel};
 use crate::config::CacheConfig;
-use crate::memory::{DmaBudget, ExpertMemory, Lookup, MemoryStats, Prefetched};
+use crate::memory::{DmaBudget, ExpertMemory, Lookup, LookupBatch, MemoryStats, Prefetched};
 use crate::tier::TierStats;
 use crate::util::ExpertSet;
 
@@ -35,14 +35,11 @@ impl FlatMemory {
             budget: DmaBudget::new(prefetch_budget),
         }
     }
-}
 
-impl ExpertMemory for FlatMemory {
-    fn name(&self) -> &'static str {
-        "flat"
-    }
-
-    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+    /// Shared lookup body: `lookup` is one call, `lookup_set` loops it
+    /// without re-entering the vtable, so the two paths cannot drift.
+    #[inline]
+    fn lookup_one(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
         let k = policy::key(layer, expert, self.n_experts);
         if self.cache.touch(k) {
             if measured {
@@ -62,6 +59,31 @@ impl ExpertMemory for FlatMemory {
                 fetch_us: self.pcie_us_per_expert,
             }
         }
+    }
+}
+
+impl ExpertMemory for FlatMemory {
+    fn name(&self) -> &'static str {
+        "flat"
+    }
+
+    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+        self.lookup_one(layer, expert, measured)
+    }
+
+    /// Native batched lookup: one virtual call per layer, hit mask built
+    /// as a bitmask, same ascending-id mutation order as scalar lookups.
+    fn lookup_set(&mut self, layer: usize, truth: ExpertSet, measured: bool) -> LookupBatch {
+        let mut out = LookupBatch::default();
+        for e in truth.iter() {
+            let r = self.lookup_one(layer, e, measured);
+            if r.hit {
+                out.hits.insert(e);
+            } else {
+                out.fetch_us += r.fetch_us;
+            }
+        }
+        out
     }
 
     fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
@@ -182,6 +204,33 @@ mod tests {
         assert_eq!(pf.landed, 2); // 2 and 3 land, 1 was resident
         assert_eq!(pf.too_late, 1); // 4 misses the window
         assert_eq!(m.resident_count(), 3);
+    }
+
+    #[test]
+    fn lookup_set_matches_scalar_sequence() {
+        let mut batched = mem(4, 12);
+        let mut scalar = mem(4, 12);
+        let truth = ExpertSet::from_ids([1u8, 5, 9]);
+        scalar.lookup(0, 3, false);
+        batched.lookup(0, 3, false);
+        scalar.lookup(0, 5, true);
+        batched.lookup(0, 5, true);
+        let b = batched.lookup_set(0, truth, true);
+        let mut hits = ExpertSet::new();
+        let mut fetch = 0.0;
+        for e in truth.iter() {
+            let r = scalar.lookup(0, e, true);
+            if r.hit {
+                hits.insert(e);
+            } else {
+                fetch += r.fetch_us;
+            }
+        }
+        assert_eq!(b.hits, hits);
+        assert_eq!(b.fetch_us.to_bits(), fetch.to_bits());
+        assert_eq!(b.hits, ExpertSet::from_ids([5u8]));
+        assert_eq!(batched.cost_marks(), scalar.cost_marks());
+        assert_eq!(batched.resident_count(), scalar.resident_count());
     }
 
     #[test]

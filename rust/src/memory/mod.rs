@@ -36,7 +36,15 @@
 //!         }
 //!         self.inner.lookup(layer, expert, measured)
 //!     }
-//!     // prefetch / end_layer / cost_marks / ... delegate to `inner`
+//!     // prefetch / end_layer / cost_marks / ... delegate to `inner`.
+//!     //
+//!     // `lookup_set` is OPTIONAL: the trait's default implementation
+//!     // expands a set-level call into scalar `lookup`s, so a minimal
+//!     // backend like this one is already correct on the batched replay
+//!     // hot path.  Override it only to go faster — the override must
+//!     // make the same residency/cost mutations as ascending-id scalar
+//!     // lookups (assert that with a `ScalarPath`-vs-native parity test
+//!     // like `tests/replay_parity.rs`).
 //! }
 //! ```
 //!
@@ -63,6 +71,23 @@ pub struct Lookup {
     pub hit: bool,
     /// Demand-fetch cost of this access in µs (0 on a hit): the flat
     /// PCIe cost, or the fetch cost of the deepest tier actually reached.
+    pub fetch_us: f64,
+}
+
+/// Outcome of one set-level lookup ([`ExpertMemory::lookup_set`]).
+///
+/// Replaces per-expert [`Lookup`] returns on the replay hot path: the
+/// hit mask answers "which of the requested experts were GPU-resident"
+/// in one value, and `truth.len() - hits.len()` is the miss count.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LookupBatch {
+    /// Subset of the requested set served from GPU residency (tier 0).
+    pub hits: ExpertSet,
+    /// Summed demand-fetch cost of the misses in µs, accumulated in
+    /// ascending expert-id order (so the sum is bit-identical to the
+    /// scalar loop's per-miss accumulation whenever the partial sums are
+    /// exactly representable — true for the integer-valued µs costs used
+    /// throughout this crate).
     pub fetch_us: f64,
 }
 
@@ -126,6 +151,31 @@ pub trait ExpertMemory: Send {
     /// residency only (warm-up epoch): no cost, no counters.
     fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup;
 
+    /// Look up an executed layer's whole ground-truth set in one call,
+    /// admitting misses into GPU residency exactly as per-expert
+    /// [`lookup`](ExpertMemory::lookup) calls in ascending-id order
+    /// would.  The replay engines call this once per layer instead of
+    /// `top_k` scalar lookups through the vtable.
+    ///
+    /// The default implementation delegates to scalar `lookup`, so
+    /// third-party backends keep working unchanged; `FlatMemory` and
+    /// `TieredMemory` provide native implementations that skip the
+    /// per-expert dynamic dispatch while making the identical sequence
+    /// of residency/cost mutations (the parity suites in
+    /// `tests/replay_parity.rs` hold both to byte-identical stats).
+    fn lookup_set(&mut self, layer: usize, truth: ExpertSet, measured: bool) -> LookupBatch {
+        let mut out = LookupBatch::default();
+        for e in truth.iter() {
+            let r = self.lookup(layer, e, measured);
+            if r.hit {
+                out.hits.insert(e);
+            } else {
+                out.fetch_us += r.fetch_us;
+            }
+        }
+        out
+    }
+
     /// Prefetch a predicted set for `layer`, issued before the layer
     /// runs.  Already-resident experts are refreshed; at most the
     /// effective DMA budget of transfers land, the rest are too late.
@@ -164,6 +214,75 @@ pub trait ExpertMemory: Send {
     /// Drop all staged residency (cost accumulators are kept — they are
     /// cumulative across a run).
     fn clear(&mut self);
+}
+
+/// Adapter that pins any backend to the trait-default scalar lookup
+/// path: every `lookup_set` call expands into per-expert `lookup`s on
+/// the wrapped backend, never its native batched implementation.
+///
+/// This is the reference side of the batched-vs-scalar parity suites
+/// (`tests/replay_parity.rs`) and the baseline side of
+/// `benches/replay_throughput.rs`; it is also handy when bisecting a
+/// suspected batched-path bug in a third-party backend.
+pub struct ScalarPath(Box<dyn ExpertMemory>);
+
+impl ScalarPath {
+    pub fn new(inner: Box<dyn ExpertMemory>) -> Self {
+        Self(inner)
+    }
+}
+
+impl ExpertMemory for ScalarPath {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+        self.0.lookup(layer, expert, measured)
+    }
+
+    // lookup_set deliberately NOT overridden: the trait default expands
+    // it into the scalar lookups above.
+
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
+        self.0.prefetch(layer, predicted)
+    }
+
+    fn end_layer(&mut self) {
+        self.0.end_layer()
+    }
+
+    fn cost_marks(&self) -> (f64, f64) {
+        self.0.cost_marks()
+    }
+
+    fn set_prefetch_budget(&mut self, budget: usize) {
+        self.0.set_prefetch_budget(budget)
+    }
+
+    fn set_batch_share(&mut self, batch: usize) {
+        self.0.set_batch_share(batch)
+    }
+
+    fn effective_prefetch_budget(&self) -> usize {
+        self.0.effective_prefetch_budget()
+    }
+
+    fn resident_count(&self) -> usize {
+        self.0.resident_count()
+    }
+
+    fn tier_stats(&self) -> Option<&TierStats> {
+        self.0.tier_stats()
+    }
+
+    fn stats(&self) -> MemoryStats {
+        self.0.stats()
+    }
+
+    fn clear(&mut self) {
+        self.0.clear()
+    }
 }
 
 /// Per-layer DMA-budget bookkeeping shared by every backend — one source

@@ -4,7 +4,7 @@
 
 use crate::cache::policy;
 use crate::config::TierConfig;
-use crate::memory::{DmaBudget, ExpertMemory, Lookup, MemoryStats, Prefetched};
+use crate::memory::{DmaBudget, ExpertMemory, Lookup, LookupBatch, MemoryStats, Prefetched};
 use crate::tier::{TierCostModel, TierStats, TieredCache};
 use crate::util::ExpertSet;
 use crate::Result;
@@ -35,14 +35,12 @@ impl TieredMemory {
             budget: DmaBudget::new(prefetch_budget),
         })
     }
-}
 
-impl ExpertMemory for TieredMemory {
-    fn name(&self) -> &'static str {
-        "tiered"
-    }
-
-    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+    /// Shared lookup body: `lookup` is one call, `lookup_set` loops it
+    /// without re-entering the vtable, so the two paths cannot drift
+    /// (TierStats/TierCostModel mutations happen in the identical order).
+    #[inline]
+    fn lookup_one(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
         let k = policy::key(layer, expert, self.n_experts);
         // promote() already handles the resident-at-GPU case as a pure
         // recency touch (found = Some(0), no demotions), so one call
@@ -76,6 +74,31 @@ impl ExpertMemory for TieredMemory {
             hit: false,
             fetch_us: self.cost.fetch_us(depth),
         }
+    }
+}
+
+impl ExpertMemory for TieredMemory {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+        self.lookup_one(layer, expert, measured)
+    }
+
+    /// Native batched lookup: one virtual call per layer, hit mask built
+    /// as a bitmask, same ascending-id promotion order as scalar lookups.
+    fn lookup_set(&mut self, layer: usize, truth: ExpertSet, measured: bool) -> LookupBatch {
+        let mut out = LookupBatch::default();
+        for e in truth.iter() {
+            let r = self.lookup_one(layer, e, measured);
+            if r.hit {
+                out.hits.insert(e);
+            } else {
+                out.fetch_us += r.fetch_us;
+            }
+        }
+        out
     }
 
     fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
@@ -217,6 +240,37 @@ mod tests {
         let ts = m.tier_stats().unwrap();
         assert_eq!(ts.prefetch_promotions, 1);
         assert!(m.lookup(0, 1, true).hit);
+    }
+
+    #[test]
+    fn lookup_set_matches_scalar_sequence() {
+        let mut batched = mem(2, 4, 12);
+        let mut scalar = mem(2, 4, 12);
+        // stage the hierarchy identically: 1 demoted to host, 2/3 on GPU
+        for m in [&mut batched, &mut scalar] {
+            m.lookup(0, 1, true);
+            m.lookup(0, 2, true);
+            m.lookup(0, 3, true);
+        }
+        let truth = ExpertSet::from_ids([1u8, 3, 7]); // host / gpu / cold
+        let b = batched.lookup_set(0, truth, true);
+        let mut hits = ExpertSet::new();
+        let mut fetch = 0.0;
+        for e in truth.iter() {
+            let r = scalar.lookup(0, e, true);
+            if r.hit {
+                hits.insert(e);
+            } else {
+                fetch += r.fetch_us;
+            }
+        }
+        assert_eq!(b.hits, hits);
+        assert_eq!(b.fetch_us.to_bits(), fetch.to_bits());
+        assert_eq!(batched.cost_marks(), scalar.cost_marks());
+        let (bt, st) = (batched.tier_stats().unwrap(), scalar.tier_stats().unwrap());
+        assert_eq!(bt.served, st.served);
+        assert_eq!(bt.cold, st.cold);
+        assert_eq!(bt.demotions, st.demotions);
     }
 
     #[test]

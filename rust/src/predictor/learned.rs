@@ -13,20 +13,37 @@
 //! `precompute` evaluates a whole trace once and `CachedPredictor` replays
 //! it across every point of a capacity sweep.
 
+use std::cell::RefCell;
 use std::path::Path;
 
 use anyhow::ensure;
 
 use crate::config::Artifacts;
 use crate::predictor::{DecodeContext, ExpertPredictor};
-use crate::runtime::{Executable, PjrtRuntime, TensorArg, WeightBlob};
+use crate::runtime::{Executable, PjrtRuntime, TensorView, WeightBlob};
 use crate::trace::PromptTrace;
 use crate::util::{math, ExpertSet};
 use crate::Result;
 
+/// Reusable staging buffers for `predict_window`: the padded window, the
+/// validity mask, and the batch-replicated argument tensors.  Kept in a
+/// `RefCell` so `predict_window` stays `&self` (the model is driven from
+/// one engine thread); capacity is retained across calls, so the
+/// per-chunk `Vec` allocations of the old code disappear after the
+/// first window.
+#[derive(Default)]
+struct PredictScratch {
+    padded: Vec<f32>,
+    mask: Vec<f32>,
+    emb_b: Vec<f32>,
+    lid_b: Vec<i32>,
+    mask_b: Vec<f32>,
+}
+
 /// The loaded predictor model (weights resident on device).
 pub struct LearnedModel {
     exe_batch: Executable,
+    scratch: RefCell<PredictScratch>,
     pub window: usize,
     pub d_tok: usize,
     pub n_layers: usize,
@@ -49,6 +66,7 @@ impl LearnedModel {
         exe_batch.set_resident_args(rt, &params)?;
         Ok(Self {
             exe_batch,
+            scratch: RefCell::new(PredictScratch::default()),
             window: arts.predictor.window as usize,
             d_tok: arts.predictor.d_tok as usize,
             n_layers: arts.predictor.n_model_layers as usize,
@@ -78,6 +96,7 @@ impl LearnedModel {
         exe_batch.set_resident_args(rt, &params)?;
         Ok(Self {
             exe_batch,
+            scratch: RefCell::new(PredictScratch::default()),
             window,
             d_tok,
             n_layers,
@@ -96,27 +115,33 @@ impl LearnedModel {
         ensure!(emb.len() == n_real * self.d_tok, "embedding shape mismatch");
         let (b, t, d) = (self.batch, self.window, self.d_tok);
 
-        let mut padded = vec![0.0f32; t * d];
-        padded[..n_real * d].copy_from_slice(emb);
-        let mut mask = vec![0.0f32; t];
-        mask[..n_real].fill(1.0);
+        // staging buffers persist across calls (capacity retained): the
+        // only remaining per-call allocation is the returned logits
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        s.padded.clear();
+        s.padded.resize(t * d, 0.0);
+        s.padded[..n_real * d].copy_from_slice(emb);
+        s.mask.clear();
+        s.mask.resize(t, 0.0);
+        s.mask[..n_real].fill(1.0);
 
         let mut out = vec![0.0f32; layers.len() * n_real * self.n_experts];
         for (chunk_i, chunk) in layers.chunks(b).enumerate() {
             // batch rows: same window, different layer ids (pad with layer 0)
-            let mut emb_b = Vec::with_capacity(b * t * d);
-            let mut lid_b = Vec::with_capacity(b * t);
-            let mut mask_b = Vec::with_capacity(b * t);
+            s.emb_b.clear();
+            s.lid_b.clear();
+            s.mask_b.clear();
             for bi in 0..b {
-                emb_b.extend_from_slice(&padded);
+                s.emb_b.extend_from_slice(&s.padded);
                 let lid = *chunk.get(bi).unwrap_or(&0) as i32;
-                lid_b.extend(std::iter::repeat(lid).take(t));
-                mask_b.extend_from_slice(&mask);
+                s.lid_b.extend(std::iter::repeat(lid).take(t));
+                s.mask_b.extend_from_slice(&s.mask);
             }
-            let logits = self.exe_batch.call_flat(&[
-                TensorArg::F32(emb_b, vec![b, t, d]),
-                TensorArg::I32(lid_b, vec![b, t]),
-                TensorArg::F32(mask_b, vec![b, t]),
+            let logits = self.exe_batch.call_flat_views(&[
+                TensorView::F32(&s.emb_b, &[b, t, d]),
+                TensorView::I32(&s.lid_b, &[b, t]),
+                TensorView::F32(&s.mask_b, &[b, t]),
             ])?; // [b, t, E] flattened
             for (bi, &layer) in chunk.iter().enumerate() {
                 let li = chunk_i * b + bi;
@@ -132,14 +157,12 @@ impl LearnedModel {
         Ok(out)
     }
 
-    /// Top-k expert set from a logit row.
+    /// Top-k expert set from a logit row — selected directly over the
+    /// f32 values (no widening copy), tie-breaking identical to
+    /// [`math::top_k`] on the f64-widened row (asserted in
+    /// `util::math::tests::prop_top_k_mask_f32_matches_f64_top_k`).
     pub fn top_set(&self, logits: &[f32], k: usize) -> ExpertSet {
-        let vals: Vec<f64> = logits.iter().map(|&x| x as f64).collect();
-        let mut s = ExpertSet::new();
-        for i in math::top_k(&vals, k) {
-            s.insert(i as u8);
-        }
-        s
+        ExpertSet(math::top_k_mask_f32(logits, k))
     }
 }
 

@@ -37,28 +37,47 @@ impl TensorArg {
     /// right after the call is read after free (observed as SIGSEGVs and
     /// spurious size-check aborts under load).
     fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
-        let buf = match self {
-            TensorArg::F32(data, dims) => {
-                ensure!(
-                    data.len() == dims.iter().product::<usize>(),
-                    "f32 arg shape mismatch"
-                );
-                client
-                    .buffer_from_host_buffer(data, dims, None)
-                    .map_err(|e| anyhow::anyhow!("f32 arg upload: {e:?}"))?
-            }
-            TensorArg::I32(data, dims) => {
-                ensure!(
-                    data.len() == dims.iter().product::<usize>(),
-                    "i32 arg shape mismatch"
-                );
-                client
-                    .buffer_from_host_buffer(data, dims, None)
-                    .map_err(|e| anyhow::anyhow!("i32 arg upload: {e:?}"))?
-            }
+        match self {
+            TensorArg::F32(data, dims) => TensorView::F32(data, dims).to_buffer(client),
+            TensorArg::I32(data, dims) => TensorView::I32(data, dims).to_buffer(client),
             TensorArg::ScalarI32(v) => client
                 .buffer_from_host_buffer(&[*v], &[], None)
-                .map_err(|e| anyhow::anyhow!("scalar arg upload: {e:?}"))?,
+                .map_err(|e| anyhow::anyhow!("scalar arg upload: {e:?}")),
+        }
+    }
+}
+
+/// A borrowed host-side tensor argument: same upload semantics as
+/// [`TensorArg`] (synchronous copy, see `TensorArg::to_buffer`) without
+/// taking ownership, so hot callers can stage arguments in reusable
+/// scratch buffers instead of allocating a `Vec` per call.
+#[derive(Debug, Clone, Copy)]
+pub enum TensorView<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl TensorView<'_> {
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            TensorView::F32(data, dims) => {
+                ensure!(
+                    data.len() == dims.iter().product::<usize>(),
+                    "f32 view shape mismatch"
+                );
+                client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("f32 view upload: {e:?}"))?
+            }
+            TensorView::I32(data, dims) => {
+                ensure!(
+                    data.len() == dims.iter().product::<usize>(),
+                    "i32 view shape mismatch"
+                );
+                client
+                    .buffer_from_host_buffer(data, dims, None)
+                    .map_err(|e| anyhow::anyhow!("i32 view upload: {e:?}"))?
+            }
         };
         Ok(buf)
     }
@@ -157,7 +176,35 @@ impl Executable {
     /// output buffers (ToLiteral CHECK-fails on them), so multi-output
     /// model functions concatenate into one vector at the JAX level.
     pub fn call_flat(&self, args: &[TensorArg]) -> Result<Vec<f32>> {
-        let out = self.execute_buffers(args)?;
+        let client = self.exe.client().clone();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            bufs.push(a.to_buffer(&client)?);
+        }
+        self.execute_staged_flat(&bufs)
+    }
+
+    /// [`call_flat`](Executable::call_flat) over borrowed tensors: the
+    /// caller keeps ownership of the staging buffers and reuses them
+    /// across calls (the predictor hot path stages its batch this way).
+    pub fn call_flat_views(&self, args: &[TensorView<'_>]) -> Result<Vec<f32>> {
+        let client = self.exe.client().clone();
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            bufs.push(a.to_buffer(&client)?);
+        }
+        self.execute_staged_flat(&bufs)
+    }
+
+    /// Shared tail of both `call_flat` paths: resident weights + staged
+    /// argument buffers -> execute -> fetch the single flat f32 output.
+    fn execute_staged_flat(&self, staged: &[xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let mut all: Vec<&xla::PjRtBuffer> = self.resident.iter().collect();
+        all.extend(staged.iter());
+        let out = self
+            .exe
+            .execute_b(&all)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
         out[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching output: {e:?}"))?
@@ -216,18 +263,6 @@ impl Executable {
             .map_err(|e| anyhow::anyhow!("output as f32: {e:?}"))
     }
 
-    fn execute_buffers(&self, args: &[TensorArg]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
-        let client = self.exe.client().clone();
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(args.len());
-        for a in args {
-            bufs.push(a.to_buffer(&client)?);
-        }
-        let mut all: Vec<&xla::PjRtBuffer> = self.resident.iter().collect();
-        all.extend(bufs.iter());
-        self.exe
-            .execute_b(&all)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))
-    }
 }
 
 #[cfg(test)]

@@ -5,5 +5,5 @@
 mod client;
 mod weights;
 
-pub use client::{Executable, PjrtRuntime, StateArg, TensorArg};
+pub use client::{Executable, PjrtRuntime, StateArg, TensorArg, TensorView};
 pub use weights::WeightBlob;

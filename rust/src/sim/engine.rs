@@ -20,7 +20,7 @@ use crate::cache::{CachePolicy, CacheStats};
 use crate::config::{CacheConfig, SimConfig, TierConfig};
 use crate::memory::{ExpertMemory, FlatMemory, TieredMemory};
 use crate::predictor::{DecodeContext, ExpertPredictor};
-use crate::trace::PromptTrace;
+use crate::trace::{CompiledTrace, PromptTrace};
 
 /// Reusable simulation engine (residency persists across prompts unless
 /// the caller builds a fresh engine per prompt).
@@ -93,6 +93,24 @@ impl SimEngine {
         predictor: &mut dyn ExpertPredictor,
         stats: &mut CacheStats,
     ) {
+        let compiled = CompiledTrace::compile(trace);
+        self.run_prompt_compiled(trace, &compiled, predictor, stats)
+    }
+
+    /// [`run_prompt`](SimEngine::run_prompt) over a pre-compiled set
+    /// table: the sweep harnesses compile a corpus ONCE and replay it at
+    /// every grid point, so the inner loop never rebuilds an `ExpertSet`
+    /// from raw trace bytes.  `trace` and `compiled` must describe the
+    /// same prompt (the raw trace is still what predictors see).
+    pub fn run_prompt_compiled(
+        &mut self,
+        trace: &PromptTrace,
+        compiled: &CompiledTrace,
+        predictor: &mut dyn ExpertPredictor,
+        stats: &mut CacheStats,
+    ) {
+        debug_assert_eq!(compiled.n_tokens(), trace.n_tokens());
+        debug_assert_eq!(compiled.n_layers(), trace.n_layers as usize);
         let n_layers = trace.n_layers as usize;
         let warm = self.sim.warmup_tokens.min(trace.n_tokens());
         predictor.begin_prompt(trace);
@@ -101,7 +119,7 @@ impl SimEngine {
             let ctx = DecodeContext { trace, t };
             let measured = t >= warm;
             for l in 0..n_layers {
-                let truth = trace.expert_set(t, l);
+                let truth = compiled.set(t, l);
 
                 if measured {
                     // predict + prefetch BEFORE the layer "executes";
@@ -114,26 +132,20 @@ impl SimEngine {
                     let pf = self.memory.prefetch(l, predicted);
                     stats.prefetches += pf.issued;
                     stats.wasted_prefetches += pf.too_late;
-                    // prediction hit accounting (per ground-truth expert)
-                    for e in truth.iter() {
-                        stats.prediction_total += 1;
-                        if predicted.contains(e) {
-                            stats.prediction_hits += 1;
-                        }
-                    }
+                    // prediction hit accounting: set-level overlap is the
+                    // per-ground-truth-expert count in one popcount
+                    stats.prediction_total += truth.len() as u64;
+                    stats.prediction_hits += truth.overlap(predicted) as u64;
                 }
 
-                // the layer executes: look up each ground-truth expert.
-                for e in truth.iter() {
-                    let r = self.memory.lookup(l, e, measured);
-                    if measured {
-                        if r.hit {
-                            stats.hits += 1;
-                        } else {
-                            stats.misses += 1;
-                            stats.transfer_us += r.fetch_us;
-                        }
-                    }
+                // the layer executes: one batched lookup of the whole
+                // ground-truth set (was: one virtual call per expert)
+                let batch = self.memory.lookup_set(l, truth, measured);
+                if measured {
+                    let hits = batch.hits.len() as u64;
+                    stats.hits += hits;
+                    stats.misses += truth.len() as u64 - hits;
+                    stats.transfer_us += batch.fetch_us;
                 }
                 self.memory.end_layer();
                 predictor.observe(&ctx, l, truth);

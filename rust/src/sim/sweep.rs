@@ -11,14 +11,14 @@
 //! `*_threaded` variants) pins the worker count, `1` forces serial.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
-use crate::cache::{CacheStats, LruCache};
+use crate::cache::{stackdist, CacheStats, LruCache, StackDistProfile};
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
 use crate::predictor::{factory, CachedPredictor, ExpertPredictor, PredictorParams, TracePredictions};
 use crate::sim::SimEngine;
 use crate::tier::TierStats;
-use crate::trace::PromptTrace;
+use crate::trace::{CompiledCorpus, CompiledTrace, PromptTrace};
 use crate::Result;
 
 pub use crate::predictor::PredictorKind;
@@ -69,17 +69,29 @@ fn make_predictor(kind: PredictorKind, inputs: &SweepInputs<'_>) -> Result<Box<d
 }
 
 /// Worker count for the sweep harness: `MOEB_SWEEP_THREADS` if set (>= 1),
-/// else the machine's available parallelism.
+/// else the machine's available parallelism.  Parsed once per process
+/// (`OnceLock`) — callers hit this per sweep invocation, and nothing in
+/// the crate mutates the variable at runtime.
 pub fn sweep_threads() -> usize {
-    match std::env::var("MOEB_SWEEP_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-    {
-        Some(n) if n >= 1 => n,
-        _ => std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1),
-    }
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        match std::env::var("MOEB_SWEEP_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(n) if n >= 1 => n,
+            _ => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    })
+}
+
+/// `MOEB_SWEEP_EXACT=1` disables the stack-distance fast path and forces
+/// every sweep point through the exact replay (a belt-and-braces escape
+/// hatch; the two are parity-tested bit-identical).
+fn stackdist_disabled() -> bool {
+    matches!(std::env::var("MOEB_SWEEP_EXACT").ok().as_deref(), Some(v) if !v.is_empty() && v != "0")
 }
 
 /// Map `f` over `jobs` on `threads` scoped workers.  Workers claim jobs
@@ -94,8 +106,10 @@ where
     R: Send,
     F: Fn(&J) -> Result<R> + Sync,
 {
+    // a single job (or a single worker) never spawns: the scoped-thread
+    // setup/teardown would cost more than it hides
     let threads = threads.max(1).min(jobs.len().max(1));
-    if threads <= 1 {
+    if jobs.len() <= 1 || threads <= 1 {
         return jobs.iter().map(f).collect();
     }
     let next = AtomicUsize::new(0);
@@ -131,6 +145,7 @@ where
 fn replay_traces(
     kind: PredictorKind,
     inputs: &SweepInputs<'_>,
+    compiled: &[CompiledTrace],
     stats: &mut CacheStats,
     mut mk_engine: impl FnMut() -> Result<SimEngine>,
     mut after_prompt: impl FnMut(&mut SimEngine),
@@ -148,9 +163,9 @@ fn replay_traces(
                     .learned
                     .ok_or_else(|| anyhow::anyhow!("learned sweep needs precomputed predictions"))?[i];
                 let mut p = CachedPredictor::new(preds);
-                engine.run_prompt(tr, &mut p, stats);
+                engine.run_prompt_compiled(tr, &compiled[i], &mut p, stats);
             }
-            (Some(p), _) => engine.run_prompt(tr, p.as_mut(), stats),
+            (Some(p), _) => engine.run_prompt_compiled(tr, &compiled[i], p.as_mut(), stats),
             _ => unreachable!(),
         }
         after_prompt(&mut engine);
@@ -163,6 +178,7 @@ fn run_capacity_point(
     kind: PredictorKind,
     frac: f64,
     inputs: &SweepInputs<'_>,
+    compiled: &[CompiledTrace],
 ) -> Result<SweepPoint> {
     let total = inputs.n_layers * inputs.n_experts;
     let capacity = ((total as f64 * frac).round() as usize).max(1);
@@ -171,6 +187,7 @@ fn run_capacity_point(
     replay_traces(
         kind,
         inputs,
+        compiled,
         &mut stats,
         || {
             Ok(SimEngine::flat(
@@ -204,17 +221,95 @@ pub fn sweep_capacities(
 
 /// Run the Fig-7 sweep on an explicit number of workers (`1` = serial).
 /// Output is deterministic: identical to the serial run for any count.
+///
+/// `PredictorKind::None` (no-prefetch LRU — the baseline axis of Fig 7)
+/// takes the Mattson stack-distance fast path: ONE profiling pass over
+/// the corpus yields the hit count at every capacity at once, instead
+/// of one full replay per fraction (see [`crate::cache::stackdist`] for
+/// why prefetching predictors cannot use it).  The exact replay is
+/// retained as [`sweep_capacities_replay_threaded`] — parity-tested
+/// bit-identical — and `MOEB_SWEEP_EXACT=1` forces it globally.
 pub fn sweep_capacities_threaded(
     kind: PredictorKind,
     fracs: &[f64],
     inputs: &SweepInputs<'_>,
     threads: usize,
 ) -> Result<SweepResult> {
+    if kind == PredictorKind::None && !stackdist_disabled() {
+        return sweep_capacities_stackdist(fracs, inputs, threads);
+    }
+    sweep_capacities_replay_threaded(kind, fracs, inputs, threads)
+}
+
+/// The exact per-capacity replay sweep with the default worker count.
+pub fn sweep_capacities_replay(
+    kind: PredictorKind,
+    fracs: &[f64],
+    inputs: &SweepInputs<'_>,
+) -> Result<SweepResult> {
+    sweep_capacities_replay_threaded(kind, fracs, inputs, sweep_threads())
+}
+
+/// The exact per-capacity replay sweep: every fraction replays the whole
+/// corpus.  This is the only correct path for prefetching predictors and
+/// the parity reference for the no-prefetch fast path.
+pub fn sweep_capacities_replay_threaded(
+    kind: PredictorKind,
+    fracs: &[f64],
+    inputs: &SweepInputs<'_>,
+    threads: usize,
+) -> Result<SweepResult> {
+    // compile the corpus once; every grid point reads the shared tables
+    let compiled = CompiledCorpus::compile(inputs.test_traces);
     let points = parallel_map(fracs, threads, |&frac| {
-        run_capacity_point(kind, frac, inputs)
+        run_capacity_point(kind, frac, inputs, &compiled)
     })?;
     Ok(SweepResult {
         predictor: kind.display_name().to_string(),
+        points,
+    })
+}
+
+/// Stack-distance fast path for the no-prefetch baseline: profile each
+/// prompt once (fanned out over the workers, merged in index order —
+/// integer counters, so merge order cannot change the result), then
+/// read every capacity off the one histogram.
+fn sweep_capacities_stackdist(
+    fracs: &[f64],
+    inputs: &SweepInputs<'_>,
+    threads: usize,
+) -> Result<SweepResult> {
+    let compiled = CompiledCorpus::compile(inputs.test_traces);
+    let profiles = parallel_map(&compiled[..], threads, |ct| {
+        let mut p = StackDistProfile::new();
+        stackdist::profile_prompt(ct, inputs.n_experts, inputs.sim.warmup_tokens, &mut p);
+        Ok(p)
+    })?;
+    let mut profile = StackDistProfile::new();
+    for p in &profiles {
+        profile.merge(p);
+    }
+
+    let total = inputs.n_layers * inputs.n_experts;
+    // the replay path charges misses at the default flat PCIe cost (see
+    // run_capacity_point's CacheConfig); mirror it exactly
+    let pcie = CacheConfig::default().pcie_us_per_expert;
+    let points = fracs
+        .iter()
+        .map(|&frac| {
+            let capacity = ((total as f64 * frac).round() as usize).max(1);
+            let stats = profile.cache_stats(capacity, pcie);
+            SweepPoint {
+                capacity_frac: frac,
+                capacity_experts: capacity,
+                hit_rate: stats.hit_rate(),
+                prediction_hit_rate: stats.prediction_hit_rate(),
+                stats,
+            }
+        })
+        .collect();
+    Ok(SweepResult {
+        predictor: PredictorKind::None.display_name().to_string(),
         points,
     })
 }
@@ -240,6 +335,7 @@ fn run_tier_point(
     kind: PredictorKind,
     (gf, hf, ssd): (f64, f64, f64),
     inputs: &SweepInputs<'_>,
+    compiled: &[CompiledTrace],
     base: &TierConfig,
     overlap_budget_us: f64,
 ) -> Result<TierSweepPoint> {
@@ -260,6 +356,7 @@ fn run_tier_point(
     replay_traces(
         kind,
         inputs,
+        compiled,
         &mut stats,
         || SimEngine::tiered(&cfg, inputs.sim.clone(), inputs.n_experts, overlap_budget_us),
         |engine| {
@@ -337,8 +434,10 @@ pub fn sweep_tiered_threaded(
             }
         }
     }
+    // compile the corpus once for the whole surface
+    let compiled = CompiledCorpus::compile(inputs.test_traces);
     parallel_map(&grid, threads, |&point| {
-        run_tier_point(kind, point, inputs, base, overlap_budget_us)
+        run_tier_point(kind, point, inputs, &compiled, base, overlap_budget_us)
     })
 }
 
@@ -562,6 +661,35 @@ mod tests {
             assert_eq!(x.stats.prefetches, y.stats.prefetches);
             assert_eq!(x.stats.wasted_prefetches, y.stats.wasted_prefetches);
             assert_eq!(x.stats.transfer_us.to_bits(), y.stats.transfer_us.to_bits());
+        }
+    }
+
+    /// The stack-distance fast path (the default for `None`) is
+    /// bit-identical to the exact per-capacity replay across random
+    /// corpora and random capacity fractions, at any worker count.
+    #[test]
+    fn stackdist_fast_path_matches_replay_exactly() {
+        let mut rng = Rng::new(77);
+        for case in 0..8 {
+            let test = mk_traces(rng.range(2, 7), 100 + case);
+            let fit = mk_traces(3, 200 + case);
+            let inp = inputs(&test, &fit);
+            let mut fracs: Vec<f64> = (0..rng.range(2, 8))
+                .map(|_| (rng.range(1, 100) as f64) / 100.0)
+                .collect();
+            fracs.push(1.0);
+            for threads in [1usize, 4] {
+                let fast = sweep_capacities_threaded(PredictorKind::None, &fracs, &inp, threads)
+                    .unwrap();
+                let exact =
+                    sweep_capacities_replay_threaded(PredictorKind::None, &fracs, &inp, threads)
+                        .unwrap();
+                assert_sweep_eq(&exact, &fast);
+                for (e, f) in exact.points.iter().zip(fast.points.iter()) {
+                    assert_eq!(e.stats.prediction_hits, f.stats.prediction_hits);
+                    assert_eq!(e.stats.prediction_total, f.stats.prediction_total);
+                }
+            }
         }
     }
 

@@ -1,0 +1,169 @@
+//! Compiled activation traces — the replay hot path's view of a corpus.
+//!
+//! `PromptTrace` stores raw expert-id bytes (`[n_tokens, n_layers,
+//! top_k]` of `u8`), so every `expert_set(t, l)` call rebuilds a bitmask
+//! from those bytes.  That is fine for one replay, but the sweep
+//! harnesses visit the *same* (token, layer) cells once per grid point —
+//! every Fig-7 capacity, every tiered surface cell, every `serve-sim`
+//! load point — paying the rebuild each time.
+//!
+//! [`CompiledTrace`] packs the whole trace into one flat
+//! `Vec<ExpertSet>` (8 bytes per cell), built once, so the inner loop's
+//! `expert_set(t, l)` becomes a single indexed load.  [`CompiledCorpus`]
+//! wraps a compiled trace list in an `Arc` so sweep and workload workers
+//! share one copy across threads without re-compiling or cloning.
+
+use std::sync::Arc;
+
+use crate::trace::PromptTrace;
+use crate::util::ExpertSet;
+
+/// One prompt's activation sets, packed row-major `[n_tokens, n_layers]`.
+#[derive(Debug, Clone)]
+pub struct CompiledTrace {
+    n_tokens: usize,
+    n_layers: usize,
+    sets: Vec<ExpertSet>,
+}
+
+impl CompiledTrace {
+    /// Build the packed set table from the raw trace (one pass).
+    pub fn compile(trace: &PromptTrace) -> Self {
+        let n_tokens = trace.n_tokens();
+        let n_layers = trace.n_layers as usize;
+        let mut sets = Vec::with_capacity(n_tokens * n_layers);
+        for t in 0..n_tokens {
+            for l in 0..n_layers {
+                sets.push(trace.expert_set(t, l));
+            }
+        }
+        Self {
+            n_tokens,
+            n_layers,
+            sets,
+        }
+    }
+
+    #[inline]
+    pub fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    #[inline]
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Activated experts for (token, layer) — an indexed load, no
+    /// per-visit rebuild from trace bytes.
+    #[inline]
+    pub fn set(&self, token: usize, layer: usize) -> ExpertSet {
+        self.sets[token * self.n_layers + layer]
+    }
+
+    /// Total expert activations across the trace (Σ |set(t, l)|) — the
+    /// reference-stream length of one replay.
+    pub fn total_activations(&self) -> usize {
+        self.sets.iter().map(|s| s.len() as usize).sum()
+    }
+}
+
+/// A compiled corpus shared across sweep/workload workers via `Arc`:
+/// cloning is a refcount bump, dereferencing yields `&[CompiledTrace]`
+/// parallel to the source trace slice.
+#[derive(Debug, Clone)]
+pub struct CompiledCorpus {
+    traces: Arc<[CompiledTrace]>,
+}
+
+impl CompiledCorpus {
+    /// Compile every trace once (index-parallel to the input slice).
+    pub fn compile(traces: &[PromptTrace]) -> Self {
+        Self {
+            traces: traces.iter().map(CompiledTrace::compile).collect(),
+        }
+    }
+}
+
+impl std::ops::Deref for CompiledCorpus {
+    type Target = [CompiledTrace];
+
+    fn deref(&self) -> &[CompiledTrace] {
+        &self.traces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> PromptTrace {
+        PromptTrace {
+            prompt_id: 1,
+            n_layers: 3,
+            top_k: 2,
+            d_emb: 0,
+            tokens: vec![0, 1],
+            embeddings: vec![],
+            experts: vec![
+                0, 1, 2, 3, 4, 5, // token 0
+                0, 2, 2, 4, 4, 6, // token 1
+            ],
+        }
+    }
+
+    #[test]
+    fn compiled_matches_raw_sets() {
+        let tr = trace();
+        let ct = CompiledTrace::compile(&tr);
+        assert_eq!(ct.n_tokens(), tr.n_tokens());
+        assert_eq!(ct.n_layers(), tr.n_layers as usize);
+        for t in 0..tr.n_tokens() {
+            for l in 0..tr.n_layers as usize {
+                assert_eq!(ct.set(t, l), tr.expert_set(t, l));
+            }
+        }
+        assert_eq!(ct.total_activations(), 12);
+    }
+
+    #[test]
+    fn corpus_is_shared_not_copied() {
+        let traces = vec![trace(), trace()];
+        let corpus = CompiledCorpus::compile(&traces);
+        let clone = corpus.clone();
+        assert_eq!(corpus.len(), 2);
+        assert!(std::ptr::eq(&corpus[0], &clone[0]), "clone must share the Arc");
+        assert_eq!(corpus[1].set(1, 2), traces[1].expert_set(1, 2));
+    }
+
+    /// Seeded-random equivalence over irregular shapes.
+    #[test]
+    fn prop_compiled_equivalence() {
+        let mut rng = crate::util::Rng::new(71);
+        for _ in 0..60 {
+            let n_tokens = rng.range(1, 30);
+            let n_layers = rng.range(1, 6) as u16;
+            let mut experts = Vec::new();
+            for _ in 0..n_tokens * n_layers as usize {
+                let a = rng.below(64) as u8;
+                experts.push(a);
+                experts.push((a + 1 + rng.below(62) as u8) % 64);
+            }
+            let tr = PromptTrace {
+                prompt_id: 0,
+                n_layers,
+                top_k: 2,
+                d_emb: 0,
+                tokens: vec![0; n_tokens],
+                embeddings: vec![],
+                experts,
+            };
+            let ct = CompiledTrace::compile(&tr);
+            for t in 0..n_tokens {
+                for l in 0..n_layers as usize {
+                    assert_eq!(ct.set(t, l), tr.expert_set(t, l));
+                }
+            }
+        }
+    }
+}

@@ -1,8 +1,10 @@
 //! Expert-activation trace substrate: schema, binary store (MBTR, shared
 //! with the Python compile path), the synthetic-world loader + workload
-//! generator, and the statistics behind the paper's Figs 1-3.
+//! generator, the packed replay tables ([`compiled`]) behind the batched
+//! simulator hot path, and the statistics behind the paper's Figs 1-3.
 
 pub mod analysis;
+pub mod compiled;
 pub mod corpus;
 pub mod csv;
 pub mod generator;
@@ -10,5 +12,6 @@ pub mod schema;
 pub mod store;
 pub mod world;
 
+pub use compiled::{CompiledCorpus, CompiledTrace};
 pub use schema::{PromptTrace, TraceMeta};
 pub use world::WorldModel;

@@ -80,6 +80,32 @@ pub fn top_k(xs: &[f64], k: usize) -> Vec<usize> {
     out
 }
 
+/// Bitmask of the `k` largest values of an f32 row of length ≤ 64, ties
+/// broken toward lower index — the same selection [`top_k`] makes (f32 →
+/// f64 conversion is exact, so the comparisons are identical), but
+/// allocation-free: the hot predictor path (`LearnedModel::top_set`)
+/// calls this once per (token, layer).
+pub fn top_k_mask_f32(xs: &[f32], k: usize) -> u64 {
+    debug_assert!(xs.len() <= 64);
+    let k = k.min(xs.len());
+    let mut mask = 0u64;
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in xs.iter().enumerate() {
+            if (mask >> i) & 1 == 0 && v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        if best == usize::MAX {
+            break; // only NaN / -inf left: nothing selectable
+        }
+        mask |= 1u64 << best;
+    }
+    mask
+}
+
 /// Normalize a vector to unit L2 norm in place (no-op on zero vectors).
 pub fn normalize(xs: &mut [f32]) {
     let n = norm(xs);
@@ -145,6 +171,38 @@ mod tests {
             idx.truncate(k.min(xs.len()));
             assert_eq!(got, idx);
         }
+    }
+
+    /// The f32 mask selection must break ties exactly like `top_k` over
+    /// the f64-widened row (the pre-refactor `top_set` path).
+    #[test]
+    fn prop_top_k_mask_f32_matches_f64_top_k() {
+        let mut rng = crate::util::Rng::new(23);
+        for _ in 0..400 {
+            let n = rng.range(1, 64);
+            // coarse quantization forces frequent exact ties
+            let xs: Vec<f32> = (0..n)
+                .map(|_| ((rng.f64() * 8.0).floor() / 4.0) as f32)
+                .collect();
+            let k = rng.range(1, 10);
+            let mask = top_k_mask_f32(&xs, k);
+            let wide: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+            let mut want = 0u64;
+            for i in top_k(&wide, k) {
+                want |= 1u64 << i;
+            }
+            assert_eq!(mask, want, "xs={xs:?} k={k}");
+        }
+    }
+
+    #[test]
+    fn top_k_mask_f32_edge_cases() {
+        assert_eq!(top_k_mask_f32(&[], 3), 0);
+        assert_eq!(top_k_mask_f32(&[1.0, 2.0], 5), 0b11);
+        // ties prefer lower index
+        assert_eq!(top_k_mask_f32(&[1.0, 1.0, 1.0], 2), 0b011);
+        // unselectable values (-inf) are skipped gracefully
+        assert_eq!(top_k_mask_f32(&[f32::NEG_INFINITY, 2.0], 2), 0b10);
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub use profile::{
     synthetic_fit_pool, synthetic_pool, synthetic_pools, ArrivalEvent, ArrivalProcess, Schedule,
     TenantProfile, WorkloadSpec,
 };
-pub use sched::{run_workload, SchedCounters, SchedPolicy, WorkloadInputs};
+pub use sched::{run_workload, run_workload_compiled, SchedCounters, SchedPolicy, WorkloadInputs};
 pub use slo::{report_json, TenantSlo, WorkloadReport};
 pub use sweep_load::{
     load_csv, sweep_load, sweep_load_threaded, Backend, LoadPoint, LoadSweepInputs,

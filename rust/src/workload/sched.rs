@@ -17,7 +17,7 @@
 use crate::config::{EamConfig, SimConfig, WorkloadConfig};
 use crate::memory::ExpertMemory;
 use crate::predictor::{factory, DecodeContext, ExpertPredictor, PredictorKind, PredictorParams};
-use crate::trace::PromptTrace;
+use crate::trace::{CompiledCorpus, PromptTrace};
 use crate::workload::profile::{Schedule, WorkloadSpec};
 use crate::workload::slo::{TenantAcc, WorkloadReport};
 use crate::Result;
@@ -130,7 +130,23 @@ struct Stream {
 pub fn run_workload(
     inp: &WorkloadInputs<'_>,
     kind: PredictorKind,
+    memory: Box<dyn ExpertMemory>,
+) -> Result<WorkloadReport> {
+    // compile each tenant pool once; requests replay pool traces many
+    // times over, and `sweep_load` shares one compilation for the whole
+    // grid via `run_workload_compiled`
+    let compiled: Vec<CompiledCorpus> = inp.pools.iter().map(|p| CompiledCorpus::compile(p)).collect();
+    run_workload_compiled(inp, kind, memory, &compiled)
+}
+
+/// [`run_workload`] over pre-compiled tenant pools (index-parallel to
+/// `inp.pools`); the load-sweep grid compiles once and every worker
+/// shares the `Arc`-backed tables.
+pub fn run_workload_compiled(
+    inp: &WorkloadInputs<'_>,
+    kind: PredictorKind,
     mut memory: Box<dyn ExpertMemory>,
+    compiled_pools: &[CompiledCorpus],
 ) -> Result<WorkloadReport> {
     inp.cfg.validate()?;
     inp.sim.validate()?;
@@ -144,6 +160,38 @@ pub fn run_workload(
         inp.pools.len() == inp.spec.tenants.len(),
         "need one trace pool per tenant"
     );
+    anyhow::ensure!(
+        compiled_pools.len() == inp.pools.len(),
+        "need one compiled corpus per tenant pool"
+    );
+    // Schedule/ArrivalEvent are all-pub and may be hand-built: fail
+    // loudly here instead of index-panicking mid-drain.  The generator
+    // (`WorkloadSpec::generate`) upholds these by construction.
+    for ev in &inp.schedule.arrivals {
+        anyhow::ensure!(
+            ev.tenant < inp.pools.len(),
+            "arrival {}: tenant {} out of range",
+            ev.request_id,
+            ev.tenant
+        );
+        let pool = &inp.pools[ev.tenant];
+        anyhow::ensure!(
+            ev.trace_idx < pool.len(),
+            "arrival {}: trace_idx {} out of range for tenant {}",
+            ev.request_id,
+            ev.trace_idx,
+            ev.tenant
+        );
+        let n = pool[ev.trace_idx].n_tokens();
+        anyhow::ensure!(
+            ev.decode_tokens >= 1 && ev.prompt_tokens + ev.decode_tokens <= n,
+            "arrival {}: prompt {} + decode {} exceeds the {}-token trace",
+            ev.request_id,
+            ev.prompt_tokens,
+            ev.decode_tokens,
+            n
+        );
+    }
     let policy = SchedPolicy::parse(&inp.cfg.policy)
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler policy '{}'", inp.cfg.policy))?;
 
@@ -258,6 +306,7 @@ pub fn run_workload(
         {
             let s = &mut inflight[i];
             let trace = &inp.pools[s.tenant][s.trace_idx];
+            let ctrace = &compiled_pools[s.tenant][s.trace_idx];
             let pred = predictors[s.slot].as_mut();
             let ta = &mut acc[s.tenant];
             was_decode = s.prefilled;
@@ -268,10 +317,8 @@ pub fn run_workload(
                 for t in 0..s.prompt {
                     let ctx = DecodeContext { trace, t };
                     for l in 0..n_layers {
-                        let truth = trace.expert_set(t, l);
-                        for e in truth.iter() {
-                            fetch_us += memory.lookup(l, e, false).fetch_us;
-                        }
+                        let truth = ctrace.set(t, l);
+                        fetch_us += memory.lookup_set(l, truth, false).fetch_us;
                         memory.end_layer();
                         pred.observe(&ctx, l, truth);
                     }
@@ -285,26 +332,18 @@ pub fn run_workload(
                 let ctx = DecodeContext { trace, t };
                 let mark = memory.cost_marks();
                 for l in 0..n_layers {
-                    let truth = trace.expert_set(t, l);
+                    let truth = ctrace.set(t, l);
                     let predicted = pred.predict(&ctx, l);
                     let pf = memory.prefetch(l, predicted);
                     ta.cache.prefetches += pf.issued;
                     ta.cache.wasted_prefetches += pf.too_late;
-                    for e in truth.iter() {
-                        ta.cache.prediction_total += 1;
-                        if predicted.contains(e) {
-                            ta.cache.prediction_hits += 1;
-                        }
-                    }
-                    for e in truth.iter() {
-                        let r = memory.lookup(l, e, true);
-                        if r.hit {
-                            ta.cache.hits += 1;
-                        } else {
-                            ta.cache.misses += 1;
-                            ta.cache.transfer_us += r.fetch_us;
-                        }
-                    }
+                    ta.cache.prediction_total += truth.len() as u64;
+                    ta.cache.prediction_hits += truth.overlap(predicted) as u64;
+                    let batch = memory.lookup_set(l, truth, true);
+                    let hits = batch.hits.len() as u64;
+                    ta.cache.hits += hits;
+                    ta.cache.misses += truth.len() as u64 - hits;
+                    ta.cache.transfer_us += batch.fetch_us;
                     memory.end_layer();
                     pred.observe(&ctx, l, truth);
                 }

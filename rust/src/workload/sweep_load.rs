@@ -9,9 +9,9 @@ use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfi
 use crate::memory;
 use crate::predictor::PredictorKind;
 use crate::sim::sweep::{parallel_map, sweep_threads};
-use crate::trace::PromptTrace;
-use crate::workload::profile::WorkloadSpec;
-use crate::workload::sched::{run_workload, SchedPolicy, WorkloadInputs};
+use crate::trace::{CompiledCorpus, PromptTrace};
+use crate::workload::profile::{Schedule, WorkloadSpec};
+use crate::workload::sched::{run_workload_compiled, SchedPolicy, WorkloadInputs};
 use crate::workload::slo::WorkloadReport;
 use crate::Result;
 
@@ -68,12 +68,19 @@ pub struct LoadPoint {
     pub report: WorkloadReport,
 }
 
-type GridJob = (SchedPolicy, Backend, PredictorKind, f64, f64);
+/// Grid job: the load axis carries an index into the pre-generated
+/// per-load (spec, schedule) table — generation depends only on the
+/// load multiplier, so regenerating it per point would be pure waste.
+type GridJob = (SchedPolicy, Backend, PredictorKind, usize, f64);
 
-fn run_load_point(inputs: &LoadSweepInputs<'_>, job: &GridJob) -> Result<LoadPoint> {
-    let &(policy, backend, kind, load_mult, cache_frac) = job;
-    let spec = inputs.spec.with_load(load_mult);
-    let schedule = spec.generate(inputs.pools)?;
+fn run_load_point(
+    inputs: &LoadSweepInputs<'_>,
+    compiled_pools: &[CompiledCorpus],
+    loaded: &[(f64, WorkloadSpec, Schedule)],
+    job: &GridJob,
+) -> Result<LoadPoint> {
+    let &(policy, backend, kind, load_idx, cache_frac) = job;
+    let (load_mult, ref spec, ref schedule) = loaded[load_idx];
 
     let total = inputs.n_layers * inputs.n_experts;
     let cap = ((total as f64 * cache_frac).round() as usize).max(1);
@@ -105,8 +112,8 @@ fn run_load_point(inputs: &LoadSweepInputs<'_>, job: &GridJob) -> Result<LoadPoi
     let mut wcfg = inputs.workload.clone();
     wcfg.policy = policy.id().to_string();
     let winp = WorkloadInputs {
-        spec: &spec,
-        schedule: &schedule,
+        spec,
+        schedule,
         pools: inputs.pools,
         fit_traces: inputs.fit_traces,
         cfg: &wcfg,
@@ -115,7 +122,7 @@ fn run_load_point(inputs: &LoadSweepInputs<'_>, job: &GridJob) -> Result<LoadPoi
         n_layers: inputs.n_layers,
         n_experts: inputs.n_experts,
     };
-    let report = run_workload(&winp, kind, mem)?;
+    let report = run_workload_compiled(&winp, kind, mem, compiled_pools)?;
     Ok(LoadPoint {
         policy,
         backend,
@@ -154,15 +161,34 @@ pub fn sweep_load_threaded(
     for &p in policies {
         for &b in backends {
             for &k in kinds {
-                for &l in loads {
+                for li in 0..loads.len() {
                     for &f in fracs {
-                        grid.push((p, b, k, l, f));
+                        grid.push((p, b, k, li, f));
                     }
                 }
             }
         }
     }
-    parallel_map(&grid, threads, |job| run_load_point(inputs, job))
+    // one (spec, schedule) per load value — generation is pure in
+    // (spec, load_mult), so every grid point at that load shares it
+    let loaded: Vec<(f64, WorkloadSpec, Schedule)> = loads
+        .iter()
+        .map(|&l| {
+            let spec = inputs.spec.with_load(l);
+            let schedule = spec.generate(inputs.pools)?;
+            Ok((l, spec, schedule))
+        })
+        .collect::<Result<_>>()?;
+    // compile every tenant pool once; the Arc-backed tables are shared
+    // by all grid workers instead of recompiled per point
+    let compiled: Vec<CompiledCorpus> = inputs
+        .pools
+        .iter()
+        .map(|p| CompiledCorpus::compile(p))
+        .collect();
+    parallel_map(&grid, threads, |job| {
+        run_load_point(inputs, &compiled, &loaded, job)
+    })
 }
 
 /// Throughput–latency CSV over the grid (one row per point; fixed

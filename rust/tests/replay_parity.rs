@@ -1,0 +1,241 @@
+//! Batched-replay parity suites.
+//!
+//! The replay hot path was rebuilt around set-level operations
+//! (`ExpertMemory::lookup_set`, `CompiledTrace`, the stack-distance
+//! capacity sweep).  Every fast path here is held to BYTE-identical
+//! output against its scalar/exact twin:
+//!
+//! * native `lookup_set` (flat and tiered) vs the trait-default scalar
+//!   delegation (`memory::ScalarPath`) over full random-trace replays,
+//! * the Mattson stack-distance capacity sweep vs the per-capacity
+//!   exact replay for LRU/no-prefetch across random capacity grids.
+
+use moe_beyond::cache::{CacheStats, LruCache};
+use moe_beyond::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
+use moe_beyond::memory::{ExpertMemory, FlatMemory, ScalarPath, TieredMemory};
+use moe_beyond::predictor::{NoPrefetch, OraclePredictor};
+use moe_beyond::sim::sweep::{
+    sweep_capacities_replay_threaded, sweep_capacities_threaded, SweepInputs,
+};
+use moe_beyond::sim::{PredictorKind, SimEngine};
+use moe_beyond::tier::TierSpec;
+use moe_beyond::trace::PromptTrace;
+use moe_beyond::util::Rng;
+
+fn random_trace(rng: &mut Rng, n_tokens: usize, n_layers: u16, pool: u8) -> PromptTrace {
+    let mut experts = Vec::new();
+    for _ in 0..n_tokens * n_layers as usize {
+        let a = rng.below(pool as usize) as u8;
+        let b = (a + 1 + rng.below(pool as usize - 2) as u8) % pool;
+        experts.push(a);
+        experts.push(b);
+    }
+    PromptTrace {
+        prompt_id: 0,
+        n_layers,
+        top_k: 2,
+        d_emb: 0,
+        tokens: vec![0; n_tokens],
+        embeddings: vec![],
+        experts,
+    }
+}
+
+fn assert_stats_identical(label: &str, a: &CacheStats, b: &CacheStats) {
+    assert_eq!(a.hits, b.hits, "{label}: hits");
+    assert_eq!(a.misses, b.misses, "{label}: misses");
+    assert_eq!(a.prefetches, b.prefetches, "{label}: prefetches");
+    assert_eq!(a.wasted_prefetches, b.wasted_prefetches, "{label}: wasted");
+    assert_eq!(a.prediction_hits, b.prediction_hits, "{label}: pred hits");
+    assert_eq!(a.prediction_total, b.prediction_total, "{label}: pred total");
+    assert_eq!(
+        a.transfer_us.to_bits(),
+        b.transfer_us.to_bits(),
+        "{label}: transfer_us ({} vs {})",
+        a.transfer_us,
+        b.transfer_us
+    );
+}
+
+fn run_engine(
+    mut memory: Box<dyn ExpertMemory>,
+    traces: &[PromptTrace],
+    sim: &SimConfig,
+    oracle: bool,
+) -> (CacheStats, (f64, f64), usize) {
+    // residency persists across prompts here on purpose: it exercises
+    // lookup_set against a cache in every fill state
+    let mut stats = CacheStats::default();
+    memory.set_prefetch_budget(sim.prefetch_budget);
+    let mut engine = SimEngine::new(memory, sim.clone(), 16);
+    for tr in traces {
+        if oracle {
+            engine.run_prompt(tr, &mut OraclePredictor::new(), &mut stats);
+        } else {
+            engine.run_prompt(tr, &mut NoPrefetch, &mut stats);
+        }
+    }
+    let marks = engine.memory.cost_marks();
+    let resident = engine.memory.resident_count();
+    (stats, marks, resident)
+}
+
+/// Native flat `lookup_set` vs the trait-default scalar path: full
+/// replays over random traces must be byte-identical in every counter,
+/// every modeled cost, and the final residency.
+#[test]
+fn flat_batched_lookup_matches_scalar_delegation() {
+    let mut rng = Rng::new(501);
+    for case in 0..30 {
+        let n_prompts = rng.range(1, 4);
+        let traces: Vec<PromptTrace> = (0..n_prompts)
+            .map(|_| random_trace(&mut rng, rng.range(4, 40), 3, 16))
+            .collect();
+        let cap = rng.range(1, 24);
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let mk_flat = |cap: usize| -> Box<dyn ExpertMemory> {
+            Box::new(FlatMemory::new(
+                Box::new(LruCache::new(cap)),
+                CacheConfig::default().with_capacity(cap),
+                16,
+                sim.prefetch_budget,
+                1_000.0,
+            ))
+        };
+        for oracle in [false, true] {
+            let (native, nm, nr) = run_engine(mk_flat(cap), &traces, &sim, oracle);
+            let (scalar, sm, sr) =
+                run_engine(Box::new(ScalarPath::new(mk_flat(cap))), &traces, &sim, oracle);
+            let label = format!("flat case {case} oracle={oracle}");
+            assert_stats_identical(&label, &scalar, &native);
+            assert_eq!(nm.0.to_bits(), sm.0.to_bits(), "{label}: demand marks");
+            assert_eq!(nm.1.to_bits(), sm.1.to_bits(), "{label}: stall marks");
+            assert_eq!(nr, sr, "{label}: residency");
+        }
+    }
+}
+
+/// Same guarantee for the tiered backend, including per-tier counters.
+#[test]
+fn tiered_batched_lookup_matches_scalar_delegation() {
+    let mut rng = Rng::new(502);
+    for case in 0..30 {
+        let n_prompts = rng.range(1, 4);
+        let traces: Vec<PromptTrace> = (0..n_prompts)
+            .map(|_| random_trace(&mut rng, rng.range(4, 40), 3, 16))
+            .collect();
+        let cfg = TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", rng.range(1, 6), 2.0, 0.0),
+                TierSpec::new("host", rng.range(2, 12), 1400.0, 1400.0),
+                TierSpec::new("ssd", rng.range(12, 64), 22_000.0, 0.0),
+            ],
+            policy: "lru".into(),
+        };
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let mk_tiered = || -> Box<dyn ExpertMemory> {
+            Box::new(TieredMemory::new(&cfg, 16, sim.prefetch_budget, 1_000.0).unwrap())
+        };
+        for oracle in [false, true] {
+            let mut native_mem = mk_tiered();
+            native_mem.set_prefetch_budget(sim.prefetch_budget);
+            let mut native_engine = SimEngine::new(native_mem, sim.clone(), 16);
+            let mut scalar_engine = SimEngine::new(
+                Box::new(ScalarPath::new(mk_tiered())),
+                sim.clone(),
+                16,
+            );
+            let mut native = CacheStats::default();
+            let mut scalar = CacheStats::default();
+            for tr in &traces {
+                if oracle {
+                    native_engine.run_prompt(tr, &mut OraclePredictor::new(), &mut native);
+                    scalar_engine.run_prompt(tr, &mut OraclePredictor::new(), &mut scalar);
+                } else {
+                    native_engine.run_prompt(tr, &mut NoPrefetch, &mut native);
+                    scalar_engine.run_prompt(tr, &mut NoPrefetch, &mut scalar);
+                }
+            }
+            let label = format!("tiered case {case} oracle={oracle}");
+            assert_stats_identical(&label, &scalar, &native);
+            let (nm, sm) = (
+                native_engine.memory.stats(),
+                scalar_engine.memory.stats(),
+            );
+            assert_eq!(
+                nm.critical_path_us().to_bits(),
+                sm.critical_path_us().to_bits(),
+                "{label}: critical path"
+            );
+            assert_eq!(nm.resident_per_depth, sm.resident_per_depth, "{label}: depth");
+            let (nt, st) = (nm.tiers.as_ref().unwrap(), sm.tiers.as_ref().unwrap());
+            assert_eq!(nt.served, st.served, "{label}: served");
+            assert_eq!(nt.cold, st.cold, "{label}: cold");
+            assert_eq!(nt.promotions, st.promotions, "{label}: promotions");
+            assert_eq!(nt.demotions, st.demotions, "{label}: demotions");
+            assert_eq!(nt.dropped, st.dropped, "{label}: dropped");
+        }
+    }
+}
+
+/// Stack-distance sweep vs exact per-capacity replay: byte-identical
+/// `SweepPoint`s for LRU/no-prefetch across random corpora, random
+/// capacity fractions, and random warm-up epochs.
+#[test]
+fn stackdist_sweep_matches_exact_replay() {
+    let mut rng = Rng::new(503);
+    for case in 0..10 {
+        let n_prompts = rng.range(2, 6);
+        let test: Vec<PromptTrace> = (0..n_prompts)
+            .map(|_| random_trace(&mut rng, rng.range(6, 48), 3, 16))
+            .collect();
+        let fit: Vec<PromptTrace> = (0..3)
+            .map(|_| random_trace(&mut rng, 12, 3, 16))
+            .collect();
+        let sim = SimConfig {
+            warmup_tokens: rng.below(12),
+            ..Default::default()
+        };
+        let inputs = SweepInputs {
+            test_traces: &test,
+            fit_traces: &fit,
+            learned: None,
+            sim,
+            eam: EamConfig {
+                kmeans_clusters: 0,
+                ..Default::default()
+            },
+            n_layers: 3,
+            n_experts: 16,
+        };
+        let mut fracs: Vec<f64> = (0..rng.range(2, 9))
+            .map(|_| (rng.range(1, 100) as f64) / 100.0)
+            .collect();
+        fracs.push(1.0);
+
+        let fast = sweep_capacities_threaded(PredictorKind::None, &fracs, &inputs, 2).unwrap();
+        let exact =
+            sweep_capacities_replay_threaded(PredictorKind::None, &fracs, &inputs, 2).unwrap();
+        assert_eq!(fast.predictor, exact.predictor);
+        assert_eq!(fast.points.len(), exact.points.len());
+        for (f, e) in fast.points.iter().zip(exact.points.iter()) {
+            let label = format!("case {case} frac {}", f.capacity_frac);
+            assert_eq!(f.capacity_experts, e.capacity_experts, "{label}");
+            assert_eq!(f.hit_rate.to_bits(), e.hit_rate.to_bits(), "{label}: rate");
+            assert_eq!(
+                f.prediction_hit_rate.to_bits(),
+                e.prediction_hit_rate.to_bits(),
+                "{label}: pred rate"
+            );
+            assert_stats_identical(&label, &e.stats, &f.stats);
+        }
+    }
+}
