@@ -54,6 +54,7 @@ fn main() -> moe_beyond::Result<()> {
             schedule: &schedule,
             pools: &pools,
             fit_traces: &fit,
+            learned: None,
             cfg: &cfg,
             sim: &sim,
             eam: &eam,

@@ -32,6 +32,7 @@ fn report_sweep_speedup() -> moe_beyond::Result<()> {
         test_traces: &test,
         fit_traces: &fit,
         learned: None,
+        compiled: None,
         sim: SimConfig::default(),
         eam: EamConfig::default(),
         n_layers: 6,

@@ -9,7 +9,13 @@
 //!    path must be ≥ 3× faster (`MOEB_REPLAY_MIN_SPEEDUP` overrides the
 //!    gate); the structural argument is that the sweep does one corpus
 //!    pass instead of one per fraction.
-//! 2. **Predictor-driven replay** — the batched `lookup_set` hot path vs
+//! 2. **Tiered no-prefetch sweep** — the exact per-cell replay vs the
+//!    tiered stack-distance evaluation (per-tier band lookups on the
+//!    same histogram) over a (gpu × host × ssd) grid.  Outputs asserted
+//!    bit-identical and the analytic path must be ≥ 3× faster (same
+//!    gate/override/retry policy as section 1); the analytic path reads
+//!    every cell off ONE corpus profile.
+//! 3. **Predictor-driven replay** — the batched `lookup_set` hot path vs
 //!    the scalar delegation (`memory::ScalarPath`) on an oracle-driven
 //!    replay.  Outputs asserted identical; tokens/sec reported for both
 //!    (the gain here is per-expert virtual-call elimination, so it is
@@ -32,14 +38,16 @@ use bench_util::{env_usize, mk_reuse_traces};
 use std::time::Instant;
 
 use moe_beyond::cache::{CacheStats, LruCache};
-use moe_beyond::config::{CacheConfig, EamConfig, SimConfig};
+use moe_beyond::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
 use moe_beyond::memory::{ExpertMemory, FlatMemory, ScalarPath};
 use moe_beyond::predictor::OraclePredictor;
 use moe_beyond::sim::harness::FIG7_FRACS;
 use moe_beyond::sim::sweep::{
-    sweep_capacities_replay_threaded, sweep_capacities_threaded, SweepInputs,
+    sweep_capacities_replay_threaded, sweep_capacities_threaded, sweep_tiered_replay_threaded,
+    sweep_tiered_threaded, SweepInputs, TierSweepPoint,
 };
 use moe_beyond::sim::{PredictorKind, SimEngine};
+use moe_beyond::tier::TierSpec;
 use moe_beyond::trace::{CompiledCorpus, PromptTrace};
 
 const N_LAYERS: usize = 6;
@@ -107,6 +115,7 @@ fn main() -> moe_beyond::Result<()> {
         test_traces: &test,
         fit_traces: &fit,
         learned: None,
+        compiled: None,
         sim: SimConfig::default(),
         eam: EamConfig::default(),
         n_layers: N_LAYERS,
@@ -167,7 +176,107 @@ fn main() -> moe_beyond::Result<()> {
         "stack-distance fast path only {sweep_speedup:.2}x over exact replay (gate: {min_speedup}x)"
     );
 
-    // ---- section 2: predictor-driven replay, scalar vs batched lookups
+    // ---- section 2: tiered no-prefetch sweep, exact vs stack-distance
+    println!("\n== tiered no-prefetch sweep: exact replay vs stack-distance bands ==");
+    // writeback-free tiers keep the grid inside the analytic path's
+    // stall-free gate; integer costs keep float totals bit-comparable
+    let tier_base = TierConfig {
+        tiers: vec![
+            TierSpec::new("gpu", 1, 2.0, 0.0),
+            TierSpec::new("host", 1, 1400.0, 0.0),
+            TierSpec::new("ssd", N_LAYERS * N_EXPERTS, 22_000.0, 0.0),
+        ],
+        policy: "lru".into(),
+    };
+    let gpu_fracs = [0.02, 0.05, 0.10, 0.20];
+    let host_fracs = [0.10, 0.30];
+    let ssd_costs = [8_000.0, 22_000.0];
+    let tier_cells = gpu_fracs.len() * host_fracs.len() * ssd_costs.len();
+    let tiered_tokens = (prompts * tokens * tier_cells) as f64;
+
+    let run_tiered_exact = || {
+        sweep_tiered_replay_threaded(
+            PredictorKind::None,
+            &gpu_fracs,
+            &host_fracs,
+            &ssd_costs,
+            &inputs,
+            &tier_base,
+            1_000.0,
+            1,
+        )
+        .unwrap()
+    };
+    let run_tiered_fast = || {
+        sweep_tiered_threaded(
+            PredictorKind::None,
+            &gpu_fracs,
+            &host_fracs,
+            &ssd_costs,
+            &inputs,
+            &tier_base,
+            1_000.0,
+            1,
+        )
+        .unwrap()
+    };
+    let assert_tiered_identical = |a: &[TierSweepPoint], b: &[TierSweepPoint]| {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.gpu_hit_rate.to_bits(), y.gpu_hit_rate.to_bits());
+            assert_eq!(x.deep_miss_rate.to_bits(), y.deep_miss_rate.to_bits());
+            assert_eq!(x.critical_path_us.to_bits(), y.critical_path_us.to_bits());
+            assert_eq!(x.stats.hits, y.stats.hits);
+            assert_eq!(x.stats.misses, y.stats.misses);
+            assert_eq!(x.stats.transfer_us.to_bits(), y.stats.transfer_us.to_bits());
+            assert_eq!(x.tiers.served, y.tiers.served);
+            assert_eq!(x.tiers.cold, y.tiers.cold);
+            assert_eq!(x.tiers.demotions, y.tiers.demotions);
+            assert_eq!(x.tiers.dropped, y.tiers.dropped);
+        }
+    };
+    assert_tiered_identical(&run_tiered_exact(), &run_tiered_fast());
+
+    let time_tiered_exact = |reps: usize| {
+        min_secs(reps, || {
+            std::hint::black_box(run_tiered_exact());
+        })
+    };
+    let time_tiered_fast = |reps: usize| {
+        min_secs(reps, || {
+            std::hint::black_box(run_tiered_fast());
+        })
+    };
+    let mut tiered_exact_s = time_tiered_exact(reps);
+    let mut tiered_fast_s = time_tiered_fast(reps);
+    let mut tiered_speedup = tiered_exact_s / tiered_fast_s.max(1e-12);
+    if tiered_speedup < min_speedup {
+        // same one-noise-retry policy as section 1: min-of-best per side
+        tiered_exact_s = tiered_exact_s.min(time_tiered_exact(reps * 2));
+        tiered_fast_s = tiered_fast_s.min(time_tiered_fast(reps * 2));
+        tiered_speedup = tiered_exact_s / tiered_fast_s.max(1e-12);
+    }
+    println!(
+        "  grid: {} prompts x {} tokens x {} cells ({} sweep tokens)",
+        prompts, tokens, tier_cells, tiered_tokens as u64
+    );
+    println!(
+        "  exact replay:   {:>9.2} ms/sweep  ({:>12.0} tokens/s)",
+        tiered_exact_s * 1e3,
+        tiered_tokens / tiered_exact_s
+    );
+    println!(
+        "  stack-distance: {:>9.2} ms/sweep  ({:>12.0} tokens/s)  => {:.1}x",
+        tiered_fast_s * 1e3,
+        tiered_tokens / tiered_fast_s,
+        tiered_speedup
+    );
+    assert!(
+        tiered_speedup >= min_speedup,
+        "tiered stack-distance path only {tiered_speedup:.2}x over exact replay (gate: {min_speedup}x)"
+    );
+
+    // ---- section 3: predictor-driven replay, scalar vs batched lookups
     println!("\n== predictor-driven replay (oracle): scalar vs batched lookup_set ==");
     let capacity = ((N_LAYERS * N_EXPERTS) as f64 * 0.10).round() as usize;
     let compiled = CompiledCorpus::compile(&test);
@@ -205,9 +314,12 @@ fn main() -> moe_beyond::Result<()> {
     let out_dir = std::path::Path::new("target/replay");
     std::fs::create_dir_all(out_dir)?;
     let json = format!(
-        "{{\"schema\":1,\"prompts\":{},\"tokens_per_prompt\":{},\"layers\":{},\"fracs\":{},\
+        "{{\"schema\":2,\"prompts\":{},\"tokens_per_prompt\":{},\"layers\":{},\"fracs\":{},\
          \"replay_sweep_s\":{:.6},\"stackdist_sweep_s\":{:.6},\"stackdist_speedup\":{:.3},\
          \"replay_tokens_per_sec\":{:.0},\"stackdist_tokens_per_sec\":{:.0},\
+         \"tiered_cells\":{},\"tiered_replay_sweep_s\":{:.6},\"tiered_stackdist_sweep_s\":{:.6},\
+         \"tiered_stackdist_speedup\":{:.3},\"tiered_replay_tokens_per_sec\":{:.0},\
+         \"tiered_stackdist_tokens_per_sec\":{:.0},\
          \"scalar_replay_s\":{:.6},\"batched_replay_s\":{:.6},\"batched_speedup\":{:.3},\
          \"scalar_tokens_per_sec\":{:.0},\"batched_tokens_per_sec\":{:.0},\"parity\":true}}",
         prompts,
@@ -219,6 +331,12 @@ fn main() -> moe_beyond::Result<()> {
         sweep_speedup,
         sweep_tokens / replay_s,
         sweep_tokens / fast_s,
+        tier_cells,
+        tiered_exact_s,
+        tiered_fast_s,
+        tiered_speedup,
+        tiered_tokens / tiered_exact_s,
+        tiered_tokens / tiered_fast_s,
         scalar_s,
         batched_s,
         scalar_s / batched_s.max(1e-12),

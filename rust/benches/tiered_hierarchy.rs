@@ -45,6 +45,7 @@ fn main() -> moe_beyond::Result<()> {
         test_traces: &test,
         fit_traces: &fit,
         learned: None,
+        compiled: None,
         sim: SimConfig::default(),
         eam: EamConfig::default(),
         n_layers: N_LAYERS,

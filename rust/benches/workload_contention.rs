@@ -70,6 +70,7 @@ fn run_all() -> Result<(Vec<LoadPoint>, Vec<LoadPoint>)> {
         spec: &spec,
         pools: &pools,
         fit_traces: &fit,
+        learned: None,
         workload: &wcfg,
         sim: &sim,
         eam: &eam,

@@ -16,7 +16,7 @@ pub use belady::{belady_hit_rate, BeladyCache};
 pub use lfu::LfuCache;
 pub use lru::LruCache;
 pub use policy::{CachePolicy, EvictionPolicy, ExpertKey};
-pub use stackdist::StackDistProfile;
+pub use stackdist::{StackDistCurve, StackDistProfile, TierBands};
 pub use stats::CacheStats;
 pub use vram::VramModel;
 

@@ -12,7 +12,26 @@
 //! `sweep_capacities_replay_threaded` for the retained exact-replay
 //! fallback).
 //!
-//! The fast path only applies to *demand-only* LRU replay
+//! # Tiered hierarchies from the same histogram
+//!
+//! The inclusion property generalizes to the *exclusive* multi-tier LRU
+//! hierarchy ([`crate::tier::TieredCache`] with the `lru` policy): a
+//! lookup promotes to tier 0's MRU slot, each tier's LRU victim demotes
+//! to the next tier's MRU slot, and the last tier's victim drops — so
+//! the hierarchy always holds exactly the `C_0 + … + C_{n-1}`
+//! most-recently-used keys, partitioned by recency rank (tier 0 holds
+//! ranks `< C_0`, tier 1 ranks `[C_0, C_0+C_1)`, …).  A reference at
+//! stack distance `d` is therefore served from the tier whose
+//! capacity-prefix band contains `d`, and the SAME single-corpus
+//! histogram yields per-tier serve counts for ANY capacity split
+//! ([`StackDistCurve::tier_bands`]).  Demotion traffic falls out too:
+//! promoting a key found at depth `f` evicts one key into each of tiers
+//! `1..=f` (tiers above a non-empty tier are always full), so an access
+//! displaces a key into tier `j` exactly when its recency depth is
+//! `>= C_0 + … + C_{j-1}` — for first touches that depth is the number
+//! of distinct keys already referenced, recorded in a second histogram.
+//!
+//! The fast paths only apply to *demand-only* LRU replay
 //! ([`crate::predictor::NoPrefetch`]): prefetching inserts keys the
 //! reference stream never touched, which breaks the inclusion property
 //! (a small cache can evict a prefetched key a big cache keeps), so
@@ -62,9 +81,13 @@ impl Fenwick {
 /// recorded — exactly the simulator's warm-up epoch semantics).
 #[derive(Debug, Clone, Default)]
 pub struct StackDistProfile {
-    /// `hist[d]` = measured accesses at stack distance `d`; such an
+    /// `hist[d]` = measured re-references at stack distance `d`; such an
     /// access hits every LRU cache with capacity `> d`.
     hist: Vec<u64>,
+    /// `cold_fill[D]` = measured first-touch accesses that happened when
+    /// `D` distinct keys had already been referenced (the hierarchy fill
+    /// state a tiered evaluation needs); Σ cold_fill == `cold`.
+    cold_fill: Vec<u64>,
     /// Measured first-touch accesses — a miss at every capacity.
     pub cold: u64,
     /// Total measured accesses (`hits_at(c) + misses` for any `c`).
@@ -84,18 +107,29 @@ impl StackDistProfile {
         self.measured += 1;
     }
 
-    fn record_cold(&mut self) {
+    fn record_cold(&mut self, fill: usize) {
+        if self.cold_fill.len() <= fill {
+            self.cold_fill.resize(fill + 1, 0);
+        }
+        self.cold_fill[fill] += 1;
         self.cold += 1;
         self.measured += 1;
     }
 
     /// Fold another profile in (capacity curves are additive across
-    /// prompts because the sweep replays each prompt on a fresh cache).
+    /// prompts because the sweep replays each prompt on a fresh cache —
+    /// fill states reset per prompt too, so `cold_fill` adds likewise).
     pub fn merge(&mut self, other: &StackDistProfile) {
         if self.hist.len() < other.hist.len() {
             self.hist.resize(other.hist.len(), 0);
         }
         for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
+            *a += b;
+        }
+        if self.cold_fill.len() < other.cold_fill.len() {
+            self.cold_fill.resize(other.cold_fill.len(), 0);
+        }
+        for (a, b) in self.cold_fill.iter_mut().zip(other.cold_fill.iter()) {
             *a += b;
         }
         self.cold += other.cold;
@@ -126,6 +160,139 @@ impl StackDistProfile {
             // representable (integer-valued µs costs, as configured
             // throughout this crate)
             transfer_us: misses as f64 * pcie_us_per_expert,
+        }
+    }
+
+    /// Cumulative view with O(1) band queries — build once per sweep,
+    /// then every grid cell is a handful of prefix lookups.
+    pub fn curve(&self) -> StackDistCurve {
+        let mut cum_hist = Vec::with_capacity(self.hist.len() + 1);
+        cum_hist.push(0u64);
+        let mut acc = 0u64;
+        for &h in &self.hist {
+            acc += h;
+            cum_hist.push(acc);
+        }
+        let reref_total = acc;
+        let mut cum_fill = Vec::with_capacity(self.cold_fill.len() + 1);
+        cum_fill.push(0u64);
+        let mut acc = 0u64;
+        for &h in &self.cold_fill {
+            acc += h;
+            cum_fill.push(acc);
+        }
+        StackDistCurve {
+            cum_hist,
+            cum_fill,
+            reref_total,
+            first_total: self.cold,
+            measured: self.measured,
+        }
+    }
+}
+
+/// Per-tier outcome counts for one capacity split of an exclusive LRU
+/// hierarchy, read off a [`StackDistCurve`] — everything a tiered
+/// no-prefetch replay would count, without replaying.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierBands {
+    /// `served[d]` = measured references found at depth `d` (`served[0]`
+    /// is the GPU hit count).
+    pub served: Vec<u64>,
+    /// Measured references that missed every tier: first touches plus
+    /// re-references whose stack distance exceeds the hierarchy's total
+    /// capacity (the key was dropped past the last tier).
+    pub cold: u64,
+    /// `demotions_into[j]` = evictions that landed in tier `j` (index 0
+    /// is never a demotion destination and stays 0).
+    pub demotions_into: Vec<u64>,
+    /// Evictions that fell past the last tier (copy dropped).
+    pub dropped: u64,
+}
+
+impl TierBands {
+    /// Demand promotions into the GPU tier (every measured non-GPU-hit).
+    pub fn promotions(&self) -> u64 {
+        self.served.iter().skip(1).sum::<u64>() + self.cold
+    }
+
+    /// Total demotion count across all destination tiers.
+    pub fn demotions(&self) -> u64 {
+        self.demotions_into.iter().sum()
+    }
+}
+
+/// Prefix-summed [`StackDistProfile`]: `hits_at` and per-tier band
+/// extraction in O(tiers) per query instead of O(capacity).
+#[derive(Debug, Clone)]
+pub struct StackDistCurve {
+    /// `cum_hist[i]` = measured re-references with stack distance `< i`.
+    cum_hist: Vec<u64>,
+    /// `cum_fill[i]` = measured first touches with fill state `< i`.
+    cum_fill: Vec<u64>,
+    reref_total: u64,
+    first_total: u64,
+    /// Total measured accesses.
+    pub measured: u64,
+}
+
+impl StackDistCurve {
+    #[inline]
+    fn below(cum: &[u64], c: usize) -> u64 {
+        cum[c.min(cum.len() - 1)]
+    }
+
+    /// Measured hits an LRU cache of `capacity` experts would serve
+    /// (O(1); equal to [`StackDistProfile::hits_at`]).
+    pub fn hits_at(&self, capacity: usize) -> u64 {
+        Self::below(&self.cum_hist, capacity)
+    }
+
+    /// Per-tier outcome counts for the exclusive LRU hierarchy with the
+    /// given per-tier capacities (`caps[0]` = GPU).
+    ///
+    /// Band math (see the module docs for why the hierarchy is globally
+    /// recency-ordered): with prefix capacities `P_j = C_0 + … +
+    /// C_{j-1}`, a re-reference at stack distance `d`
+    /// * is served from the tier `j` with `P_j <= d < P_{j+1}` (depth 0
+    ///   = a GPU hit), or misses every tier when `d >= P_n`;
+    /// * displaces one key into tier `j` for every `j >= 1` with
+    ///   `d >= P_j` (those tiers are full and sit above the key), the
+    ///   last displacement dropping off the hierarchy when `d >= P_n`.
+    ///
+    /// First touches behave the same with the fill state (distinct keys
+    /// already referenced) in place of `d` — they are always cold, and
+    /// they only displace keys into tiers the existing residency has
+    /// already filled.
+    pub fn tier_bands(&self, caps: &[usize]) -> TierBands {
+        assert!(!caps.is_empty(), "tier_bands needs at least one tier");
+        let n = caps.len();
+        let mut prefix = Vec::with_capacity(n + 1);
+        prefix.push(0usize);
+        for &c in caps {
+            prefix.push(prefix.last().unwrap() + c);
+        }
+        let mut served = vec![0u64; n];
+        let mut prev = 0u64;
+        for (d, s) in served.iter_mut().enumerate() {
+            let b = Self::below(&self.cum_hist, prefix[d + 1]);
+            *s = b - prev;
+            prev = b;
+        }
+        let reref_cold = self.reref_total - prev;
+        let mut demotions_into = vec![0u64; n];
+        for (j, slot) in demotions_into.iter_mut().enumerate().skip(1) {
+            *slot = (self.reref_total - Self::below(&self.cum_hist, prefix[j]))
+                + (self.first_total - Self::below(&self.cum_fill, prefix[j]));
+        }
+        let total = prefix[n];
+        let dropped = (self.reref_total - Self::below(&self.cum_hist, total))
+            + (self.first_total - Self::below(&self.cum_fill, total));
+        TierBands {
+            served,
+            cold: self.first_total + reref_cold,
+            demotions_into,
+            dropped,
         }
     }
 }
@@ -164,7 +331,9 @@ pub fn profile_prompt(
                 let prev = last[k] as usize;
                 if prev == 0 {
                     if measured {
-                        out.record_cold();
+                        // fill state = distinct keys referenced before
+                        // this first touch
+                        out.record_cold(in_stack as usize);
                     }
                     in_stack += 1;
                 } else {
@@ -188,6 +357,7 @@ pub fn profile_prompt(
 mod tests {
     use super::*;
     use crate::cache::{CachePolicy, LruCache};
+    use crate::tier::TieredCache;
     use crate::trace::{CompiledTrace, PromptTrace};
     use crate::util::Rng;
 
@@ -241,6 +411,52 @@ mod tests {
         (hits, misses)
     }
 
+    /// Brute-force multi-tier exclusive-LRU replay: the definitionally
+    /// correct reference for [`StackDistCurve::tier_bands`], mirroring
+    /// `TieredMemory::lookup_one`'s counting exactly.
+    fn brute_force_tier_bands(
+        trace: &CompiledTrace,
+        n_experts: usize,
+        warmup_tokens: usize,
+        caps: &[usize],
+    ) -> TierBands {
+        let mut cache = TieredCache::new(
+            caps.iter()
+                .map(|&c| Box::new(LruCache::new(c)) as Box<dyn CachePolicy>)
+                .collect(),
+        );
+        let mut out = TierBands {
+            served: vec![0; caps.len()],
+            cold: 0,
+            demotions_into: vec![0; caps.len()],
+            dropped: 0,
+        };
+        let warm = warmup_tokens.min(trace.n_tokens());
+        for t in 0..trace.n_tokens() {
+            let measured = t >= warm;
+            for l in 0..trace.n_layers() {
+                for e in trace.set(t, l).iter() {
+                    let k = crate::cache::policy::key(l, e, n_experts);
+                    let promo = cache.promote(k);
+                    if !measured {
+                        continue;
+                    }
+                    match promo.found {
+                        Some(d) => out.served[d] += 1,
+                        None => out.cold += 1,
+                    }
+                    for d in &promo.demoted {
+                        match d.to {
+                            Some(dest) => out.demotions_into[dest] += 1,
+                            None => out.dropped += 1,
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     #[test]
     fn single_pass_curve_matches_brute_force_lru() {
         let mut rng = Rng::new(401);
@@ -251,6 +467,7 @@ mod tests {
             let ct = CompiledTrace::compile(&tr);
             let mut p = StackDistProfile::new();
             profile_prompt(&ct, 16, warmup, &mut p);
+            let curve = p.curve();
             for capacity in 1..=40 {
                 let (hits, misses) = brute_force_hits(&ct, 16, warmup, capacity);
                 assert_eq!(
@@ -258,8 +475,60 @@ mod tests {
                     hits,
                     "capacity {capacity} warmup {warmup}"
                 );
+                assert_eq!(curve.hits_at(capacity), hits, "curve at {capacity}");
                 assert_eq!(p.measured - p.hits_at(capacity), misses);
             }
+        }
+    }
+
+    /// The tiered band extraction matches a brute-force exclusive
+    /// multi-tier LRU replay — served depths, cold reads, per-tier
+    /// demotion traffic, and drops — over random traces, random tier
+    /// splits (2–4 tiers), and random warm-up epochs.
+    #[test]
+    fn tier_bands_match_brute_force_hierarchy() {
+        let mut rng = Rng::new(405);
+        for _case in 0..40 {
+            let n_tokens = rng.range(2, 40);
+            let warmup = rng.below(12);
+            let tr = random_trace(&mut rng, n_tokens, 3, 16);
+            let ct = CompiledTrace::compile(&tr);
+            let mut p = StackDistProfile::new();
+            profile_prompt(&ct, 16, warmup, &mut p);
+            let curve = p.curve();
+            for _split in 0..4 {
+                let n_tiers = rng.range(2, 5);
+                let caps: Vec<usize> = (0..n_tiers).map(|_| rng.range(1, 14)).collect();
+                let analytic = curve.tier_bands(&caps);
+                let brute = brute_force_tier_bands(&ct, 16, warmup, &caps);
+                assert_eq!(analytic, brute, "caps {caps:?} warmup {warmup}");
+                // conservation: every measured access is served or cold
+                assert_eq!(
+                    analytic.served.iter().sum::<u64>() + analytic.cold,
+                    p.measured
+                );
+            }
+        }
+    }
+
+    /// A single-tier "hierarchy" collapses to the flat curve.
+    #[test]
+    fn tier_bands_single_tier_matches_flat() {
+        let mut rng = Rng::new(406);
+        let tr = random_trace(&mut rng, 30, 3, 16);
+        let ct = CompiledTrace::compile(&tr);
+        let mut p = StackDistProfile::new();
+        profile_prompt(&ct, 16, 6, &mut p);
+        let curve = p.curve();
+        for cap in [1usize, 4, 9, 40] {
+            let b = curve.tier_bands(&[cap]);
+            assert_eq!(b.served[0], p.hits_at(cap));
+            assert_eq!(b.cold, p.measured - p.hits_at(cap));
+            assert_eq!(b.demotions(), 0);
+            // in a 1-tier hierarchy every capacity-exceeding access drops
+            // its victim straight off the bottom
+            let brute = brute_force_tier_bands(&ct, 16, 6, &[cap]);
+            assert_eq!(b.dropped, brute.dropped);
         }
     }
 
@@ -280,6 +549,23 @@ mod tests {
         }
         assert_eq!(merged.measured, pa.measured + pb.measured);
         assert_eq!(merged.cold, pa.cold + pb.cold);
+        // tier bands are additive too (fresh hierarchy per prompt)
+        let caps = [2usize, 5, 9];
+        let (ma, mb, mm) = (pa.curve(), pb.curve(), merged.curve());
+        let (ba, bb, bm) = (
+            ma.tier_bands(&caps),
+            mb.tier_bands(&caps),
+            mm.tier_bands(&caps),
+        );
+        for d in 0..caps.len() {
+            assert_eq!(bm.served[d], ba.served[d] + bb.served[d]);
+            assert_eq!(
+                bm.demotions_into[d],
+                ba.demotions_into[d] + bb.demotions_into[d]
+            );
+        }
+        assert_eq!(bm.cold, ba.cold + bb.cold);
+        assert_eq!(bm.dropped, ba.dropped + bb.dropped);
     }
 
     #[test]
@@ -314,5 +600,9 @@ mod tests {
         assert_eq!(p.measured, 0);
         assert_eq!(p.cold, 0);
         assert_eq!(p.hits_at(1000), 0);
+        let b = p.curve().tier_bands(&[2, 4]);
+        assert_eq!(b.served, vec![0, 0]);
+        assert_eq!(b.cold, 0);
+        assert_eq!(b.demotions(), 0);
     }
 }

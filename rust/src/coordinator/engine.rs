@@ -246,9 +246,9 @@ impl ModelEngine {
                     trace: &self.dummy_trace,
                     t: 0,
                 };
-                for (l, set) in s.pred_sets.iter_mut().enumerate() {
-                    *set = p.predict(&ctx, l);
-                }
+                // one batched call per decode step (the replay engines
+                // use the same timing)
+                p.predict_layers(&ctx, 0..n_layers, &mut s.pred_sets);
             }
             EnginePredictor::None => {}
         }

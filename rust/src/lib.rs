@@ -12,9 +12,10 @@
 //!   [`predictor`] factory over the MoE-Infinity / DeepSpeed-MoE /
 //!   BrainStorm heuristic baselines, the trace-driven, thread-parallel
 //!   cache simulator behind the paper's Fig. 7 (batched set-level replay
-//!   over pre-compiled [`trace::CompiledTrace`] tables, with a Mattson
-//!   stack-distance fast path for the whole LRU baseline capacity axis —
-//!   see [`cache::stackdist`]), the [`workload`]
+//!   over pre-compiled [`trace::CompiledTrace`] tables, with Mattson
+//!   stack-distance fast paths for BOTH the flat LRU baseline capacity
+//!   axis and the tiered no-prefetch surface — per-tier curves from one
+//!   memoized corpus profile; see [`cache::stackdist`]), the [`workload`]
 //!   multi-tenant simulator (open-loop arrivals, shared-cache
 //!   contention, SLO metrics, throughput–latency load sweeps), and the
 //!   evaluation harness behind Table 1.

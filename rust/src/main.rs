@@ -268,42 +268,75 @@ fn serve_sim(args: &Args) -> Result<()> {
     let fracs = parse_f64_list(&args.get("fracs", "0.05,0.10,0.20"), "--fracs")?;
 
     let spec = workload::WorkloadSpec::example(n_tenants, seed, horizon);
+    let want_learned = kinds.contains(&PredictorKind::Learned);
 
     // tenant corpora: the artifact world's corpus sampler when present,
-    // the self-contained reuse-heavy generator otherwise
-    let (pools, fit, n_layers, n_experts): (Vec<Vec<PromptTrace>>, Vec<PromptTrace>, usize, usize) =
-        match harness::load_artifacts() {
-            Ok(arts) => {
-                let world = WorldModel::load(arts.path("world.json"))?;
-                let (nl, ne) = (
-                    world.meta.n_layers as usize,
-                    world.meta.n_experts as usize,
-                );
-                let mut pools = Vec::new();
-                let mut fit = Vec::new();
-                for t in &spec.tenants {
-                    let need = t.prompt_tokens.1 + t.decode_tokens.1;
-                    let corpus = CorpusConfig {
-                        seed: t.trace_seed,
-                        min_tokens: need,
-                        max_tokens: need,
-                        test_split: true,
-                        ..Default::default()
-                    };
-                    let mut g = TraceGenerator::new(&world, corpus, t.trace_seed);
-                    pools.push(g.generate(8));
-                    fit.extend(g.generate(4));
+    // the self-contained reuse-heavy generator otherwise.  The learned
+    // predictor additionally needs the PJRT predictor artifact to
+    // precompute per-trace predictions (replayed via CachedPredictor).
+    type Pools = Vec<Vec<PromptTrace>>;
+    type LearnedPools = Option<Vec<Vec<moe_beyond::predictor::TracePredictions>>>;
+    let (pools, fit, n_layers, n_experts, learned_pools): (
+        Pools,
+        Vec<PromptTrace>,
+        usize,
+        usize,
+        LearnedPools,
+    ) = match harness::load_artifacts() {
+        Ok(arts) => {
+            let world = WorldModel::load(arts.path("world.json"))?;
+            let (nl, ne) = (
+                world.meta.n_layers as usize,
+                world.meta.n_experts as usize,
+            );
+            let mut pools = Vec::new();
+            let mut fit = Vec::new();
+            for t in &spec.tenants {
+                let need = t.prompt_tokens.1 + t.decode_tokens.1;
+                let corpus = CorpusConfig {
+                    seed: t.trace_seed,
+                    min_tokens: need,
+                    max_tokens: need,
+                    test_split: true,
+                    ..Default::default()
+                };
+                let mut g = TraceGenerator::new(&world, corpus, t.trace_seed);
+                pools.push(g.generate(8));
+                fit.extend(g.generate(4));
+            }
+            println!("tenant corpora: 8 traces/tenant from the artifact world");
+            let learned_pools = if want_learned {
+                let rt = PjrtRuntime::cpu()?;
+                let sim = SimConfig::default();
+                let mut lp = Vec::with_capacity(pools.len());
+                for pool in &pools {
+                    lp.push(harness::precompute_learned(
+                        &rt,
+                        &arts,
+                        pool,
+                        sim.predictor_stride,
+                        sim.predict_top_k,
+                        true,
+                    )?);
                 }
-                println!("tenant corpora: 8 traces/tenant from the artifact world");
-                (pools, fit, nl, ne)
-            }
-            Err(_) => {
-                println!("artifact tree absent — synthetic tenant corpora (4 layers x 64 experts)");
-                let pools = workload::synthetic_pools(&spec, 8, 4, 64);
-                let fit = workload::synthetic_fit_pool(&spec, 4, 4, 64);
-                (pools, fit, 4, 64)
-            }
-        };
+                println!("learned predictions precomputed for every tenant pool");
+                Some(lp)
+            } else {
+                None
+            };
+            (pools, fit, nl, ne, learned_pools)
+        }
+        Err(e) => {
+            anyhow::ensure!(
+                !want_learned,
+                "--predictors learned needs the artifact tree (PJRT predictor) — {e}"
+            );
+            println!("artifact tree absent — synthetic tenant corpora (4 layers x 64 experts)");
+            let pools = workload::synthetic_pools(&spec, 8, 4, 64);
+            let fit = workload::synthetic_fit_pool(&spec, 4, 4, 64);
+            (pools, fit, 4, 64, None)
+        }
+    };
 
     let total = n_layers * n_experts;
     let tier_base = TierConfig {
@@ -326,6 +359,7 @@ fn serve_sim(args: &Args) -> Result<()> {
         spec: &spec,
         pools: &pools,
         fit_traces: &fit,
+        learned: learned_pools.as_deref(),
         workload: &wcfg,
         sim: &SimConfig::default(),
         eam: &eam,

@@ -123,6 +123,19 @@ impl EamPredictor {
     pub fn eamc_len(&self) -> usize {
         self.eamc.len()
     }
+
+    /// Strongest experts of one layer row of a matched sketch.
+    fn layer_top_k(flat: &[f32], layer: usize, n_experts: usize, k: usize) -> ExpertSet {
+        let row = &flat[layer * n_experts..(layer + 1) * n_experts];
+        let vals: Vec<f64> = row.iter().map(|&x| x as f64).collect();
+        let mut out = ExpertSet::new();
+        for i in math::top_k(&vals, k) {
+            if vals[i] > 0.0 {
+                out.insert(i as u8);
+            }
+        }
+        out
+    }
 }
 
 impl ExpertPredictor for EamPredictor {
@@ -142,15 +155,27 @@ impl ExpertPredictor for EamPredictor {
         let Some(m) = self.best_match() else {
             return ExpertSet::EMPTY;
         };
-        let row = &m.flat[layer * self.n_experts..(layer + 1) * self.n_experts];
-        let vals: Vec<f64> = row.iter().map(|&x| x as f64).collect();
-        let mut out = ExpertSet::new();
-        for i in math::top_k(&vals, self.cfg.prefetch_per_layer) {
-            if vals[i] > 0.0 {
-                out.insert(i as u8);
-            }
+        Self::layer_top_k(&m.flat, layer, self.n_experts, self.cfg.prefetch_per_layer)
+    }
+
+    /// One EAMC cosine match per TOKEN instead of one per layer: the
+    /// partial rEAM only changes on `observe`, so every layer of a token
+    /// matches the same sketch — the batched call hoists the O(|EAMC| ×
+    /// L × E) scan out of the per-layer loop.
+    fn predict_layers(
+        &mut self,
+        _ctx: &DecodeContext<'_>,
+        layers: std::ops::Range<usize>,
+        out: &mut [ExpertSet],
+    ) {
+        debug_assert_eq!(layers.len(), out.len());
+        let Some(m) = self.best_match() else {
+            out.fill(ExpertSet::EMPTY);
+            return;
+        };
+        for (slot, l) in out.iter_mut().zip(layers) {
+            *slot = Self::layer_top_k(&m.flat, l, self.n_experts, self.cfg.prefetch_per_layer);
         }
-        out
     }
 
     fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet) {

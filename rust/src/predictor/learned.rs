@@ -275,6 +275,16 @@ impl ExpertPredictor for CachedPredictor<'_> {
     fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
         self.preds.sets[ctx.t][layer]
     }
+    fn predict_layers(
+        &mut self,
+        ctx: &DecodeContext<'_>,
+        layers: std::ops::Range<usize>,
+        out: &mut [ExpertSet],
+    ) {
+        debug_assert_eq!(layers.len(), out.len());
+        // one bounds-checked row index per token instead of one per layer
+        out.copy_from_slice(&self.preds.sets[ctx.t][layers.start..layers.end]);
+    }
     fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
     fn end_prompt(&mut self, _: &PromptTrace) {}
 }

@@ -42,10 +42,18 @@ pub struct DecodeContext<'a> {
 
 /// An expert-activation predictor.
 ///
-/// The simulator calls, for each token `t` and layer `l` (in execution
-/// order), `predict(ctx, l)` *before* revealing the ground truth, then
+/// The replay engines call, once per token, [`predict_layers`]
+/// (predictions for every layer, issued before the token's first layer
+/// runs — the serving engine's timing), then per executed layer
 /// `observe(ctx, l, actual)` after the layer "executes".  `begin_prompt`
 /// resets per-request state (batch-size-1 semantics, paper §5).
+/// Scalar [`predict`] remains the per-layer primitive; the two are held
+/// to exact agreement (`predict_layers(ctx, 0..L, out)` ==
+/// `[predict(ctx, 0), …, predict(ctx, L-1)]` with no intervening
+/// observations) by the parity suite in `tests/replay_parity.rs`.
+///
+/// [`predict`]: ExpertPredictor::predict
+/// [`predict_layers`]: ExpertPredictor::predict_layers
 pub trait ExpertPredictor: Send {
     fn name(&self) -> &'static str;
 
@@ -54,6 +62,31 @@ pub trait ExpertPredictor: Send {
 
     /// Predict the experts that will fire at (current token, `layer`).
     fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet;
+
+    /// Predict the experts that will fire at the current token for every
+    /// layer in `layers`, writing `out[i]` for layer `layers.start + i`
+    /// (`out.len()` must equal the range length).  One virtual call per
+    /// token on the replay/workload hot loops, mirroring
+    /// [`crate::memory::ExpertMemory::lookup_set`] on the lookup side.
+    ///
+    /// The default delegates to scalar [`predict`], so third-party
+    /// predictors keep working unchanged; the in-crate predictors
+    /// override it to hoist per-token work out of the per-layer loop
+    /// (most profitably the EAMC cosine match, which is identical for
+    /// every layer of one token).
+    ///
+    /// [`predict`]: ExpertPredictor::predict
+    fn predict_layers(
+        &mut self,
+        ctx: &DecodeContext<'_>,
+        layers: std::ops::Range<usize>,
+        out: &mut [ExpertSet],
+    ) {
+        debug_assert_eq!(layers.len(), out.len());
+        for (slot, l) in out.iter_mut().zip(layers) {
+            *slot = self.predict(ctx, l);
+        }
+    }
 
     /// Observe the ground-truth activation after the layer ran.
     fn observe(&mut self, ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet);
@@ -72,6 +105,15 @@ impl ExpertPredictor for NoPrefetch {
     fn begin_prompt(&mut self, _: &PromptTrace) {}
     fn predict(&mut self, _: &DecodeContext<'_>, _: usize) -> ExpertSet {
         ExpertSet::EMPTY
+    }
+    fn predict_layers(
+        &mut self,
+        _: &DecodeContext<'_>,
+        layers: std::ops::Range<usize>,
+        out: &mut [ExpertSet],
+    ) {
+        debug_assert_eq!(layers.len(), out.len());
+        out.fill(ExpertSet::EMPTY);
     }
     fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
     fn end_prompt(&mut self, _: &PromptTrace) {}

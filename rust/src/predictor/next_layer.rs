@@ -45,6 +45,17 @@ impl ExpertPredictor for NextLayerAll {
         }
     }
 
+    fn predict_layers(
+        &mut self,
+        ctx: &DecodeContext<'_>,
+        layers: std::ops::Range<usize>,
+        out: &mut [ExpertSet],
+    ) {
+        debug_assert_eq!(layers.len(), out.len());
+        // layer-independent: build the (capped) all-experts mask once
+        out.fill(self.predict(ctx, layers.start));
+    }
+
     fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
     fn end_prompt(&mut self, _: &PromptTrace) {}
 }

@@ -24,14 +24,9 @@ impl Default for OraclePredictor {
     }
 }
 
-impl ExpertPredictor for OraclePredictor {
-    fn name(&self) -> &'static str {
-        crate::predictor::PredictorKind::Oracle.id()
-    }
-
-    fn begin_prompt(&mut self, _: &PromptTrace) {}
-
-    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+impl OraclePredictor {
+    /// Shared body of the scalar and batched entry points.
+    fn predict_at(&self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
         let mut out = ctx.trace.expert_set(ctx.t, layer);
         // extended horizon: union of the next horizon-1 layers too
         for h in 1..self.horizon {
@@ -40,6 +35,30 @@ impl ExpertPredictor for OraclePredictor {
             }
         }
         out
+    }
+}
+
+impl ExpertPredictor for OraclePredictor {
+    fn name(&self) -> &'static str {
+        crate::predictor::PredictorKind::Oracle.id()
+    }
+
+    fn begin_prompt(&mut self, _: &PromptTrace) {}
+
+    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+        self.predict_at(ctx, layer)
+    }
+
+    fn predict_layers(
+        &mut self,
+        ctx: &DecodeContext<'_>,
+        layers: std::ops::Range<usize>,
+        out: &mut [ExpertSet],
+    ) {
+        debug_assert_eq!(layers.len(), out.len());
+        for (slot, l) in out.iter_mut().zip(layers) {
+            *slot = self.predict_at(ctx, l);
+        }
     }
 
     fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}

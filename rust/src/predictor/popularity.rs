@@ -81,6 +81,21 @@ impl ExpertPredictor for PopularityPredictor {
         self.cached[layer]
     }
 
+    fn predict_layers(
+        &mut self,
+        _ctx: &DecodeContext<'_>,
+        layers: std::ops::Range<usize>,
+        out: &mut [ExpertSet],
+    ) {
+        debug_assert_eq!(layers.len(), out.len());
+        // one dirty check per token, then straight copies of the cached
+        // per-layer top-k sets
+        if self.dirty {
+            self.rebuild();
+        }
+        out.copy_from_slice(&self.cached[layers.start..layers.end]);
+    }
+
     fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet) {
         for e in actual.iter() {
             self.counts[layer * self.n_experts + e as usize] += 1;

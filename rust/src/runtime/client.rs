@@ -223,17 +223,15 @@ impl Executable {
         rest: &[TensorArg],
     ) -> Result<xla::PjRtBuffer> {
         let client = self.exe.client().clone();
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+        // staged host-state buffer; must outlive the execute call below
+        let host_state;
         let mut all: Vec<&xla::PjRtBuffer> = self.resident.iter().collect();
         match state {
             StateArg::Host(t) => {
-                bufs.push(t.to_buffer(&client)?);
+                host_state = t.to_buffer(&client)?;
+                all.push(&host_state);
             }
             StateArg::Device(b) => all.push(b),
-        }
-        let state_ref_from_host = matches!(&bufs.first(), Some(_));
-        if state_ref_from_host {
-            all.push(&bufs[0]);
         }
         let mut arg_bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(rest.len());
         for a in rest {

@@ -21,6 +21,7 @@ use crate::config::{CacheConfig, SimConfig, TierConfig};
 use crate::memory::{ExpertMemory, FlatMemory, TieredMemory};
 use crate::predictor::{DecodeContext, ExpertPredictor};
 use crate::trace::{CompiledTrace, PromptTrace};
+use crate::util::ExpertSet;
 
 /// Reusable simulation engine (residency persists across prompts unless
 /// the caller builds a fresh engine per prompt).
@@ -30,6 +31,9 @@ pub struct SimEngine {
     pub memory: Box<dyn ExpertMemory>,
     pub sim: SimConfig,
     pub n_experts: usize,
+    /// Per-token prediction buffer reused across the replay (one
+    /// `predict_layers` call per token writes into it).
+    pred_scratch: Vec<ExpertSet>,
 }
 
 impl SimEngine {
@@ -38,6 +42,7 @@ impl SimEngine {
             memory,
             sim,
             n_experts,
+            pred_scratch: Vec::new(),
         }
     }
 
@@ -114,21 +119,32 @@ impl SimEngine {
         let n_layers = trace.n_layers as usize;
         let warm = self.sim.warmup_tokens.min(trace.n_tokens());
         predictor.begin_prompt(trace);
+        self.pred_scratch.clear();
+        self.pred_scratch.resize(n_layers, ExpertSet::EMPTY);
 
         for t in 0..trace.n_tokens() {
             let ctx = DecodeContext { trace, t };
             let measured = t >= warm;
+            if measured {
+                // ONE predictor call per token: predictions for every
+                // layer are issued before the token's first layer runs —
+                // the serving engine's timing (`ModelEngine::step_stream`
+                // refreshes all layers per decode step), so predictors
+                // condition on observations up to and including the
+                // PREVIOUS token.
+                predictor.predict_layers(&ctx, 0..n_layers, &mut self.pred_scratch);
+            }
             for l in 0..n_layers {
                 let truth = compiled.set(t, l);
 
                 if measured {
-                    // predict + prefetch BEFORE the layer "executes";
-                    // the prefetch horizon is `lookahead_layers` (paper: 1,
-                    // issued while layer l-1 computes — here equivalently
-                    // just before l runs).  Only the DMA budget's worth of
-                    // transfers can land within the window; later ones are
-                    // issued but arrive too late to help this layer.
-                    let predicted = predictor.predict(&ctx, l);
+                    // prefetch BEFORE the layer "executes"; the prefetch
+                    // horizon is `lookahead_layers` (paper: 1, issued
+                    // while layer l-1 computes — here equivalently just
+                    // before l runs).  Only the DMA budget's worth of
+                    // transfers can land within the window; later ones
+                    // are issued but arrive too late to help this layer.
+                    let predicted = self.pred_scratch[l];
                     let pf = self.memory.prefetch(l, predicted);
                     stats.prefetches += pf.issued;
                     stats.wasted_prefetches += pf.too_late;

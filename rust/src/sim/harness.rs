@@ -169,10 +169,14 @@ pub fn run_fig7(
         None
     };
 
+    // compile the test corpus ONCE: every predictor's sweep shares the
+    // packed tables and the memoized stack-distance profile
+    let corpus = crate::trace::CompiledCorpus::compile(test);
     let inputs = SweepInputs {
         test_traces: test,
         fit_traces: fit,
         learned: learned_preds.as_deref(),
+        compiled: Some(&corpus),
         sim,
         eam: EamConfig::default(),
         n_layers: arts.world.n_layers as usize,

@@ -9,19 +9,25 @@
 //! grid index, so the output is deterministic and identical to a serial
 //! run regardless of scheduling; `MOEB_SWEEP_THREADS` (or the
 //! `*_threaded` variants) pins the worker count, `1` forces serial.
+//!
+//! The no-prefetch (`PredictorKind::None`) baselines of BOTH sweeps are
+//! analytic: one memoized Mattson stack-distance pass over the corpus
+//! answers every flat capacity (`sweep_capacities*`) and — via per-tier
+//! band lookups on the same histogram — every stall-free tiered grid
+//! cell (`sweep_tiered*`) without replaying.  `MOEB_SWEEP_EXACT=1`
+//! forces the retained exact replays everywhere.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
-
-use crate::cache::{stackdist, CacheStats, LruCache, StackDistProfile};
+use crate::cache::{CacheStats, LruCache};
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
 use crate::predictor::{factory, CachedPredictor, ExpertPredictor, PredictorParams, TracePredictions};
 use crate::sim::SimEngine;
-use crate::tier::TierStats;
+use crate::tier::{TierCostModel, TierStats};
 use crate::trace::{CompiledCorpus, CompiledTrace, PromptTrace};
+use crate::util::parallel::parallel_map;
 use crate::Result;
 
 pub use crate::predictor::PredictorKind;
+pub use crate::util::parallel::sweep_threads;
 
 /// One (capacity, predictor) measurement.
 #[derive(Debug, Clone)]
@@ -49,10 +55,57 @@ pub struct SweepInputs<'a> {
     /// Precomputed learned predictions, parallel to `test_traces`
     /// (required iff the sweep includes `Learned`).
     pub learned: Option<&'a [TracePredictions]>,
+    /// Optional pre-compiled corpus for `test_traces` (index-parallel).
+    /// Callers running several sweeps over one corpus should compile
+    /// once and set this: the packed set tables AND the memoized
+    /// stack-distance profile are then shared across calls instead of
+    /// rebuilt per sweep.  `None` compiles per call.
+    pub compiled: Option<&'a CompiledCorpus>,
     pub sim: SimConfig,
     pub eam: EamConfig,
     pub n_layers: usize,
     pub n_experts: usize,
+}
+
+/// The shared corpus for a sweep: the caller's pre-compiled tables when
+/// provided (an `Arc` bump), a fresh compilation otherwise.  A stale
+/// corpus (compiled from different traces) would silently corrupt every
+/// point, so the parallelism invariant is a hard error, not a debug
+/// assert.
+fn corpus_for(inputs: &SweepInputs<'_>) -> Result<CompiledCorpus> {
+    match inputs.compiled {
+        Some(c) => {
+            anyhow::ensure!(
+                c.len() == inputs.test_traces.len(),
+                "SweepInputs::compiled has {} traces but test_traces has {}",
+                c.len(),
+                inputs.test_traces.len()
+            );
+            Ok(c.clone())
+        }
+        None => Ok(CompiledCorpus::compile(inputs.test_traces)),
+    }
+}
+
+/// Derive one tiered grid cell's validated `TierConfig` — shared by the
+/// exact replay ([`run_tier_point`]) and the analytic evaluation
+/// ([`sweep_tiered_stackdist`]), whose byte-identity contract depends on
+/// both paths rounding capacities identically.
+fn tier_cfg_for(
+    (gf, hf, ssd): (f64, f64, f64),
+    inputs: &SweepInputs<'_>,
+    base: &TierConfig,
+) -> Result<TierConfig> {
+    let total = inputs.n_layers * inputs.n_experts;
+    let gpu_cap = ((total as f64 * gf).round() as usize).max(1);
+    let host_cap = ((total as f64 * hf).round() as usize).max(1);
+    let cfg = base
+        .clone()
+        .with_gpu_capacity(gpu_cap)
+        .with_host_capacity(host_cap)
+        .with_deepest_fetch_us(ssd);
+    cfg.validate()?;
+    Ok(cfg)
 }
 
 fn make_predictor(kind: PredictorKind, inputs: &SweepInputs<'_>) -> Result<Box<dyn ExpertPredictor>> {
@@ -68,72 +121,12 @@ fn make_predictor(kind: PredictorKind, inputs: &SweepInputs<'_>) -> Result<Box<d
     )
 }
 
-/// Worker count for the sweep harness: `MOEB_SWEEP_THREADS` if set (>= 1),
-/// else the machine's available parallelism.  Parsed once per process
-/// (`OnceLock`) — callers hit this per sweep invocation, and nothing in
-/// the crate mutates the variable at runtime.
-pub fn sweep_threads() -> usize {
-    static THREADS: OnceLock<usize> = OnceLock::new();
-    *THREADS.get_or_init(|| {
-        match std::env::var("MOEB_SWEEP_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-        {
-            Some(n) if n >= 1 => n,
-            _ => std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
-        }
-    })
-}
-
-/// `MOEB_SWEEP_EXACT=1` disables the stack-distance fast path and forces
-/// every sweep point through the exact replay (a belt-and-braces escape
-/// hatch; the two are parity-tested bit-identical).
+/// `MOEB_SWEEP_EXACT=1` disables the stack-distance fast paths (flat AND
+/// tiered) and forces every sweep point through the exact replay (a
+/// belt-and-braces escape hatch; the paths are parity-tested
+/// bit-identical).
 fn stackdist_disabled() -> bool {
     matches!(std::env::var("MOEB_SWEEP_EXACT").ok().as_deref(), Some(v) if !v.is_empty() && v != "0")
-}
-
-/// Map `f` over `jobs` on `threads` scoped workers.  Workers claim jobs
-/// from an atomic cursor and write results back by index, so the output
-/// order (and content — each job is self-contained) is identical to the
-/// serial `jobs.iter().map(f)`.  Crate-visible: the workload load sweep
-/// (`crate::workload::sweep_load`) fans its grid out over the same
-/// workers.
-pub(crate) fn parallel_map<J, R, F>(jobs: &[J], threads: usize, f: F) -> Result<Vec<R>>
-where
-    J: Sync,
-    R: Send,
-    F: Fn(&J) -> Result<R> + Sync,
-{
-    // a single job (or a single worker) never spawns: the scoped-thread
-    // setup/teardown would cost more than it hides
-    let threads = threads.max(1).min(jobs.len().max(1));
-    if jobs.len() <= 1 || threads <= 1 {
-        return jobs.iter().map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<R>>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
-                    break;
-                }
-                let r = f(&jobs[i]);
-                *slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap()
-                .expect("sweep worker exited without writing its slot")
-        })
-        .collect()
 }
 
 /// Replay every test prompt through a fresh engine each (batch-size-1
@@ -259,8 +252,9 @@ pub fn sweep_capacities_replay_threaded(
     inputs: &SweepInputs<'_>,
     threads: usize,
 ) -> Result<SweepResult> {
-    // compile the corpus once; every grid point reads the shared tables
-    let compiled = CompiledCorpus::compile(inputs.test_traces);
+    // compile (or reuse) the corpus once; every grid point reads the
+    // shared tables
+    let compiled = corpus_for(inputs)?;
     let points = parallel_map(fracs, threads, |&frac| {
         run_capacity_point(kind, frac, inputs, &compiled)
     })?;
@@ -270,25 +264,18 @@ pub fn sweep_capacities_replay_threaded(
     })
 }
 
-/// Stack-distance fast path for the no-prefetch baseline: profile each
-/// prompt once (fanned out over the workers, merged in index order —
-/// integer counters, so merge order cannot change the result), then
-/// read every capacity off the one histogram.
+/// Stack-distance fast path for the no-prefetch baseline: read every
+/// capacity off the corpus's memoized histogram
+/// ([`CompiledCorpus::stackdist_profile`] — one profiling pass per
+/// corpus, shared with the tiered sweep and with repeat calls).
 fn sweep_capacities_stackdist(
     fracs: &[f64],
     inputs: &SweepInputs<'_>,
     threads: usize,
 ) -> Result<SweepResult> {
-    let compiled = CompiledCorpus::compile(inputs.test_traces);
-    let profiles = parallel_map(&compiled[..], threads, |ct| {
-        let mut p = StackDistProfile::new();
-        stackdist::profile_prompt(ct, inputs.n_experts, inputs.sim.warmup_tokens, &mut p);
-        Ok(p)
-    })?;
-    let mut profile = StackDistProfile::new();
-    for p in &profiles {
-        profile.merge(p);
-    }
+    let compiled = corpus_for(inputs)?;
+    let profile =
+        compiled.stackdist_profile(inputs.n_experts, inputs.sim.warmup_tokens, threads);
 
     let total = inputs.n_layers * inputs.n_experts;
     // the replay path charges misses at the default flat PCIe cost (see
@@ -339,15 +326,7 @@ fn run_tier_point(
     base: &TierConfig,
     overlap_budget_us: f64,
 ) -> Result<TierSweepPoint> {
-    let total = inputs.n_layers * inputs.n_experts;
-    let gpu_cap = ((total as f64 * gf).round() as usize).max(1);
-    let host_cap = ((total as f64 * hf).round() as usize).max(1);
-    let cfg = base
-        .clone()
-        .with_gpu_capacity(gpu_cap)
-        .with_host_capacity(host_cap)
-        .with_deepest_fetch_us(ssd);
-    cfg.validate()?;
+    let cfg = tier_cfg_for((gf, hf, ssd), inputs, base)?;
 
     let mut stats = CacheStats::default();
     let mut tiers = TierStats::new(cfg.tiers.len());
@@ -408,6 +387,18 @@ pub fn sweep_tiered(
 }
 
 /// [`sweep_tiered`] on an explicit number of workers (`1` = serial).
+///
+/// `PredictorKind::None` over an all-`lru` hierarchy takes the tiered
+/// stack-distance fast path when the configuration is provably
+/// stall-free: ONE profiling pass over the corpus (memoized on the
+/// corpus, shared with the flat sweep) yields every grid cell's per-tier
+/// serve/demotion counts as histogram band lookups fed into
+/// [`TierCostModel`], instead of one full corpus replay per (host-frac ×
+/// SSD-bandwidth × GPU-frac) cell.  The exact replay is retained as
+/// [`sweep_tiered_replay_threaded`] — parity-tested byte-identical — and
+/// `MOEB_SWEEP_EXACT=1` forces it globally.  Prefetching predictors
+/// always replay (prefetch breaks stack inclusion; see
+/// [`crate::cache::stackdist`]).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_tiered_threaded(
     kind: PredictorKind,
@@ -419,6 +410,74 @@ pub fn sweep_tiered_threaded(
     overlap_budget_us: f64,
     threads: usize,
 ) -> Result<Vec<TierSweepPoint>> {
+    let grid = tier_grid(gpu_fracs, host_fracs, ssd_us, base)?;
+    // compile (or reuse) the corpus once for the whole surface
+    let compiled = corpus_for(inputs)?;
+    if kind == PredictorKind::None
+        && !stackdist_disabled()
+        && base.policy == "lru"
+        && tiered_stall_free(base, overlap_budget_us, compiled.max_set_len())
+    {
+        return sweep_tiered_stackdist(&grid, inputs, &compiled, base, overlap_budget_us, threads);
+    }
+    parallel_map(&grid, threads, |&point| {
+        run_tier_point(kind, point, inputs, &compiled, base, overlap_budget_us)
+    })
+}
+
+/// The exact per-cell tiered replay sweep with the default worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_tiered_replay(
+    kind: PredictorKind,
+    gpu_fracs: &[f64],
+    host_fracs: &[f64],
+    ssd_us: &[f64],
+    inputs: &SweepInputs<'_>,
+    base: &TierConfig,
+    overlap_budget_us: f64,
+) -> Result<Vec<TierSweepPoint>> {
+    sweep_tiered_replay_threaded(
+        kind,
+        gpu_fracs,
+        host_fracs,
+        ssd_us,
+        inputs,
+        base,
+        overlap_budget_us,
+        sweep_threads(),
+    )
+}
+
+/// The exact tiered sweep: every grid cell replays the whole corpus.
+/// The only correct path for prefetching predictors, non-LRU tier
+/// policies, and stall-prone writeback configs — and the parity
+/// reference for [`sweep_tiered_threaded`]'s analytic fast path.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_tiered_replay_threaded(
+    kind: PredictorKind,
+    gpu_fracs: &[f64],
+    host_fracs: &[f64],
+    ssd_us: &[f64],
+    inputs: &SweepInputs<'_>,
+    base: &TierConfig,
+    overlap_budget_us: f64,
+    threads: usize,
+) -> Result<Vec<TierSweepPoint>> {
+    let grid = tier_grid(gpu_fracs, host_fracs, ssd_us, base)?;
+    let compiled = corpus_for(inputs)?;
+    parallel_map(&grid, threads, |&point| {
+        run_tier_point(kind, point, inputs, &compiled, base, overlap_budget_us)
+    })
+}
+
+/// Row-major (gpu × host × ssd) grid; rejects bases too flat for the
+/// three sweep axes.
+fn tier_grid(
+    gpu_fracs: &[f64],
+    host_fracs: &[f64],
+    ssd_us: &[f64],
+    base: &TierConfig,
+) -> Result<Vec<(f64, f64, f64)>> {
     // the gpu/host/deepest axes address tiers 0/1/last: a flatter base
     // would silently sweep the wrong tier
     anyhow::ensure!(
@@ -434,10 +493,94 @@ pub fn sweep_tiered_threaded(
             }
         }
     }
-    // compile the corpus once for the whole surface
-    let compiled = CompiledCorpus::compile(inputs.test_traces);
-    parallel_map(&grid, threads, |&point| {
-        run_tier_point(kind, point, inputs, &compiled, base, overlap_budget_us)
+    Ok(grid)
+}
+
+/// Whether a no-prefetch tiered replay of this configuration can ever
+/// stall: demotion writebacks are the only DMA a demand-only replay
+/// issues, one layer execution issues at most one demotion per tier per
+/// ground-truth expert, and `end_layer` closes the window every layer —
+/// so a tier whose `writeback × max_cell_refs` fits the overlap window
+/// can never exceed it.  Stall-free configs make the analytic evaluation
+/// exact; anything else falls back to the replay.
+fn tiered_stall_free(base: &TierConfig, overlap_budget_us: f64, max_cell_refs: u32) -> bool {
+    base.tiers.iter().skip(1).all(|t| {
+        t.writeback_us_per_expert == 0.0
+            || t.writeback_us_per_expert * max_cell_refs as f64 <= overlap_budget_us
+    })
+}
+
+/// Analytic tiered sweep: every grid cell is a handful of band lookups
+/// on the corpus's stack-distance curve, fed into the same
+/// [`TierCostModel`] the replay charges.  Exactness argument (and the
+/// demotion/drop band math) lives in [`crate::cache::stackdist`]; the
+/// parity suite in `tests/replay_parity.rs` holds every counter and
+/// cost to byte-identical agreement with [`run_tier_point`] (float
+/// totals under the usual integer-µs-cost caveat).
+fn sweep_tiered_stackdist(
+    grid: &[(f64, f64, f64)],
+    inputs: &SweepInputs<'_>,
+    compiled: &CompiledCorpus,
+    base: &TierConfig,
+    overlap_budget_us: f64,
+    threads: usize,
+) -> Result<Vec<TierSweepPoint>> {
+    let profile =
+        compiled.stackdist_profile(inputs.n_experts, inputs.sim.warmup_tokens, threads);
+    let curve = profile.curve();
+    parallel_map(grid, threads, |&(gf, hf, ssd)| {
+        let cfg = tier_cfg_for((gf, hf, ssd), inputs, base)?;
+        let caps: Vec<usize> = cfg.tiers.iter().map(|t| t.capacity_experts).collect();
+        let deepest = caps.len() - 1;
+        let bands = curve.tier_bands(&caps);
+
+        // feed the band counts into the replay's cost model: per-band
+        // demand at each tier's fetch cost, cold reads at the deepest
+        // tier's, demotion writebacks fully overlapped (the stall-free
+        // gate above is what makes that exact)
+        let mut cost = TierCostModel::new(cfg.tiers.clone(), overlap_budget_us);
+        for (d, &n) in bands.served.iter().enumerate() {
+            cost.on_demand_fetch_n(d, n);
+        }
+        cost.on_demand_fetch_n(deepest, bands.cold);
+        for (d, &n) in bands.demotions_into.iter().enumerate().skip(1) {
+            cost.on_writeback_overlapped_n(d, n);
+        }
+
+        let mut tiers = TierStats::new(caps.len());
+        tiers.served = bands.served.clone();
+        tiers.cold = bands.cold;
+        tiers.promotions = bands.promotions();
+        tiers.demotions = bands.demotions();
+        tiers.dropped = bands.dropped;
+
+        // transfer_us mirrors the replay's per-miss fetch charging:
+        // every non-GPU-hit pays the fetch cost of the depth it reached
+        let mut transfer_us = 0.0;
+        for d in 1..caps.len() {
+            transfer_us += bands.served[d] as f64 * cfg.tiers[d].fetch_us_per_expert;
+        }
+        transfer_us += bands.cold as f64 * cfg.tiers[deepest].fetch_us_per_expert;
+        let stats = CacheStats {
+            hits: bands.served[0],
+            misses: profile.measured - bands.served[0],
+            prefetches: 0,
+            wasted_prefetches: 0,
+            prediction_hits: 0,
+            prediction_total: profile.measured,
+            transfer_us,
+        };
+
+        Ok(TierSweepPoint {
+            gpu_frac: gf,
+            host_frac: hf,
+            ssd_us_per_expert: ssd,
+            gpu_hit_rate: stats.hit_rate(),
+            deep_miss_rate: tiers.below_rate(1),
+            critical_path_us: cost.critical_path_us(),
+            stats,
+            tiers,
+        })
     })
 }
 
@@ -485,6 +628,7 @@ mod tests {
             test_traces: test,
             fit_traces: fit,
             learned: None,
+            compiled: None,
             sim: SimConfig::default(),
             eam: EamConfig {
                 kmeans_clusters: 0,
@@ -708,6 +852,74 @@ mod tests {
                 assert_sweep_eq(&serial, &par);
             }
         }
+    }
+
+    /// The tiered stack-distance fast path (the default for `None` over
+    /// an all-LRU, stall-free base) is byte-identical to the exact
+    /// per-cell replay (the full random-config suite lives in
+    /// `tests/replay_parity.rs`).
+    #[test]
+    fn tiered_stackdist_matches_replay() {
+        let test = mk_traces(5, 41);
+        let fit = mk_traces(4, 42);
+        let inp = inputs(&test, &fit);
+        let gpu = [0.05, 0.2, 0.8];
+        let host = [0.02, 0.3];
+        let ssd = [8_000.0, 22_000.0];
+        let fast = sweep_tiered_threaded(
+            PredictorKind::None, &gpu, &host, &ssd, &inp, &base_tiers(), 1_000.0, 4,
+        )
+        .unwrap();
+        let exact = sweep_tiered_replay_threaded(
+            PredictorKind::None, &gpu, &host, &ssd, &inp, &base_tiers(), 1_000.0, 4,
+        )
+        .unwrap();
+        assert_eq!(fast.len(), exact.len());
+        for (f, e) in fast.iter().zip(exact.iter()) {
+            assert_eq!(f.gpu_hit_rate.to_bits(), e.gpu_hit_rate.to_bits());
+            assert_eq!(f.deep_miss_rate.to_bits(), e.deep_miss_rate.to_bits());
+            assert_eq!(f.critical_path_us.to_bits(), e.critical_path_us.to_bits());
+            assert_eq!(f.stats.hits, e.stats.hits);
+            assert_eq!(f.stats.misses, e.stats.misses);
+            assert_eq!(f.stats.transfer_us.to_bits(), e.stats.transfer_us.to_bits());
+            assert_eq!(f.tiers.served, e.tiers.served);
+            assert_eq!(f.tiers.cold, e.tiers.cold);
+            assert_eq!(f.tiers.promotions, e.tiers.promotions);
+            assert_eq!(f.tiers.demotions, e.tiers.demotions);
+            assert_eq!(f.tiers.dropped, e.tiers.dropped);
+        }
+    }
+
+    /// A shared pre-compiled corpus produces the same sweeps as per-call
+    /// compilation, and repeat sweeps reuse its memoized profile.
+    #[test]
+    fn shared_corpus_matches_per_call_compilation() {
+        let test = mk_traces(5, 51);
+        let fit = mk_traces(4, 52);
+        let fresh = inputs(&test, &fit);
+        let corpus = crate::trace::CompiledCorpus::compile(&test);
+        let mut shared = inputs(&test, &fit);
+        shared.compiled = Some(&corpus);
+        let fracs = [0.05, 0.2, 0.8];
+        let a = sweep_capacities_threaded(PredictorKind::None, &fracs, &fresh, 2).unwrap();
+        let b = sweep_capacities_threaded(PredictorKind::None, &fracs, &shared, 2).unwrap();
+        assert_sweep_eq(&a, &b);
+        let ta = sweep_tiered(
+            PredictorKind::None, &fracs, &[0.5], &[22_000.0], &fresh, &base_tiers(), 1_000.0,
+        )
+        .unwrap();
+        let tb = sweep_tiered(
+            PredictorKind::None, &fracs, &[0.5], &[22_000.0], &shared, &base_tiers(), 1_000.0,
+        )
+        .unwrap();
+        for (x, y) in ta.iter().zip(tb.iter()) {
+            assert_eq!(x.gpu_hit_rate.to_bits(), y.gpu_hit_rate.to_bits());
+            assert_eq!(x.critical_path_us.to_bits(), y.critical_path_us.to_bits());
+        }
+        // both shared-corpus sweeps used ONE memoized profile
+        let p1 = corpus.stackdist_profile(64, SimConfig::default().warmup_tokens, 1);
+        let p2 = corpus.stackdist_profile(64, SimConfig::default().warmup_tokens, 4);
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2));
     }
 
     /// Tiered surface: same determinism guarantee over the 3-axis grid.

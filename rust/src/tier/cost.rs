@@ -66,6 +66,24 @@ impl TierCostModel {
         self.tiers[depth].demand_us += self.specs[depth].fetch_us_per_expert;
     }
 
+    /// `n` demand fetches from `depth` in one charge — the analytic
+    /// sweep's bulk entry point.  `n·cost` is bit-identical to `n`
+    /// repeated [`on_demand_fetch`](Self::on_demand_fetch) calls
+    /// whenever the partial sums are exactly representable
+    /// (integer-valued µs costs, as configured throughout this crate).
+    pub fn on_demand_fetch_n(&mut self, depth: usize, n: u64) {
+        self.tiers[depth].demand_us += n as f64 * self.specs[depth].fetch_us_per_expert;
+    }
+
+    /// `n` demotion writebacks into tier `dest`, charged as fully
+    /// overlapped DMA (no per-layer window accounting, so no stall can
+    /// be produced).  Only valid when the caller has proven no layer's
+    /// writeback DMA could exceed the overlap window — the analytic
+    /// sweep's stall-free precondition (see `sim::sweep`).
+    pub fn on_writeback_overlapped_n(&mut self, dest: usize, n: u64) {
+        self.tiers[dest].writeback_us += n as f64 * self.specs[dest].writeback_us_per_expert;
+    }
+
     /// A prefetch reading one expert from `depth`, overlapped with the
     /// previous layer's compute on that tier's channel.
     pub fn on_prefetch(&mut self, depth: usize) {
@@ -170,6 +188,39 @@ mod tests {
         assert_eq!(flat.demand_us, tiered.demand_total());
         assert_eq!(flat.stall_us, tiered.stall_total());
         assert_eq!(flat.critical_path_us(), tiered.critical_path_us());
+    }
+
+    /// Bulk charges are bit-identical to repeated unit charges for
+    /// integer-valued costs, and overlapped writebacks never stall.
+    #[test]
+    fn bulk_charges_match_repeated_unit_charges() {
+        let mut unit = two_tier();
+        let mut bulk = two_tier();
+        for _ in 0..7 {
+            unit.on_demand_fetch(1);
+        }
+        for _ in 0..3 {
+            unit.on_hit();
+        }
+        bulk.on_demand_fetch_n(1, 7);
+        bulk.on_demand_fetch_n(0, 3);
+        assert_eq!(unit.demand_total().to_bits(), bulk.demand_total().to_bits());
+
+        bulk.on_writeback_overlapped_n(1, 5);
+        assert_eq!(bulk.tiers[1].writeback_us, 0.0); // two_tier has wb = 0
+        assert_eq!(bulk.stall_total(), 0.0);
+        let mut wb = TierCostModel::new(
+            vec![
+                TierSpec::new("gpu", 4, 0.0, 0.0),
+                TierSpec::new("host", 8, 100.0, 100.0),
+            ],
+            250.0,
+        );
+        wb.on_writeback_overlapped_n(1, 5);
+        assert_eq!(wb.tiers[1].writeback_us, 500.0);
+        // overlapped bulk writebacks bypass the per-layer window
+        wb.end_layer();
+        assert_eq!(wb.stall_total(), 0.0);
     }
 
     #[test]

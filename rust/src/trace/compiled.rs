@@ -13,9 +13,11 @@
 //! wraps a compiled trace list in an `Arc` so sweep and workload workers
 //! share one copy across threads without re-compiling or cloning.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::cache::stackdist::{self, StackDistProfile};
 use crate::trace::PromptTrace;
+use crate::util::parallel::parallel_map;
 use crate::util::ExpertSet;
 
 /// One prompt's activation sets, packed row-major `[n_tokens, n_layers]`.
@@ -24,6 +26,7 @@ pub struct CompiledTrace {
     n_tokens: usize,
     n_layers: usize,
     sets: Vec<ExpertSet>,
+    max_set_len: u32,
 }
 
 impl CompiledTrace {
@@ -32,16 +35,28 @@ impl CompiledTrace {
         let n_tokens = trace.n_tokens();
         let n_layers = trace.n_layers as usize;
         let mut sets = Vec::with_capacity(n_tokens * n_layers);
+        let mut max_set_len = 0u32;
         for t in 0..n_tokens {
             for l in 0..n_layers {
-                sets.push(trace.expert_set(t, l));
+                let s = trace.expert_set(t, l);
+                max_set_len = max_set_len.max(s.len() as u32);
+                sets.push(s);
             }
         }
         Self {
             n_tokens,
             n_layers,
             sets,
+            max_set_len,
         }
+    }
+
+    /// Largest ground-truth set of any (token, layer) cell — the most
+    /// lookups one layer execution can issue (the tiered analytic sweep
+    /// bounds per-layer demotion DMA with this).
+    #[inline]
+    pub fn max_set_len(&self) -> u32 {
+        self.max_set_len
     }
 
     #[inline]
@@ -71,9 +86,17 @@ impl CompiledTrace {
 /// A compiled corpus shared across sweep/workload workers via `Arc`:
 /// cloning is a refcount bump, dereferencing yields `&[CompiledTrace]`
 /// parallel to the source trace slice.
+///
+/// The corpus also memoizes its stack-distance profiles
+/// ([`stackdist_profile`](CompiledCorpus::stackdist_profile)): every
+/// sweep that shares one `CompiledCorpus` (via `SweepInputs::compiled`)
+/// shares the profiling pass too.
 #[derive(Debug, Clone)]
 pub struct CompiledCorpus {
     traces: Arc<[CompiledTrace]>,
+    /// Lazily-built corpus-level profiles keyed by the inputs that shape
+    /// them; `Arc`-shared so clones reuse instead of re-profiling.
+    profiles: Arc<Mutex<Vec<((usize, usize), Arc<StackDistProfile>)>>>,
 }
 
 impl CompiledCorpus {
@@ -81,7 +104,47 @@ impl CompiledCorpus {
     pub fn compile(traces: &[PromptTrace]) -> Self {
         Self {
             traces: traces.iter().map(CompiledTrace::compile).collect(),
+            profiles: Arc::new(Mutex::new(Vec::new())),
         }
+    }
+
+    /// Largest ground-truth set of any cell across the corpus.
+    pub fn max_set_len(&self) -> u32 {
+        self.traces.iter().map(|t| t.max_set_len()).max().unwrap_or(0)
+    }
+
+    /// The corpus-level stack-distance profile for `(n_experts,
+    /// warmup_tokens)`, built ONCE per key (each prompt profiled on the
+    /// shared sweep workers, merged in index order — integer counters,
+    /// so merge order cannot change the result) and memoized behind an
+    /// `Arc`: `sweep_capacities*` and `sweep_tiered*` calls that share a
+    /// corpus stop re-profiling it per call.
+    pub fn stackdist_profile(
+        &self,
+        n_experts: usize,
+        warmup_tokens: usize,
+        threads: usize,
+    ) -> Arc<StackDistProfile> {
+        let key = (n_experts, warmup_tokens);
+        // hold the lock across the build: a second caller with the same
+        // key waits for the result instead of duplicating the pass
+        let mut cache = self.profiles.lock().unwrap();
+        if let Some((_, p)) = cache.iter().find(|(k, _)| *k == key) {
+            return Arc::clone(p);
+        }
+        let per_prompt = parallel_map(&self.traces[..], threads, |ct| {
+            let mut p = StackDistProfile::new();
+            stackdist::profile_prompt(ct, n_experts, warmup_tokens, &mut p);
+            Ok(p)
+        })
+        .expect("stack-distance profiling is infallible");
+        let mut merged = StackDistProfile::new();
+        for p in &per_prompt {
+            merged.merge(p);
+        }
+        let arc = Arc::new(merged);
+        cache.push((key, Arc::clone(&arc)));
+        arc
     }
 }
 
@@ -134,6 +197,43 @@ mod tests {
         assert_eq!(corpus.len(), 2);
         assert!(std::ptr::eq(&corpus[0], &clone[0]), "clone must share the Arc");
         assert_eq!(corpus[1].set(1, 2), traces[1].expert_set(1, 2));
+    }
+
+    #[test]
+    fn max_set_len_tracks_dedup() {
+        let tr = trace();
+        let ct = CompiledTrace::compile(&tr);
+        // token 1 layer 1 is {2, 4} after dedup of (2, 4); the densest
+        // cell in this trace is the top-2 pair
+        assert_eq!(ct.max_set_len(), 2);
+        let corpus = CompiledCorpus::compile(&[tr]);
+        assert_eq!(corpus.max_set_len(), 2);
+    }
+
+    /// `stackdist_profile` is built once per (n_experts, warmup) key and
+    /// shared across clones; distinct keys get distinct profiles.
+    #[test]
+    fn stackdist_profile_is_memoized_per_key() {
+        let traces = vec![trace(), trace()];
+        let corpus = CompiledCorpus::compile(&traces);
+        let clone = corpus.clone();
+        let a = corpus.stackdist_profile(8, 0, 1);
+        let b = clone.stackdist_profile(8, 0, 2);
+        assert!(Arc::ptr_eq(&a, &b), "same key must reuse the cached Arc");
+        let c = corpus.stackdist_profile(8, 1, 1);
+        assert!(!Arc::ptr_eq(&a, &c), "different warm-up is a different profile");
+        assert!(c.measured < a.measured);
+
+        // the memoized profile equals a direct per-prompt merge
+        let mut direct = crate::cache::StackDistProfile::new();
+        for ct in corpus.iter() {
+            stackdist::profile_prompt(ct, 8, 0, &mut direct);
+        }
+        assert_eq!(a.measured, direct.measured);
+        assert_eq!(a.cold, direct.cold);
+        for cap in 1..20 {
+            assert_eq!(a.hits_at(cap), direct.hits_at(cap));
+        }
     }
 
     /// Seeded-random equivalence over irregular shapes.

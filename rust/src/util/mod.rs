@@ -3,6 +3,7 @@
 pub mod expert_set;
 pub mod json;
 pub mod math;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,96 @@
+//! Scoped-thread fan-out shared by every grid harness in the crate: the
+//! Fig-7 capacity sweep, the tiered surface, the workload load sweep,
+//! and the corpus-level stack-distance profiler all map their jobs over
+//! the same deterministic worker pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::Result;
+
+/// Worker count for the sweep harnesses: `MOEB_SWEEP_THREADS` if set
+/// (>= 1), else the machine's available parallelism.  Parsed once per
+/// process (`OnceLock`) — callers hit this per sweep invocation, and
+/// nothing in the crate mutates the variable at runtime.
+pub fn sweep_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        match std::env::var("MOEB_SWEEP_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(n) if n >= 1 => n,
+            _ => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    })
+}
+
+/// Map `f` over `jobs` on `threads` scoped workers.  Workers claim jobs
+/// from an atomic cursor and write results back by index, so the output
+/// order (and content — each job is self-contained) is identical to the
+/// serial `jobs.iter().map(f)`.
+pub(crate) fn parallel_map<J, R, F>(jobs: &[J], threads: usize, f: F) -> Result<Vec<R>>
+where
+    J: Sync,
+    R: Send,
+    F: Fn(&J) -> Result<R> + Sync,
+{
+    // a single job (or a single worker) never spawns: the scoped-thread
+    // setup/teardown would cost more than it hides
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if jobs.len() <= 1 || threads <= 1 {
+        return jobs.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<R>>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let r = f(&jobs[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("sweep worker exited without writing its slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_matches_serial_for_any_worker_count() {
+        let jobs: Vec<usize> = (0..37).collect();
+        let serial = parallel_map(&jobs, 1, |&j| Ok(j * j)).unwrap();
+        for threads in [2usize, 4, 16, 64] {
+            let par = parallel_map(&jobs, threads, |&j| Ok(j * j)).unwrap();
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_propagates_errors() {
+        let jobs = [1usize, 2, 3];
+        let r = parallel_map(&jobs, 2, |&j| {
+            if j == 2 {
+                anyhow::bail!("boom")
+            } else {
+                Ok(j)
+            }
+        });
+        assert!(r.is_err());
+    }
+}

@@ -16,8 +16,12 @@
 
 use crate::config::{EamConfig, SimConfig, WorkloadConfig};
 use crate::memory::ExpertMemory;
-use crate::predictor::{factory, DecodeContext, ExpertPredictor, PredictorKind, PredictorParams};
+use crate::predictor::{
+    factory, CachedPredictor, DecodeContext, ExpertPredictor, NoPrefetch, PredictorKind,
+    PredictorParams, TracePredictions,
+};
 use crate::trace::{CompiledCorpus, PromptTrace};
+use crate::util::ExpertSet;
 use crate::workload::profile::{Schedule, WorkloadSpec};
 use crate::workload::slo::{TenantAcc, WorkloadReport};
 use crate::Result;
@@ -97,6 +101,12 @@ pub struct WorkloadInputs<'a> {
     pub pools: &'a [Vec<PromptTrace>],
     /// Training traces for offline-fitted predictors (EAMC, popularity).
     pub fit_traces: &'a [PromptTrace],
+    /// Precomputed learned predictions, `learned[t][i]` parallel to
+    /// `pools[t][i]` (required iff the run uses
+    /// [`PredictorKind::Learned`]; each admitted request replays its
+    /// trace's predictions through a [`CachedPredictor`], exactly as the
+    /// Fig-7 sweep does).
+    pub learned: Option<&'a [Vec<TracePredictions>]>,
     pub cfg: &'a WorkloadConfig,
     pub sim: &'a SimConfig,
     pub eam: &'a EamConfig,
@@ -121,12 +131,15 @@ struct Stream {
 /// Run one multi-tenant workload to drain against `memory`.
 ///
 /// Per decode token the engine mirrors `SimEngine::run_prompt`'s
-/// measured phase (predict → prefetch → lookup ground truth →
-/// end_layer → observe); prefill mirrors the serving engine's warm-up
-/// (residency moves, hit/miss counters stay decode-only, fetch traffic
-/// still costs virtual time).  Predictor state lives in one replica per
-/// concurrency slot, so a slot's EAMC grows across the requests it
-/// serves exactly as a serial engine's would.
+/// measured phase (ONE `predict_layers` call for the whole token, then
+/// per layer prefetch → lookup ground truth → end_layer → observe);
+/// prefill mirrors the serving engine's warm-up (residency moves,
+/// hit/miss counters stay decode-only, fetch traffic still costs
+/// virtual time).  Predictor state lives in one replica per concurrency
+/// slot, so a slot's EAMC grows across the requests it serves exactly
+/// as a serial engine's would; `PredictorKind::Learned` instead replays
+/// each request's precomputed [`TracePredictions`]
+/// (`WorkloadInputs::learned`) through a per-request [`CachedPredictor`].
 pub fn run_workload(
     inp: &WorkloadInputs<'_>,
     kind: PredictorKind,
@@ -142,20 +155,65 @@ pub fn run_workload(
 /// [`run_workload`] over pre-compiled tenant pools (index-parallel to
 /// `inp.pools`); the load-sweep grid compiles once and every worker
 /// shares the `Arc`-backed tables.
-pub fn run_workload_compiled(
-    inp: &WorkloadInputs<'_>,
+pub fn run_workload_compiled<'a>(
+    inp: &WorkloadInputs<'a>,
     kind: PredictorKind,
     mut memory: Box<dyn ExpertMemory>,
     compiled_pools: &[CompiledCorpus],
 ) -> Result<WorkloadReport> {
     inp.cfg.validate()?;
     inp.sim.validate()?;
-    anyhow::ensure!(
-        kind != PredictorKind::Learned,
-        "the learned predictor needs precomputed per-trace predictions; \
-         the workload simulator drives the heuristic kinds (eam, next-layer, \
-         popularity, oracle, none)"
-    );
+    // the learned predictor replays precomputed per-trace predictions
+    // (it cannot be factory-built); validate coverage up front so the
+    // drain never index-panics mid-run
+    let learned: Option<&'a [Vec<TracePredictions>]> = if kind == PredictorKind::Learned {
+        let l = inp.learned.ok_or_else(|| {
+            anyhow::anyhow!(
+                "the learned predictor needs precomputed per-trace predictions \
+                 (WorkloadInputs::learned: one TracePredictions per pool trace)"
+            )
+        })?;
+        anyhow::ensure!(
+            l.len() == inp.pools.len(),
+            "need one learned-prediction set per tenant pool ({} vs {})",
+            l.len(),
+            inp.pools.len()
+        );
+        for (t, (lp, pool)) in l.iter().zip(inp.pools.iter()).enumerate() {
+            anyhow::ensure!(
+                lp.len() == pool.len(),
+                "tenant {t}: need one TracePredictions per pool trace ({} vs {})",
+                lp.len(),
+                pool.len()
+            );
+            for (i, (p, tr)) in lp.iter().zip(pool.iter()).enumerate() {
+                anyhow::ensure!(
+                    p.sets.len() >= tr.n_tokens() && p.n_layers >= inp.n_layers,
+                    "tenant {t} trace {i}: predictions cover {}x{} tokens x layers \
+                     but the run needs {}x{}",
+                    p.sets.len(),
+                    p.n_layers,
+                    tr.n_tokens(),
+                    inp.n_layers
+                );
+                // TracePredictions is all-pub and may be hand-built:
+                // check the actual row lengths, not just the claimed
+                // n_layers, so a ragged table cannot index-panic mid-run
+                for (tok, row) in p.sets[..tr.n_tokens()].iter().enumerate() {
+                    anyhow::ensure!(
+                        row.len() >= inp.n_layers,
+                        "tenant {t} trace {i}: prediction row for token {tok} has \
+                         {} layers, run needs {}",
+                        row.len(),
+                        inp.n_layers
+                    );
+                }
+            }
+        }
+        Some(l)
+    } else {
+        None
+    };
     anyhow::ensure!(
         inp.pools.len() == inp.spec.tenants.len(),
         "need one trace pool per tenant"
@@ -205,8 +263,15 @@ pub fn run_workload_compiled(
         n_experts: inp.n_experts,
         fit_traces: inp.fit_traces,
     };
-    let mut predictors: Vec<Box<dyn ExpertPredictor>> = (0..n_slots)
-        .map(|_| factory::build(kind, &params))
+    let mut predictors: Vec<Box<dyn ExpertPredictor + 'a>> = (0..n_slots)
+        .map(|_| -> Result<Box<dyn ExpertPredictor + 'a>> {
+            Ok(match kind {
+                // placeholder: each admission swaps in that request's
+                // CachedPredictor before the slot's first use
+                PredictorKind::Learned => Box::new(NoPrefetch),
+                _ => factory::build(kind, &params)?,
+            })
+        })
         .collect::<Result<_>>()?;
     let mut slot_busy = vec![false; n_slots];
 
@@ -220,6 +285,8 @@ pub fn run_workload_compiled(
     let mut completion_ids: Vec<u64> = Vec::new();
 
     let arrivals = &inp.schedule.arrivals;
+    // per-token prediction buffer, reused across every decode step
+    let mut pred_sets = vec![ExpertSet::EMPTY; n_layers];
     let mut clock = 0.0f64;
     let mut next = 0usize; // next arrival to admit (FIFO admission queue)
     let mut due = 0usize; // arrivals with arrival_us <= clock
@@ -239,6 +306,11 @@ pub fn run_workload_compiled(
                 .position(|b| !*b)
                 .expect("free predictor slot under the concurrency limit");
             slot_busy[slot] = true;
+            if let Some(l) = learned {
+                // learned predictions are per request trace: the slot
+                // replays exactly this trace's precomputed sets
+                predictors[slot] = Box::new(CachedPredictor::new(&l[ev.tenant][ev.trace_idx]));
+            }
             predictors[slot].begin_prompt(&inp.pools[ev.tenant][ev.trace_idx]);
             acc[ev.tenant].queue.push(clock - ev.arrival_us);
             inflight.push(Stream {
@@ -327,13 +399,16 @@ pub fn run_workload_compiled(
                 counters.prefill_steps += 1;
                 cost = inp.cfg.prefill_us_per_token * s.prompt as f64 + fetch_us;
             } else {
-                // one decode token: predict → prefetch → reveal truth
+                // one decode token: predict every layer in ONE call
+                // (the replay engine's timing), then prefetch → reveal
+                // truth per layer
                 let t = s.prompt + s.decoded;
                 let ctx = DecodeContext { trace, t };
+                pred.predict_layers(&ctx, 0..n_layers, &mut pred_sets);
                 let mark = memory.cost_marks();
                 for l in 0..n_layers {
                     let truth = ctrace.set(t, l);
-                    let predicted = pred.predict(&ctx, l);
+                    let predicted = pred_sets[l];
                     let pf = memory.prefetch(l, predicted);
                     ta.cache.prefetches += pf.issued;
                     ta.cache.wasted_prefetches += pf.too_late;

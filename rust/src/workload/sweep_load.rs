@@ -2,13 +2,13 @@
 //! (scheduler policy × backend × predictor × offered load × cache
 //! fraction) grid, each point one full multi-tenant drain, fanned out
 //! over the same scoped worker threads as the Fig-7 capacity sweep
-//! (`sim::sweep::parallel_map`, index-keyed write-back, bit-identical to
-//! a serial run).
+//! (`util::parallel::parallel_map`, index-keyed write-back, bit-identical
+//! to a serial run).
 
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
 use crate::memory;
-use crate::predictor::PredictorKind;
-use crate::sim::sweep::{parallel_map, sweep_threads};
+use crate::predictor::{PredictorKind, TracePredictions};
+use crate::util::parallel::{parallel_map, sweep_threads};
 use crate::trace::{CompiledCorpus, PromptTrace};
 use crate::workload::profile::{Schedule, WorkloadSpec};
 use crate::workload::sched::{run_workload_compiled, SchedPolicy, WorkloadInputs};
@@ -46,6 +46,10 @@ pub struct LoadSweepInputs<'a> {
     pub spec: &'a WorkloadSpec,
     pub pools: &'a [Vec<PromptTrace>],
     pub fit_traces: &'a [PromptTrace],
+    /// Precomputed learned predictions per tenant pool (parallel to
+    /// `pools`; required iff `kinds` includes `Learned`) — the paper's
+    /// own predictor on the multi-tenant curves.
+    pub learned: Option<&'a [Vec<TracePredictions>]>,
     /// Policy field is ignored — the policy is a grid axis.
     pub workload: &'a WorkloadConfig,
     pub sim: &'a SimConfig,
@@ -116,6 +120,7 @@ fn run_load_point(
         schedule,
         pools: inputs.pools,
         fit_traces: inputs.fit_traces,
+        learned: inputs.learned,
         cfg: &wcfg,
         sim: inputs.sim,
         eam: inputs.eam,
@@ -256,6 +261,7 @@ mod tests {
             spec: &spec,
             pools: &pools,
             fit_traces: &fit,
+            learned: None,
             workload: &wcfg,
             sim: &sim,
             eam: &eam,

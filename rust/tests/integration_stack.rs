@@ -57,6 +57,7 @@ fn sim_learned_beats_eam_at_low_capacity() {
         test_traces: test,
         fit_traces: fit,
         learned: Some(&preds),
+        compiled: None,
         sim,
         eam: EamConfig::default(),
         n_layers: 27,

@@ -8,19 +8,27 @@
 //! * native `lookup_set` (flat and tiered) vs the trait-default scalar
 //!   delegation (`memory::ScalarPath`) over full random-trace replays,
 //! * the Mattson stack-distance capacity sweep vs the per-capacity
-//!   exact replay for LRU/no-prefetch across random capacity grids.
+//!   exact replay for LRU/no-prefetch across random capacity grids,
+//! * the tiered stack-distance sweep vs the per-cell exact replay across
+//!   random tier splits, SSD bandwidths, and warm-up epochs,
+//! * batched `predict_layers` vs scalar `predict` for every predictor
+//!   kind.
 
 use moe_beyond::cache::{CacheStats, LruCache};
 use moe_beyond::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
 use moe_beyond::memory::{ExpertMemory, FlatMemory, ScalarPath, TieredMemory};
-use moe_beyond::predictor::{NoPrefetch, OraclePredictor};
+use moe_beyond::predictor::{
+    factory, CachedPredictor, DecodeContext, ExpertPredictor, NoPrefetch, OraclePredictor,
+    PredictorParams, TracePredictions,
+};
 use moe_beyond::sim::sweep::{
-    sweep_capacities_replay_threaded, sweep_capacities_threaded, SweepInputs,
+    sweep_capacities_replay_threaded, sweep_capacities_threaded, sweep_tiered_replay_threaded,
+    sweep_tiered_threaded, SweepInputs,
 };
 use moe_beyond::sim::{PredictorKind, SimEngine};
 use moe_beyond::tier::TierSpec;
 use moe_beyond::trace::PromptTrace;
-use moe_beyond::util::Rng;
+use moe_beyond::util::{ExpertSet, Rng};
 
 fn random_trace(rng: &mut Rng, n_tokens: usize, n_layers: u16, pool: u8) -> PromptTrace {
     let mut experts = Vec::new();
@@ -89,7 +97,10 @@ fn flat_batched_lookup_matches_scalar_delegation() {
     for case in 0..30 {
         let n_prompts = rng.range(1, 4);
         let traces: Vec<PromptTrace> = (0..n_prompts)
-            .map(|_| random_trace(&mut rng, rng.range(4, 40), 3, 16))
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
             .collect();
         let cap = rng.range(1, 24);
         let sim = SimConfig {
@@ -126,7 +137,10 @@ fn tiered_batched_lookup_matches_scalar_delegation() {
     for case in 0..30 {
         let n_prompts = rng.range(1, 4);
         let traces: Vec<PromptTrace> = (0..n_prompts)
-            .map(|_| random_trace(&mut rng, rng.range(4, 40), 3, 16))
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
             .collect();
         let cfg = TierConfig {
             tiers: vec![
@@ -195,7 +209,10 @@ fn stackdist_sweep_matches_exact_replay() {
     for case in 0..10 {
         let n_prompts = rng.range(2, 6);
         let test: Vec<PromptTrace> = (0..n_prompts)
-            .map(|_| random_trace(&mut rng, rng.range(6, 48), 3, 16))
+            .map(|_| {
+                let n_tokens = rng.range(6, 48);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
             .collect();
         let fit: Vec<PromptTrace> = (0..3)
             .map(|_| random_trace(&mut rng, 12, 3, 16))
@@ -208,6 +225,7 @@ fn stackdist_sweep_matches_exact_replay() {
             test_traces: &test,
             fit_traces: &fit,
             learned: None,
+            compiled: None,
             sim,
             eam: EamConfig {
                 kmeans_clusters: 0,
@@ -236,6 +254,232 @@ fn stackdist_sweep_matches_exact_replay() {
                 "{label}: pred rate"
             );
             assert_stats_identical(&label, &e.stats, &f.stats);
+        }
+    }
+}
+
+/// Tiered stack-distance sweep vs the exact per-cell replay:
+/// byte-identical `TierSweepPoint`s — every CacheStats counter, every
+/// per-tier serve/demotion/drop counter, and the modeled critical path —
+/// across random tier splits, random (integer) SSD fetch costs, random
+/// warm-up epochs, and both a writeback-free hierarchy and one whose
+/// writeback DMA provably fits the overlap window (the stall-free gate).
+#[test]
+fn tiered_stackdist_sweep_matches_exact_replay() {
+    let mut rng = Rng::new(504);
+    for case in 0..8 {
+        let n_prompts = rng.range(2, 6);
+        let test: Vec<PromptTrace> = (0..n_prompts)
+            .map(|_| {
+                let n_tokens = rng.range(6, 48);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
+            .collect();
+        let fit: Vec<PromptTrace> = (0..3)
+            .map(|_| random_trace(&mut rng, 12, 3, 16))
+            .collect();
+        let sim = SimConfig {
+            warmup_tokens: rng.below(12),
+            ..Default::default()
+        };
+        let inputs = SweepInputs {
+            test_traces: &test,
+            fit_traces: &fit,
+            learned: None,
+            compiled: None,
+            sim,
+            eam: EamConfig {
+                kmeans_clusters: 0,
+                ..Default::default()
+            },
+            n_layers: 3,
+            n_experts: 16,
+        };
+        // integer-valued costs keep every float total exactly
+        // representable, so to_bits comparisons are meaningful
+        let host_wb = if case % 2 == 0 { 0.0 } else { 100.0 }; // 100·2 ≤ 1000 overlap
+        let base = TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", 1, 2.0, 0.0),
+                TierSpec::new("host", 1, 1400.0, host_wb),
+                TierSpec::new("ssd", 48, 22_000.0, 0.0),
+            ],
+            policy: "lru".into(),
+        };
+        let gpu: Vec<f64> = (0..rng.range(2, 5))
+            .map(|_| (rng.range(1, 90) as f64) / 100.0)
+            .collect();
+        let host: Vec<f64> = (0..rng.range(1, 4))
+            .map(|_| (rng.range(1, 100) as f64) / 100.0)
+            .collect();
+        // SSD cost must stay >= the host fetch (TierConfig::validate
+        // orders tiers fastest-to-slowest)
+        let ssd: Vec<f64> = (0..rng.range(1, 4))
+            .map(|_| rng.range(1400, 40_000) as f64)
+            .collect();
+
+        for threads in [1usize, 4] {
+            let fast = sweep_tiered_threaded(
+                PredictorKind::None, &gpu, &host, &ssd, &inputs, &base, 1_000.0, threads,
+            )
+            .unwrap();
+            let exact = sweep_tiered_replay_threaded(
+                PredictorKind::None, &gpu, &host, &ssd, &inputs, &base, 1_000.0, threads,
+            )
+            .unwrap();
+            assert_eq!(fast.len(), exact.len());
+            for (f, e) in fast.iter().zip(exact.iter()) {
+                let label = format!(
+                    "case {case} threads {threads} gpu {} host {} ssd {}",
+                    f.gpu_frac, f.host_frac, f.ssd_us_per_expert
+                );
+                assert_stats_identical(&label, &e.stats, &f.stats);
+                assert_eq!(
+                    f.gpu_hit_rate.to_bits(),
+                    e.gpu_hit_rate.to_bits(),
+                    "{label}: gpu hit rate"
+                );
+                assert_eq!(
+                    f.deep_miss_rate.to_bits(),
+                    e.deep_miss_rate.to_bits(),
+                    "{label}: deep miss rate"
+                );
+                assert_eq!(
+                    f.critical_path_us.to_bits(),
+                    e.critical_path_us.to_bits(),
+                    "{label}: critical path ({} vs {})",
+                    f.critical_path_us,
+                    e.critical_path_us
+                );
+                assert_eq!(f.tiers.served, e.tiers.served, "{label}: served");
+                assert_eq!(f.tiers.cold, e.tiers.cold, "{label}: cold");
+                assert_eq!(f.tiers.promotions, e.tiers.promotions, "{label}: promotions");
+                assert_eq!(
+                    f.tiers.prefetch_promotions, e.tiers.prefetch_promotions,
+                    "{label}: prefetch promotions"
+                );
+                assert_eq!(f.tiers.demotions, e.tiers.demotions, "{label}: demotions");
+                assert_eq!(f.tiers.dropped, e.tiers.dropped, "{label}: dropped");
+            }
+        }
+    }
+}
+
+/// A hierarchy whose writeback DMA can exceed the overlap window is NOT
+/// eligible for the analytic path — the dispatcher must fall back to the
+/// exact replay, so both entry points still agree (trivially, but this
+/// pins the gate itself).
+#[test]
+fn stall_prone_config_falls_back_to_exact_replay() {
+    let mut rng = Rng::new(505);
+    let test: Vec<PromptTrace> = (0..3)
+        .map(|_| random_trace(&mut rng, 24, 3, 16))
+        .collect();
+    let fit = vec![random_trace(&mut rng, 12, 3, 16)];
+    let inputs = SweepInputs {
+        test_traces: &test,
+        fit_traces: &fit,
+        learned: None,
+        compiled: None,
+        sim: SimConfig::default(),
+        eam: EamConfig {
+            kmeans_clusters: 0,
+            ..Default::default()
+        },
+        n_layers: 3,
+        n_experts: 16,
+    };
+    // host writeback 1400 × top-2 cells > 1000 overlap: stall possible
+    let base = TierConfig {
+        tiers: vec![
+            TierSpec::new("gpu", 1, 2.0, 0.0),
+            TierSpec::new("host", 1, 1400.0, 1400.0),
+            TierSpec::new("ssd", 48, 22_000.0, 0.0),
+        ],
+        policy: "lru".into(),
+    };
+    let fast = sweep_tiered_threaded(
+        PredictorKind::None, &[0.05, 0.3], &[0.1], &[22_000.0], &inputs, &base, 1_000.0, 2,
+    )
+    .unwrap();
+    let exact = sweep_tiered_replay_threaded(
+        PredictorKind::None, &[0.05, 0.3], &[0.1], &[22_000.0], &inputs, &base, 1_000.0, 2,
+    )
+    .unwrap();
+    for (f, e) in fast.iter().zip(exact.iter()) {
+        // the replay CAN stall here, and the dispatcher must have taken
+        // the replay: bit-identical including any stall time
+        assert_eq!(f.critical_path_us.to_bits(), e.critical_path_us.to_bits());
+        assert_eq!(f.tiers.demotions, e.tiers.demotions);
+    }
+}
+
+/// `predict_layers` == back-to-back scalar `predict` calls (no
+/// intervening observations) for EVERY predictor kind, across random
+/// traces and observation histories.
+#[test]
+fn predict_layers_matches_scalar_for_every_kind() {
+    let n_layers = 3usize;
+    let n_experts = 16usize;
+    let mut rng = Rng::new(506);
+    let fit: Vec<PromptTrace> = (0..6)
+        .map(|_| random_trace(&mut rng, 12, n_layers as u16, 16))
+        .collect();
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let params = PredictorParams {
+        eam: &eam,
+        predict_top_k: 4,
+        n_layers,
+        n_experts,
+        fit_traces: &fit,
+    };
+
+    for kind in PredictorKind::ALL {
+        for case in 0..6 {
+            let n_tokens = rng.range(4, 24);
+            let tr = random_trace(&mut rng, n_tokens, n_layers as u16, 16);
+            // synthetic learned predictions: random per-(token, layer) sets
+            let preds = TracePredictions {
+                n_layers,
+                sets: (0..tr.n_tokens())
+                    .map(|_| {
+                        (0..n_layers)
+                            .map(|_| {
+                                ExpertSet::from_ids(
+                                    (0..3).map(|_| rng.below(n_experts) as u8),
+                                )
+                            })
+                            .collect()
+                    })
+                    .collect(),
+                logits: vec![Vec::new(); tr.n_tokens()],
+                n_experts,
+            };
+            let mut p: Box<dyn ExpertPredictor + '_> = match kind {
+                PredictorKind::Learned => Box::new(CachedPredictor::new(&preds)),
+                _ => factory::build(kind, &params).unwrap(),
+            };
+            p.begin_prompt(&tr);
+            for t in 0..tr.n_tokens() {
+                let ctx = DecodeContext { trace: &tr, t };
+                // scalar predictions are idempotent between observations,
+                // so one instance can answer both ways
+                let scalar: Vec<ExpertSet> =
+                    (0..n_layers).map(|l| p.predict(&ctx, l)).collect();
+                let mut batched = vec![ExpertSet::EMPTY; n_layers];
+                p.predict_layers(&ctx, 0..n_layers, &mut batched);
+                assert_eq!(
+                    scalar, batched,
+                    "kind {kind:?} case {case} token {t}: batched != scalar"
+                );
+                for l in 0..n_layers {
+                    p.observe(&ctx, l, tr.expert_set(t, l));
+                }
+            }
+            p.end_prompt(&tr);
         }
     }
 }

@@ -7,6 +7,7 @@
 
 use moe_beyond::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
 use moe_beyond::memory::{self, ExpertMemory};
+use moe_beyond::predictor::TracePredictions;
 use moe_beyond::sim::PredictorKind;
 use moe_beyond::tier::TierSpec;
 use moe_beyond::trace::PromptTrace;
@@ -73,6 +74,7 @@ fn run(
         schedule: &fx.schedule,
         pools: &fx.pools,
         fit_traces: &fx.fit,
+        learned: None,
         cfg: &cfg,
         sim: &sim,
         eam: &eam,
@@ -242,6 +244,98 @@ fn shortest_remaining_prefers_short_requests() {
         flat_memory(25, &SimConfig::default(), overlap_us()),
     );
     assert_eq!(fcfs.completion_ids, vec![0, 1]);
+}
+
+/// The learned-predictor wiring adds a prediction SOURCE, not a
+/// different engine: oracle-equivalent precomputed predictions (each
+/// trace's own ground truth) must reproduce the Oracle run bit for bit,
+/// and a learned run without predictions must fail loudly.
+#[test]
+fn learned_predictions_reproduce_oracle_run() {
+    let fx = fixture(2.0);
+    // per-pool TracePredictions whose sets ARE the ground truth — the
+    // CachedPredictor then predicts exactly what OraclePredictor reads
+    let preds: Vec<Vec<TracePredictions>> = fx
+        .pools
+        .iter()
+        .map(|pool| {
+            pool.iter()
+                .map(|tr| TracePredictions {
+                    n_layers: N_LAYERS,
+                    sets: (0..tr.n_tokens())
+                        .map(|t| (0..N_LAYERS).map(|l| tr.expert_set(t, l)).collect())
+                        .collect(),
+                    logits: vec![Vec::new(); tr.n_tokens()],
+                    n_experts: N_EXPERTS,
+                })
+                .collect()
+        })
+        .collect();
+    let cfg = WorkloadConfig {
+        max_concurrency: 2,
+        policy: "round-robin".into(),
+        ..Default::default()
+    };
+    let sim = SimConfig::default();
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let oracle_inputs = WorkloadInputs {
+        spec: &fx.spec,
+        schedule: &fx.schedule,
+        pools: &fx.pools,
+        fit_traces: &fx.fit,
+        learned: None,
+        cfg: &cfg,
+        sim: &sim,
+        eam: &eam,
+        n_layers: N_LAYERS,
+        n_experts: N_EXPERTS,
+    };
+    let learned_inputs = WorkloadInputs {
+        learned: Some(&preds),
+        ..oracle_inputs
+    };
+    let oracle = run_workload(
+        &oracle_inputs,
+        PredictorKind::Oracle,
+        flat_memory(25, &sim, overlap_us()),
+    )
+    .unwrap();
+    let learned = run_workload(
+        &learned_inputs,
+        PredictorKind::Learned,
+        flat_memory(25, &sim, overlap_us()),
+    )
+    .unwrap();
+    assert_eq!(oracle.predictor, "oracle");
+    assert_eq!(learned.predictor, "learned");
+    assert_eq!(learned.completion_ids, oracle.completion_ids);
+    assert_eq!(learned.counters.steps, oracle.counters.steps);
+    assert_eq!(learned.counters.completions, oracle.counters.completions);
+    assert_eq!(
+        learned.virtual_secs.to_bits(),
+        oracle.virtual_secs.to_bits(),
+        "identical predictions must produce an identical virtual timeline"
+    );
+    let (la, oa) = (&learned.aggregate.cache, &oracle.aggregate.cache);
+    assert_eq!(la.hits, oa.hits);
+    assert_eq!(la.misses, oa.misses);
+    assert_eq!(la.prefetches, oa.prefetches);
+    assert_eq!(la.prediction_hits, oa.prediction_hits);
+    assert_eq!(la.prediction_total, oa.prediction_total);
+    assert_eq!(la.transfer_us.to_bits(), oa.transfer_us.to_bits());
+    // ground-truth predictions are perfect predictions
+    assert_eq!(la.prediction_hits, la.prediction_total);
+
+    // learned without predictions is a configuration error, not a panic
+    let err = run_workload(
+        &oracle_inputs,
+        PredictorKind::Learned,
+        flat_memory(25, &sim, overlap_us()),
+    );
+    assert!(err.is_err(), "learned run without predictions must fail");
 }
 
 /// A tiered hierarchy whose GPU tier costs the flat hit cost and whose
