@@ -24,5 +24,5 @@ mod session;
 pub use engine::{EngineConfig, ModelEngine};
 pub use expert_state::ExpertCacheManager;
 pub use request::{GenStats, Request, Response};
-pub use server::{serve_requests, ServeReport};
+pub use server::{serve_requests, serve_requests_obs, ServeReport};
 pub use session::Session;

@@ -13,6 +13,7 @@ use std::time::Instant;
 use crate::coordinator::engine::ModelEngine;
 use crate::coordinator::request::{Request, Response};
 use crate::metrics::{LatencyReport, ServingMetrics};
+use crate::obs::{ObsSink, TraceEvent};
 use crate::Result;
 
 /// Aggregate report of one serving run.
@@ -47,8 +48,29 @@ pub fn serve_requests<F>(
 where
     F: FnOnce() -> Result<ModelEngine> + Send + 'static,
 {
+    serve_requests_obs(make_engine, requests, queue_depth, batch_size, &ObsSink::default())
+}
+
+/// [`serve_requests`] with an observability sink: the coordinator's
+/// counters and latency histograms register in the sink's metric
+/// registry, and submissions/completions emit wall-clock request spans
+/// (µs since serve start — the one surface where the clock is real
+/// time, so traces from here are NOT run-to-run byte-stable).
+pub fn serve_requests_obs<F>(
+    make_engine: F,
+    requests: Vec<Request>,
+    queue_depth: usize,
+    batch_size: usize,
+    obs: &ObsSink,
+) -> Result<ServeReport>
+where
+    F: FnOnce() -> Result<ModelEngine> + Send + 'static,
+{
     let (tx, rx) = mpsc::sync_channel::<Job>(queue_depth.max(1));
-    let metrics = std::sync::Arc::new(ServingMetrics::default());
+    let metrics = std::sync::Arc::new(match obs.registry() {
+        Some(reg) => ServingMetrics::registered(reg),
+        None => ServingMetrics::default(),
+    });
 
     // ---- engine worker thread
     let worker = std::thread::spawn(move || -> Result<()> {
@@ -106,9 +128,15 @@ where
     let t0 = Instant::now();
     let mut waiters = Vec::new();
     let mut backpressured = 0usize;
-    for req in requests {
+    for (rid, req) in requests.into_iter().enumerate() {
         let (otx, orx) = mpsc::channel();
         metrics.requests_admitted.inc();
+        obs.set_now_us(t0.elapsed().as_secs_f64() * 1e6);
+        obs.emit(|ts| TraceEvent::RequestBegin {
+            ts_us: ts,
+            request: rid as u64,
+            tenant: 0,
+        });
         match tx.try_send((req, otx)) {
             Ok(()) => waiters.push(orx),
             Err(mpsc::TrySendError::Full(job)) => {
@@ -135,13 +163,19 @@ where
 
     // ---- collect
     let mut responses = Vec::new();
-    for w in waiters {
+    for (rid, w) in waiters.into_iter().enumerate() {
         if let Ok(resp) = w.recv() {
             metrics.requests_completed.inc();
             metrics.tokens_generated.add(resp.tokens.len() as u64);
             metrics.cache_hits.add(resp.stats.cache_hits);
             metrics.cache_misses.add(resp.stats.cache_misses);
             metrics.request_latency.record(resp.stats.wall);
+            obs.set_now_us(t0.elapsed().as_secs_f64() * 1e6);
+            obs.emit(|ts| TraceEvent::RequestEnd {
+                ts_us: ts,
+                request: rid as u64,
+                tenant: 0,
+            });
             responses.push(resp);
         }
     }

@@ -17,8 +17,11 @@
 //!   axis and the tiered no-prefetch surface — per-tier curves from one
 //!   memoized corpus profile; see [`cache::stackdist`]), the [`workload`]
 //!   multi-tenant simulator (open-loop arrivals, shared-cache
-//!   contention, SLO metrics, throughput–latency load sweeps), and the
-//!   evaluation harness behind Table 1.
+//!   contention, SLO metrics, throughput–latency load sweeps), the
+//!   [`obs`] observability layer (bounded-memory [`obs::Hist`]
+//!   percentiles behind every latency report, a labeled metric
+//!   registry, and Chrome-trace event tracing via [`obs::ObsSink`]),
+//!   and the evaluation harness behind Table 1.
 //! * **L2 (JAX, build-time)** — the MoE backbone (DeepSeek-V2-Lite
 //!   stand-in) and the MoE-Beyond predictor transformer, AOT-lowered to
 //!   HLO text in `artifacts/`.
@@ -47,6 +50,7 @@ pub mod eval;
 pub mod memory;
 pub mod metrics;
 pub mod moe;
+pub mod obs;
 pub mod predictor;
 pub mod runtime;
 pub mod sim;

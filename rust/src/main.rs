@@ -83,6 +83,8 @@ COMMANDS:
   sweep             Fig 7: cache hit rate vs capacity
                     --predictors learned,eam,none   --prompts 40   --out -
                     --fracs 0.05,0.10,...  (default: the paper's Fig-7 grid)
+                    --trace-out t.json --metrics-out m.json|m.prom
+                      (instrumented replay at the headline capacity)
   serve-sim         multi-tenant contention simulator: throughput-latency CSV
                     over policy x backend x predictor x load x cache fraction
                     --tenants 3        --horizon 12    --seed 7
@@ -90,6 +92,9 @@ COMMANDS:
                     --predictors eam,none             --loads 0.5,1,2,4
                     --fracs 0.05,0.10,0.20            --max-concurrency 4
                     --out serve_sim.csv   (synthetic corpora when no artifacts)
+                    --trace-out t.json --metrics-out m.json|m.prom
+                      (traced virtual-time re-run of the first grid point;
+                       byte-deterministic for a fixed seed)
   eval              Table 1: predictor accuracy/F1
                     --split test   --prompts 100
   analyze           Figs 1-3: activation sparsity analysis
@@ -408,6 +413,58 @@ fn serve_sim(args: &Args) -> Result<()> {
     }
     std::fs::write(&out, workload::load_csv(&points))?;
     println!("\n{} rows written to {out}", points.len());
+
+    // ---- optional observability pass: re-run the FIRST grid point with
+    // an active sink on the virtual clock.  The drain is byte-identical
+    // to the grid's own run of that point, so two invocations with the
+    // same seed produce byte-identical trace + metrics files (the CI obs
+    // gate compares exactly that).
+    let trace_out = args.get("trace-out", "");
+    let metrics_out = args.get("metrics-out", "");
+    if !trace_out.is_empty() || !metrics_out.is_empty() {
+        let obs = moe_beyond::obs::ObsSink::active(moe_beyond::obs::DEFAULT_RING_CAP, "virtual");
+        let pt = workload::run_point_obs(
+            &inputs, policies[0], backends[0], kinds[0], loads[0], fracs[0], &obs,
+        )?;
+        println!(
+            "\ntraced re-run: {} x {} x {} @ load {:.2}, cap {:.0}% ({} completions)",
+            pt.policy.id(),
+            pt.backend.id(),
+            pt.predictor.id(),
+            pt.load_mult,
+            pt.cache_frac * 100.0,
+            pt.report.counters.completions
+        );
+        write_obs_outputs(&obs, &trace_out, &metrics_out)?;
+    }
+    Ok(())
+}
+
+/// Write an active sink's trace and/or metrics to the given paths
+/// (empty path = skip).  A `.prom` metrics suffix selects Prometheus
+/// text exposition; anything else gets deterministic JSON.
+fn write_obs_outputs(
+    obs: &moe_beyond::obs::ObsSink,
+    trace_out: &str,
+    metrics_out: &str,
+) -> Result<()> {
+    if !trace_out.is_empty() {
+        let j = obs.trace_json().expect("active sink");
+        std::fs::write(trace_out, j.to_json_string())?;
+        println!(
+            "trace written to {trace_out} ({} events dropped by the ring)",
+            obs.dropped_events()
+        );
+    }
+    if !metrics_out.is_empty() {
+        let text = if metrics_out.ends_with(".prom") {
+            obs.metrics_prometheus().expect("active sink")
+        } else {
+            obs.metrics_json().expect("active sink").to_json_string()
+        };
+        std::fs::write(metrics_out, text)?;
+        println!("metrics written to {metrics_out}");
+    }
     Ok(())
 }
 
@@ -477,6 +534,40 @@ fn sweep(args: &Args) -> Result<()> {
         let rows = harness::fig7_rows(&results);
         std::fs::write(&out, harness::fig7_rows_json(&rows))?;
         println!("rows written to {out}");
+    }
+
+    // ---- optional observability pass: replay a few world-generated
+    // traces through an instrumented flat engine at the headline
+    // capacity (virtual clock, so the outputs are seed-deterministic).
+    let trace_out = args.get("trace-out", "");
+    let metrics_out = args.get("metrics-out", "");
+    if !trace_out.is_empty() || !metrics_out.is_empty() {
+        let world = WorldModel::load(arts.path("world.json"))?;
+        let (nl, ne) = (
+            arts.world.n_layers as usize,
+            arts.world.n_experts as usize,
+        );
+        let cap = (((nl * ne) as f64 * fracs[headline]).round() as usize).max(1);
+        let obs = moe_beyond::obs::ObsSink::active(moe_beyond::obs::DEFAULT_RING_CAP, "virtual");
+        let mut engine = moe_beyond::sim::SimEngine::flat(
+            Box::new(moe_beyond::cache::LruCache::new(cap)),
+            SimConfig::default(),
+            CacheConfig::default().with_capacity(cap),
+            ne,
+        );
+        engine.set_obs(obs.clone());
+        let mut g = TraceGenerator::new(&world, CorpusConfig::default(), 17);
+        let mut pred = moe_beyond::predictor::NoPrefetch;
+        let mut stats = moe_beyond::cache::CacheStats::default();
+        for tr in g.generate(4) {
+            engine.run_prompt(&tr, &mut pred, &mut stats);
+        }
+        println!(
+            "\ninstrumented replay: 4 traces @ {:.0}% capacity, hit rate {:.1}%",
+            fracs[headline] * 100.0,
+            stats.hit_rate() * 100.0
+        );
+        write_obs_outputs(&obs, &trace_out, &metrics_out)?;
     }
     Ok(())
 }

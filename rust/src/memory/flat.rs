@@ -4,6 +4,7 @@
 use crate::cache::{policy, CachePolicy, VramModel};
 use crate::config::CacheConfig;
 use crate::memory::{DmaBudget, ExpertMemory, Lookup, LookupBatch, MemoryStats, Prefetched};
+use crate::obs::{ObsSink, TierMoveKind, TraceEvent};
 use crate::tier::TierStats;
 use crate::util::ExpertSet;
 
@@ -17,6 +18,9 @@ pub struct FlatMemory {
     pcie_us_per_expert: f64,
     n_experts: usize,
     budget: DmaBudget,
+    /// Trace sink — default no-op; measured accesses emit
+    /// hit/miss/eviction events when a driver attaches an active sink.
+    obs: ObsSink,
 }
 
 impl FlatMemory {
@@ -33,6 +37,7 @@ impl FlatMemory {
             cache,
             n_experts,
             budget: DmaBudget::new(prefetch_budget),
+            obs: ObsSink::default(),
         }
     }
 
@@ -44,6 +49,13 @@ impl FlatMemory {
         if self.cache.touch(k) {
             if measured {
                 self.vram.on_hit();
+                self.obs.emit(|ts| TraceEvent::CacheAccess {
+                    ts_us: ts,
+                    layer: layer as u16,
+                    expert,
+                    hit: true,
+                    depth: 0,
+                });
             }
             Lookup {
                 hit: true,
@@ -53,7 +65,28 @@ impl FlatMemory {
             if measured {
                 self.vram.on_demand_miss();
             }
-            self.cache.insert(k);
+            let evicted = self.cache.insert(k);
+            if measured && self.obs.is_active() {
+                // depth 1 = the infinite host pool every miss faults from
+                self.obs.emit(|ts| TraceEvent::CacheAccess {
+                    ts_us: ts,
+                    layer: layer as u16,
+                    expert,
+                    hit: false,
+                    depth: 1,
+                });
+                if let Some(ek) = evicted {
+                    let (el, ee) = policy::unkey(ek, self.n_experts);
+                    self.obs.emit(|ts| TraceEvent::TierMove {
+                        ts_us: ts,
+                        kind: TierMoveKind::Demote,
+                        layer: el as u16,
+                        expert: ee,
+                        from: 0,
+                        to: 1,
+                    });
+                }
+            }
             Lookup {
                 hit: false,
                 fetch_us: self.pcie_us_per_expert,
@@ -102,9 +135,31 @@ impl ExpertMemory for FlatMemory {
             }
             landed += 1;
             self.vram.on_prefetch();
-            self.cache.insert(k);
+            if let Some(ek) = self.cache.insert(k) {
+                let n = self.n_experts;
+                self.obs.emit(|ts| {
+                    let (el, ee) = policy::unkey(ek, n);
+                    TraceEvent::TierMove {
+                        ts_us: ts,
+                        kind: TierMoveKind::Demote,
+                        layer: el as u16,
+                        expert: ee,
+                        from: 0,
+                        to: 1,
+                    }
+                });
+            }
         }
         out.landed = landed as u64;
+        if out.issued > 0 {
+            self.obs.emit(|ts| TraceEvent::Prefetch {
+                ts_us: ts,
+                layer: layer as u16,
+                issued: out.issued as u32,
+                landed: out.landed as u32,
+                too_late: out.too_late as u32,
+            });
+        }
         out
     }
 
@@ -149,6 +204,10 @@ impl ExpertMemory for FlatMemory {
 
     fn clear(&mut self) {
         self.cache.clear();
+    }
+
+    fn set_obs(&mut self, obs: ObsSink) {
+        self.obs = obs;
     }
 }
 

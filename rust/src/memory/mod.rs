@@ -214,6 +214,12 @@ pub trait ExpertMemory: Send {
     /// Drop all staged residency (cost accumulators are kept — they are
     /// cumulative across a run).
     fn clear(&mut self);
+
+    /// Attach an observability sink: backends that implement this emit
+    /// cache-access / tier-transition / prefetch trace events through
+    /// it on measured paths.  The default is a no-op so third-party
+    /// backends keep compiling (they simply stay silent).
+    fn set_obs(&mut self, _obs: crate::obs::ObsSink) {}
 }
 
 /// Adapter that pins any backend to the trait-default scalar lookup
@@ -282,6 +288,10 @@ impl ExpertMemory for ScalarPath {
 
     fn clear(&mut self) {
         self.0.clear()
+    }
+
+    fn set_obs(&mut self, obs: crate::obs::ObsSink) {
+        self.0.set_obs(obs)
     }
 }
 

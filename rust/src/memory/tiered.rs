@@ -5,7 +5,8 @@
 use crate::cache::policy;
 use crate::config::TierConfig;
 use crate::memory::{DmaBudget, ExpertMemory, Lookup, LookupBatch, MemoryStats, Prefetched};
-use crate::tier::{TierCostModel, TierStats, TieredCache};
+use crate::obs::{ObsSink, TierMoveKind, TraceEvent};
+use crate::tier::{Promotion, TierCostModel, TierStats, TieredCache};
 use crate::util::ExpertSet;
 use crate::Result;
 
@@ -17,6 +18,9 @@ pub struct TieredMemory {
     tstats: TierStats,
     n_experts: usize,
     budget: DmaBudget,
+    /// Trace sink — default no-op; measured accesses emit cache-access
+    /// and promote/demote/drop events when a driver attaches one.
+    obs: ObsSink,
 }
 
 impl TieredMemory {
@@ -33,7 +37,43 @@ impl TieredMemory {
             tstats: TierStats::new(cfg.tiers.len()),
             n_experts,
             budget: DmaBudget::new(prefetch_budget),
+            obs: ObsSink::default(),
         })
+    }
+
+    /// Emit the tier transitions one promotion caused: the promoted key
+    /// rising to tier 0 plus every demotion of its insert chain (a
+    /// `None` landing tier is a drop off the hierarchy).
+    fn emit_tier_moves(&self, k: policy::ExpertKey, found: Option<usize>, promo: &Promotion) {
+        if !self.obs.is_active() {
+            return;
+        }
+        let n = self.n_experts;
+        let (pl, pe) = policy::unkey(k, n);
+        let from = found.unwrap_or(self.cache.deepest()) as u8;
+        self.obs.emit(|ts| TraceEvent::TierMove {
+            ts_us: ts,
+            kind: TierMoveKind::Promote,
+            layer: pl as u16,
+            expert: pe,
+            from,
+            to: 0,
+        });
+        for d in &promo.demoted {
+            let (dl, de) = policy::unkey(d.key, n);
+            self.obs.emit(|ts| TraceEvent::TierMove {
+                ts_us: ts,
+                kind: if d.to.is_some() {
+                    TierMoveKind::Demote
+                } else {
+                    TierMoveKind::Drop
+                },
+                layer: dl as u16,
+                expert: de,
+                from: d.from as u8,
+                to: d.to.unwrap_or(d.from) as u8,
+            });
+        }
     }
 
     /// Shared lookup body: `lookup` is one call, `lookup_set` loops it
@@ -50,6 +90,13 @@ impl TieredMemory {
             if measured {
                 self.tstats.record_served(0);
                 self.cost.on_hit();
+                self.obs.emit(|ts| TraceEvent::CacheAccess {
+                    ts_us: ts,
+                    layer: layer as u16,
+                    expert,
+                    hit: true,
+                    depth: 0,
+                });
             }
             return Lookup {
                 hit: true,
@@ -69,6 +116,16 @@ impl TieredMemory {
             self.cost.on_demand_fetch(depth);
             self.tstats.promotions += 1;
             self.cost.charge_demotions(&mut self.tstats, &promo);
+            if self.obs.is_active() {
+                self.obs.emit(|ts| TraceEvent::CacheAccess {
+                    ts_us: ts,
+                    layer: layer as u16,
+                    expert,
+                    hit: false,
+                    depth: depth as u8,
+                });
+                self.emit_tier_moves(k, promo.found, &promo);
+            }
         }
         Lookup {
             hit: false,
@@ -121,8 +178,18 @@ impl ExpertMemory for TieredMemory {
             self.cost.on_prefetch(promo.found.unwrap_or(deepest));
             self.tstats.prefetch_promotions += 1;
             self.cost.charge_demotions(&mut self.tstats, &promo);
+            self.emit_tier_moves(k, promo.found, &promo);
         }
         out.landed = landed as u64;
+        if out.issued > 0 {
+            self.obs.emit(|ts| TraceEvent::Prefetch {
+                ts_us: ts,
+                layer: layer as u16,
+                issued: out.issued as u32,
+                landed: out.landed as u32,
+                too_late: out.too_late as u32,
+            });
+        }
         out
     }
 
@@ -169,6 +236,10 @@ impl ExpertMemory for TieredMemory {
 
     fn clear(&mut self) {
         self.cache.clear();
+    }
+
+    fn set_obs(&mut self, obs: ObsSink) {
+        self.obs = obs;
     }
 }
 

@@ -1,10 +1,19 @@
 //! Serving metrics: lock-free counters + latency recording with
 //! percentile reporting, shared across the coordinator's tasks.
+//!
+//! Latency recording is backed by the bounded-memory
+//! [`obs::hist`](crate::obs::hist) histogram (~12.8 KB per recorder
+//! regardless of sample count, <2% relative quantile error), so
+//! recorders are safe at any request volume.  The exact-percentile
+//! path survives as [`LatencyReport::from_samples_us`] for small-n
+//! callers that keep their own samples.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::obs::hist::{AtomicHist, Hist};
+use crate::obs::Registry;
 use crate::util::stats::percentile;
 
 /// Monotonic counter, relaxed ordering (hot-path safe).
@@ -23,29 +32,47 @@ impl Counter {
     }
 }
 
-/// Latency recorder (mutex-guarded vec; recording happens per request,
-/// not per token, so contention is negligible).
-#[derive(Debug, Default)]
+/// Latency recorder over a lock-free log-bucketed histogram — bounded
+/// memory at any sample count (the old mutex-guarded `Vec<f64>` grew
+/// without limit, which blocked 10⁵–10⁶-stream workloads).
+///
+/// The backing histogram is an `Arc`, so a recorder can either own a
+/// private histogram ([`Default`]) or view one registered in an
+/// [`Registry`] ([`LatencyRecorder::from_handle`]) — recording through
+/// either is the same atomic adds.
+#[derive(Debug)]
 pub struct LatencyRecorder {
-    samples_us: Mutex<Vec<f64>>,
+    hist: Arc<AtomicHist>,
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self {
+            hist: Arc::new(AtomicHist::new()),
+        }
+    }
 }
 
 impl LatencyRecorder {
+    /// Recorder over an existing histogram handle (registry-backed).
+    pub fn from_handle(hist: Arc<AtomicHist>) -> Self {
+        Self { hist }
+    }
+
     pub fn record(&self, d: Duration) {
-        self.samples_us.lock().unwrap().push(d.as_secs_f64() * 1e6);
+        self.hist.record(d.as_secs_f64() * 1e6);
     }
 
     pub fn record_us(&self, us: f64) {
-        self.samples_us.lock().unwrap().push(us);
+        self.hist.record(us);
     }
 
     pub fn count(&self) -> usize {
-        self.samples_us.lock().unwrap().len()
+        self.hist.count() as usize
     }
 
     pub fn report(&self) -> LatencyReport {
-        let s = self.samples_us.lock().unwrap();
-        LatencyReport::from_samples_us(&s)
+        LatencyReport::from_hist(&self.hist.snapshot())
     }
 }
 
@@ -60,9 +87,8 @@ pub struct LatencyReport {
 }
 
 impl LatencyReport {
-    /// Build a report from raw µs samples — the path used by recorders
-    /// that never touch a wall clock (the virtual-time workload
-    /// simulator) as well as [`LatencyRecorder::report`].
+    /// Build a report from raw µs samples — exact percentiles for
+    /// callers that keep their own (small) sample vectors.
     pub fn from_samples_us(samples: &[f64]) -> Self {
         LatencyReport {
             count: samples.len(),
@@ -74,7 +100,22 @@ impl LatencyReport {
             p50_us: percentile(samples, 50.0),
             p95_us: percentile(samples, 95.0),
             p99_us: percentile(samples, 99.0),
-            max_us: samples.iter().cloned().fold(0.0, f64::max),
+            // reduce, not fold(0.0, max): an all-NaN input must not
+            // masquerade as 0.0 — empty is the only 0 case
+            max_us: samples.iter().copied().reduce(f64::max).unwrap_or(0.0),
+        }
+    }
+
+    /// Build a report from a histogram snapshot — percentiles within
+    /// the bucket error bound, count/mean/max exact.
+    pub fn from_hist(h: &Hist) -> Self {
+        LatencyReport {
+            count: h.count() as usize,
+            mean_us: h.mean_us(),
+            p50_us: h.quantile(50.0),
+            p95_us: h.quantile(95.0),
+            p99_us: h.quantile(99.0),
+            max_us: h.max_us(),
         }
     }
 }
@@ -89,27 +130,52 @@ impl std::fmt::Display for LatencyReport {
     }
 }
 
-/// The coordinator's metric set.
+/// The coordinator's metric set.  Fields are `Arc` handles so the same
+/// metrics can live inside an [`Registry`] (see
+/// [`ServingMetrics::registered`]) and show up in snapshots/exposition
+/// while the coordinator keeps its direct, lock-free access.
 #[derive(Debug, Default)]
 pub struct ServingMetrics {
-    pub requests_admitted: Counter,
-    pub requests_completed: Counter,
+    pub requests_admitted: Arc<Counter>,
+    pub requests_completed: Arc<Counter>,
     /// Requests actually dropped (never admitted).  Backpressured
     /// submissions that block and then get in are NOT rejections — they
     /// count under [`requests_backpressured`](Self::requests_backpressured).
-    pub requests_rejected: Counter,
+    pub requests_rejected: Arc<Counter>,
     /// Submissions that found the queue full, blocked, and were then
     /// admitted (admission-pressure signal, not a failure).
-    pub requests_backpressured: Counter,
-    pub tokens_generated: Counter,
-    pub cache_hits: Counter,
-    pub cache_misses: Counter,
-    pub prefetches: Counter,
+    pub requests_backpressured: Arc<Counter>,
+    pub tokens_generated: Arc<Counter>,
+    pub cache_hits: Arc<Counter>,
+    pub cache_misses: Arc<Counter>,
+    pub prefetches: Arc<Counter>,
     pub request_latency: LatencyRecorder,
     pub token_latency: LatencyRecorder,
 }
 
 impl ServingMetrics {
+    /// A metric set whose counters and histograms are registered in
+    /// `reg`, so a registry snapshot sees everything the coordinator
+    /// records.
+    pub fn registered(reg: &Registry) -> Self {
+        ServingMetrics {
+            requests_admitted: reg.counter("serving_requests_admitted", &[]),
+            requests_completed: reg.counter("serving_requests_completed", &[]),
+            requests_rejected: reg.counter("serving_requests_rejected", &[]),
+            requests_backpressured: reg.counter("serving_requests_backpressured", &[]),
+            tokens_generated: reg.counter("serving_tokens_generated", &[]),
+            cache_hits: reg.counter("serving_cache_hits", &[]),
+            cache_misses: reg.counter("serving_cache_misses", &[]),
+            prefetches: reg.counter("serving_prefetches", &[]),
+            request_latency: LatencyRecorder::from_handle(
+                reg.histogram("serving_request_latency_us", &[]),
+            ),
+            token_latency: LatencyRecorder::from_handle(
+                reg.histogram("serving_token_latency_us", &[]),
+            ),
+        }
+    }
+
     pub fn cache_hit_rate(&self) -> f64 {
         let h = self.cache_hits.get();
         let m = self.cache_misses.get();
@@ -151,8 +217,10 @@ mod tests {
         }
         let rep = r.report();
         assert_eq!(rep.count, 100);
-        assert!((rep.p50_us - 50.0).abs() <= 1.0);
-        assert!((rep.p99_us - 99.0).abs() <= 1.0);
+        // exact nearest-rank p50 of 1..=100 is 51; the histogram lands
+        // within its 2% bucket error of that
+        assert!((rep.p50_us - 51.0).abs() <= 51.0 * 0.02 + 1e-9);
+        assert!((rep.p99_us - 99.0).abs() <= 99.0 * 0.02 + 1e-9);
         assert_eq!(rep.max_us, 100.0);
     }
 
@@ -165,7 +233,7 @@ mod tests {
     }
 
     #[test]
-    fn from_samples_matches_recorder() {
+    fn recorder_tracks_exact_path_within_hist_error() {
         let samples: Vec<f64> = (1..=50).map(|x| x as f64).collect();
         let r = LatencyRecorder::default();
         for &s in &samples {
@@ -174,10 +242,37 @@ mod tests {
         let a = r.report();
         let b = LatencyReport::from_samples_us(&samples);
         assert_eq!(a.count, b.count);
-        assert_eq!(a.p50_us, b.p50_us);
-        assert_eq!(a.p99_us, b.p99_us);
-        assert_eq!(a.mean_us, b.mean_us);
+        // count / mean / max are exact in the histogram...
+        assert!((a.mean_us - b.mean_us).abs() < 1e-6);
+        assert_eq!(a.max_us, b.max_us);
+        // ...percentiles are within the bucket error bound
+        for (h, e) in [(a.p50_us, b.p50_us), (a.p99_us, b.p99_us)] {
+            assert!((h - e).abs() <= e * 0.02 + 1e-9, "hist {h} vs exact {e}");
+        }
         assert_eq!(LatencyReport::from_samples_us(&[]).count, 0);
+    }
+
+    #[test]
+    fn empty_report_max_is_zero_and_nan_is_not_masked() {
+        let empty = LatencyReport::from_samples_us(&[]);
+        assert_eq!(empty.max_us, 0.0);
+        let r = LatencyRecorder::default();
+        assert_eq!(r.report().max_us, 0.0);
+        // a NaN sample must surface as NaN, not silently become 0.0
+        assert!(LatencyReport::from_samples_us(&[f64::NAN]).max_us.is_nan());
+    }
+
+    #[test]
+    fn registered_metrics_appear_in_snapshots() {
+        let reg = Registry::new();
+        let m = ServingMetrics::registered(&reg);
+        m.requests_admitted.inc();
+        m.request_latency.record_us(150.0);
+        let snap = reg.snapshot();
+        let json = snap.to_json().to_json_string();
+        assert!(json.contains("\"serving_requests_admitted\":1"));
+        assert!(json.contains("serving_request_latency_us"));
+        assert_eq!(m.request_latency.count(), 1);
     }
 
     #[test]

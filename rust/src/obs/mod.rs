@@ -1,0 +1,230 @@
+//! Unified observability layer: bounded-memory histograms
+//! ([`hist`]), a labeled metric registry ([`registry`]), and
+//! structured event tracing ([`trace`]) behind one cheap façade,
+//! [`ObsSink`].
+//!
+//! Every execution surface (replay engine, workload scheduler, memory
+//! backends, serving coordinator) takes an `ObsSink`.  The default
+//! sink is a no-op: a `None` behind one pointer-sized `Option`, so the
+//! hot path pays a single predictable branch and builds no event
+//! values (`emit` takes a closure that is never called).  The active
+//! sink carries a [`Registry`] for metrics and a [`TraceRing`] for
+//! events, timestamped from a clock cell that the driving loop sets
+//! (virtual µs in sim/workload, wall-clock µs in the coordinator).
+//!
+//! Determinism: with a virtual clock, every recorded value is a pure
+//! function of the run's inputs, and both exposition formats iterate
+//! sorted maps — two identical seeded runs produce byte-identical
+//! trace and metrics JSON.  CI byte-compares exactly that.
+//!
+//! # Adding a metric
+//!
+//! Grab a handle once at wiring time, then record through the handle —
+//! never look up the registry on the hot path:
+//!
+//! ```
+//! use moe_beyond::obs::ObsSink;
+//!
+//! let obs = ObsSink::active(1 << 16, "virtual");
+//! // wiring time: one lock, one allocation
+//! let (evictions, depth_us) = {
+//!     let reg = obs.registry().unwrap();
+//!     (
+//!         reg.counter("evictions", &[("tier", "gpu")]),
+//!         reg.histogram("fault_us", &[("tier", "gpu")]),
+//!     )
+//! };
+//! // hot path: lock-free atomics
+//! evictions.inc();
+//! depth_us.record(137.5);
+//! let snap = obs.snapshot().unwrap();
+//! assert!(snap.to_json().to_json_string().contains("evictions{tier=gpu}"));
+//! ```
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{AtomicHist, Hist};
+pub use registry::{Gauge, Registry, SnapValue, Snapshot};
+pub use trace::{chrome_trace_json, TierMoveKind, TraceEvent, TraceRing};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Default trace-ring capacity (events retained before overwrite).
+pub const DEFAULT_RING_CAP: usize = 1 << 16;
+
+/// Shared state behind an active sink.
+#[derive(Debug)]
+pub struct ActiveObs {
+    registry: Registry,
+    ring: Mutex<TraceRing>,
+    /// Current timestamp (f64 bits) — set by the driving loop, read by
+    /// every emission between clock updates.
+    now_bits: AtomicU64,
+    /// `"virtual"` or `"wall"`; recorded in exported trace metadata.
+    clock: &'static str,
+}
+
+/// Cloneable observability handle.  `ObsSink::default()` is the no-op
+/// sink; [`ObsSink::active`] turns everything on.  Clones share the
+/// same registry, ring, and clock.
+#[derive(Debug, Clone, Default)]
+pub struct ObsSink(Option<Arc<ActiveObs>>);
+
+impl ObsSink {
+    /// The no-op sink (same as `default()`): every method early-returns.
+    pub fn noop() -> Self {
+        Self(None)
+    }
+
+    /// An active sink with a `ring_cap`-event trace ring; `clock` names
+    /// the timestamp source (`"virtual"` or `"wall"`).
+    pub fn active(ring_cap: usize, clock: &'static str) -> Self {
+        Self(Some(Arc::new(ActiveObs {
+            registry: Registry::new(),
+            ring: Mutex::new(TraceRing::new(ring_cap)),
+            now_bits: AtomicU64::new(0f64.to_bits()),
+            clock,
+        })))
+    }
+
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The sink's registry, for grabbing metric handles at wiring time.
+    pub fn registry(&self) -> Option<&Registry> {
+        self.0.as_deref().map(|a| &a.registry)
+    }
+
+    /// Advance the sink's clock; subsequent emissions are stamped `t`.
+    #[inline]
+    pub fn set_now_us(&self, t: f64) {
+        if let Some(a) = &self.0 {
+            a.now_bits.store(t.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Current clock reading (0 when inactive or never set).
+    pub fn now_us(&self) -> f64 {
+        match &self.0 {
+            Some(a) => f64::from_bits(a.now_bits.load(Ordering::Relaxed)),
+            None => 0.0,
+        }
+    }
+
+    /// Push one trace event.  The closure receives the current
+    /// timestamp and only runs on an active sink, so the no-op path
+    /// constructs nothing.
+    #[inline]
+    pub fn emit(&self, f: impl FnOnce(f64) -> TraceEvent) {
+        if let Some(a) = &self.0 {
+            let ts = f64::from_bits(a.now_bits.load(Ordering::Relaxed));
+            a.ring.lock().unwrap().push(f(ts));
+        }
+    }
+
+    /// Events lost to ring overwrites so far (0 when inactive).
+    pub fn dropped_events(&self) -> u64 {
+        match &self.0 {
+            Some(a) => a.ring.lock().unwrap().dropped(),
+            None => 0,
+        }
+    }
+
+    /// Point-in-time metric snapshot.
+    pub fn snapshot(&self) -> Option<Snapshot> {
+        self.0.as_deref().map(|a| a.registry.snapshot())
+    }
+
+    /// Chrome trace-event JSON of the retained events.
+    pub fn trace_json(&self) -> Option<Json> {
+        self.0
+            .as_deref()
+            .map(|a| chrome_trace_json(&a.ring.lock().unwrap(), a.clock))
+    }
+
+    /// Deterministic JSON exposition of the current metric state.
+    pub fn metrics_json(&self) -> Option<Json> {
+        self.snapshot().map(|s| s.to_json())
+    }
+
+    /// Prometheus text exposition of the current metric state.
+    pub fn metrics_prometheus(&self) -> Option<String> {
+        self.snapshot().map(|s| s.to_prometheus())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_sink_swallows_everything() {
+        let obs = ObsSink::default();
+        assert!(!obs.is_active());
+        obs.set_now_us(100.0);
+        obs.emit(|_| panic!("noop sink must not build events"));
+        assert_eq!(obs.now_us(), 0.0);
+        assert_eq!(obs.dropped_events(), 0);
+        assert!(obs.registry().is_none());
+        assert!(obs.trace_json().is_none());
+        assert!(obs.metrics_json().is_none());
+    }
+
+    #[test]
+    fn active_sink_stamps_events_with_the_set_clock() {
+        let obs = ObsSink::active(8, "virtual");
+        obs.set_now_us(42.0);
+        obs.emit(|ts| TraceEvent::Prefetch {
+            ts_us: ts,
+            layer: 1,
+            issued: 2,
+            landed: 2,
+            too_late: 0,
+        });
+        obs.set_now_us(99.0);
+        obs.emit(|ts| TraceEvent::RequestBegin {
+            ts_us: ts,
+            request: 0,
+            tenant: 0,
+        });
+        let j = obs.trace_json().unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs[0].get("ts").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(evs[1].get("ts").unwrap().as_f64().unwrap(), 99.0);
+        assert_eq!(
+            j.get("metadata").unwrap().get("clock").unwrap().as_str().unwrap(),
+            "virtual"
+        );
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let obs = ObsSink::active(8, "wall");
+        let c = obs.registry().unwrap().counter("x", &[]);
+        let clone = obs.clone();
+        clone.registry().unwrap().counter("x", &[]).add(2);
+        assert_eq!(c.get(), 2);
+        clone.emit(|ts| TraceEvent::RequestEnd {
+            ts_us: ts,
+            request: 1,
+            tenant: 0,
+        });
+        let evs = obs.trace_json().unwrap();
+        assert_eq!(
+            evs.get("metadata")
+                .unwrap()
+                .get("total_events")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            1.0
+        );
+    }
+}

@@ -1,0 +1,331 @@
+//! Labeled metric registry: counters, gauges, and histograms keyed by
+//! `name{label=value,…}`, with point-in-time snapshots, snapshot
+//! diffing, and deterministic JSON + Prometheus-text exposition.
+//!
+//! Handles are `Arc`s grabbed once at wiring time; the hot path then
+//! touches only atomics (no registry lock).  Snapshots are ordered
+//! `BTreeMap`s, so both exposition formats are byte-deterministic for
+//! identical metric state — the property the CI obs gate byte-compares.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::Counter;
+use crate::obs::hist::{AtomicHist, Hist};
+use crate::util::json::Json;
+
+/// Last-write-wins f64 cell (resident counts, rates, clock readings).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Metric identity: name plus label pairs sorted by label key.  The
+/// `Ord` of the tuple is the exposition order.
+pub type MetricKey = (String, Vec<(String, String)>);
+
+fn make_key(name: &str, labels: &[(&str, &str)]) -> MetricKey {
+    let mut l: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    l.sort();
+    (name.to_string(), l)
+}
+
+/// `name{k=v,…}` rendering used as the JSON object key.
+pub fn key_string(key: &MetricKey) -> String {
+    if key.1.is_empty() {
+        return key.0.clone();
+    }
+    let labels: Vec<String> = key.1.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("{}{{{}}}", key.0, labels.join(","))
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<AtomicHist>),
+}
+
+/// The registry proper.  Registration takes a lock (wiring time only);
+/// recording through the returned handles is lock-free.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<MetricKey, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Counter handle for `name{labels}`, created on first use.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let key = make_key(name, labels);
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::default())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Gauge handle for `name{labels}`, created on first use.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let key = make_key(name, labels);
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::default())))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Histogram handle for `name{labels}`, created on first use.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<AtomicHist> {
+        let key = make_key(name, labels);
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key)
+            .or_insert_with(|| Metric::Hist(Arc::new(AtomicHist::new())))
+        {
+            Metric::Hist(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered with a different type"),
+        }
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.metrics.lock().unwrap();
+        Snapshot {
+            entries: m
+                .iter()
+                .map(|(k, v)| {
+                    let val = match v {
+                        Metric::Counter(c) => SnapValue::Counter(c.get()),
+                        Metric::Gauge(g) => SnapValue::Gauge(g.get()),
+                        Metric::Hist(h) => SnapValue::Hist(h.snapshot()),
+                    };
+                    (k.clone(), val)
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One metric's value at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapValue {
+    Counter(u64),
+    Gauge(f64),
+    Hist(Hist),
+}
+
+/// Point-in-time registry state; the unit of exposition and diffing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub entries: BTreeMap<MetricKey, SnapValue>,
+}
+
+impl Snapshot {
+    /// Interval view: counters and histogram buckets subtract the
+    /// baseline (saturating), gauges keep their current value.  Metrics
+    /// absent from the baseline pass through unchanged.
+    pub fn diff(&self, baseline: &Snapshot) -> Snapshot {
+        Snapshot {
+            entries: self
+                .entries
+                .iter()
+                .map(|(k, v)| {
+                    let val = match (v, baseline.entries.get(k)) {
+                        (SnapValue::Counter(c), Some(SnapValue::Counter(b))) => {
+                            SnapValue::Counter(c.saturating_sub(*b))
+                        }
+                        (SnapValue::Hist(h), Some(SnapValue::Hist(b))) => {
+                            SnapValue::Hist(h.diff(b))
+                        }
+                        _ => v.clone(),
+                    };
+                    (k.clone(), val)
+                })
+                .collect(),
+        }
+    }
+
+    /// Deterministic JSON exposition: one object keyed by
+    /// `name{label=value,…}`, histograms expanded to their summary
+    /// statistics.  Sorted keys + the crate's canonical number
+    /// formatting make the output byte-stable.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, v) in &self.entries {
+            let val = match v {
+                SnapValue::Counter(c) => Json::num(*c as f64),
+                SnapValue::Gauge(g) => Json::num(*g),
+                SnapValue::Hist(h) => Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("sum_us", Json::num(h.sum_us())),
+                    ("mean_us", Json::num(h.mean_us())),
+                    ("p50_us", Json::num(h.quantile(50.0))),
+                    ("p95_us", Json::num(h.quantile(95.0))),
+                    ("p99_us", Json::num(h.quantile(99.0))),
+                    ("min_us", Json::num(h.min_us())),
+                    ("max_us", Json::num(h.max_us())),
+                ]),
+            };
+            obj.insert(key_string(k), val);
+        }
+        Json::Obj(obj)
+    }
+
+    /// Prometheus text exposition (summary style for histograms:
+    /// quantile series plus `_count` and `_sum`).
+    pub fn to_prometheus(&self) -> String {
+        fn labels_text(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+            let mut parts: Vec<String> = labels
+                .iter()
+                .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+                .collect();
+            if let Some((k, v)) = extra {
+                parts.push(format!("{k}=\"{v}\""));
+            }
+            if parts.is_empty() {
+                String::new()
+            } else {
+                format!("{{{}}}", parts.join(","))
+            }
+        }
+        let mut out = String::new();
+        for ((name, labels), v) in &self.entries {
+            match v {
+                SnapValue::Counter(c) => {
+                    let _ = writeln!(out, "{name}{} {c}", labels_text(labels, None));
+                }
+                SnapValue::Gauge(g) => {
+                    let _ = writeln!(out, "{name}{} {g}", labels_text(labels, None));
+                }
+                SnapValue::Hist(h) => {
+                    for (q, qs) in [(50.0, "0.5"), (95.0, "0.95"), (99.0, "0.99")] {
+                        let _ = writeln!(
+                            out,
+                            "{name}{} {}",
+                            labels_text(labels, Some(("quantile", qs))),
+                            h.quantile(q)
+                        );
+                    }
+                    let _ = writeln!(out, "{name}_count{} {}", labels_text(labels, None), h.count());
+                    let _ = writeln!(out, "{name}_sum{} {}", labels_text(labels, None), h.sum_us());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_and_live() {
+        let r = Registry::new();
+        let a = r.counter("hits", &[("tier", "gpu")]);
+        let b = r.counter("hits", &[("tier", "gpu")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let s = r.snapshot();
+        assert_eq!(
+            s.entries.values().next(),
+            Some(&SnapValue::Counter(3))
+        );
+    }
+
+    #[test]
+    fn label_order_is_canonical() {
+        let r = Registry::new();
+        let a = r.counter("m", &[("b", "2"), ("a", "1")]);
+        let b = r.counter("m", &[("a", "1"), ("b", "2")]);
+        a.inc();
+        assert_eq!(b.get(), 1); // same metric regardless of label order
+        let s = r.snapshot();
+        let key = s.entries.keys().next().unwrap();
+        assert_eq!(key_string(key), "m{a=1,b=2}");
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("x", &[]);
+        let _ = r.gauge("x", &[]);
+    }
+
+    #[test]
+    fn snapshot_diff_subtracts_counters_keeps_gauges() {
+        let r = Registry::new();
+        let c = r.counter("reqs", &[]);
+        let g = r.gauge("resident", &[]);
+        let h = r.histogram("lat_us", &[]);
+        c.add(5);
+        g.set(10.0);
+        h.record(100.0);
+        let base = r.snapshot();
+        c.add(3);
+        g.set(20.0);
+        h.record(200.0);
+        let d = r.snapshot().diff(&base);
+        let vals: Vec<&SnapValue> = d.entries.values().collect();
+        match vals[1] {
+            SnapValue::Counter(n) => assert_eq!(*n, 3),
+            v => panic!("unexpected {v:?}"),
+        }
+        match vals[2] {
+            SnapValue::Gauge(v) => assert_eq!(*v, 20.0),
+            v => panic!("unexpected {v:?}"),
+        }
+        match vals[0] {
+            SnapValue::Hist(hd) => assert_eq!(hd.count(), 1),
+            v => panic!("unexpected {v:?}"),
+        }
+    }
+
+    #[test]
+    fn exposition_is_deterministic() {
+        let build = || {
+            let r = Registry::new();
+            r.counter("b_total", &[("tenant", "chat")]).add(7);
+            r.gauge("a_gauge", &[]).set(1.5);
+            let h = r.histogram("lat_us", &[("policy", "fcfs")]);
+            for v in [10.0, 20.0, 30.0] {
+                h.record(v);
+            }
+            r.snapshot()
+        };
+        let (s1, s2) = (build(), build());
+        assert_eq!(s1.to_json().to_json_string(), s2.to_json().to_json_string());
+        assert_eq!(s1.to_prometheus(), s2.to_prometheus());
+        let prom = s1.to_prometheus();
+        assert!(prom.contains("b_total{tenant=\"chat\"} 7"));
+        assert!(prom.contains("lat_us{policy=\"fcfs\",quantile=\"0.5\"}"));
+        assert!(prom.contains("lat_us_count{policy=\"fcfs\"} 3"));
+        let json = s1.to_json().to_json_string();
+        assert!(json.contains("\"b_total{tenant=chat}\":7"));
+    }
+}

@@ -1,0 +1,423 @@
+//! Structured event tracing into a bounded ring buffer, exported as
+//! Chrome trace-event JSON (loadable in `chrome://tracing` / Perfetto).
+//!
+//! Events are timestamped by *virtual* microseconds in the sim and
+//! workload paths and by wall-clock microseconds in the coordinator —
+//! the ring itself is clock-agnostic; the exporter records which clock
+//! produced the timestamps in the trace metadata.  When the ring is
+//! full the oldest events are overwritten and `dropped()` accounts for
+//! every overwrite, so a truncated trace is always detectable.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Direction of a tier transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierMoveKind {
+    /// Expert moved to a faster tier (e.g. host → GPU).
+    Promote,
+    /// Expert displaced to a slower tier.
+    Demote,
+    /// Expert fell off the deepest bounded tier entirely.
+    Drop,
+}
+
+impl TierMoveKind {
+    pub fn id(&self) -> &'static str {
+        match self {
+            TierMoveKind::Promote => "promote",
+            TierMoveKind::Demote => "demote",
+            TierMoveKind::Drop => "drop",
+        }
+    }
+}
+
+/// One traced occurrence.  Timestamps are µs on the emitting surface's
+/// clock; `request` ids are stable within a run (prompt id in replay,
+/// request id in workload/serving).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request entered execution (admission in workload, dispatch in
+    /// serving, prompt start in replay).
+    RequestBegin { ts_us: f64, request: u64, tenant: u32 },
+    /// The request produced its last token.
+    RequestEnd { ts_us: f64, request: u64, tenant: u32 },
+    /// One measured decode step; `ts_us` is the step start and
+    /// `cost_us` its modeled (or measured) duration.
+    DecodeStep {
+        ts_us: f64,
+        request: u64,
+        tenant: u32,
+        token: u32,
+        cost_us: f64,
+    },
+    /// A routed expert was looked up: served from `depth` (0 = fastest
+    /// tier) on a hit, faulted from `depth` on a miss.
+    CacheAccess {
+        ts_us: f64,
+        layer: u16,
+        expert: u8,
+        hit: bool,
+        depth: u8,
+    },
+    /// An expert crossed tiers (`from`/`to` are tier depths; `to` is
+    /// meaningless for `Drop`).
+    TierMove {
+        ts_us: f64,
+        kind: TierMoveKind,
+        layer: u16,
+        expert: u8,
+        from: u8,
+        to: u8,
+    },
+    /// One prefetch batch: `issued` requested, `landed` arrived in
+    /// budget, `too_late` charged a partial stall.
+    Prefetch {
+        ts_us: f64,
+        layer: u16,
+        issued: u32,
+        landed: u32,
+        too_late: u32,
+    },
+}
+
+impl TraceEvent {
+    pub fn ts_us(&self) -> f64 {
+        match self {
+            TraceEvent::RequestBegin { ts_us, .. }
+            | TraceEvent::RequestEnd { ts_us, .. }
+            | TraceEvent::DecodeStep { ts_us, .. }
+            | TraceEvent::CacheAccess { ts_us, .. }
+            | TraceEvent::TierMove { ts_us, .. }
+            | TraceEvent::Prefetch { ts_us, .. } => *ts_us,
+        }
+    }
+}
+
+/// Fixed-capacity ring: `push` is O(1), overwrites the oldest event
+/// once full, and `total`/`dropped` make overflow visible instead of
+/// silent.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    /// Events ever pushed (monotonic).
+    total: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            head: 0,
+            total: 0,
+        }
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events ever pushed.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Events lost to overwriting.
+    pub fn dropped(&self) -> u64 {
+        self.total - self.buf.len() as u64
+    }
+
+    /// Retained events, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+}
+
+fn event_json(
+    name: &str,
+    ph: &str,
+    ts: f64,
+    pid: u64,
+    tid: u64,
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str(ph)),
+        ("ts", Json::num(ts)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+fn args_json(fields: Vec<(&str, Json)>) -> (&'static str, Json) {
+    ("args", Json::obj(fields))
+}
+
+/// Map the ring onto the Chrome trace-event format:
+///
+/// * request spans → async begin/end (`ph: "b"/"e"`) with `id` =
+///   request, one track per tenant (`pid 0`, `tid` = tenant + 1);
+/// * decode steps → complete events (`ph: "X"`) with `dur`;
+/// * cache / tier / prefetch events → thread-scoped instants
+///   (`ph: "i"`, `s: "t"`) on a dedicated memory track (`pid 1`).
+///
+/// `clock` names the timestamp source (`"virtual"` or `"wall"`) in the
+/// metadata, alongside drop accounting.
+pub fn chrome_trace_json(ring: &TraceRing, clock: &str) -> Json {
+    let events: Vec<Json> = ring
+        .iter()
+        .map(|ev| match ev {
+            TraceEvent::RequestBegin { ts_us, request, tenant } => event_json(
+                "request",
+                "b",
+                *ts_us,
+                0,
+                *tenant as u64 + 1,
+                vec![
+                    ("cat", Json::str("request")),
+                    ("id", Json::num(*request as f64)),
+                ],
+            ),
+            TraceEvent::RequestEnd { ts_us, request, tenant } => event_json(
+                "request",
+                "e",
+                *ts_us,
+                0,
+                *tenant as u64 + 1,
+                vec![
+                    ("cat", Json::str("request")),
+                    ("id", Json::num(*request as f64)),
+                ],
+            ),
+            TraceEvent::DecodeStep {
+                ts_us,
+                request,
+                tenant,
+                token,
+                cost_us,
+            } => event_json(
+                "decode_step",
+                "X",
+                *ts_us,
+                0,
+                *tenant as u64 + 1,
+                vec![
+                    ("cat", Json::str("decode")),
+                    ("dur", Json::num(*cost_us)),
+                    args_json(vec![
+                        ("request", Json::num(*request as f64)),
+                        ("token", Json::num(*token as f64)),
+                    ]),
+                ],
+            ),
+            TraceEvent::CacheAccess {
+                ts_us,
+                layer,
+                expert,
+                hit,
+                depth,
+            } => event_json(
+                if *hit { "cache_hit" } else { "cache_miss" },
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("cache")),
+                    ("s", Json::str("t")),
+                    args_json(vec![
+                        ("layer", Json::num(*layer as f64)),
+                        ("expert", Json::num(*expert as f64)),
+                        ("depth", Json::num(*depth as f64)),
+                    ]),
+                ],
+            ),
+            TraceEvent::TierMove {
+                ts_us,
+                kind,
+                layer,
+                expert,
+                from,
+                to,
+            } => event_json(
+                kind.id(),
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("tier")),
+                    ("s", Json::str("t")),
+                    args_json(vec![
+                        ("layer", Json::num(*layer as f64)),
+                        ("expert", Json::num(*expert as f64)),
+                        ("from", Json::num(*from as f64)),
+                        ("to", Json::num(*to as f64)),
+                    ]),
+                ],
+            ),
+            TraceEvent::Prefetch {
+                ts_us,
+                layer,
+                issued,
+                landed,
+                too_late,
+            } => event_json(
+                "prefetch",
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("prefetch")),
+                    ("s", Json::str("t")),
+                    args_json(vec![
+                        ("layer", Json::num(*layer as f64)),
+                        ("issued", Json::num(*issued as f64)),
+                        ("landed", Json::num(*landed as f64)),
+                        ("too_late", Json::num(*too_late as f64)),
+                    ]),
+                ],
+            ),
+        })
+        .collect();
+
+    let mut meta = BTreeMap::new();
+    meta.insert("clock".to_string(), Json::str(clock));
+    meta.insert(
+        "dropped_events".to_string(),
+        Json::num(ring.dropped() as f64),
+    );
+    meta.insert("total_events".to_string(), Json::num(ring.total() as f64));
+
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("metadata", Json::Obj(meta)),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn instant(ts: f64) -> TraceEvent {
+        TraceEvent::CacheAccess {
+            ts_us: ts,
+            layer: 0,
+            expert: 0,
+            hit: true,
+            depth: 0,
+        }
+    }
+
+    #[test]
+    fn ring_retains_newest_and_accounts_for_drops() {
+        let mut r = TraceRing::new(4);
+        for i in 0..10 {
+            r.push(instant(i as f64));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total(), 10);
+        assert_eq!(r.dropped(), 6);
+        let ts: Vec<f64> = r.iter().map(|e| e.ts_us()).collect();
+        assert_eq!(ts, vec![6.0, 7.0, 8.0, 9.0]); // oldest → newest
+    }
+
+    #[test]
+    fn ring_below_capacity_drops_nothing() {
+        let mut r = TraceRing::new(8);
+        r.push(instant(1.0));
+        r.push(instant(2.0));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 0);
+        let ts: Vec<f64> = r.iter().map(|e| e.ts_us()).collect();
+        assert_eq!(ts, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn chrome_export_shapes_every_event_kind() {
+        let mut r = TraceRing::new(16);
+        r.push(TraceEvent::RequestBegin { ts_us: 0.0, request: 7, tenant: 1 });
+        r.push(TraceEvent::DecodeStep {
+            ts_us: 5.0,
+            request: 7,
+            tenant: 1,
+            token: 0,
+            cost_us: 200.0,
+        });
+        r.push(TraceEvent::TierMove {
+            ts_us: 6.0,
+            kind: TierMoveKind::Demote,
+            layer: 2,
+            expert: 9,
+            from: 0,
+            to: 1,
+        });
+        r.push(TraceEvent::Prefetch {
+            ts_us: 7.0,
+            layer: 2,
+            issued: 3,
+            landed: 2,
+            too_late: 1,
+        });
+        r.push(TraceEvent::RequestEnd { ts_us: 205.0, request: 7, tenant: 1 });
+
+        let j = chrome_trace_json(&r, "virtual");
+        let evs = match j.get("traceEvents") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        assert_eq!(evs.len(), 5);
+        for ev in evs {
+            let ph = ev.get("ph").unwrap().as_str().unwrap();
+            assert!(matches!(ph, "b" | "e" | "X" | "i"));
+            assert!(ev.get("name").is_some());
+            assert!(ev.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(ev.get("pid").is_some() && ev.get("tid").is_some());
+            match ph {
+                "X" => assert!(ev.get("dur").is_some()),
+                "b" | "e" => assert!(ev.get("id").is_some()),
+                _ => {}
+            }
+        }
+        let meta = j.get("metadata").unwrap();
+        assert_eq!(meta.get("clock").unwrap().as_str().unwrap(), "virtual");
+        assert_eq!(meta.get("total_events").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn export_is_deterministic_for_identical_rings() {
+        let build = || {
+            let mut r = TraceRing::new(4);
+            for i in 0..9 {
+                r.push(instant(i as f64 * 1.5));
+            }
+            chrome_trace_json(&r, "virtual").to_json_string()
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -19,6 +19,7 @@
 use crate::cache::{CachePolicy, CacheStats};
 use crate::config::{CacheConfig, SimConfig, TierConfig};
 use crate::memory::{ExpertMemory, FlatMemory, TieredMemory};
+use crate::obs::{ObsSink, TraceEvent};
 use crate::predictor::{DecodeContext, ExpertPredictor};
 use crate::trace::{CompiledTrace, PromptTrace};
 use crate::util::ExpertSet;
@@ -34,6 +35,11 @@ pub struct SimEngine {
     /// Per-token prediction buffer reused across the replay (one
     /// `predict_layers` call per token writes into it).
     pred_scratch: Vec<ExpertSet>,
+    /// Trace sink (default no-op).  When active, replay emits a request
+    /// span per prompt and a decode-step event per measured token, on a
+    /// virtual clock equal to the memory model's cumulative
+    /// demand + stall µs.
+    obs: ObsSink,
 }
 
 impl SimEngine {
@@ -43,7 +49,16 @@ impl SimEngine {
             sim,
             n_experts,
             pred_scratch: Vec::new(),
+            obs: ObsSink::default(),
         }
+    }
+
+    /// Attach an observability sink to the engine AND its memory
+    /// backend, so replay spans and the backend's cache/tier events land
+    /// in the same trace on the same virtual clock.
+    pub fn set_obs(&mut self, obs: ObsSink) {
+        self.memory.set_obs(obs.clone());
+        self.obs = obs;
     }
 
     /// Flat residency over `cache` (the seed Fig-7 configuration): pure
@@ -122,9 +137,29 @@ impl SimEngine {
         self.pred_scratch.clear();
         self.pred_scratch.resize(n_layers, ExpertSet::EMPTY);
 
+        // replay's virtual clock = the memory model's cumulative
+        // demand + stall µs; a pure function of the trace, so traced
+        // runs stay byte-deterministic
+        let obs_on = self.obs.is_active();
+        if obs_on {
+            let (d, s) = self.memory.cost_marks();
+            self.obs.set_now_us(d + s);
+            self.obs.emit(|ts| TraceEvent::RequestBegin {
+                ts_us: ts,
+                request: trace.prompt_id as u64,
+                tenant: 0,
+            });
+        }
+
         for t in 0..trace.n_tokens() {
             let ctx = DecodeContext { trace, t };
             let measured = t >= warm;
+            if measured && obs_on {
+                // stamp the token start: the token's memory events and
+                // its decode-step span all carry this timestamp
+                let (d, s) = self.memory.cost_marks();
+                self.obs.set_now_us(d + s);
+            }
             if measured {
                 // ONE predictor call per token: predictions for every
                 // layer are issued before the token's first layer runs —
@@ -166,6 +201,26 @@ impl SimEngine {
                 self.memory.end_layer();
                 predictor.observe(&ctx, l, truth);
             }
+            if measured && obs_on {
+                let (d, s) = self.memory.cost_marks();
+                let end = d + s;
+                self.obs.emit(|ts| TraceEvent::DecodeStep {
+                    ts_us: ts,
+                    request: trace.prompt_id as u64,
+                    tenant: 0,
+                    token: t as u32,
+                    cost_us: end - ts,
+                });
+            }
+        }
+        if obs_on {
+            let (d, s) = self.memory.cost_marks();
+            self.obs.set_now_us(d + s);
+            self.obs.emit(|ts| TraceEvent::RequestEnd {
+                ts_us: ts,
+                request: trace.prompt_id as u64,
+                tenant: 0,
+            });
         }
         predictor.end_prompt(trace);
     }

@@ -83,14 +83,17 @@ pub fn entropy(counts: &[u64]) -> f64 {
         .sum()
 }
 
-/// Exact percentile (nearest-rank) of an unsorted slice; NaN-free input
-/// assumed.  Used for latency reporting (p50/p95/p99).
+/// Exact percentile (nearest-rank) of an unsorted slice.  This is the
+/// reference implementation the bounded-memory `obs::hist` quantiles
+/// are cross-checked against (same rank convention); NaN inputs sort
+/// last (total order) instead of panicking, so a poisoned sample set
+/// surfaces as NaN rather than aborting the run.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }

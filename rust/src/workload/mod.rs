@@ -38,8 +38,11 @@ pub use profile::{
     synthetic_fit_pool, synthetic_pool, synthetic_pools, ArrivalEvent, ArrivalProcess, Schedule,
     TenantProfile, WorkloadSpec,
 };
-pub use sched::{run_workload, run_workload_compiled, SchedCounters, SchedPolicy, WorkloadInputs};
+pub use sched::{
+    run_workload, run_workload_compiled, run_workload_obs, SchedCounters, SchedPolicy,
+    WorkloadInputs,
+};
 pub use slo::{report_json, TenantSlo, WorkloadReport};
 pub use sweep_load::{
-    load_csv, sweep_load, sweep_load_threaded, Backend, LoadPoint, LoadSweepInputs,
+    load_csv, run_point_obs, sweep_load, sweep_load_threaded, Backend, LoadPoint, LoadSweepInputs,
 };

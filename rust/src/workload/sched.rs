@@ -14,8 +14,12 @@
 //! fetch traffic.  No wall clock is ever read, so a seeded workload
 //! replays byte-identically — the CI perf gate depends on this.
 
+use std::sync::Arc;
+
 use crate::config::{EamConfig, SimConfig, WorkloadConfig};
 use crate::memory::ExpertMemory;
+use crate::metrics::Counter;
+use crate::obs::{AtomicHist, ObsSink, TraceEvent};
 use crate::predictor::{
     factory, CachedPredictor, DecodeContext, ExpertPredictor, NoPrefetch, PredictorKind,
     PredictorParams, TracePredictions,
@@ -25,6 +29,20 @@ use crate::util::ExpertSet;
 use crate::workload::profile::{Schedule, WorkloadSpec};
 use crate::workload::slo::{TenantAcc, WorkloadReport};
 use crate::Result;
+
+/// Per-tenant registry handles, grabbed once at drain start when an
+/// active [`ObsSink`] is attached — the drain loop then records through
+/// lock-free atomics only.
+struct TenantObsHandles {
+    ttft: Arc<AtomicHist>,
+    tbt: Arc<AtomicHist>,
+    latency: Arc<AtomicHist>,
+    queue: Arc<AtomicHist>,
+    tokens: Arc<Counter>,
+    completions: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+}
 
 /// Which in-flight stream decodes the next token.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -158,8 +176,25 @@ pub fn run_workload(
 pub fn run_workload_compiled<'a>(
     inp: &WorkloadInputs<'a>,
     kind: PredictorKind,
+    memory: Box<dyn ExpertMemory>,
+    compiled_pools: &[CompiledCorpus],
+) -> Result<WorkloadReport> {
+    run_workload_obs(inp, kind, memory, compiled_pools, &ObsSink::default())
+}
+
+/// [`run_workload_compiled`] with an observability sink attached: the
+/// drain stamps the sink's virtual clock in lock-step with the
+/// scheduler clock, emits request/decode trace events, and mirrors the
+/// per-tenant SLO accumulators into labeled registry metrics.  With the
+/// default (no-op) sink this is exactly `run_workload_compiled` — the
+/// report is byte-identical either way, because tracing never touches
+/// the virtual-time arithmetic.
+pub fn run_workload_obs<'a>(
+    inp: &WorkloadInputs<'a>,
+    kind: PredictorKind,
     mut memory: Box<dyn ExpertMemory>,
     compiled_pools: &[CompiledCorpus],
+    obs: &ObsSink,
 ) -> Result<WorkloadReport> {
     inp.cfg.validate()?;
     inp.sim.validate()?;
@@ -254,6 +289,29 @@ pub fn run_workload_compiled<'a>(
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler policy '{}'", inp.cfg.policy))?;
 
     let backend = memory.name().to_string();
+    memory.set_obs(obs.clone());
+    // Per-tenant registry handles, resolved once (the registry lock is
+    // never taken inside the drain loop).  `None` when the sink is off.
+    let tobs: Option<Vec<TenantObsHandles>> = obs.registry().map(|reg| {
+        let pid = policy.id();
+        inp.spec
+            .tenants
+            .iter()
+            .map(|tp| {
+                let labels: &[(&str, &str)] = &[("policy", pid), ("tenant", &tp.name)];
+                TenantObsHandles {
+                    ttft: reg.histogram("workload_ttft_us", labels),
+                    tbt: reg.histogram("workload_tbt_us", labels),
+                    latency: reg.histogram("workload_latency_us", labels),
+                    queue: reg.histogram("workload_queue_us", labels),
+                    tokens: reg.counter("workload_tokens", labels),
+                    completions: reg.counter("workload_completions", labels),
+                    cache_hits: reg.counter("workload_cache_hits", labels),
+                    cache_misses: reg.counter("workload_cache_misses", labels),
+                }
+            })
+            .collect()
+    });
     let n_layers = inp.n_layers;
     let n_slots = inp.cfg.max_concurrency;
     let params = PredictorParams {
@@ -295,6 +353,7 @@ pub fn run_workload_compiled<'a>(
     let mut last_stepped: Option<u64> = None;
 
     loop {
+        obs.set_now_us(clock);
         // ---- admit every due arrival up to the concurrency limit
         while due < arrivals.len() && arrivals[due].arrival_us <= clock {
             due += 1;
@@ -312,7 +371,16 @@ pub fn run_workload_compiled<'a>(
                 predictors[slot] = Box::new(CachedPredictor::new(&l[ev.tenant][ev.trace_idx]));
             }
             predictors[slot].begin_prompt(&inp.pools[ev.tenant][ev.trace_idx]);
-            acc[ev.tenant].queue.push(clock - ev.arrival_us);
+            let queued_us = clock - ev.arrival_us;
+            acc[ev.tenant].queue.record(queued_us);
+            if let Some(h) = &tobs {
+                h[ev.tenant].queue.record(queued_us);
+            }
+            obs.emit(|ts| TraceEvent::RequestBegin {
+                ts_us: ts,
+                request: ev.request_id,
+                tenant: ev.tenant as u32,
+            });
             inflight.push(Stream {
                 tenant: ev.tenant,
                 request_id: ev.request_id,
@@ -418,6 +486,10 @@ pub fn run_workload_compiled<'a>(
                     let hits = batch.hits.len() as u64;
                     ta.cache.hits += hits;
                     ta.cache.misses += truth.len() as u64 - hits;
+                    if let Some(h) = &tobs {
+                        h[s.tenant].cache_hits.add(hits);
+                        h[s.tenant].cache_misses.add(truth.len() as u64 - hits);
+                    }
                     ta.cache.transfer_us += batch.fetch_us;
                     memory.end_layer();
                     pred.observe(&ctx, l, truth);
@@ -428,8 +500,21 @@ pub fn run_workload_compiled<'a>(
                 counters.steps += 1;
             }
         }
+        if was_decode {
+            // Chrome "X" span for the token: starts at the sink's
+            // still-token-start clock, spans the step's virtual cost.
+            let s = &inflight[i];
+            obs.emit(|ts| TraceEvent::DecodeStep {
+                ts_us: ts,
+                request: s.request_id,
+                tenant: s.tenant as u32,
+                token: (s.decoded - 1) as u32,
+                cost_us: cost,
+            });
+        }
         clock += cost;
         counters.busy_us += cost;
+        obs.set_now_us(clock);
 
         // ---- token SLO accounting + completion
         let mut completed = false;
@@ -438,9 +523,17 @@ pub fn run_workload_compiled<'a>(
             if was_decode {
                 let ta = &mut acc[s.tenant];
                 if s.decoded == 1 {
-                    ta.ttft.push(clock - s.arrival_us);
+                    let v = clock - s.arrival_us;
+                    ta.ttft.record(v);
+                    if let Some(h) = &tobs {
+                        h[s.tenant].ttft.record(v);
+                    }
                 } else {
-                    ta.tbt.push(clock - s.last_token_us);
+                    let v = clock - s.last_token_us;
+                    ta.tbt.record(v);
+                    if let Some(h) = &tobs {
+                        h[s.tenant].tbt.record(v);
+                    }
                 }
                 s.last_token_us = clock;
                 completed = s.decoded == s.decode;
@@ -451,9 +544,21 @@ pub fn run_workload_compiled<'a>(
             predictors[s.slot].end_prompt(&inp.pools[s.tenant][s.trace_idx]);
             slot_busy[s.slot] = false;
             let ta = &mut acc[s.tenant];
-            ta.latency.push(clock - s.arrival_us);
+            let latency_us = clock - s.arrival_us;
+            ta.latency.record(latency_us);
             ta.completed += 1;
             ta.tokens += s.decode as u64;
+            if let Some(h) = &tobs {
+                let th = &h[s.tenant];
+                th.latency.record(latency_us);
+                th.tokens.add(s.decode as u64);
+                th.completions.inc();
+            }
+            obs.emit(|ts| TraceEvent::RequestEnd {
+                ts_us: ts,
+                request: s.request_id,
+                tenant: s.tenant as u32,
+            });
             completion_ids.push(s.request_id);
             counters.completions += 1;
             if rr_idx > i {
@@ -466,6 +571,10 @@ pub fn run_workload_compiled<'a>(
 
     // ---- fold the accumulators into the report
     let virtual_secs = clock / 1e6;
+    if let Some(reg) = obs.registry() {
+        reg.gauge("workload_virtual_secs", &[("policy", policy.id())])
+            .set(virtual_secs);
+    }
     let mut aggregate = TenantAcc::default();
     for ta in &acc {
         aggregate.merge(ta);

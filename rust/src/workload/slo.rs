@@ -7,21 +7,25 @@
 use crate::cache::CacheStats;
 use crate::memory::MemoryStats;
 use crate::metrics::LatencyReport;
+use crate::obs::Hist;
 use crate::util::json::Json;
 use crate::workload::sched::SchedCounters;
 
 /// Raw per-tenant sample accumulation while the simulator runs.
+/// Latency series go into bounded-memory [`Hist`]s (~12.8 KB each,
+/// independent of stream count) instead of per-sample vectors, so the
+/// accumulator stays flat at the ROADMAP's 10⁵–10⁶-stream scale.
 #[derive(Debug, Clone, Default)]
 pub struct TenantAcc {
     /// Arrival → first decode token (µs); includes queueing + prefill.
-    pub ttft: Vec<f64>,
+    pub ttft: Hist,
     /// Time between consecutive decode tokens of one stream (µs); under
     /// interleaving this is where contention shows first.
-    pub tbt: Vec<f64>,
+    pub tbt: Hist,
     /// Arrival → request completion (µs).
-    pub latency: Vec<f64>,
+    pub latency: Hist,
     /// Arrival → admission (µs): modeled queueing delay.
-    pub queue: Vec<f64>,
+    pub queue: Hist,
     /// Decode-phase hit/miss/prediction counters against the shared
     /// expert memory.
     pub cache: CacheStats,
@@ -31,25 +35,25 @@ pub struct TenantAcc {
 
 impl TenantAcc {
     pub fn merge(&mut self, other: &TenantAcc) {
-        self.ttft.extend_from_slice(&other.ttft);
-        self.tbt.extend_from_slice(&other.tbt);
-        self.latency.extend_from_slice(&other.latency);
-        self.queue.extend_from_slice(&other.queue);
+        self.ttft.merge(&other.ttft);
+        self.tbt.merge(&other.tbt);
+        self.latency.merge(&other.latency);
+        self.queue.merge(&other.queue);
         self.cache.merge(&other.cache);
         self.completed += other.completed;
         self.tokens += other.tokens;
     }
 
-    /// Collapse the samples into percentile reports.
+    /// Collapse the histograms into percentile reports.
     pub fn into_slo(self, name: &str) -> TenantSlo {
         TenantSlo {
             name: name.to_string(),
             completed: self.completed,
             tokens: self.tokens,
-            ttft: LatencyReport::from_samples_us(&self.ttft),
-            tbt: LatencyReport::from_samples_us(&self.tbt),
-            request_latency: LatencyReport::from_samples_us(&self.latency),
-            queue_delay: LatencyReport::from_samples_us(&self.queue),
+            ttft: LatencyReport::from_hist(&self.ttft),
+            tbt: LatencyReport::from_hist(&self.tbt),
+            request_latency: LatencyReport::from_hist(&self.latency),
+            queue_delay: LatencyReport::from_hist(&self.queue),
             cache: self.cache,
         }
     }
@@ -184,37 +188,44 @@ mod tests {
     use super::*;
 
     #[test]
-    fn merge_concatenates_and_sums() {
+    fn merge_combines_histograms_and_sums() {
         let mut a = TenantAcc {
-            ttft: vec![1.0],
             completed: 2,
             tokens: 10,
             ..Default::default()
         };
-        let b = TenantAcc {
-            ttft: vec![3.0, 4.0],
+        a.ttft.record(1.0);
+        let mut b = TenantAcc {
             completed: 1,
             tokens: 5,
             ..Default::default()
         };
+        b.ttft.record(3.0);
+        b.ttft.record(4.0);
         a.merge(&b);
-        assert_eq!(a.ttft, vec![1.0, 3.0, 4.0]);
+        assert_eq!(a.ttft.count(), 3);
+        assert_eq!(a.ttft.min_us(), 1.0);
+        assert_eq!(a.ttft.max_us(), 4.0);
+        assert!((a.ttft.sum_us() - 8.0).abs() < 1e-9);
         assert_eq!(a.completed, 3);
         assert_eq!(a.tokens, 15);
     }
 
     #[test]
     fn into_slo_builds_percentiles() {
-        let acc = TenantAcc {
-            ttft: (1..=100).map(|x| x as f64).collect(),
+        let mut acc = TenantAcc {
             completed: 100,
             tokens: 400,
             ..Default::default()
         };
+        for x in 1..=100 {
+            acc.ttft.record(x as f64);
+        }
         let slo = acc.into_slo("t0");
         assert_eq!(slo.name, "t0");
         assert_eq!(slo.ttft.count, 100);
-        assert!((slo.ttft.p50_us - 50.0).abs() <= 1.0);
+        // exact nearest-rank p50 is 51; histogram within 2%
+        assert!((slo.ttft.p50_us - 51.0).abs() <= 51.0 * 0.02 + 1e-9);
         assert_eq!(slo.ttft.max_us, 100.0);
         // empty series stay well-defined
         assert_eq!(slo.tbt.count, 0);

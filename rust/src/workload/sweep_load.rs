@@ -7,11 +7,12 @@
 
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
 use crate::memory;
+use crate::obs::ObsSink;
 use crate::predictor::{PredictorKind, TracePredictions};
 use crate::util::parallel::{parallel_map, sweep_threads};
 use crate::trace::{CompiledCorpus, PromptTrace};
 use crate::workload::profile::{Schedule, WorkloadSpec};
-use crate::workload::sched::{run_workload_compiled, SchedPolicy, WorkloadInputs};
+use crate::workload::sched::{run_workload_obs, SchedPolicy, WorkloadInputs};
 use crate::workload::slo::WorkloadReport;
 use crate::Result;
 
@@ -82,6 +83,7 @@ fn run_load_point(
     compiled_pools: &[CompiledCorpus],
     loaded: &[(f64, WorkloadSpec, Schedule)],
     job: &GridJob,
+    obs: &ObsSink,
 ) -> Result<LoadPoint> {
     let &(policy, backend, kind, load_idx, cache_frac) = job;
     let (load_mult, ref spec, ref schedule) = loaded[load_idx];
@@ -127,7 +129,7 @@ fn run_load_point(
         n_layers: inputs.n_layers,
         n_experts: inputs.n_experts,
     };
-    let report = run_workload_compiled(&winp, kind, mem, compiled_pools)?;
+    let report = run_workload_obs(&winp, kind, mem, compiled_pools, obs)?;
     Ok(LoadPoint {
         policy,
         backend,
@@ -136,6 +138,34 @@ fn run_load_point(
         cache_frac,
         report,
     })
+}
+
+/// Re-run ONE grid point with an observability sink attached — the
+/// traced-run path behind `--trace-out`/`--metrics-out`.  Generates the
+/// point's (spec, schedule) and compiles the tenant pools inline, so
+/// callers that already finished a grid sweep don't have to keep those
+/// tables alive; the drain itself is byte-identical to the same point
+/// inside [`sweep_load`] (same generation seed, same virtual time).
+#[allow(clippy::too_many_arguments)]
+pub fn run_point_obs(
+    inputs: &LoadSweepInputs<'_>,
+    policy: SchedPolicy,
+    backend: Backend,
+    kind: PredictorKind,
+    load_mult: f64,
+    cache_frac: f64,
+    obs: &ObsSink,
+) -> Result<LoadPoint> {
+    let spec = inputs.spec.with_load(load_mult);
+    let schedule = spec.generate(inputs.pools)?;
+    let loaded = [(load_mult, spec, schedule)];
+    let compiled: Vec<CompiledCorpus> = inputs
+        .pools
+        .iter()
+        .map(|p| CompiledCorpus::compile(p))
+        .collect();
+    let job: GridJob = (policy, backend, kind, 0, cache_frac);
+    run_load_point(inputs, &compiled, &loaded, &job, obs)
 }
 
 /// Run the load grid with the default worker count.
@@ -192,7 +222,7 @@ pub fn sweep_load_threaded(
         .map(|p| CompiledCorpus::compile(p))
         .collect();
     parallel_map(&grid, threads, |job| {
-        run_load_point(inputs, &compiled, &loaded, job)
+        run_load_point(inputs, &compiled, &loaded, job, &ObsSink::default())
     })
 }
 

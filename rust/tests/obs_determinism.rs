@@ -1,0 +1,241 @@
+//! Contract tests for the observability layer on the workload surface:
+//! two identical seeded drains with active sinks must produce
+//! byte-identical trace + metrics exports, an attached sink must not
+//! perturb the report, the Chrome trace must mirror the scheduler's
+//! invariant counters, and the metric registry must agree with the SLO
+//! accumulators it shadows.
+
+use moe_beyond::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
+use moe_beyond::memory::{self, ExpertMemory};
+use moe_beyond::obs::{ObsSink, SnapValue, DEFAULT_RING_CAP};
+use moe_beyond::sim::PredictorKind;
+use moe_beyond::tier::TierSpec;
+use moe_beyond::trace::{CompiledCorpus, PromptTrace};
+use moe_beyond::util::json::Json;
+use moe_beyond::workload::{
+    report_json, run_workload_obs, synthetic_fit_pool, synthetic_pools, Schedule, SchedPolicy,
+    WorkloadInputs, WorkloadReport, WorkloadSpec,
+};
+
+const N_LAYERS: usize = 4;
+const N_EXPERTS: usize = 64;
+
+struct Fixture {
+    spec: WorkloadSpec,
+    pools: Vec<Vec<PromptTrace>>,
+    fit: Vec<PromptTrace>,
+    schedule: Schedule,
+}
+
+fn fixture() -> Fixture {
+    let spec = WorkloadSpec::example(2, 23, 4.0).with_load(1.5);
+    let pools = synthetic_pools(&spec, 4, N_LAYERS as u16, N_EXPERTS);
+    let fit = synthetic_fit_pool(&spec, 2, N_LAYERS as u16, N_EXPERTS);
+    let schedule = spec.generate(&pools).unwrap();
+    Fixture {
+        spec,
+        pools,
+        fit,
+        schedule,
+    }
+}
+
+fn overlap_us() -> f64 {
+    WorkloadConfig::default().token_compute_us / N_LAYERS as f64
+}
+
+fn flat_memory(cap: usize) -> Box<dyn ExpertMemory> {
+    memory::build(
+        "lru",
+        &CacheConfig::default().with_capacity(cap),
+        None,
+        &SimConfig::default(),
+        N_EXPERTS,
+        overlap_us(),
+    )
+    .unwrap()
+}
+
+fn tiered_memory() -> Box<dyn ExpertMemory> {
+    let cfg = TierConfig {
+        tiers: vec![
+            TierSpec::new("gpu", 8, 1.0, 0.0),
+            TierSpec::new("host", 64, 100.0, 100.0),
+            TierSpec::new("ssd", 256, 1000.0, 0.0),
+        ],
+        policy: "lru".into(),
+    };
+    memory::build(
+        "lru",
+        &CacheConfig::default(),
+        Some(&cfg),
+        &SimConfig::default(),
+        N_EXPERTS,
+        overlap_us(),
+    )
+    .unwrap()
+}
+
+fn run_traced(fx: &Fixture, mem: Box<dyn ExpertMemory>, obs: &ObsSink) -> WorkloadReport {
+    let cfg = WorkloadConfig {
+        max_concurrency: 2,
+        policy: SchedPolicy::Fcfs.id().to_string(),
+        ..Default::default()
+    };
+    let sim = SimConfig::default();
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let inputs = WorkloadInputs {
+        spec: &fx.spec,
+        schedule: &fx.schedule,
+        pools: &fx.pools,
+        fit_traces: &fx.fit,
+        learned: None,
+        cfg: &cfg,
+        sim: &sim,
+        eam: &eam,
+        n_layers: N_LAYERS,
+        n_experts: N_EXPERTS,
+    };
+    let compiled: Vec<CompiledCorpus> =
+        fx.pools.iter().map(|p| CompiledCorpus::compile(p)).collect();
+    run_workload_obs(&inputs, PredictorKind::None, mem, &compiled, obs).unwrap()
+}
+
+#[test]
+fn traced_runs_are_byte_identical() {
+    let (fa, fb) = (fixture(), fixture());
+    let oa = ObsSink::active(DEFAULT_RING_CAP, "virtual");
+    let ob = ObsSink::active(DEFAULT_RING_CAP, "virtual");
+    let ra = run_traced(&fa, flat_memory(24), &oa);
+    let rb = run_traced(&fb, flat_memory(24), &ob);
+    assert_eq!(
+        report_json(&ra).to_json_string(),
+        report_json(&rb).to_json_string()
+    );
+    assert_eq!(
+        oa.trace_json().unwrap().to_json_string(),
+        ob.trace_json().unwrap().to_json_string(),
+        "trace JSON must be byte-identical across identical seeded runs"
+    );
+    assert_eq!(
+        oa.metrics_json().unwrap().to_json_string(),
+        ob.metrics_json().unwrap().to_json_string(),
+        "metrics JSON must be byte-identical across identical seeded runs"
+    );
+    assert_eq!(
+        oa.metrics_prometheus().unwrap(),
+        ob.metrics_prometheus().unwrap()
+    );
+}
+
+#[test]
+fn active_sink_does_not_perturb_the_report() {
+    let fx = fixture();
+    let plain = run_traced(&fx, flat_memory(24), &ObsSink::default());
+    let traced = run_traced(
+        &fx,
+        flat_memory(24),
+        &ObsSink::active(DEFAULT_RING_CAP, "virtual"),
+    );
+    assert_eq!(
+        report_json(&plain).to_json_string(),
+        report_json(&traced).to_json_string(),
+        "attaching a sink must not change the workload report"
+    );
+}
+
+#[test]
+fn chrome_trace_mirrors_scheduler_counters() {
+    let fx = fixture();
+    let obs = ObsSink::active(DEFAULT_RING_CAP, "virtual");
+    let report = run_traced(&fx, flat_memory(24), &obs);
+    assert_eq!(obs.dropped_events(), 0, "fixture must fit the ring");
+
+    let j = obs.trace_json().unwrap();
+    let meta = j.get("metadata").unwrap();
+    assert_eq!(meta.get("clock").unwrap().as_str().unwrap(), "virtual");
+    assert_eq!(meta.get("dropped_events").unwrap().as_f64().unwrap(), 0.0);
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+
+    let mut begins = 0u64;
+    let mut ends = 0u64;
+    let mut steps = 0u64;
+    let mut last_ts = f64::NEG_INFINITY;
+    for ev in evs {
+        let ph = ev.get("ph").unwrap().as_str().unwrap();
+        assert!(matches!(ph, "b" | "e" | "X" | "i"), "unexpected ph {ph}");
+        assert!(ev.get("name").is_some());
+        let ts = ev.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts >= last_ts, "virtual-clock events must be time-ordered");
+        last_ts = ts;
+        match ph {
+            "b" => begins += 1,
+            "e" => ends += 1,
+            "X" => steps += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(begins, report.counters.admissions);
+    assert_eq!(ends, report.counters.completions);
+    assert_eq!(steps, report.counters.steps);
+}
+
+#[test]
+fn tiered_run_emits_tier_moves_and_registry_mirrors_slo() {
+    let fx = fixture();
+    let obs = ObsSink::active(DEFAULT_RING_CAP, "virtual");
+    let report = run_traced(&fx, tiered_memory(), &obs);
+
+    // the small GPU tier forces promote/demote traffic onto the trace
+    let j = obs.trace_json().unwrap();
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    let cat_count = |cat: &str| {
+        evs.iter()
+            .filter(|e| matches!(e.get("cat"), Some(Json::Str(c)) if c.as_str() == cat))
+            .count()
+    };
+    assert!(cat_count("tier") > 0, "no tier-transition events traced");
+    assert!(cat_count("cache") > 0, "no cache-access events traced");
+
+    // the registry's labeled mirrors must agree with the SLO accumulators
+    let snap = obs.snapshot().unwrap();
+    let counter_sum = |name: &str| -> u64 {
+        snap.entries
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .map(|(_, v)| match v {
+                SnapValue::Counter(c) => *c,
+                other => panic!("{name} is not a counter: {other:?}"),
+            })
+            .sum()
+    };
+    assert_eq!(counter_sum("workload_completions"), report.counters.completions);
+    assert_eq!(counter_sum("workload_cache_hits"), report.aggregate.cache.hits);
+    assert_eq!(
+        counter_sum("workload_cache_misses"),
+        report.aggregate.cache.misses
+    );
+    let latency_count: u64 = snap
+        .entries
+        .iter()
+        .filter(|((n, _), _)| n == "workload_latency_us")
+        .map(|(_, v)| match v {
+            SnapValue::Hist(h) => h.count(),
+            other => panic!("latency is not a histogram: {other:?}"),
+        })
+        .sum();
+    assert_eq!(latency_count, report.counters.completions);
+    let gauge = snap
+        .entries
+        .iter()
+        .find(|((n, _), _)| n == "workload_virtual_secs")
+        .map(|(_, v)| match v {
+            SnapValue::Gauge(g) => *g,
+            other => panic!("virtual_secs is not a gauge: {other:?}"),
+        })
+        .expect("workload_virtual_secs gauge missing");
+    assert_eq!(gauge.to_bits(), report.virtual_secs.to_bits());
+}
