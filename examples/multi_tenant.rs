@@ -49,7 +49,7 @@ fn main() -> moe_beyond::Result<()> {
             N_EXPERTS,
             cfg.token_compute_us / N_LAYERS as f64,
         )?;
-        let inputs = WorkloadInputs {
+        let inputs: WorkloadInputs = WorkloadInputs {
             spec: &spec,
             schedule: &schedule,
             pools: &pools,

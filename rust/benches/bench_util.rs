@@ -89,5 +89,49 @@ pub fn mk_reuse_traces(
         .collect()
 }
 
+/// Wide-world variant of [`mk_reuse_traces`]: the same reuse structure,
+/// but each prompt's ~10-expert band is placed anywhere in
+/// `0..n_experts`, so with `n_experts > 64` the ids routinely cross u64
+/// word boundaries (the multi-word `ExpertSet` path under test).
+#[allow(dead_code)]
+pub fn mk_reuse_traces_wide(
+    n: usize,
+    n_tokens: usize,
+    n_layers: u16,
+    seed: u64,
+    n_experts: usize,
+) -> Vec<moe_beyond::trace::PromptTrace> {
+    assert!(
+        (11..=moe_beyond::util::MAX_EXPERTS).contains(&n_experts),
+        "mk_reuse_traces_wide needs 11..={} experts",
+        moe_beyond::util::MAX_EXPERTS
+    );
+    let mut rng = moe_beyond::util::Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let base = rng.below(n_experts - 10) as u8;
+            let mut experts = Vec::new();
+            for _ in 0..n_tokens * n_layers as usize {
+                let a = base + rng.below(10) as u8;
+                let mut b = base + rng.below(10) as u8;
+                if b == a {
+                    b = base + ((a - base + 1) % 10);
+                }
+                experts.push(a);
+                experts.push(b);
+            }
+            moe_beyond::trace::PromptTrace {
+                prompt_id: i as u32,
+                n_layers,
+                top_k: 2,
+                d_emb: 0,
+                tokens: vec![0; n_tokens],
+                embeddings: vec![],
+                experts,
+            }
+        })
+        .collect()
+}
+
 #[allow(dead_code)]
 fn main() {} // not a real bench target; included via #[path] by the others

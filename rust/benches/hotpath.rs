@@ -46,7 +46,7 @@ fn replay_no_obs(traces: &[PromptTrace], compiled: &[CompiledTrace]) -> u64 {
     for (trace, ct) in traces.iter().zip(compiled) {
         let n_layers = trace.n_layers as usize;
         let warm = sim.warmup_tokens.min(trace.n_tokens());
-        pred.begin_prompt(trace);
+        ExpertPredictor::<1>::begin_prompt(&mut pred, trace);
         scratch.clear();
         scratch.resize(n_layers, ExpertSet::EMPTY);
         for t in 0..trace.n_tokens() {
@@ -76,14 +76,14 @@ fn replay_no_obs(traces: &[PromptTrace], compiled: &[CompiledTrace]) -> u64 {
                 pred.observe(&ctx, l, truth);
             }
         }
-        pred.end_prompt(trace);
+        ExpertPredictor::<1>::end_prompt(&mut pred, trace);
     }
     stats.hits + stats.misses
 }
 
 /// The real engine over the same traces with the given sink attached.
 fn replay_engine(traces: &[PromptTrace], compiled: &[CompiledTrace], obs: &ObsSink) -> u64 {
-    let mut engine = SimEngine::flat(
+    let mut engine: SimEngine = SimEngine::flat(
         Box::new(LruCache::new(OBS_GATE_CAP)),
         SimConfig::default(),
         CacheConfig::default().with_capacity(OBS_GATE_CAP),
@@ -141,7 +141,7 @@ fn main() -> moe_beyond::Result<()> {
 
     // ExpertSet algebra
     let mut rng = Rng::new(1);
-    let sets: Vec<ExpertSet> = (0..1024).map(|_| ExpertSet(rng.next_u64())).collect();
+    let sets: Vec<ExpertSet> = (0..1024).map(|_| ExpertSet::from_words([rng.next_u64()])).collect();
     let mut acc = 0u32;
     bench_loop("expert_set: 1k union+overlap", 200, 0.5, || {
         for w in sets.windows(2) {
@@ -180,13 +180,14 @@ fn main() -> moe_beyond::Result<()> {
     let mut eam = EamPredictor::new(EamConfig::default(), 27, 64);
     eam.fit(&fit);
     let probe = gen.generate(1).pop().unwrap();
-    eam.begin_prompt(&probe);
+    ExpertPredictor::<1>::begin_prompt(&mut eam, &probe);
     let ctx = DecodeContext { trace: &probe, t: 4 };
     for l in 0..27 {
         eam.observe(&ctx, l, probe.expert_set(2, l));
     }
     bench_loop("eam: predict (cosine over EAMC)", 500, 0.5, || {
-        std::hint::black_box(eam.predict(&ctx, 13));
+        let s: ExpertSet = eam.predict(&ctx, 13);
+        std::hint::black_box(s);
     });
 
     // whole-prompt simulation throughput

@@ -20,6 +20,11 @@
 //!    replay.  Outputs asserted identical; tokens/sec reported for both
 //!    (the gain here is per-expert virtual-call elimination, so it is
 //!    reported, not gated).
+//! 4. **Wide-world replay** — the same oracle replay on a 160-expert
+//!    world (3-word `ExpertSet`): scalar-vs-batched parity asserted
+//!    byte-identical, and the per-token cost gated at ≤ 2.5× the
+//!    single-word path (`MOEB_REPLAY_WIDE_MAX_RATIO` overrides).  The
+//!    single-word sections double as the N=1 monomorphization gate.
 //!
 //! Tokens/sec methodology: one "sweep token" is one decode token of one
 //! prompt at one grid point, so a capacity sweep covers
@@ -76,28 +81,29 @@ fn assert_points_identical(a: &moe_beyond::sim::SweepResult, b: &moe_beyond::sim
     }
 }
 
-fn oracle_replay(
+fn oracle_replay<const N: usize>(
     scalar: bool,
     traces: &[PromptTrace],
-    compiled: &CompiledCorpus,
+    compiled: &CompiledCorpus<N>,
     capacity: usize,
     sim: &SimConfig,
+    n_experts: usize,
 ) -> CacheStats {
     let mut stats = CacheStats::default();
     for (tr, ct) in traces.iter().zip(compiled.iter()) {
-        let flat = FlatMemory::new(
+        let flat = FlatMemory::<N>::new(
             Box::new(LruCache::new(capacity)),
             CacheConfig::default().with_capacity(capacity),
-            N_EXPERTS,
+            n_experts,
             sim.prefetch_budget,
             f64::INFINITY,
         );
-        let mem: Box<dyn ExpertMemory> = if scalar {
+        let mem: Box<dyn ExpertMemory<N>> = if scalar {
             Box::new(ScalarPath::new(Box::new(flat)))
         } else {
             Box::new(flat)
         };
-        let mut engine = SimEngine::new(mem, sim.clone(), N_EXPERTS);
+        let mut engine = SimEngine::new(mem, sim.clone(), n_experts);
         engine.run_prompt_compiled(tr, ct, &mut OraclePredictor::new(), &mut stats);
     }
     stats
@@ -111,7 +117,7 @@ fn main() -> moe_beyond::Result<()> {
 
     let test = mk_reuse_traces(prompts, tokens, N_LAYERS as u16, 91);
     let fit = mk_reuse_traces(8, tokens, N_LAYERS as u16, 92);
-    let inputs = SweepInputs {
+    let inputs: SweepInputs = SweepInputs {
         test_traces: &test,
         fit_traces: &fit,
         learned: None,
@@ -279,10 +285,10 @@ fn main() -> moe_beyond::Result<()> {
     // ---- section 3: predictor-driven replay, scalar vs batched lookups
     println!("\n== predictor-driven replay (oracle): scalar vs batched lookup_set ==");
     let capacity = ((N_LAYERS * N_EXPERTS) as f64 * 0.10).round() as usize;
-    let compiled = CompiledCorpus::compile(&test);
+    let compiled: CompiledCorpus = CompiledCorpus::compile(&test);
     let sim = SimConfig::default();
-    let s_scalar = oracle_replay(true, &test, &compiled, capacity, &sim);
-    let s_batched = oracle_replay(false, &test, &compiled, capacity, &sim);
+    let s_scalar = oracle_replay(true, &test, &compiled, capacity, &sim, N_EXPERTS);
+    let s_batched = oracle_replay(false, &test, &compiled, capacity, &sim, N_EXPERTS);
     assert_eq!(s_scalar.hits, s_batched.hits);
     assert_eq!(s_scalar.misses, s_batched.misses);
     assert_eq!(s_scalar.prediction_hits, s_batched.prediction_hits);
@@ -293,10 +299,10 @@ fn main() -> moe_beyond::Result<()> {
 
     let replay_tokens = (prompts * tokens) as f64;
     let scalar_s = min_secs(reps, || {
-        std::hint::black_box(oracle_replay(true, &test, &compiled, capacity, &sim));
+        std::hint::black_box(oracle_replay(true, &test, &compiled, capacity, &sim, N_EXPERTS));
     });
     let batched_s = min_secs(reps, || {
-        std::hint::black_box(oracle_replay(false, &test, &compiled, capacity, &sim));
+        std::hint::black_box(oracle_replay(false, &test, &compiled, capacity, &sim, N_EXPERTS));
     });
     println!(
         "  scalar path:  {:>9.2} ms/replay  ({:>12.0} tokens/s)",
@@ -310,18 +316,112 @@ fn main() -> moe_beyond::Result<()> {
         scalar_s / batched_s.max(1e-12)
     );
 
+    // ---- section 4: wide-world replay (multi-word ExpertSet)
+    // The single-word sections above ARE the N=1 regression gate (any
+    // monomorphization slip shows up as a failed ≥3x speedup gate); this
+    // section bounds what a 3-word (160-expert) world pays per token
+    // relative to the single-word fast path on the same replay shape.
+    println!("\n== wide replay: 160 experts / 3-word sets vs single-word per token ==");
+    const WIDE_EXPERTS: usize = 160;
+    const WIDE_WORDS: usize = 3;
+    let wide_max_ratio: f64 = std::env::var("MOEB_REPLAY_WIDE_MAX_RATIO")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2.5);
+    let wide_test =
+        bench_util::mk_reuse_traces_wide(prompts, tokens, N_LAYERS as u16, 93, WIDE_EXPERTS);
+    let wide_compiled: CompiledCorpus<WIDE_WORDS> = CompiledCorpus::compile(&wide_test);
+    let wide_capacity = ((N_LAYERS * WIDE_EXPERTS) as f64 * 0.10).round() as usize;
+    // parity first: batched set-level lookups vs scalar delegation must
+    // stay byte-identical on multi-word sets too
+    let w_scalar = oracle_replay::<WIDE_WORDS>(
+        true,
+        &wide_test,
+        &wide_compiled,
+        wide_capacity,
+        &sim,
+        WIDE_EXPERTS,
+    );
+    let w_batched = oracle_replay::<WIDE_WORDS>(
+        false,
+        &wide_test,
+        &wide_compiled,
+        wide_capacity,
+        &sim,
+        WIDE_EXPERTS,
+    );
+    assert_eq!(w_scalar.hits, w_batched.hits);
+    assert_eq!(w_scalar.misses, w_batched.misses);
+    assert_eq!(w_scalar.prediction_hits, w_batched.prediction_hits);
+    assert_eq!(
+        w_scalar.transfer_us.to_bits(),
+        w_batched.transfer_us.to_bits()
+    );
+
+    let time_wide = |reps: usize| {
+        min_secs(reps, || {
+            std::hint::black_box(oracle_replay::<WIDE_WORDS>(
+                false,
+                &wide_test,
+                &wide_compiled,
+                wide_capacity,
+                &sim,
+                WIDE_EXPERTS,
+            ));
+        })
+    };
+    let time_narrow = |reps: usize| {
+        min_secs(reps, || {
+            std::hint::black_box(oracle_replay::<1>(
+                false, &test, &compiled, capacity, &sim, N_EXPERTS,
+            ));
+        })
+    };
+    let mut wide_s = time_wide(reps);
+    let mut narrow_s = time_narrow(reps);
+    let mut wide_ratio = wide_s / narrow_s.max(1e-12);
+    if wide_ratio > wide_max_ratio {
+        // same one-noise-retry policy as sections 1-2: min-of-best per side
+        wide_s = wide_s.min(time_wide(reps * 2));
+        narrow_s = narrow_s.min(time_narrow(reps * 2));
+        wide_ratio = wide_s / narrow_s.max(1e-12);
+    }
+    println!(
+        "  1-word  ({} experts): {:>9.2} ms/replay  ({:>12.0} tokens/s)",
+        N_EXPERTS,
+        narrow_s * 1e3,
+        replay_tokens / narrow_s
+    );
+    println!(
+        "  {}-word ({} experts): {:>9.2} ms/replay  ({:>12.0} tokens/s)  => {:.2}x per token (gate {:.2}x)",
+        WIDE_WORDS,
+        WIDE_EXPERTS,
+        wide_s * 1e3,
+        replay_tokens / wide_s,
+        wide_ratio,
+        wide_max_ratio
+    );
+    assert!(
+        wide_ratio <= wide_max_ratio,
+        "{WIDE_WORDS}-word replay costs {wide_ratio:.2}x the single-word path per token \
+         (gate: {wide_max_ratio:.2}x)"
+    );
+
     // ---- metrics artifact for the CI perf-gate job
     let out_dir = std::path::Path::new("target/replay");
     std::fs::create_dir_all(out_dir)?;
     let json = format!(
-        "{{\"schema\":2,\"prompts\":{},\"tokens_per_prompt\":{},\"layers\":{},\"fracs\":{},\
+        "{{\"schema\":3,\"prompts\":{},\"tokens_per_prompt\":{},\"layers\":{},\"fracs\":{},\
          \"replay_sweep_s\":{:.6},\"stackdist_sweep_s\":{:.6},\"stackdist_speedup\":{:.3},\
          \"replay_tokens_per_sec\":{:.0},\"stackdist_tokens_per_sec\":{:.0},\
          \"tiered_cells\":{},\"tiered_replay_sweep_s\":{:.6},\"tiered_stackdist_sweep_s\":{:.6},\
          \"tiered_stackdist_speedup\":{:.3},\"tiered_replay_tokens_per_sec\":{:.0},\
          \"tiered_stackdist_tokens_per_sec\":{:.0},\
          \"scalar_replay_s\":{:.6},\"batched_replay_s\":{:.6},\"batched_speedup\":{:.3},\
-         \"scalar_tokens_per_sec\":{:.0},\"batched_tokens_per_sec\":{:.0},\"parity\":true}}",
+         \"scalar_tokens_per_sec\":{:.0},\"batched_tokens_per_sec\":{:.0},\
+         \"wide_experts\":{},\"wide_words\":{},\"wide_replay_s\":{:.6},\
+         \"wide_tokens_per_sec\":{:.0},\"wide_per_token_ratio\":{:.3},\
+         \"wide_ratio_gate\":{:.2},\"parity\":true}}",
         prompts,
         tokens,
         N_LAYERS,
@@ -342,6 +442,12 @@ fn main() -> moe_beyond::Result<()> {
         scalar_s / batched_s.max(1e-12),
         replay_tokens / scalar_s,
         replay_tokens / batched_s,
+        WIDE_EXPERTS,
+        WIDE_WORDS,
+        wide_s,
+        replay_tokens / wide_s,
+        wide_ratio,
+        wide_max_ratio,
     );
     std::fs::write(out_dir.join("metrics.json"), &json)?;
     println!("\nmetrics written to target/replay/metrics.json");

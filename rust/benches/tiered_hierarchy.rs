@@ -41,7 +41,7 @@ fn main() -> moe_beyond::Result<()> {
     let n_prompts = env_usize("MOEB_BENCH_PROMPTS", 24);
     let test = mk_reuse_traces(n_prompts, 40, N_LAYERS as u16, 61);
     let fit = mk_reuse_traces(n_prompts * 2, 40, N_LAYERS as u16, 62);
-    let inputs = SweepInputs {
+    let inputs: SweepInputs = SweepInputs {
         test_traces: &test,
         fit_traces: &fit,
         learned: None,

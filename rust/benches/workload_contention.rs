@@ -66,7 +66,7 @@ fn run_all() -> Result<(Vec<LoadPoint>, Vec<LoadPoint>)> {
     };
     let sim = SimConfig::default();
     let tiers = tier_base();
-    let inputs = LoadSweepInputs {
+    let inputs: LoadSweepInputs = LoadSweepInputs {
         spec: &spec,
         pools: &pools,
         fit_traces: &fit,

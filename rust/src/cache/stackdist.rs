@@ -303,8 +303,12 @@ impl StackDistCurve {
 ///
 /// `warmup_tokens` mirrors `SimConfig::warmup_tokens`: accesses of
 /// tokens `< warmup` move the (virtual) residency but are not recorded.
-pub fn profile_prompt(
-    trace: &CompiledTrace,
+///
+/// Width-generic: the reference stream is id-based, so the profile is
+/// identical for any [`ExpertSet`](crate::util::ExpertSet) word width
+/// `N` that holds `n_experts`.
+pub fn profile_prompt<const N: usize>(
+    trace: &CompiledTrace<N>,
     n_experts: usize,
     warmup_tokens: usize,
     out: &mut StackDistProfile,
@@ -537,7 +541,8 @@ mod tests {
         let mut rng = Rng::new(402);
         let a = random_trace(&mut rng, 20, 2, 12);
         let b = random_trace(&mut rng, 15, 2, 12);
-        let (ca, cb) = (CompiledTrace::compile(&a), CompiledTrace::compile(&b));
+        let (ca, cb): (CompiledTrace, CompiledTrace) =
+            (CompiledTrace::compile(&a), CompiledTrace::compile(&b));
         let mut pa = StackDistProfile::new();
         let mut pb = StackDistProfile::new();
         profile_prompt(&ca, 12, 4, &mut pa);
@@ -572,7 +577,7 @@ mod tests {
     fn cache_stats_shape() {
         let mut rng = Rng::new(403);
         let tr = random_trace(&mut rng, 24, 3, 16);
-        let ct = CompiledTrace::compile(&tr);
+        let ct: CompiledTrace = CompiledTrace::compile(&tr);
         let mut p = StackDistProfile::new();
         profile_prompt(&ct, 16, 8, &mut p);
         let s = p.cache_stats(6, 1400.0);
@@ -594,7 +599,7 @@ mod tests {
     fn fully_warm_prompt_records_nothing() {
         let mut rng = Rng::new(404);
         let tr = random_trace(&mut rng, 10, 2, 12);
-        let ct = CompiledTrace::compile(&tr);
+        let ct: CompiledTrace = CompiledTrace::compile(&tr);
         let mut p = StackDistProfile::new();
         profile_prompt(&ct, 12, 10, &mut p);
         assert_eq!(p.measured, 0);

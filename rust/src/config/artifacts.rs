@@ -142,8 +142,10 @@ impl Artifacts {
 
         let world = WorldMeta::from_json(j.req("world")?)?;
         ensure!(
-            world.n_experts <= 64,
-            "ExpertSet is a u64 bitset: n_experts={} > 64",
+            (world.n_experts as usize) <= crate::util::MAX_EXPERTS,
+            "ExpertSet is a multi-word bitset of at most {} bits ({} u64 words): n_experts={}",
+            crate::util::MAX_EXPERTS,
+            crate::util::N_MAX,
             world.n_experts
         );
         ensure!(world.top_k < world.n_experts, "top_k must be < n_experts");

@@ -96,6 +96,13 @@ impl ModelEngine {
         let backbone = Backbone::load(rt, arts)?;
         let w = &arts.world;
         let (n_layers, n_experts) = (w.n_layers as usize, w.n_experts as usize);
+        // The serving engine is pinned to the single-word fast path (wide
+        // worlds are sim-only; see `for_expert_width!` in the sim CLI).
+        anyhow::ensure!(
+            n_experts <= 64,
+            "serving engine is single-word (<= 64 experts); world has {n_experts} — \
+             wide worlds run through the simulator paths"
+        );
 
         let kind = PredictorKind::parse(&cfg.serve.predictor)
             .ok_or_else(|| anyhow::anyhow!("unknown predictor {}", cfg.serve.predictor))?;

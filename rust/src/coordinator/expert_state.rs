@@ -10,15 +10,18 @@ use crate::memory::{self, ExpertMemory, FlatMemory, TieredMemory};
 use crate::tier::TierStats;
 use crate::util::ExpertSet;
 
-pub struct ExpertCacheManager {
-    memory: Box<dyn ExpertMemory>,
+/// `N` is the set word-width ([`ExpertSet<N>`]); the serving engine pins
+/// `N = 1` (≤ 64 experts), wide worlds thread their width through here
+/// unchanged.
+pub struct ExpertCacheManager<const N: usize = 1> {
+    memory: Box<dyn ExpertMemory<N>>,
 }
 
-impl ExpertCacheManager {
+impl<const N: usize> ExpertCacheManager<N> {
     /// Wrap a pre-built residency backend (the engine builds one via
     /// [`memory::build`] from its real config — see
     /// [`crate::coordinator::ModelEngine::load`]).
-    pub fn from_memory(memory: Box<dyn ExpertMemory>) -> Self {
+    pub fn from_memory(memory: Box<dyn ExpertMemory<N>>) -> Self {
         Self { memory }
     }
 
@@ -33,7 +36,7 @@ impl ExpertCacheManager {
         n_experts: usize,
         overlap_budget_us: f64,
     ) -> Self {
-        Self::from_memory(Box::new(FlatMemory::new(
+        Self::from_memory(Box::new(FlatMemory::<N>::new(
             cache,
             cfg,
             n_experts,
@@ -50,7 +53,7 @@ impl ExpertCacheManager {
         n_experts: usize,
         overlap_budget_us: f64,
     ) -> crate::Result<Self> {
-        Ok(Self::from_memory(Box::new(TieredMemory::new(
+        Ok(Self::from_memory(Box::new(TieredMemory::<N>::new(
             cfg,
             n_experts,
             sim.prefetch_budget,
@@ -78,21 +81,21 @@ impl ExpertCacheManager {
 
     /// Prefetch a predicted set for `layer` (issued before the layer runs;
     /// DMA overlaps the previous layer's compute up to the budget).
-    pub fn prefetch(&mut self, layer: usize, predicted: ExpertSet, stats: &mut GenStats) {
+    pub fn prefetch(&mut self, layer: usize, predicted: ExpertSet<N>, stats: &mut GenStats) {
         let pf = self.memory.prefetch(layer, predicted);
         stats.prefetches += pf.issued;
     }
 
     /// Account the ground-truth experts of an executed layer.
     /// `decode_phase` additionally feeds the decode-only counters.
-    pub fn observe_actual(&mut self, layer: usize, actual: ExpertSet, stats: &mut GenStats) {
+    pub fn observe_actual(&mut self, layer: usize, actual: ExpertSet<N>, stats: &mut GenStats) {
         self.observe_phase(layer, actual, stats, false)
     }
 
     pub fn observe_phase(
         &mut self,
         layer: usize,
-        actual: ExpertSet,
+        actual: ExpertSet<N>,
         stats: &mut GenStats,
         decode_phase: bool,
     ) {

@@ -218,7 +218,7 @@ mod tests {
             embeddings: vec![],
             experts: vec![1, 2, 3, 4], // layer0 {1,2}, layer1 {3,4}
         };
-        let preds = TracePredictions {
+        let preds: TracePredictions = TracePredictions {
             n_layers: 2,
             sets: vec![vec![
                 ExpertSet::from_ids([1u8, 9]),  // half right

@@ -92,6 +92,8 @@ COMMANDS:
                     --predictors eam,none             --loads 0.5,1,2,4
                     --fracs 0.05,0.10,0.20            --max-concurrency 4
                     --out serve_sim.csv   (synthetic corpora when no artifacts)
+                    --experts 64          (synthetic worlds only; up to 256 —
+                                           >64 selects a multi-word ExpertSet)
                     --trace-out t.json --metrics-out m.json|m.prom
                       (traced virtual-time re-run of the first grid point;
                        byte-deterministic for a fixed seed)
@@ -245,6 +247,7 @@ fn serve_sim(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed", 7)? as u64;
     let max_concurrency = args.get_usize("max-concurrency", 4)?;
     let out = args.get("out", "serve_sim.csv");
+    let experts_flag = args.get_usize("experts", 64)?;
 
     let policies: Vec<workload::SchedPolicy> = args
         .get("policies", "fcfs,round-robin")
@@ -279,21 +282,19 @@ fn serve_sim(args: &Args) -> Result<()> {
     // the self-contained reuse-heavy generator otherwise.  The learned
     // predictor additionally needs the PJRT predictor artifact to
     // precompute per-trace predictions (replayed via CachedPredictor).
-    type Pools = Vec<Vec<PromptTrace>>;
-    type LearnedPools = Option<Vec<Vec<moe_beyond::predictor::TracePredictions>>>;
-    let (pools, fit, n_layers, n_experts, learned_pools): (
-        Pools,
-        Vec<PromptTrace>,
-        usize,
-        usize,
-        LearnedPools,
-    ) = match harness::load_artifacts() {
+    // The artifact path stays on the single-word fast path (N = 1); the
+    // synthetic path dispatches on --experts so wide worlds (> 64
+    // experts, up to 64 * N_MAX) run the same grid end-to-end.
+    match harness::load_artifacts() {
         Ok(arts) => {
             let world = WorldModel::load(arts.path("world.json"))?;
             let (nl, ne) = (
                 world.meta.n_layers as usize,
                 world.meta.n_experts as usize,
             );
+            if args.flags.contains_key("experts") {
+                println!("--experts ignored: the artifact world fixes n_experts = {ne}");
+            }
             let mut pools = Vec::new();
             let mut fit = Vec::new();
             for t in &spec.tenants {
@@ -310,39 +311,97 @@ fn serve_sim(args: &Args) -> Result<()> {
                 fit.extend(g.generate(4));
             }
             println!("tenant corpora: 8 traces/tenant from the artifact world");
-            let learned_pools = if want_learned {
-                let rt = PjrtRuntime::cpu()?;
-                let sim = SimConfig::default();
-                let mut lp = Vec::with_capacity(pools.len());
-                for pool in &pools {
-                    lp.push(harness::precompute_learned(
-                        &rt,
-                        &arts,
-                        pool,
-                        sim.predictor_stride,
-                        sim.predict_top_k,
-                        true,
-                    )?);
-                }
-                println!("learned predictions precomputed for every tenant pool");
-                Some(lp)
-            } else {
-                None
-            };
-            (pools, fit, nl, ne, learned_pools)
+            let learned_pools: Option<Vec<Vec<moe_beyond::predictor::TracePredictions>>> =
+                if want_learned {
+                    let rt = PjrtRuntime::cpu()?;
+                    let sim = SimConfig::default();
+                    let mut lp = Vec::with_capacity(pools.len());
+                    for pool in &pools {
+                        lp.push(harness::precompute_learned(
+                            &rt,
+                            &arts,
+                            pool,
+                            sim.predictor_stride,
+                            sim.predict_top_k,
+                            true,
+                        )?);
+                    }
+                    println!("learned predictions precomputed for every tenant pool");
+                    Some(lp)
+                } else {
+                    None
+                };
+            serve_sim_grid::<1>(
+                args,
+                &spec,
+                &pools,
+                &fit,
+                learned_pools.as_deref(),
+                nl,
+                ne,
+                horizon,
+                max_concurrency,
+                &out,
+                (&policies, &backends, &kinds, &loads, &fracs),
+            )
         }
         Err(e) => {
             anyhow::ensure!(
                 !want_learned,
                 "--predictors learned needs the artifact tree (PJRT predictor) — {e}"
             );
-            println!("artifact tree absent — synthetic tenant corpora (4 layers x 64 experts)");
-            let pools = workload::synthetic_pools(&spec, 8, 4, 64);
-            let fit = workload::synthetic_fit_pool(&spec, 4, 4, 64);
-            (pools, fit, 4, 64, None)
+            let ne = experts_flag;
+            anyhow::ensure!(
+                (24..=moe_beyond::util::MAX_EXPERTS).contains(&ne),
+                "--experts must be in 24..={} (got {ne})",
+                moe_beyond::util::MAX_EXPERTS
+            );
+            println!("artifact tree absent — synthetic tenant corpora (4 layers x {ne} experts)");
+            let pools = workload::synthetic_pools(&spec, 8, 4, ne);
+            let fit = workload::synthetic_fit_pool(&spec, 4, 4, ne);
+            moe_beyond::for_expert_width!(ne, N, {
+                serve_sim_grid::<N>(
+                    args,
+                    &spec,
+                    &pools,
+                    &fit,
+                    None,
+                    4,
+                    ne,
+                    horizon,
+                    max_concurrency,
+                    &out,
+                    (&policies, &backends, &kinds, &loads, &fracs),
+                )
+            })
         }
-    };
+    }
+}
 
+/// One full serve-sim grid at a fixed set word-width `N` (monomorphized:
+/// the 64-expert default runs exactly the single-word code it always
+/// did; wide worlds pay only for the words they need).
+#[allow(clippy::too_many_arguments)]
+fn serve_sim_grid<const N: usize>(
+    args: &Args,
+    spec: &workload::WorkloadSpec,
+    pools: &[Vec<PromptTrace>],
+    fit: &[PromptTrace],
+    learned_pools: Option<&[Vec<moe_beyond::predictor::TracePredictions<N>>]>,
+    n_layers: usize,
+    n_experts: usize,
+    horizon: f64,
+    max_concurrency: usize,
+    out: &str,
+    grid: (
+        &[workload::SchedPolicy],
+        &[workload::Backend],
+        &[PredictorKind],
+        &[f64],
+        &[f64],
+    ),
+) -> Result<()> {
+    let (policies, backends, kinds, loads, fracs) = grid;
     let total = n_layers * n_experts;
     let tier_base = TierConfig {
         tiers: vec![
@@ -361,10 +420,10 @@ fn serve_sim(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let inputs = workload::LoadSweepInputs {
-        spec: &spec,
-        pools: &pools,
-        fit_traces: &fit,
-        learned: learned_pools.as_deref(),
+        spec,
+        pools,
+        fit_traces: fit,
+        learned: learned_pools,
         workload: &wcfg,
         sim: &SimConfig::default(),
         eam: &eam,
@@ -379,7 +438,7 @@ fn serve_sim(args: &Args) -> Result<()> {
         spec.offered_rps(),
         policies.len() * backends.len() * kinds.len() * loads.len() * fracs.len()
     );
-    let points = workload::sweep_load(&inputs, &policies, &backends, &kinds, &loads, &fracs)?;
+    let points = workload::sweep_load(&inputs, policies, backends, kinds, loads, fracs)?;
 
     println!("\n== throughput-latency (aggregate across tenants) ==");
     println!(
@@ -549,7 +608,7 @@ fn sweep(args: &Args) -> Result<()> {
         );
         let cap = (((nl * ne) as f64 * fracs[headline]).round() as usize).max(1);
         let obs = moe_beyond::obs::ObsSink::active(moe_beyond::obs::DEFAULT_RING_CAP, "virtual");
-        let mut engine = moe_beyond::sim::SimEngine::flat(
+        let mut engine: moe_beyond::sim::SimEngine = moe_beyond::sim::SimEngine::flat(
             Box::new(moe_beyond::cache::LruCache::new(cap)),
             SimConfig::default(),
             CacheConfig::default().with_capacity(cap),

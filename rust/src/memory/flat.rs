@@ -10,7 +10,11 @@ use crate::util::ExpertSet;
 
 /// Flat VRAM residency: a [`CachePolicy`] for what is resident plus a
 /// [`VramModel`] for what each access costs.
-pub struct FlatMemory {
+///
+/// Generic over the [`ExpertSet`] word width `N` (default 1); residency
+/// itself is keyed per expert id, so only the set-valued call surfaces
+/// (`lookup_set` / `prefetch`) change shape with the width.
+pub struct FlatMemory<const N: usize = 1> {
     cache: Box<dyn CachePolicy>,
     vram: VramModel,
     /// Demand-fetch cost reported per miss (the config knob, kept out of
@@ -23,7 +27,7 @@ pub struct FlatMemory {
     obs: ObsSink,
 }
 
-impl FlatMemory {
+impl<const N: usize> FlatMemory<N> {
     pub fn new(
         cache: Box<dyn CachePolicy>,
         cfg: CacheConfig,
@@ -95,7 +99,7 @@ impl FlatMemory {
     }
 }
 
-impl ExpertMemory for FlatMemory {
+impl<const N: usize> ExpertMemory<N> for FlatMemory<N> {
     fn name(&self) -> &'static str {
         "flat"
     }
@@ -106,7 +110,7 @@ impl ExpertMemory for FlatMemory {
 
     /// Native batched lookup: one virtual call per layer, hit mask built
     /// as a bitmask, same ascending-id mutation order as scalar lookups.
-    fn lookup_set(&mut self, layer: usize, truth: ExpertSet, measured: bool) -> LookupBatch {
+    fn lookup_set(&mut self, layer: usize, truth: ExpertSet<N>, measured: bool) -> LookupBatch<N> {
         let mut out = LookupBatch::default();
         for e in truth.iter() {
             let r = self.lookup_one(layer, e, measured);
@@ -119,7 +123,7 @@ impl ExpertMemory for FlatMemory {
         out
     }
 
-    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet<N>) -> Prefetched {
         let mut out = Prefetched::default();
         let mut landed = 0usize;
         for e in predicted.iter() {
@@ -275,7 +279,7 @@ mod tests {
         scalar.lookup(0, 5, true);
         batched.lookup(0, 5, true);
         let b = batched.lookup_set(0, truth, true);
-        let mut hits = ExpertSet::new();
+        let mut hits: ExpertSet = ExpertSet::new();
         let mut fetch = 0.0;
         for e in truth.iter() {
             let r = scalar.lookup(0, e, true);

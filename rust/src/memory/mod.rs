@@ -26,9 +26,16 @@
 //! pinned-popular-experts layout) is one file implementing the trait:
 //!
 //! ```ignore
-//! pub struct PinnedMemory { pinned: ExpertSet, inner: FlatMemory }
+//! // Generic over the set width N (1 word = 64 experts; N = 1 is the
+//! // default everywhere, N = 3 covers 160-expert models).  A backend
+//! // that only targets ≤64-expert models can drop the parameter and
+//! // implement `ExpertMemory` (i.e. `ExpertMemory<1>`) directly.
+//! pub struct PinnedMemory<const N: usize = 1> {
+//!     pinned: ExpertSet<N>,
+//!     inner: FlatMemory<N>,
+//! }
 //!
-//! impl ExpertMemory for PinnedMemory {
+//! impl<const N: usize> ExpertMemory<N> for PinnedMemory<N> {
 //!     fn name(&self) -> &'static str { "pinned" }
 //!     fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
 //!         if self.pinned.contains(expert) {
@@ -38,13 +45,15 @@
 //!     }
 //!     // prefetch / end_layer / cost_marks / ... delegate to `inner`.
 //!     //
-//!     // `lookup_set` is OPTIONAL: the trait's default implementation
-//!     // expands a set-level call into scalar `lookup`s, so a minimal
-//!     // backend like this one is already correct on the batched replay
-//!     // hot path.  Override it only to go faster — the override must
-//!     // make the same residency/cost mutations as ascending-id scalar
-//!     // lookups (assert that with a `ScalarPath`-vs-native parity test
-//!     // like `tests/replay_parity.rs`).
+//!     // `lookup_set(&mut self, layer, truth: ExpertSet<N>, measured)`
+//!     // is OPTIONAL: the trait's default implementation expands a
+//!     // set-level call into scalar `lookup`s, so a minimal backend
+//!     // like this one is already correct on the batched replay hot
+//!     // path at every width.  Override it only to go faster — the
+//!     // override must make the same residency/cost mutations as
+//!     // ascending-id scalar lookups (assert that with a
+//!     // `ScalarPath`-vs-native parity test like
+//!     // `tests/replay_parity.rs` / `tests/wide_parity.rs`).
 //! }
 //! ```
 //!
@@ -80,9 +89,9 @@ pub struct Lookup {
 /// hit mask answers "which of the requested experts were GPU-resident"
 /// in one value, and `truth.len() - hits.len()` is the miss count.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
-pub struct LookupBatch {
+pub struct LookupBatch<const N: usize = 1> {
     /// Subset of the requested set served from GPU residency (tier 0).
-    pub hits: ExpertSet,
+    pub hits: ExpertSet<N>,
     /// Summed demand-fetch cost of the misses in µs, accumulated in
     /// ascending expert-id order (so the sum is bit-identical to the
     /// scalar loop's per-miss accumulation whenever the partial sums are
@@ -142,7 +151,12 @@ impl MemoryStats {
 ///
 /// Per-request cost accounting brackets the sequence with
 /// [`cost_marks`](ExpertMemory::cost_marks) deltas.
-pub trait ExpertMemory: Send {
+///
+/// The trait is generic over the [`ExpertSet`] word width `N` (default
+/// 1 = up to 64 experts); expert ids themselves stay `u8` at every
+/// width, so the scalar [`lookup`](ExpertMemory::lookup) signature is
+/// width-independent.
+pub trait ExpertMemory<const N: usize = 1>: Send {
     /// Backend identifier for reports ("flat" | "tiered" | ...).
     fn name(&self) -> &'static str;
 
@@ -163,7 +177,7 @@ pub trait ExpertMemory: Send {
     /// per-expert dynamic dispatch while making the identical sequence
     /// of residency/cost mutations (the parity suites in
     /// `tests/replay_parity.rs` hold both to byte-identical stats).
-    fn lookup_set(&mut self, layer: usize, truth: ExpertSet, measured: bool) -> LookupBatch {
+    fn lookup_set(&mut self, layer: usize, truth: ExpertSet<N>, measured: bool) -> LookupBatch<N> {
         let mut out = LookupBatch::default();
         for e in truth.iter() {
             let r = self.lookup(layer, e, measured);
@@ -179,7 +193,7 @@ pub trait ExpertMemory: Send {
     /// Prefetch a predicted set for `layer`, issued before the layer
     /// runs.  Already-resident experts are refreshed; at most the
     /// effective DMA budget of transfers land, the rest are too late.
-    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched;
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet<N>) -> Prefetched;
 
     /// Close out a layer: DMA beyond the overlap window becomes stall
     /// time and every per-layer window resets.
@@ -230,15 +244,15 @@ pub trait ExpertMemory: Send {
 /// (`tests/replay_parity.rs`) and the baseline side of
 /// `benches/replay_throughput.rs`; it is also handy when bisecting a
 /// suspected batched-path bug in a third-party backend.
-pub struct ScalarPath(Box<dyn ExpertMemory>);
+pub struct ScalarPath<const N: usize = 1>(Box<dyn ExpertMemory<N>>);
 
-impl ScalarPath {
-    pub fn new(inner: Box<dyn ExpertMemory>) -> Self {
+impl<const N: usize> ScalarPath<N> {
+    pub fn new(inner: Box<dyn ExpertMemory<N>>) -> Self {
         Self(inner)
     }
 }
 
-impl ExpertMemory for ScalarPath {
+impl<const N: usize> ExpertMemory<N> for ScalarPath<N> {
     fn name(&self) -> &'static str {
         self.0.name()
     }
@@ -250,7 +264,7 @@ impl ExpertMemory for ScalarPath {
     // lookup_set deliberately NOT overridden: the trait default expands
     // it into the scalar lookups above.
 
-    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet<N>) -> Prefetched {
         self.0.prefetch(layer, predicted)
     }
 
@@ -332,22 +346,26 @@ impl DmaBudget {
 /// the hierarchy, otherwise the flat VRAM model.  The DMA budget comes
 /// from the caller's real `SimConfig` (not a default), so the simulator
 /// and the serving engine can never drift.
-pub fn build(
+///
+/// Width-generic: `build::<N>` (or inference from the destination type)
+/// selects the [`ExpertSet`] word width; `n_experts` must fit in
+/// `64 * N` bits.
+pub fn build<const N: usize>(
     policy: &str,
     cache: &CacheConfig,
     tier: Option<&TierConfig>,
     sim: &SimConfig,
     n_experts: usize,
     overlap_budget_us: f64,
-) -> Result<Box<dyn ExpertMemory>> {
+) -> Result<Box<dyn ExpertMemory<N>>> {
     match tier {
-        Some(cfg) => Ok(Box::new(TieredMemory::new(
+        Some(cfg) => Ok(Box::new(TieredMemory::<N>::new(
             cfg,
             n_experts,
             sim.prefetch_budget,
             overlap_budget_us,
         )?)),
-        None => Ok(Box::new(FlatMemory::new(
+        None => Ok(Box::new(FlatMemory::<N>::new(
             build_policy(policy, cache.capacity_experts)?,
             cache.clone(),
             n_experts,
@@ -381,7 +399,7 @@ mod tests {
     #[test]
     fn build_selects_backend_from_config() {
         let sim = SimConfig::default();
-        let flat = build(
+        let flat: Box<dyn ExpertMemory> = build(
             "lru",
             &CacheConfig::default().with_capacity(8),
             None,
@@ -401,7 +419,7 @@ mod tests {
             ],
             policy: "lru".into(),
         };
-        let tiered = build(
+        let tiered: Box<dyn ExpertMemory> = build(
             "lru",
             &CacheConfig::default(),
             Some(&tcfg),
@@ -424,7 +442,7 @@ mod tests {
             ..Default::default()
         };
         assert_ne!(sim.prefetch_budget, SimConfig::default().prefetch_budget);
-        let m = build(
+        let m: Box<dyn ExpertMemory> = build(
             "lru",
             &CacheConfig::default().with_capacity(8),
             None,

@@ -12,7 +12,11 @@ use crate::Result;
 
 /// Tiered residency: the [`TieredCache`] hierarchy, its cost model, and
 /// the per-depth serve counters.
-pub struct TieredMemory {
+///
+/// Generic over the [`ExpertSet`] word width `N` (default 1); the
+/// hierarchy is keyed per expert id, so only the set-valued call
+/// surfaces (`lookup_set` / `prefetch`) change shape with the width.
+pub struct TieredMemory<const N: usize = 1> {
     cache: TieredCache,
     cost: TierCostModel,
     tstats: TierStats,
@@ -23,7 +27,7 @@ pub struct TieredMemory {
     obs: ObsSink,
 }
 
-impl TieredMemory {
+impl<const N: usize> TieredMemory<N> {
     pub fn new(
         cfg: &TierConfig,
         n_experts: usize,
@@ -134,7 +138,7 @@ impl TieredMemory {
     }
 }
 
-impl ExpertMemory for TieredMemory {
+impl<const N: usize> ExpertMemory<N> for TieredMemory<N> {
     fn name(&self) -> &'static str {
         "tiered"
     }
@@ -145,7 +149,7 @@ impl ExpertMemory for TieredMemory {
 
     /// Native batched lookup: one virtual call per layer, hit mask built
     /// as a bitmask, same ascending-id promotion order as scalar lookups.
-    fn lookup_set(&mut self, layer: usize, truth: ExpertSet, measured: bool) -> LookupBatch {
+    fn lookup_set(&mut self, layer: usize, truth: ExpertSet<N>, measured: bool) -> LookupBatch<N> {
         let mut out = LookupBatch::default();
         for e in truth.iter() {
             let r = self.lookup_one(layer, e, measured);
@@ -158,7 +162,7 @@ impl ExpertMemory for TieredMemory {
         out
     }
 
-    fn prefetch(&mut self, layer: usize, predicted: ExpertSet) -> Prefetched {
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet<N>) -> Prefetched {
         let mut out = Prefetched::default();
         let mut landed = 0usize;
         for e in predicted.iter() {
@@ -325,7 +329,7 @@ mod tests {
         }
         let truth = ExpertSet::from_ids([1u8, 3, 7]); // host / gpu / cold
         let b = batched.lookup_set(0, truth, true);
-        let mut hits = ExpertSet::new();
+        let mut hits: ExpertSet = ExpertSet::new();
         let mut fetch = 0.0;
         for e in truth.iter() {
             let r = scalar.lookup(0, e, true);

@@ -125,7 +125,12 @@ impl EamPredictor {
     }
 
     /// Strongest experts of one layer row of a matched sketch.
-    fn layer_top_k(flat: &[f32], layer: usize, n_experts: usize, k: usize) -> ExpertSet {
+    fn layer_top_k<const N: usize>(
+        flat: &[f32],
+        layer: usize,
+        n_experts: usize,
+        k: usize,
+    ) -> ExpertSet<N> {
         let row = &flat[layer * n_experts..(layer + 1) * n_experts];
         let vals: Vec<f64> = row.iter().map(|&x| x as f64).collect();
         let mut out = ExpertSet::new();
@@ -138,7 +143,7 @@ impl EamPredictor {
     }
 }
 
-impl ExpertPredictor for EamPredictor {
+impl<const N: usize> ExpertPredictor<N> for EamPredictor {
     fn name(&self) -> &'static str {
         crate::predictor::PredictorKind::Eam.id()
     }
@@ -151,7 +156,7 @@ impl ExpertPredictor for EamPredictor {
         }
     }
 
-    fn predict(&mut self, _ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+    fn predict(&mut self, _ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet<N> {
         let Some(m) = self.best_match() else {
             return ExpertSet::EMPTY;
         };
@@ -166,7 +171,7 @@ impl ExpertPredictor for EamPredictor {
         &mut self,
         _ctx: &DecodeContext<'_>,
         layers: std::ops::Range<usize>,
-        out: &mut [ExpertSet],
+        out: &mut [ExpertSet<N>],
     ) {
         debug_assert_eq!(layers.len(), out.len());
         let Some(m) = self.best_match() else {
@@ -178,7 +183,7 @@ impl ExpertPredictor for EamPredictor {
         }
     }
 
-    fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet) {
+    fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet<N>) {
         for e in actual.iter() {
             self.partial[layer * self.n_experts + e as usize] += 1.0;
         }
@@ -290,15 +295,16 @@ mod tests {
 
         // replay a prompt from the {10,11} family
         let tr = uniform_trace(2, 3, 10, 8);
-        p.begin_prompt(&tr);
+        ExpertPredictor::<1>::begin_prompt(&mut p, &tr);
         let ctx = DecodeContext { trace: &tr, t: 0 };
         // before any observation: no partial sketch -> empty prediction
-        assert!(p.predict(&ctx, 0).is_empty());
+        let empty: ExpertSet = p.predict(&ctx, 0);
+        assert!(empty.is_empty());
         // observe one token's worth of layers
         for l in 0..3 {
-            p.observe(&ctx, l, ExpertSet::from_ids([10u8, 11]));
+            p.observe(&ctx, l, ExpertSet::<1>::from_ids([10u8, 11]));
         }
-        let pred = p.predict(&ctx, 1);
+        let pred: ExpertSet = p.predict(&ctx, 1);
         assert_eq!(pred.to_vec(), vec![10, 11]);
     }
 
@@ -306,9 +312,9 @@ mod tests {
     fn end_prompt_grows_collection() {
         let mut p = EamPredictor::new(cfg(), 2, 64);
         let tr = uniform_trace(0, 2, 5, 4);
-        p.begin_prompt(&tr);
-        p.end_prompt(&tr);
-        p.begin_prompt(&tr); // triggers rebuild
+        ExpertPredictor::<1>::begin_prompt(&mut p, &tr);
+        ExpertPredictor::<1>::end_prompt(&mut p, &tr);
+        ExpertPredictor::<1>::begin_prompt(&mut p, &tr); // triggers rebuild
         assert_eq!(p.eamc_len(), 1);
     }
 
@@ -319,9 +325,9 @@ mod tests {
         let mut p = EamPredictor::new(cfg, 2, 64);
         for i in 0..10 {
             let tr = uniform_trace(i, 2, (i % 30) as u8, 4);
-            p.end_prompt(&tr);
+            ExpertPredictor::<1>::end_prompt(&mut p, &tr);
         }
-        p.begin_prompt(&uniform_trace(99, 2, 0, 1));
+        ExpertPredictor::<1>::begin_prompt(&mut p, &uniform_trace(99, 2, 0, 1));
         assert!(p.eamc_len() <= 3);
     }
 
@@ -339,11 +345,12 @@ mod tests {
         assert_eq!(p.eamc_len(), 2);
         // matching still works through centroids
         let tr = uniform_trace(100, 3, 40, 8);
-        p.begin_prompt(&tr);
+        ExpertPredictor::<1>::begin_prompt(&mut p, &tr);
         let ctx = DecodeContext { trace: &tr, t: 0 };
         for l in 0..3 {
-            p.observe(&ctx, l, ExpertSet::from_ids([40u8, 41]));
+            p.observe(&ctx, l, ExpertSet::<1>::from_ids([40u8, 41]));
         }
-        assert_eq!(p.predict(&ctx, 2).to_vec(), vec![40, 41]);
+        let pred: ExpertSet = p.predict(&ctx, 2);
+        assert_eq!(pred.to_vec(), vec![40, 41]);
     }
 }

@@ -86,7 +86,13 @@ pub struct PredictorParams<'a> {
 /// Build a heuristic predictor.  `Learned` is not constructible here —
 /// it is either a precomputed prediction set (sweeps) or a PJRT
 /// [`crate::predictor::LearnedModel`] (serving); callers special-case it.
-pub fn build(kind: PredictorKind, p: &PredictorParams<'_>) -> Result<Box<dyn ExpertPredictor>> {
+///
+/// Generic over the expert-set word width `N` so the same mapping serves
+/// both the 64-expert fast path (`N = 1`, the default) and wide worlds.
+pub fn build<const N: usize>(
+    kind: PredictorKind,
+    p: &PredictorParams<'_>,
+) -> Result<Box<dyn ExpertPredictor<N>>> {
     Ok(match kind {
         PredictorKind::Learned => anyhow::bail!(
             "the learned predictor is not factory-built (use precomputed predictions or LearnedModel)"
@@ -98,7 +104,7 @@ pub fn build(kind: PredictorKind, p: &PredictorParams<'_>) -> Result<Box<dyn Exp
         }
         PredictorKind::NextLayer => Box::new(NextLayerAll::new(p.n_experts as u16)),
         PredictorKind::Popularity => {
-            let mut pr = PopularityPredictor::new(p.n_layers, p.n_experts, p.predict_top_k);
+            let mut pr = PopularityPredictor::<N>::new(p.n_layers, p.n_experts, p.predict_top_k);
             pr.fit(p.fit_traces);
             Box::new(pr)
         }
@@ -149,9 +155,9 @@ mod tests {
             PredictorKind::Oracle,
             PredictorKind::None,
         ] {
-            let p = build(k, &params).unwrap();
+            let p: Box<dyn ExpertPredictor> = build(k, &params).unwrap();
             assert_eq!(p.name(), k.id(), "{k:?}");
         }
-        assert!(build(PredictorKind::Learned, &params).is_err());
+        assert!(build::<1>(PredictorKind::Learned, &params).is_err());
     }
 }

@@ -22,7 +22,7 @@ use crate::config::Artifacts;
 use crate::predictor::{DecodeContext, ExpertPredictor};
 use crate::runtime::{Executable, PjrtRuntime, TensorView, WeightBlob};
 use crate::trace::PromptTrace;
-use crate::util::{math, ExpertSet};
+use crate::util::ExpertSet;
 use crate::Result;
 
 /// Reusable staging buffers for `predict_window`: the padded window, the
@@ -159,19 +159,20 @@ impl LearnedModel {
 
     /// Top-k expert set from a logit row — selected directly over the
     /// f32 values (no widening copy), tie-breaking identical to
-    /// [`math::top_k`] on the f64-widened row (asserted in
-    /// `util::math::tests::prop_top_k_mask_f32_matches_f64_top_k`).
-    pub fn top_set(&self, logits: &[f32], k: usize) -> ExpertSet {
-        ExpertSet(math::top_k_mask_f32(logits, k))
+    /// [`crate::util::math::top_k`] on the f64-widened row (asserted in
+    /// `util::math::tests::prop_top_k_mask_f32_matches_f64_top_k` and,
+    /// for multi-word widths, `util::expert_set`'s top-k parity tests).
+    pub fn top_set<const N: usize>(&self, logits: &[f32], k: usize) -> ExpertSet<N> {
+        ExpertSet::top_k_mask_f32(logits, k)
     }
 }
 
 /// Precomputed per-(token, layer) predicted sets for one trace.
 #[derive(Debug, Clone)]
-pub struct TracePredictions {
+pub struct TracePredictions<const N: usize = 1> {
     pub n_layers: usize,
     /// [token][layer] predicted set.
-    pub sets: Vec<Vec<ExpertSet>>,
+    pub sets: Vec<Vec<ExpertSet<N>>>,
     /// Raw sigmoid logits at the predicted positions (for Table-1 eval):
     /// [token][layer * n_experts .. ].
     pub logits: Vec<Vec<f32>>,
@@ -189,13 +190,13 @@ pub struct TracePredictions {
 /// * `positionwise = true` (offline eval, the paper's §3.2.4 protocol):
 ///   every token is scored at ITS OWN row of its window — the standard
 ///   sequence-labeling evaluation behind Table 1.
-pub fn precompute_mode(
+pub fn precompute_mode<const N: usize>(
     model: &LearnedModel,
     trace: &PromptTrace,
     stride: usize,
     top_k: usize,
     positionwise: bool,
-) -> Result<TracePredictions> {
+) -> Result<TracePredictions<N>> {
     let n = trace.n_tokens();
     let d = model.d_tok;
     let layers: Vec<usize> = (0..model.n_layers).collect();
@@ -247,45 +248,45 @@ pub fn precompute_mode(
 }
 
 /// Simulation-mode precompute (see `precompute_mode`).
-pub fn precompute(
+pub fn precompute<const N: usize>(
     model: &LearnedModel,
     trace: &PromptTrace,
     stride: usize,
     top_k: usize,
-) -> Result<TracePredictions> {
+) -> Result<TracePredictions<N>> {
     precompute_mode(model, trace, stride, top_k, false)
 }
 
 /// An `ExpertPredictor` replaying precomputed predictions (sweep reuse).
-pub struct CachedPredictor<'a> {
-    preds: &'a TracePredictions,
+pub struct CachedPredictor<'a, const N: usize = 1> {
+    preds: &'a TracePredictions<N>,
 }
 
-impl<'a> CachedPredictor<'a> {
-    pub fn new(preds: &'a TracePredictions) -> Self {
+impl<'a, const N: usize> CachedPredictor<'a, N> {
+    pub fn new(preds: &'a TracePredictions<N>) -> Self {
         Self { preds }
     }
 }
 
-impl ExpertPredictor for CachedPredictor<'_> {
+impl<const N: usize> ExpertPredictor<N> for CachedPredictor<'_, N> {
     fn name(&self) -> &'static str {
         crate::predictor::PredictorKind::Learned.id()
     }
     fn begin_prompt(&mut self, _: &PromptTrace) {}
-    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet<N> {
         self.preds.sets[ctx.t][layer]
     }
     fn predict_layers(
         &mut self,
         ctx: &DecodeContext<'_>,
         layers: std::ops::Range<usize>,
-        out: &mut [ExpertSet],
+        out: &mut [ExpertSet<N>],
     ) {
         debug_assert_eq!(layers.len(), out.len());
         // one bounds-checked row index per token instead of one per layer
         out.copy_from_slice(&self.preds.sets[ctx.t][layers.start..layers.end]);
     }
-    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet<N>) {}
     fn end_prompt(&mut self, _: &PromptTrace) {}
 }
 
@@ -327,7 +328,7 @@ mod tests {
         let traces =
             crate::trace::store::read_traces(arts.path("traces/val.bin")).unwrap();
         let tr = &traces[0];
-        let preds = precompute(&model, tr, 8, 6).unwrap();
+        let preds: TracePredictions = precompute(&model, tr, 8, 6).unwrap();
         assert_eq!(preds.sets.len(), tr.n_tokens());
         for t in (0..tr.n_tokens()).step_by(17) {
             for l in (0..preds.n_layers).step_by(9) {

@@ -52,16 +52,21 @@ pub struct DecodeContext<'a> {
 /// `[predict(ctx, 0), …, predict(ctx, L-1)]` with no intervening
 /// observations) by the parity suite in `tests/replay_parity.rs`.
 ///
+/// The trait is generic over the [`ExpertSet`] word width `N` (default
+/// 1 = up to 64 experts).  Stateless heuristics implement it for every
+/// width with a blanket `impl<const N: usize> ExpertPredictor<N>`;
+/// stateful ones carry the width on the struct.
+///
 /// [`predict`]: ExpertPredictor::predict
 /// [`predict_layers`]: ExpertPredictor::predict_layers
-pub trait ExpertPredictor: Send {
+pub trait ExpertPredictor<const N: usize = 1>: Send {
     fn name(&self) -> &'static str;
 
     /// Reset per-request state at the start of a prompt.
     fn begin_prompt(&mut self, trace: &PromptTrace);
 
     /// Predict the experts that will fire at (current token, `layer`).
-    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet;
+    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet<N>;
 
     /// Predict the experts that will fire at the current token for every
     /// layer in `layers`, writing `out[i]` for layer `layers.start + i`
@@ -80,7 +85,7 @@ pub trait ExpertPredictor: Send {
         &mut self,
         ctx: &DecodeContext<'_>,
         layers: std::ops::Range<usize>,
-        out: &mut [ExpertSet],
+        out: &mut [ExpertSet<N>],
     ) {
         debug_assert_eq!(layers.len(), out.len());
         for (slot, l) in out.iter_mut().zip(layers) {
@@ -89,7 +94,7 @@ pub trait ExpertPredictor: Send {
     }
 
     /// Observe the ground-truth activation after the layer ran.
-    fn observe(&mut self, ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet);
+    fn observe(&mut self, ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet<N>);
 
     /// Finish a prompt (e.g. fold its rEAM into the EAMC).
     fn end_prompt(&mut self, trace: &PromptTrace);
@@ -98,24 +103,24 @@ pub trait ExpertPredictor: Send {
 /// A no-op predictor: reactive caching only.
 pub struct NoPrefetch;
 
-impl ExpertPredictor for NoPrefetch {
+impl<const N: usize> ExpertPredictor<N> for NoPrefetch {
     fn name(&self) -> &'static str {
         PredictorKind::None.id()
     }
     fn begin_prompt(&mut self, _: &PromptTrace) {}
-    fn predict(&mut self, _: &DecodeContext<'_>, _: usize) -> ExpertSet {
+    fn predict(&mut self, _: &DecodeContext<'_>, _: usize) -> ExpertSet<N> {
         ExpertSet::EMPTY
     }
     fn predict_layers(
         &mut self,
         _: &DecodeContext<'_>,
         layers: std::ops::Range<usize>,
-        out: &mut [ExpertSet],
+        out: &mut [ExpertSet<N>],
     ) {
         debug_assert_eq!(layers.len(), out.len());
         out.fill(ExpertSet::EMPTY);
     }
-    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet<N>) {}
     fn end_prompt(&mut self, _: &PromptTrace) {}
 }
 
@@ -135,8 +140,9 @@ mod tests {
             experts: vec![0, 1],
         };
         let mut p = NoPrefetch;
-        p.begin_prompt(&tr);
+        ExpertPredictor::<1>::begin_prompt(&mut p, &tr);
         let ctx = DecodeContext { trace: &tr, t: 0 };
-        assert!(p.predict(&ctx, 0).is_empty());
+        let s: ExpertSet = p.predict(&ctx, 0);
+        assert!(s.is_empty());
     }
 }

@@ -31,14 +31,14 @@ impl NextLayerAll {
     }
 }
 
-impl ExpertPredictor for NextLayerAll {
+impl<const N: usize> ExpertPredictor<N> for NextLayerAll {
     fn name(&self) -> &'static str {
         crate::predictor::PredictorKind::NextLayer.id()
     }
 
     fn begin_prompt(&mut self, _: &PromptTrace) {}
 
-    fn predict(&mut self, _ctx: &DecodeContext<'_>, _layer: usize) -> ExpertSet {
+    fn predict(&mut self, _ctx: &DecodeContext<'_>, _layer: usize) -> ExpertSet<N> {
         match self.cap {
             None => ExpertSet::all(self.n_experts),
             Some(c) => ExpertSet::all(self.n_experts.min(c as u16)),
@@ -49,14 +49,14 @@ impl ExpertPredictor for NextLayerAll {
         &mut self,
         ctx: &DecodeContext<'_>,
         layers: std::ops::Range<usize>,
-        out: &mut [ExpertSet],
+        out: &mut [ExpertSet<N>],
     ) {
         debug_assert_eq!(layers.len(), out.len());
         // layer-independent: build the (capped) all-experts mask once
         out.fill(self.predict(ctx, layers.start));
     }
 
-    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet<N>) {}
     fn end_prompt(&mut self, _: &PromptTrace) {}
 }
 
@@ -80,9 +80,10 @@ mod tests {
     fn predicts_everything() {
         let t = tr();
         let mut p = NextLayerAll::new(64);
-        p.begin_prompt(&t);
+        ExpertPredictor::<1>::begin_prompt(&mut p, &t);
         let ctx = DecodeContext { trace: &t, t: 0 };
-        assert_eq!(p.predict(&ctx, 0).len(), 64);
+        let s: ExpertSet = p.predict(&ctx, 0);
+        assert_eq!(s.len(), 64);
     }
 
     #[test]
@@ -90,6 +91,16 @@ mod tests {
         let t = tr();
         let mut p = NextLayerAll::with_cap(64, 8);
         let ctx = DecodeContext { trace: &t, t: 0 };
-        assert_eq!(p.predict(&ctx, 0).len(), 8);
+        let s: ExpertSet = p.predict(&ctx, 0);
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn wide_predicts_all_160() {
+        let t = tr();
+        let mut p = NextLayerAll::new(160);
+        let ctx = DecodeContext { trace: &t, t: 0 };
+        let s: ExpertSet<3> = p.predict(&ctx, 0);
+        assert_eq!(s.len(), 160);
     }
 }

@@ -26,26 +26,26 @@ impl Default for OraclePredictor {
 
 impl OraclePredictor {
     /// Shared body of the scalar and batched entry points.
-    fn predict_at(&self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
-        let mut out = ctx.trace.expert_set(ctx.t, layer);
+    fn predict_at<const N: usize>(&self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet<N> {
+        let mut out = ctx.trace.expert_set_wide::<N>(ctx.t, layer);
         // extended horizon: union of the next horizon-1 layers too
         for h in 1..self.horizon {
             if layer + h < ctx.trace.n_layers as usize {
-                out = out.union(ctx.trace.expert_set(ctx.t, layer + h));
+                out = out.union(ctx.trace.expert_set_wide(ctx.t, layer + h));
             }
         }
         out
     }
 }
 
-impl ExpertPredictor for OraclePredictor {
+impl<const N: usize> ExpertPredictor<N> for OraclePredictor {
     fn name(&self) -> &'static str {
         crate::predictor::PredictorKind::Oracle.id()
     }
 
     fn begin_prompt(&mut self, _: &PromptTrace) {}
 
-    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+    fn predict(&mut self, ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet<N> {
         self.predict_at(ctx, layer)
     }
 
@@ -53,7 +53,7 @@ impl ExpertPredictor for OraclePredictor {
         &mut self,
         ctx: &DecodeContext<'_>,
         layers: std::ops::Range<usize>,
-        out: &mut [ExpertSet],
+        out: &mut [ExpertSet<N>],
     ) {
         debug_assert_eq!(layers.len(), out.len());
         for (slot, l) in out.iter_mut().zip(layers) {
@@ -61,7 +61,7 @@ impl ExpertPredictor for OraclePredictor {
         }
     }
 
-    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet) {}
+    fn observe(&mut self, _: &DecodeContext<'_>, _: usize, _: ExpertSet<N>) {}
     fn end_prompt(&mut self, _: &PromptTrace) {}
 }
 
@@ -89,8 +89,10 @@ mod tests {
         let t = tr();
         let mut p = OraclePredictor::new();
         let ctx = DecodeContext { trace: &t, t: 1 };
-        assert_eq!(p.predict(&ctx, 0).to_vec(), vec![7, 8]);
-        assert_eq!(p.predict(&ctx, 2).to_vec(), vec![11, 12]);
+        let a: ExpertSet = p.predict(&ctx, 0);
+        assert_eq!(a.to_vec(), vec![7, 8]);
+        let b: ExpertSet = p.predict(&ctx, 2);
+        assert_eq!(b.to_vec(), vec![11, 12]);
     }
 
     #[test]
@@ -98,8 +100,10 @@ mod tests {
         let t = tr();
         let mut p = OraclePredictor { horizon: 2 };
         let ctx = DecodeContext { trace: &t, t: 0 };
-        assert_eq!(p.predict(&ctx, 0).to_vec(), vec![1, 2, 3, 4]);
+        let a: ExpertSet = p.predict(&ctx, 0);
+        assert_eq!(a.to_vec(), vec![1, 2, 3, 4]);
         // horizon clipped at the last layer
-        assert_eq!(p.predict(&ctx, 2).to_vec(), vec![5, 6]);
+        let b: ExpertSet = p.predict(&ctx, 2);
+        assert_eq!(b.to_vec(), vec![5, 6]);
     }
 }

@@ -7,7 +7,7 @@ use crate::predictor::{DecodeContext, ExpertPredictor};
 use crate::trace::PromptTrace;
 use crate::util::{math, ExpertSet};
 
-pub struct PopularityPredictor {
+pub struct PopularityPredictor<const N: usize = 1> {
     n_layers: usize,
     n_experts: usize,
     /// Global (workload-lifetime) activation counts per (layer, expert).
@@ -15,11 +15,11 @@ pub struct PopularityPredictor {
     /// Experts predicted per layer.
     top_k: usize,
     /// Cached per-layer top-k sets, rebuilt lazily.
-    cached: Vec<ExpertSet>,
+    cached: Vec<ExpertSet<N>>,
     dirty: bool,
 }
 
-impl PopularityPredictor {
+impl<const N: usize> PopularityPredictor<N> {
     pub fn new(n_layers: usize, n_experts: usize, top_k: usize) -> Self {
         Self {
             n_layers,
@@ -51,7 +51,7 @@ impl PopularityPredictor {
                 .iter()
                 .map(|&c| c as f64)
                 .collect();
-            let mut s = ExpertSet::new();
+            let mut s = ExpertSet::<N>::new();
             for i in math::top_k(&row, self.top_k) {
                 if row[i] > 0.0 {
                     s.insert(i as u8);
@@ -63,7 +63,7 @@ impl PopularityPredictor {
     }
 }
 
-impl ExpertPredictor for PopularityPredictor {
+impl<const N: usize> ExpertPredictor<N> for PopularityPredictor<N> {
     fn name(&self) -> &'static str {
         crate::predictor::PredictorKind::Popularity.id()
     }
@@ -74,7 +74,7 @@ impl ExpertPredictor for PopularityPredictor {
         }
     }
 
-    fn predict(&mut self, _ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet {
+    fn predict(&mut self, _ctx: &DecodeContext<'_>, layer: usize) -> ExpertSet<N> {
         if self.dirty {
             self.rebuild();
         }
@@ -85,7 +85,7 @@ impl ExpertPredictor for PopularityPredictor {
         &mut self,
         _ctx: &DecodeContext<'_>,
         layers: std::ops::Range<usize>,
-        out: &mut [ExpertSet],
+        out: &mut [ExpertSet<N>],
     ) {
         debug_assert_eq!(layers.len(), out.len());
         // one dirty check per token, then straight copies of the cached
@@ -96,7 +96,7 @@ impl ExpertPredictor for PopularityPredictor {
         out.copy_from_slice(&self.cached[layers.start..layers.end]);
     }
 
-    fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet) {
+    fn observe(&mut self, _ctx: &DecodeContext<'_>, layer: usize, actual: ExpertSet<N>) {
         for e in actual.iter() {
             self.counts[layer * self.n_experts + e as usize] += 1;
         }
@@ -134,7 +134,7 @@ mod tests {
 
     #[test]
     fn predicts_most_popular() {
-        let mut p = PopularityPredictor::new(2, 64, 2);
+        let mut p: PopularityPredictor = PopularityPredictor::new(2, 64, 2);
         p.fit(&[tr(10), tr(10), tr(10), tr(30)]);
         let t = tr(10);
         p.begin_prompt(&t);
@@ -145,7 +145,7 @@ mod tests {
 
     #[test]
     fn observe_updates_counts() {
-        let mut p = PopularityPredictor::new(1, 64, 1);
+        let mut p: PopularityPredictor = PopularityPredictor::new(1, 64, 1);
         let t = tr(0);
         let ctx = DecodeContext { trace: &t, t: 0 };
         for _ in 0..5 {
@@ -157,7 +157,7 @@ mod tests {
 
     #[test]
     fn empty_counts_predict_nothing() {
-        let mut p = PopularityPredictor::new(1, 64, 4);
+        let mut p: PopularityPredictor = PopularityPredictor::new(1, 64, 4);
         let t = tr(0);
         p.begin_prompt(&t);
         let ctx = DecodeContext { trace: &t, t: 0 };

@@ -26,15 +26,19 @@ use crate::util::ExpertSet;
 
 /// Reusable simulation engine (residency persists across prompts unless
 /// the caller builds a fresh engine per prompt).
-pub struct SimEngine {
+///
+/// Generic over the [`ExpertSet`] word width `N` (default 1 = up to 64
+/// experts); every replay loop below is monomorphized per width, so the
+/// 64-expert fast path compiles exactly as before.
+pub struct SimEngine<const N: usize = 1> {
     /// The single residency backend: flat or tiered, the replay loop
     /// cannot tell the difference.
-    pub memory: Box<dyn ExpertMemory>,
+    pub memory: Box<dyn ExpertMemory<N>>,
     pub sim: SimConfig,
     pub n_experts: usize,
     /// Per-token prediction buffer reused across the replay (one
     /// `predict_layers` call per token writes into it).
-    pred_scratch: Vec<ExpertSet>,
+    pred_scratch: Vec<ExpertSet<N>>,
     /// Trace sink (default no-op).  When active, replay emits a request
     /// span per prompt and a decode-step event per measured token, on a
     /// virtual clock equal to the memory model's cumulative
@@ -42,8 +46,8 @@ pub struct SimEngine {
     obs: ObsSink,
 }
 
-impl SimEngine {
-    pub fn new(memory: Box<dyn ExpertMemory>, sim: SimConfig, n_experts: usize) -> Self {
+impl<const N: usize> SimEngine<N> {
+    pub fn new(memory: Box<dyn ExpertMemory<N>>, sim: SimConfig, n_experts: usize) -> Self {
         Self {
             memory,
             sim,
@@ -55,9 +59,15 @@ impl SimEngine {
 
     /// Attach an observability sink to the engine AND its memory
     /// backend, so replay spans and the backend's cache/tier events land
-    /// in the same trace on the same virtual clock.
+    /// in the same trace on the same virtual clock.  The world shape is
+    /// exported as gauges (`expert_set_width_words`, `n_experts`) so
+    /// traces from wide worlds are self-describing.
     pub fn set_obs(&mut self, obs: ObsSink) {
         self.memory.set_obs(obs.clone());
+        if let Some(reg) = obs.registry() {
+            reg.gauge("expert_set_width_words", &[]).set(N as f64);
+            reg.gauge("n_experts", &[]).set(self.n_experts as f64);
+        }
         self.obs = obs;
     }
 
@@ -72,7 +82,7 @@ impl SimEngine {
     ) -> Self {
         let budget = sim.prefetch_budget;
         Self::new(
-            Box::new(FlatMemory::new(
+            Box::new(FlatMemory::<N>::new(
                 cache,
                 cache_cfg,
                 n_experts,
@@ -93,7 +103,7 @@ impl SimEngine {
     ) -> crate::Result<Self> {
         let budget = sim.prefetch_budget;
         Ok(Self::new(
-            Box::new(TieredMemory::new(cfg, n_experts, budget, overlap_budget_us)?),
+            Box::new(TieredMemory::<N>::new(cfg, n_experts, budget, overlap_budget_us)?),
             sim,
             n_experts,
         ))
@@ -110,10 +120,10 @@ impl SimEngine {
     pub fn run_prompt(
         &mut self,
         trace: &PromptTrace,
-        predictor: &mut dyn ExpertPredictor,
+        predictor: &mut dyn ExpertPredictor<N>,
         stats: &mut CacheStats,
     ) {
-        let compiled = CompiledTrace::compile(trace);
+        let compiled = CompiledTrace::<N>::compile(trace);
         self.run_prompt_compiled(trace, &compiled, predictor, stats)
     }
 
@@ -125,8 +135,8 @@ impl SimEngine {
     pub fn run_prompt_compiled(
         &mut self,
         trace: &PromptTrace,
-        compiled: &CompiledTrace,
-        predictor: &mut dyn ExpertPredictor,
+        compiled: &CompiledTrace<N>,
+        predictor: &mut dyn ExpertPredictor<N>,
         stats: &mut CacheStats,
     ) {
         debug_assert_eq!(compiled.n_tokens(), trace.n_tokens());
@@ -235,7 +245,7 @@ pub fn simulate_prompt(
     n_experts: usize,
 ) -> CacheStats {
     let mut stats = CacheStats::default();
-    let mut engine = SimEngine::flat(
+    let mut engine: SimEngine = SimEngine::flat(
         Box::new(crate::cache::LruCache::new(capacity)),
         sim,
         CacheConfig::default().with_capacity(capacity),
@@ -337,7 +347,7 @@ mod tests {
                 prompt_id: 0, n_layers, top_k, d_emb: 0,
                 tokens: vec![0; n_tokens], embeddings: vec![], experts,
             };
-            let mut engine = SimEngine::flat(
+            let mut engine: SimEngine = SimEngine::flat(
                 Box::new(crate::cache::LruCache::new(cap)),
                 SimConfig::default(),
                 crate::config::CacheConfig::default().with_capacity(cap),

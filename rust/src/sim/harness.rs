@@ -33,17 +33,18 @@ pub fn load_artifacts() -> Result<Artifacts> {
 // ---------------------------------------------------------------------------
 
 /// Precompute learned predictions for a trace set, caching the predicted
-/// sets on disk (keyed by stride/top-k/count) so capacity sweeps and
-/// repeated bench runs skip the PJRT pass.  The disk cache stores only
-/// the sets, not the logits — Table-1 eval recomputes logits in memory.
-pub fn precompute_learned(
+/// sets on disk (keyed by stride/top-k/count/set-width) so capacity
+/// sweeps and repeated bench runs skip the PJRT pass.  The disk cache
+/// stores only the sets, not the logits — Table-1 eval recomputes logits
+/// in memory.
+pub fn precompute_learned<const N: usize>(
     rt: &PjrtRuntime,
     arts: &Artifacts,
     traces: &[PromptTrace],
     stride: usize,
     top_k: usize,
     use_disk_cache: bool,
-) -> Result<Vec<TracePredictions>> {
+) -> Result<Vec<TracePredictions<N>>> {
     // cache key includes a cheap content fingerprint so regenerated
     // traces can never silently reuse stale predictions
     let fp: u64 = traces
@@ -55,10 +56,11 @@ pub fn precompute_learned(
         })
         .fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b));
     let cache_path = arts.path(&format!(
-        "cache/learned_s{}_k{}_n{}_{:016x}.bin",
+        "cache/learned_s{}_k{}_n{}_w{}_{:016x}.bin",
         stride,
         top_k,
         traces.len(),
+        N,
         fp
     ));
     if use_disk_cache {
@@ -77,9 +79,18 @@ pub fn precompute_learned(
     Ok(out)
 }
 
-fn write_pred_cache(path: &Path, preds: &[TracePredictions]) -> Result<()> {
+/// Pred-cache format: magic + version + word width, then per-trace
+/// blocks.  Version 2 added the header and multi-word sets; v1 files
+/// (raw count first) fail the magic check and read as a cache miss.
+const PRED_CACHE_MAGIC: u32 = 0x4d42_5043; // "MBPC"
+const PRED_CACHE_VERSION: u32 = 2;
+
+fn write_pred_cache<const N: usize>(path: &Path, preds: &[TracePredictions<N>]) -> Result<()> {
     std::fs::create_dir_all(path.parent().unwrap())?;
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&PRED_CACHE_MAGIC.to_le_bytes())?;
+    f.write_all(&PRED_CACHE_VERSION.to_le_bytes())?;
+    f.write_all(&(N as u32).to_le_bytes())?;
     f.write_all(&(preds.len() as u32).to_le_bytes())?;
     for p in preds {
         f.write_all(&(p.sets.len() as u32).to_le_bytes())?;
@@ -87,18 +98,35 @@ fn write_pred_cache(path: &Path, preds: &[TracePredictions]) -> Result<()> {
         f.write_all(&(p.n_experts as u32).to_le_bytes())?;
         for row in &p.sets {
             for s in row {
-                f.write_all(&s.0.to_le_bytes())?;
+                for w in s.as_words() {
+                    f.write_all(&w.to_le_bytes())?;
+                }
             }
         }
     }
     Ok(())
 }
 
-fn read_pred_cache(path: &Path, traces: &[PromptTrace]) -> Result<Vec<TracePredictions>> {
+fn read_pred_cache<const N: usize>(
+    path: &Path,
+    traces: &[PromptTrace],
+) -> Result<Vec<TracePredictions<N>>> {
     use std::io::Read as _;
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut b4 = [0u8; 4];
     let mut b8 = [0u8; 8];
+    f.read_exact(&mut b4)?;
+    anyhow::ensure!(u32::from_le_bytes(b4) == PRED_CACHE_MAGIC, "not a pred cache");
+    f.read_exact(&mut b4)?;
+    anyhow::ensure!(
+        u32::from_le_bytes(b4) == PRED_CACHE_VERSION,
+        "pred cache version mismatch"
+    );
+    f.read_exact(&mut b4)?;
+    anyhow::ensure!(
+        u32::from_le_bytes(b4) as usize == N,
+        "pred cache word-width mismatch"
+    );
     f.read_exact(&mut b4)?;
     let n = u32::from_le_bytes(b4) as usize;
     anyhow::ensure!(n == traces.len(), "cache count mismatch");
@@ -115,8 +143,12 @@ fn read_pred_cache(path: &Path, traces: &[PromptTrace]) -> Result<Vec<TracePredi
         for _ in 0..n_tokens {
             let mut row = Vec::with_capacity(n_layers);
             for _ in 0..n_layers {
-                f.read_exact(&mut b8)?;
-                row.push(ExpertSet(u64::from_le_bytes(b8)));
+                let mut words = [0u64; N];
+                for w in words.iter_mut() {
+                    f.read_exact(&mut b8)?;
+                    *w = u64::from_le_bytes(b8);
+                }
+                row.push(ExpertSet::from_words(words));
             }
             sets.push(row);
         }
@@ -171,8 +203,8 @@ pub fn run_fig7(
 
     // compile the test corpus ONCE: every predictor's sweep shares the
     // packed tables and the memoized stack-distance profile
-    let corpus = crate::trace::CompiledCorpus::compile(test);
-    let inputs = SweepInputs {
+    let corpus: crate::trace::CompiledCorpus = crate::trace::CompiledCorpus::compile(test);
+    let inputs: SweepInputs = SweepInputs {
         test_traces: test,
         fit_traces: fit,
         learned: learned_preds.as_deref(),
@@ -229,7 +261,7 @@ pub fn run_table1(rt: &PjrtRuntime, arts: &Artifacts, max_prompts: usize, split:
     for tr in traces {
         // offline eval: full-window stride, each token scored at its own
         // window row (the paper's §3.2.4 protocol)
-        let preds = learned::precompute_mode(
+        let preds: TracePredictions = learned::precompute_mode(
             &model,
             tr,
             model.window,
@@ -433,11 +465,19 @@ mod tests {
             embeddings: vec![],
             experts: vec![0; 12],
         }];
-        let preds = vec![TracePredictions {
+        let preds: Vec<TracePredictions> = vec![TracePredictions {
             n_layers: 3,
             sets: vec![
-                vec![ExpertSet(0b101), ExpertSet(0b110), ExpertSet(0b011)],
-                vec![ExpertSet(0b1), ExpertSet(0b10), ExpertSet(0b100)],
+                vec![
+                    ExpertSet::from_words([0b101]),
+                    ExpertSet::from_words([0b110]),
+                    ExpertSet::from_words([0b011]),
+                ],
+                vec![
+                    ExpertSet::from_words([0b1]),
+                    ExpertSet::from_words([0b10]),
+                    ExpertSet::from_words([0b100]),
+                ],
             ],
             logits: vec![Vec::new(), Vec::new()],
             n_experts: 64,

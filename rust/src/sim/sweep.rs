@@ -47,20 +47,24 @@ pub struct SweepResult {
 }
 
 /// Everything a sweep needs besides capacity.
-pub struct SweepInputs<'a> {
+///
+/// Generic over the [`crate::util::ExpertSet`] word width `N` (default 1
+/// = up to 64 experts); wide worlds thread their width through the
+/// learned predictions, the compiled corpus, and every replay below.
+pub struct SweepInputs<'a, const N: usize = 1> {
     pub test_traces: &'a [PromptTrace],
     /// EAMC/popularity training traces (the paper warms the EAMC on the
     /// training corpus).
     pub fit_traces: &'a [PromptTrace],
     /// Precomputed learned predictions, parallel to `test_traces`
     /// (required iff the sweep includes `Learned`).
-    pub learned: Option<&'a [TracePredictions]>,
+    pub learned: Option<&'a [TracePredictions<N>]>,
     /// Optional pre-compiled corpus for `test_traces` (index-parallel).
     /// Callers running several sweeps over one corpus should compile
     /// once and set this: the packed set tables AND the memoized
     /// stack-distance profile are then shared across calls instead of
     /// rebuilt per sweep.  `None` compiles per call.
-    pub compiled: Option<&'a CompiledCorpus>,
+    pub compiled: Option<&'a CompiledCorpus<N>>,
     pub sim: SimConfig,
     pub eam: EamConfig,
     pub n_layers: usize,
@@ -72,7 +76,7 @@ pub struct SweepInputs<'a> {
 /// corpus (compiled from different traces) would silently corrupt every
 /// point, so the parallelism invariant is a hard error, not a debug
 /// assert.
-fn corpus_for(inputs: &SweepInputs<'_>) -> Result<CompiledCorpus> {
+fn corpus_for<const N: usize>(inputs: &SweepInputs<'_, N>) -> Result<CompiledCorpus<N>> {
     match inputs.compiled {
         Some(c) => {
             anyhow::ensure!(
@@ -83,7 +87,7 @@ fn corpus_for(inputs: &SweepInputs<'_>) -> Result<CompiledCorpus> {
             );
             Ok(c.clone())
         }
-        None => Ok(CompiledCorpus::compile(inputs.test_traces)),
+        None => Ok(CompiledCorpus::<N>::compile(inputs.test_traces)),
     }
 }
 
@@ -91,9 +95,9 @@ fn corpus_for(inputs: &SweepInputs<'_>) -> Result<CompiledCorpus> {
 /// exact replay ([`run_tier_point`]) and the analytic evaluation
 /// ([`sweep_tiered_stackdist`]), whose byte-identity contract depends on
 /// both paths rounding capacities identically.
-fn tier_cfg_for(
+fn tier_cfg_for<const N: usize>(
     (gf, hf, ssd): (f64, f64, f64),
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     base: &TierConfig,
 ) -> Result<TierConfig> {
     let total = inputs.n_layers * inputs.n_experts;
@@ -108,8 +112,11 @@ fn tier_cfg_for(
     Ok(cfg)
 }
 
-fn make_predictor(kind: PredictorKind, inputs: &SweepInputs<'_>) -> Result<Box<dyn ExpertPredictor>> {
-    factory::build(
+fn make_predictor<const N: usize>(
+    kind: PredictorKind,
+    inputs: &SweepInputs<'_, N>,
+) -> Result<Box<dyn ExpertPredictor<N>>> {
+    factory::build::<N>(
         kind,
         &PredictorParams {
             eam: &inputs.eam,
@@ -135,13 +142,13 @@ fn stackdist_disabled() -> bool {
 /// `after_prompt` collects per-engine state (tier counters, cost) before
 /// the engine is dropped.  The single Learned-vs-heuristic dispatch for
 /// both the flat and tiered sweeps.
-fn replay_traces(
+fn replay_traces<const N: usize>(
     kind: PredictorKind,
-    inputs: &SweepInputs<'_>,
-    compiled: &[CompiledTrace],
+    inputs: &SweepInputs<'_, N>,
+    compiled: &[CompiledTrace<N>],
     stats: &mut CacheStats,
-    mut mk_engine: impl FnMut() -> Result<SimEngine>,
-    mut after_prompt: impl FnMut(&mut SimEngine),
+    mut mk_engine: impl FnMut() -> Result<SimEngine<N>>,
+    mut after_prompt: impl FnMut(&mut SimEngine<N>),
 ) -> Result<()> {
     let mut predictor = if kind == PredictorKind::Learned {
         None
@@ -167,11 +174,11 @@ fn replay_traces(
 }
 
 /// One capacity of the Fig-7 sweep.
-fn run_capacity_point(
+fn run_capacity_point<const N: usize>(
     kind: PredictorKind,
     frac: f64,
-    inputs: &SweepInputs<'_>,
-    compiled: &[CompiledTrace],
+    inputs: &SweepInputs<'_, N>,
+    compiled: &[CompiledTrace<N>],
 ) -> Result<SweepPoint> {
     let total = inputs.n_layers * inputs.n_experts;
     let capacity = ((total as f64 * frac).round() as usize).max(1);
@@ -183,7 +190,7 @@ fn run_capacity_point(
         compiled,
         &mut stats,
         || {
-            Ok(SimEngine::flat(
+            Ok(SimEngine::<N>::flat(
                 Box::new(LruCache::new(capacity)),
                 inputs.sim.clone(),
                 CacheConfig::default().with_capacity(capacity),
@@ -204,10 +211,10 @@ fn run_capacity_point(
 
 /// Run the Fig-7 sweep with the default worker count (see
 /// [`sweep_threads`]).
-pub fn sweep_capacities(
+pub fn sweep_capacities<const N: usize>(
     kind: PredictorKind,
     fracs: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
 ) -> Result<SweepResult> {
     sweep_capacities_threaded(kind, fracs, inputs, sweep_threads())
 }
@@ -222,10 +229,10 @@ pub fn sweep_capacities(
 /// why prefetching predictors cannot use it).  The exact replay is
 /// retained as [`sweep_capacities_replay_threaded`] — parity-tested
 /// bit-identical — and `MOEB_SWEEP_EXACT=1` forces it globally.
-pub fn sweep_capacities_threaded(
+pub fn sweep_capacities_threaded<const N: usize>(
     kind: PredictorKind,
     fracs: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     threads: usize,
 ) -> Result<SweepResult> {
     if kind == PredictorKind::None && !stackdist_disabled() {
@@ -235,10 +242,10 @@ pub fn sweep_capacities_threaded(
 }
 
 /// The exact per-capacity replay sweep with the default worker count.
-pub fn sweep_capacities_replay(
+pub fn sweep_capacities_replay<const N: usize>(
     kind: PredictorKind,
     fracs: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
 ) -> Result<SweepResult> {
     sweep_capacities_replay_threaded(kind, fracs, inputs, sweep_threads())
 }
@@ -246,10 +253,10 @@ pub fn sweep_capacities_replay(
 /// The exact per-capacity replay sweep: every fraction replays the whole
 /// corpus.  This is the only correct path for prefetching predictors and
 /// the parity reference for the no-prefetch fast path.
-pub fn sweep_capacities_replay_threaded(
+pub fn sweep_capacities_replay_threaded<const N: usize>(
     kind: PredictorKind,
     fracs: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     threads: usize,
 ) -> Result<SweepResult> {
     // compile (or reuse) the corpus once; every grid point reads the
@@ -268,9 +275,9 @@ pub fn sweep_capacities_replay_threaded(
 /// capacity off the corpus's memoized histogram
 /// ([`CompiledCorpus::stackdist_profile`] — one profiling pass per
 /// corpus, shared with the tiered sweep and with repeat calls).
-fn sweep_capacities_stackdist(
+fn sweep_capacities_stackdist<const N: usize>(
     fracs: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     threads: usize,
 ) -> Result<SweepResult> {
     let compiled = corpus_for(inputs)?;
@@ -318,11 +325,11 @@ pub struct TierSweepPoint {
     pub tiers: TierStats,
 }
 
-fn run_tier_point(
+fn run_tier_point<const N: usize>(
     kind: PredictorKind,
     (gf, hf, ssd): (f64, f64, f64),
-    inputs: &SweepInputs<'_>,
-    compiled: &[CompiledTrace],
+    inputs: &SweepInputs<'_, N>,
+    compiled: &[CompiledTrace<N>],
     base: &TierConfig,
     overlap_budget_us: f64,
 ) -> Result<TierSweepPoint> {
@@ -337,7 +344,7 @@ fn run_tier_point(
         inputs,
         compiled,
         &mut stats,
-        || SimEngine::tiered(&cfg, inputs.sim.clone(), inputs.n_experts, overlap_budget_us),
+        || SimEngine::<N>::tiered(&cfg, inputs.sim.clone(), inputs.n_experts, overlap_budget_us),
         |engine| {
             let m = engine.memory.stats();
             tiers.merge(m.tiers.as_ref().expect("tiered engine lost its tiers"));
@@ -365,12 +372,12 @@ fn run_tier_point(
 /// the flat Fig-7 sweep (see `tiered_matches_flat_at_full_host` below);
 /// the interesting region is small GPU + partial host, where hit-rate
 /// alone mispredicts latency.
-pub fn sweep_tiered(
+pub fn sweep_tiered<const N: usize>(
     kind: PredictorKind,
     gpu_fracs: &[f64],
     host_fracs: &[f64],
     ssd_us: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     base: &TierConfig,
     overlap_budget_us: f64,
 ) -> Result<Vec<TierSweepPoint>> {
@@ -400,12 +407,12 @@ pub fn sweep_tiered(
 /// always replay (prefetch breaks stack inclusion; see
 /// [`crate::cache::stackdist`]).
 #[allow(clippy::too_many_arguments)]
-pub fn sweep_tiered_threaded(
+pub fn sweep_tiered_threaded<const N: usize>(
     kind: PredictorKind,
     gpu_fracs: &[f64],
     host_fracs: &[f64],
     ssd_us: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     base: &TierConfig,
     overlap_budget_us: f64,
     threads: usize,
@@ -427,12 +434,12 @@ pub fn sweep_tiered_threaded(
 
 /// The exact per-cell tiered replay sweep with the default worker count.
 #[allow(clippy::too_many_arguments)]
-pub fn sweep_tiered_replay(
+pub fn sweep_tiered_replay<const N: usize>(
     kind: PredictorKind,
     gpu_fracs: &[f64],
     host_fracs: &[f64],
     ssd_us: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     base: &TierConfig,
     overlap_budget_us: f64,
 ) -> Result<Vec<TierSweepPoint>> {
@@ -453,12 +460,12 @@ pub fn sweep_tiered_replay(
 /// policies, and stall-prone writeback configs — and the parity
 /// reference for [`sweep_tiered_threaded`]'s analytic fast path.
 #[allow(clippy::too_many_arguments)]
-pub fn sweep_tiered_replay_threaded(
+pub fn sweep_tiered_replay_threaded<const N: usize>(
     kind: PredictorKind,
     gpu_fracs: &[f64],
     host_fracs: &[f64],
     ssd_us: &[f64],
-    inputs: &SweepInputs<'_>,
+    inputs: &SweepInputs<'_, N>,
     base: &TierConfig,
     overlap_budget_us: f64,
     threads: usize,
@@ -517,10 +524,10 @@ fn tiered_stall_free(base: &TierConfig, overlap_budget_us: f64, max_cell_refs: u
 /// parity suite in `tests/replay_parity.rs` holds every counter and
 /// cost to byte-identical agreement with [`run_tier_point`] (float
 /// totals under the usual integer-µs-cost caveat).
-fn sweep_tiered_stackdist(
+fn sweep_tiered_stackdist<const N: usize>(
     grid: &[(f64, f64, f64)],
-    inputs: &SweepInputs<'_>,
-    compiled: &CompiledCorpus,
+    inputs: &SweepInputs<'_, N>,
+    compiled: &CompiledCorpus<N>,
     base: &TierConfig,
     overlap_budget_us: f64,
     threads: usize,
@@ -897,7 +904,7 @@ mod tests {
         let test = mk_traces(5, 51);
         let fit = mk_traces(4, 52);
         let fresh = inputs(&test, &fit);
-        let corpus = crate::trace::CompiledCorpus::compile(&test);
+        let corpus: crate::trace::CompiledCorpus = crate::trace::CompiledCorpus::compile(&test);
         let mut shared = inputs(&test, &fit);
         shared.compiled = Some(&corpus);
         let fracs = [0.05, 0.2, 0.8];

@@ -87,7 +87,7 @@ pub fn cross_layer_reuse(tr: &PromptTrace, layer_perm: &[i32], n_experts: usize)
         let a = tr.layer_working_set(l);
         let b = tr.layer_working_set(l + 1);
         // map layer-l ids through layer (l+1)'s permutation
-        let mut mapped = ExpertSet::new();
+        let mut mapped: ExpertSet = ExpertSet::new();
         for id in a.iter() {
             let m = layer_perm[(l + 1) * n_experts + id as usize];
             mapped.insert(m as u8);

@@ -21,15 +21,18 @@ use crate::util::parallel::parallel_map;
 use crate::util::ExpertSet;
 
 /// One prompt's activation sets, packed row-major `[n_tokens, n_layers]`.
+///
+/// Generic over the [`ExpertSet`] word width `N` (default 1): an
+/// `N`-word corpus packs `8 * N` bytes per cell.
 #[derive(Debug, Clone)]
-pub struct CompiledTrace {
+pub struct CompiledTrace<const N: usize = 1> {
     n_tokens: usize,
     n_layers: usize,
-    sets: Vec<ExpertSet>,
+    sets: Vec<ExpertSet<N>>,
     max_set_len: u32,
 }
 
-impl CompiledTrace {
+impl<const N: usize> CompiledTrace<N> {
     /// Build the packed set table from the raw trace (one pass).
     pub fn compile(trace: &PromptTrace) -> Self {
         let n_tokens = trace.n_tokens();
@@ -38,8 +41,8 @@ impl CompiledTrace {
         let mut max_set_len = 0u32;
         for t in 0..n_tokens {
             for l in 0..n_layers {
-                let s = trace.expert_set(t, l);
-                max_set_len = max_set_len.max(s.len() as u32);
+                let s = trace.expert_set_wide::<N>(t, l);
+                max_set_len = max_set_len.max(s.len());
                 sets.push(s);
             }
         }
@@ -72,7 +75,7 @@ impl CompiledTrace {
     /// Activated experts for (token, layer) — an indexed load, no
     /// per-visit rebuild from trace bytes.
     #[inline]
-    pub fn set(&self, token: usize, layer: usize) -> ExpertSet {
+    pub fn set(&self, token: usize, layer: usize) -> ExpertSet<N> {
         self.sets[token * self.n_layers + layer]
     }
 
@@ -92,14 +95,14 @@ impl CompiledTrace {
 /// sweep that shares one `CompiledCorpus` (via `SweepInputs::compiled`)
 /// shares the profiling pass too.
 #[derive(Debug, Clone)]
-pub struct CompiledCorpus {
-    traces: Arc<[CompiledTrace]>,
+pub struct CompiledCorpus<const N: usize = 1> {
+    traces: Arc<[CompiledTrace<N>]>,
     /// Lazily-built corpus-level profiles keyed by the inputs that shape
     /// them; `Arc`-shared so clones reuse instead of re-profiling.
     profiles: Arc<Mutex<Vec<((usize, usize), Arc<StackDistProfile>)>>>,
 }
 
-impl CompiledCorpus {
+impl<const N: usize> CompiledCorpus<N> {
     /// Compile every trace once (index-parallel to the input slice).
     pub fn compile(traces: &[PromptTrace]) -> Self {
         Self {
@@ -148,10 +151,10 @@ impl CompiledCorpus {
     }
 }
 
-impl std::ops::Deref for CompiledCorpus {
-    type Target = [CompiledTrace];
+impl<const N: usize> std::ops::Deref for CompiledCorpus<N> {
+    type Target = [CompiledTrace<N>];
 
-    fn deref(&self) -> &[CompiledTrace] {
+    fn deref(&self) -> &[CompiledTrace<N>] {
         &self.traces
     }
 }
@@ -178,7 +181,7 @@ mod tests {
     #[test]
     fn compiled_matches_raw_sets() {
         let tr = trace();
-        let ct = CompiledTrace::compile(&tr);
+        let ct: CompiledTrace = CompiledTrace::compile(&tr);
         assert_eq!(ct.n_tokens(), tr.n_tokens());
         assert_eq!(ct.n_layers(), tr.n_layers as usize);
         for t in 0..tr.n_tokens() {
@@ -192,7 +195,7 @@ mod tests {
     #[test]
     fn corpus_is_shared_not_copied() {
         let traces = vec![trace(), trace()];
-        let corpus = CompiledCorpus::compile(&traces);
+        let corpus: CompiledCorpus = CompiledCorpus::compile(&traces);
         let clone = corpus.clone();
         assert_eq!(corpus.len(), 2);
         assert!(std::ptr::eq(&corpus[0], &clone[0]), "clone must share the Arc");
@@ -202,11 +205,11 @@ mod tests {
     #[test]
     fn max_set_len_tracks_dedup() {
         let tr = trace();
-        let ct = CompiledTrace::compile(&tr);
+        let ct: CompiledTrace = CompiledTrace::compile(&tr);
         // token 1 layer 1 is {2, 4} after dedup of (2, 4); the densest
         // cell in this trace is the top-2 pair
         assert_eq!(ct.max_set_len(), 2);
-        let corpus = CompiledCorpus::compile(&[tr]);
+        let corpus: CompiledCorpus = CompiledCorpus::compile(&[tr]);
         assert_eq!(corpus.max_set_len(), 2);
     }
 
@@ -215,7 +218,7 @@ mod tests {
     #[test]
     fn stackdist_profile_is_memoized_per_key() {
         let traces = vec![trace(), trace()];
-        let corpus = CompiledCorpus::compile(&traces);
+        let corpus: CompiledCorpus = CompiledCorpus::compile(&traces);
         let clone = corpus.clone();
         let a = corpus.stackdist_profile(8, 0, 1);
         let b = clone.stackdist_profile(8, 0, 2);
@@ -258,7 +261,7 @@ mod tests {
                 embeddings: vec![],
                 experts,
             };
-            let ct = CompiledTrace::compile(&tr);
+            let ct: CompiledTrace = CompiledTrace::compile(&tr);
             for t in 0..n_tokens {
                 for l in 0..n_layers as usize {
                     assert_eq!(ct.set(t, l), tr.expert_set(t, l));

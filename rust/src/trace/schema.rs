@@ -47,6 +47,13 @@ impl PromptTrace {
     /// Activated experts for (token, layer) as a bitset.
     #[inline]
     pub fn expert_set(&self, token: usize, layer: usize) -> ExpertSet {
+        self.expert_set_wide::<1>(token, layer)
+    }
+
+    /// Width-generic variant of [`expert_set`](Self::expert_set) for
+    /// traces over more than 64 experts (`N` words = `64 * N` ids).
+    #[inline]
+    pub fn expert_set_wide<const N: usize>(&self, token: usize, layer: usize) -> ExpertSet<N> {
         ExpertSet::from_ids(self.expert_ids(token, layer).iter().copied())
     }
 
@@ -63,9 +70,15 @@ impl PromptTrace {
     /// Union of experts activated at `layer` across the whole prompt —
     /// the prompt's working set at that layer (Fig 2).
     pub fn layer_working_set(&self, layer: usize) -> ExpertSet {
+        self.layer_working_set_wide::<1>(layer)
+    }
+
+    /// Width-generic variant of
+    /// [`layer_working_set`](Self::layer_working_set).
+    pub fn layer_working_set_wide<const N: usize>(&self, layer: usize) -> ExpertSet<N> {
         let mut s = ExpertSet::new();
         for t in 0..self.n_tokens() {
-            s = s.union(self.expert_set(t, layer));
+            s = s.union(self.expert_set_wide(t, layer));
         }
         s
     }

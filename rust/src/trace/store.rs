@@ -60,7 +60,12 @@ pub fn read_traces_with_meta<P: AsRef<Path>>(path: P) -> Result<(TraceMeta, Vec<
     let n_prompts = read_u32(&mut r)?;
     let flags = read_u32(&mut r)?;
     let has_emb = flags & 1 == 1;
-    ensure!(n_experts <= 64, "n_experts {n_experts} > 64 unsupported");
+    ensure!(
+        n_experts as usize <= crate::util::MAX_EXPERTS,
+        "n_experts {n_experts} > {} unsupported (u8 expert ids, {}-word ExpertSet max)",
+        crate::util::MAX_EXPERTS,
+        crate::util::N_MAX
+    );
 
     let meta = TraceMeta {
         n_layers,

@@ -1,37 +1,131 @@
-//! `ExpertSet` — a set over ≤64 expert ids as a single `u64` bitmask.
+//! `ExpertSet` — a set over expert ids as a multi-word bitmask.
 //!
 //! Every hot path in the simulator and cache manager works on these sets
 //! (a token activates 6 of 64 experts per layer), so set algebra must be
-//! branch-free integer ops, not hash sets.
+//! branch-free integer ops, not hash sets.  The set is generic over its
+//! word count `N`: `ExpertSet<1>` (the default) is the single-`u64` mask
+//! the ≤64-expert paper configuration has always used and monomorphizes
+//! to exactly the old code; `ExpertSet<3>` covers 160-expert models such
+//! as full DeepSeek-V2.  All per-word loops are written without early
+//! exits (SIMD-style word-parallel accumulate) so the compiler can
+//! unroll and auto-vectorize them for any fixed `N`.
 
 use std::fmt;
 
-/// A set of expert ids in `0..64`, represented as a `u64` bitmask.
-#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
-pub struct ExpertSet(pub u64);
+/// Maximum supported word count (`256` experts).  Expert ids stay `u8`
+/// everywhere, so this is a hard ceiling, not a tuning knob.
+pub const N_MAX: usize = 4;
 
-impl ExpertSet {
-    pub const EMPTY: ExpertSet = ExpertSet(0);
+/// Maximum supported expert count across all widths.
+pub const MAX_EXPERTS: usize = 64 * N_MAX;
+
+/// Number of `u64` words needed to hold `n_experts` bits (min 1).
+#[inline]
+pub const fn words_for(n_experts: usize) -> usize {
+    if n_experts <= 64 {
+        1
+    } else {
+        (n_experts + 63) / 64
+    }
+}
+
+/// Dispatch a block over the const word-width needed for `$n` experts.
+///
+/// Inside the block, `$N` is a `const usize` in `1..=N_MAX` usable as a
+/// const-generic argument (`ExpertSet<$N>`, `memory::build::<$N>`, …).
+/// Panics if `$n` exceeds [`MAX_EXPERTS`].
+///
+/// ```
+/// use moe_beyond::for_expert_width;
+/// use moe_beyond::util::ExpertSet;
+/// let n_experts = 160usize;
+/// let len = for_expert_width!(n_experts, N, {
+///     ExpertSet::<N>::all(n_experts as u16).len()
+/// });
+/// assert_eq!(len, 160);
+/// ```
+#[macro_export]
+macro_rules! for_expert_width {
+    ($n:expr, $N:ident, $body:block) => {
+        match $crate::util::expert_set::words_for($n) {
+            1 => {
+                const $N: usize = 1;
+                $body
+            }
+            2 => {
+                const $N: usize = 2;
+                $body
+            }
+            3 => {
+                const $N: usize = 3;
+                $body
+            }
+            4 => {
+                const $N: usize = 4;
+                $body
+            }
+            w => panic!(
+                "for_expert_width!: {} experts need {} words, max is {}",
+                $n,
+                w,
+                $crate::util::expert_set::N_MAX
+            ),
+        }
+    };
+}
+
+/// A set of expert ids in `0..64*N`, represented as an `N`-word bitmask.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExpertSet<const N: usize = 1>([u64; N]);
+
+impl<const N: usize> Default for ExpertSet<N> {
+    #[inline]
+    fn default() -> Self {
+        Self::EMPTY
+    }
+}
+
+impl<const N: usize> ExpertSet<N> {
+    pub const EMPTY: ExpertSet<N> = ExpertSet([0; N]);
+
+    /// Bit capacity of this set width.
+    pub const CAPACITY: usize = 64 * N;
 
     #[inline]
     pub fn new() -> Self {
-        Self(0)
+        Self::EMPTY
+    }
+
+    /// Build a set directly from its raw words (word 0 = ids `0..64`).
+    #[inline]
+    pub const fn from_words(words: [u64; N]) -> Self {
+        Self(words)
+    }
+
+    /// The raw words (word 0 = ids `0..64`).
+    #[inline]
+    pub const fn as_words(&self) -> &[u64; N] {
+        &self.0
     }
 
     /// Set containing all experts `0..n`.
+    ///
+    /// Safe at exact word multiples (n = 64, 128, …): the fill is
+    /// computed per word with saturating arithmetic, never `1 << 64`.
     #[inline]
     pub fn all(n: u16) -> Self {
-        debug_assert!(n <= 64);
-        if n == 64 {
-            Self(u64::MAX)
-        } else {
-            Self((1u64 << n) - 1)
+        debug_assert!(n as usize <= 64 * N, "all({n}) exceeds {}-bit set", 64 * N);
+        let mut s = Self::EMPTY;
+        for (w, word) in s.0.iter_mut().enumerate() {
+            let filled = (n as usize).saturating_sub(w * 64).min(64);
+            *word = if filled == 64 { u64::MAX } else { (1u64 << filled) - 1 };
         }
+        s
     }
 
     #[inline]
     pub fn from_ids<I: IntoIterator<Item = u8>>(ids: I) -> Self {
-        let mut s = Self(0);
+        let mut s = Self::EMPTY;
         for id in ids {
             s.insert(id);
         }
@@ -40,72 +134,121 @@ impl ExpertSet {
 
     #[inline]
     pub fn insert(&mut self, id: u8) {
-        debug_assert!(id < 64);
-        self.0 |= 1u64 << id;
+        debug_assert!((id as usize) < 64 * N, "insert({id}) exceeds {}-bit set", 64 * N);
+        self.0[(id >> 6) as usize] |= 1u64 << (id & 63);
     }
 
     #[inline]
     pub fn remove(&mut self, id: u8) {
-        self.0 &= !(1u64 << id);
+        debug_assert!((id as usize) < 64 * N, "remove({id}) exceeds {}-bit set", 64 * N);
+        self.0[(id >> 6) as usize] &= !(1u64 << (id & 63));
     }
 
     #[inline]
     pub fn contains(&self, id: u8) -> bool {
-        (self.0 >> id) & 1 == 1
+        debug_assert!((id as usize) < 64 * N, "contains({id}) exceeds {}-bit set", 64 * N);
+        (self.0[(id >> 6) as usize] >> (id & 63)) & 1 == 1
     }
 
     #[inline]
     pub fn len(&self) -> u32 {
-        self.0.count_ones()
+        // fixed-trip, no-early-exit loop: vectorizes for any const N
+        let mut n = 0u32;
+        for w in &self.0 {
+            n += w.count_ones();
+        }
+        n
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.0 == 0
+        let mut acc = 0u64;
+        for w in &self.0 {
+            acc |= w;
+        }
+        acc == 0
     }
 
     #[inline]
     pub fn union(&self, other: Self) -> Self {
-        Self(self.0 | other.0)
+        let mut out = [0u64; N];
+        for ((o, a), b) in out.iter_mut().zip(&self.0).zip(&other.0) {
+            *o = a | b;
+        }
+        Self(out)
     }
 
     #[inline]
     pub fn intersect(&self, other: Self) -> Self {
-        Self(self.0 & other.0)
+        let mut out = [0u64; N];
+        for ((o, a), b) in out.iter_mut().zip(&self.0).zip(&other.0) {
+            *o = a & b;
+        }
+        Self(out)
     }
 
     #[inline]
     pub fn difference(&self, other: Self) -> Self {
-        Self(self.0 & !other.0)
+        let mut out = [0u64; N];
+        for ((o, a), b) in out.iter_mut().zip(&self.0).zip(&other.0) {
+            *o = a & !b;
+        }
+        Self(out)
     }
 
     /// Number of ids present in both sets.
     #[inline]
     pub fn overlap(&self, other: Self) -> u32 {
-        (self.0 & other.0).count_ones()
+        let mut n = 0u32;
+        for (a, b) in self.0.iter().zip(&other.0) {
+            n += (a & b).count_ones();
+        }
+        n
     }
 
     /// Jaccard similarity; 1.0 for two empty sets.
     pub fn jaccard(&self, other: Self) -> f64 {
-        let u = (self.0 | other.0).count_ones();
-        if u == 0 {
+        let (mut uni, mut inter) = (0u32, 0u32);
+        for (a, b) in self.0.iter().zip(&other.0) {
+            uni += (a | b).count_ones();
+            inter += (a & b).count_ones();
+        }
+        if uni == 0 {
             return 1.0;
         }
-        (self.0 & other.0).count_ones() as f64 / u as f64
+        inter as f64 / uni as f64
+    }
+
+    /// Mask of the `k` largest values in `xs` (index = expert id).
+    ///
+    /// Exact mirror of [`crate::util::math::top_k_mask_f32`] generalized
+    /// to `N` words: ties break toward the lower index, `k` saturates at
+    /// `xs.len()`, and NaNs never win a slot.
+    pub fn top_k_mask_f32(xs: &[f32], k: usize) -> Self {
+        debug_assert!(xs.len() <= 64 * N, "{} logits exceed {}-bit set", xs.len(), 64 * N);
+        let k = k.min(xs.len());
+        let mut mask = Self::EMPTY;
+        for _ in 0..k {
+            let mut best = usize::MAX;
+            let mut best_v = f32::NEG_INFINITY;
+            for (i, &v) in xs.iter().enumerate() {
+                let taken = (mask.0[i >> 6] >> (i & 63)) & 1 == 1;
+                if !taken && v > best_v {
+                    best = i;
+                    best_v = v;
+                }
+            }
+            if best == usize::MAX {
+                break; // all remaining are NaN (or xs shorter than k)
+            }
+            mask.0[best >> 6] |= 1u64 << (best & 63);
+        }
+        mask
     }
 
     /// Iterate over member ids in ascending order.
-    pub fn iter(&self) -> impl Iterator<Item = u8> + '_ {
-        let mut bits = self.0;
-        std::iter::from_fn(move || {
-            if bits == 0 {
-                None
-            } else {
-                let id = bits.trailing_zeros() as u8;
-                bits &= bits - 1;
-                Some(id)
-            }
-        })
+    pub fn iter(&self) -> ExpertSetIter<N> {
+        ExpertSetIter { words: self.0, word: 0 }
     }
 
     pub fn to_vec(&self) -> Vec<u8> {
@@ -113,13 +256,37 @@ impl ExpertSet {
     }
 }
 
-impl FromIterator<u8> for ExpertSet {
+/// Ascending-order id iterator over a (copied) [`ExpertSet`].
+pub struct ExpertSetIter<const N: usize> {
+    words: [u64; N],
+    word: usize,
+}
+
+impl<const N: usize> Iterator for ExpertSetIter<N> {
+    type Item = u8;
+
+    #[inline]
+    fn next(&mut self) -> Option<u8> {
+        while self.word < N {
+            let bits = self.words[self.word];
+            if bits != 0 {
+                let id = (self.word * 64) as u8 + bits.trailing_zeros() as u8;
+                self.words[self.word] = bits & (bits - 1);
+                return Some(id);
+            }
+            self.word += 1;
+        }
+        None
+    }
+}
+
+impl<const N: usize> FromIterator<u8> for ExpertSet<N> {
     fn from_iter<I: IntoIterator<Item = u8>>(iter: I) -> Self {
         Self::from_ids(iter)
     }
 }
 
-impl fmt::Debug for ExpertSet {
+impl<const N: usize> fmt::Debug for ExpertSet<N> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "ExpertSet{{")?;
         for (i, id) in self.iter().enumerate() {
@@ -138,7 +305,7 @@ mod tests {
 
     #[test]
     fn basic_ops() {
-        let mut s = ExpertSet::new();
+        let mut s = ExpertSet::<1>::new();
         assert!(s.is_empty());
         s.insert(0);
         s.insert(63);
@@ -152,18 +319,57 @@ mod tests {
     }
 
     #[test]
+    fn basic_ops_wide() {
+        let mut s = ExpertSet::<3>::new();
+        assert!(s.is_empty());
+        s.insert(0);
+        s.insert(64);
+        s.insert(159);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(64));
+        assert!(!s.contains(63));
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.to_vec(), vec![0, 159]);
+    }
+
+    #[test]
     fn all_n() {
-        assert_eq!(ExpertSet::all(64).len(), 64);
-        assert_eq!(ExpertSet::all(6).to_vec(), vec![0, 1, 2, 3, 4, 5]);
-        assert_eq!(ExpertSet::all(0).len(), 0);
+        assert_eq!(ExpertSet::<1>::all(64).len(), 64);
+        assert_eq!(ExpertSet::<1>::all(6).to_vec(), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(ExpertSet::<1>::all(0).len(), 0);
+    }
+
+    // word-boundary audit: exact multiples of 64 must not shift-overflow
+    #[test]
+    fn all_n_word_boundaries() {
+        assert_eq!(ExpertSet::<1>::all(63).len(), 63);
+        assert!(!ExpertSet::<1>::all(63).contains(63));
+        assert_eq!(ExpertSet::<1>::all(64).len(), 64);
+        assert_eq!(ExpertSet::<2>::all(63).len(), 63);
+        assert_eq!(ExpertSet::<2>::all(64).len(), 64);
+        assert!(!ExpertSet::<2>::all(64).contains(64));
+        assert_eq!(ExpertSet::<2>::all(65).len(), 65);
+        assert!(ExpertSet::<2>::all(65).contains(64));
+        assert_eq!(ExpertSet::<2>::all(128).len(), 128);
+        assert_eq!(ExpertSet::<2>::all(128).as_words(), &[u64::MAX, u64::MAX]);
+        assert_eq!(ExpertSet::<3>::all(128).len(), 128);
+        assert!(!ExpertSet::<3>::all(128).contains(128));
+        assert_eq!(ExpertSet::<3>::all(160).len(), 160);
+        assert_eq!(ExpertSet::<3>::all(160).to_vec(), (0u8..160).collect::<Vec<_>>());
+        assert_eq!(ExpertSet::<4>::all(256).len(), 256);
     }
 
     #[test]
     fn jaccard_edge_cases() {
-        let a = ExpertSet::from_ids([1, 2, 3]);
+        let a = ExpertSet::<1>::from_ids([1, 2, 3]);
         assert_eq!(a.jaccard(a), 1.0);
         assert_eq!(a.jaccard(ExpertSet::EMPTY), 0.0);
-        assert_eq!(ExpertSet::EMPTY.jaccard(ExpertSet::EMPTY), 1.0);
+        assert_eq!(ExpertSet::<1>::EMPTY.jaccard(ExpertSet::EMPTY), 1.0);
+        let w = ExpertSet::<3>::from_ids([1, 70, 150]);
+        assert_eq!(w.jaccard(w), 1.0);
+        assert_eq!(w.jaccard(ExpertSet::EMPTY), 0.0);
+        assert_eq!(ExpertSet::<3>::EMPTY.jaccard(ExpertSet::EMPTY), 1.0);
     }
 
     // seeded-random property checks (no proptest in the offline build)
@@ -171,7 +377,20 @@ mod tests {
     fn prop_union_intersect_laws() {
         let mut rng = crate::util::Rng::new(11);
         for _ in 0..500 {
-            let (sa, sb) = (ExpertSet(rng.next_u64()), ExpertSet(rng.next_u64()));
+            let sa = ExpertSet::from_words([rng.next_u64()]);
+            let sb = ExpertSet::from_words([rng.next_u64()]);
+            assert_eq!(sa.union(sb).len() + sa.intersect(sb).len(), sa.len() + sb.len());
+            assert_eq!(sa.difference(sb).union(sa.intersect(sb)), sa);
+            assert_eq!(sa.overlap(sb), sa.intersect(sb).len());
+        }
+    }
+
+    #[test]
+    fn prop_union_intersect_laws_wide() {
+        let mut rng = crate::util::Rng::new(17);
+        for _ in 0..500 {
+            let sa = ExpertSet::<3>::from_words([rng.next_u64(), rng.next_u64(), rng.next_u64()]);
+            let sb = ExpertSet::<3>::from_words([rng.next_u64(), rng.next_u64(), rng.next_u64()]);
             assert_eq!(sa.union(sb).len() + sa.intersect(sb).len(), sa.len() + sb.len());
             assert_eq!(sa.difference(sb).union(sa.intersect(sb)), sa);
             assert_eq!(sa.overlap(sb), sa.intersect(sb).len());
@@ -186,7 +405,20 @@ mod tests {
             for _ in 0..rng.below(20) {
                 ids.insert(rng.below(64) as u8);
             }
-            let s = ExpertSet::from_ids(ids.iter().copied());
+            let s = ExpertSet::<1>::from_ids(ids.iter().copied());
+            assert_eq!(s.to_vec(), ids.into_iter().collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn prop_iter_roundtrip_wide() {
+        let mut rng = crate::util::Rng::new(14);
+        for _ in 0..200 {
+            let mut ids = std::collections::BTreeSet::new();
+            for _ in 0..rng.below(40) {
+                ids.insert(rng.below(160) as u8);
+            }
+            let s = ExpertSet::<3>::from_ids(ids.iter().copied());
             assert_eq!(s.to_vec(), ids.into_iter().collect::<Vec<_>>());
         }
     }
@@ -196,11 +428,43 @@ mod tests {
         let mut rng = crate::util::Rng::new(13);
         for _ in 0..300 {
             let id = rng.below(64) as u8;
-            let mut s = ExpertSet(rng.next_u64());
+            let mut s = ExpertSet::from_words([rng.next_u64()]);
             s.insert(id);
             assert!(s.contains(id));
             s.remove(id);
             assert!(!s.contains(id));
+        }
+    }
+
+    #[test]
+    fn words_for_boundaries() {
+        assert_eq!(words_for(0), 1);
+        assert_eq!(words_for(1), 1);
+        assert_eq!(words_for(63), 1);
+        assert_eq!(words_for(64), 1);
+        assert_eq!(words_for(65), 2);
+        assert_eq!(words_for(128), 2);
+        assert_eq!(words_for(129), 3);
+        assert_eq!(words_for(160), 3);
+        assert_eq!(words_for(256), 4);
+    }
+
+    #[test]
+    fn for_expert_width_dispatches() {
+        for (n_experts, want) in [(6usize, 1usize), (64, 1), (65, 2), (160, 3), (256, 4)] {
+            let got = for_expert_width!(n_experts, N, { N });
+            assert_eq!(got, want, "n_experts={n_experts}");
+        }
+    }
+
+    #[test]
+    fn top_k_mask_matches_scalar_math() {
+        let mut rng = crate::util::Rng::new(15);
+        for _ in 0..200 {
+            let xs: Vec<f32> = (0..64).map(|_| rng.f64() as f32).collect();
+            let k = rng.below(10) as usize;
+            let wide = ExpertSet::<1>::top_k_mask_f32(&xs, k);
+            assert_eq!(wide.as_words()[0], crate::util::math::top_k_mask_f32(&xs, k));
         }
     }
 }

@@ -7,5 +7,5 @@ pub mod parallel;
 pub mod rng;
 pub mod stats;
 
-pub use expert_set::ExpertSet;
+pub use expert_set::{words_for, ExpertSet, ExpertSetIter, MAX_EXPERTS, N_MAX};
 pub use rng::Rng;

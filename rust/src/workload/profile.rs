@@ -360,8 +360,9 @@ pub fn synthetic_pool(
     n_experts: usize,
 ) -> Vec<PromptTrace> {
     assert!(
-        (24..=64).contains(&n_experts),
-        "synthetic pool needs 24..=64 experts"
+        (24..=crate::util::MAX_EXPERTS).contains(&n_experts),
+        "synthetic pool needs 24..={} experts",
+        crate::util::MAX_EXPERTS
     );
     let mut rng = Rng::new(tenant_seed);
     let band_start = rng.below((n_experts - 24).max(1)) as u8;
@@ -432,6 +433,23 @@ mod tests {
 
     fn spec() -> WorkloadSpec {
         WorkloadSpec::example(3, 7, 10.0)
+    }
+
+    /// Wide worlds (> 64 experts) generate in-range ids, and across a
+    /// handful of tenant seeds the bands genuinely reach past the
+    /// single-word id space.
+    #[test]
+    fn wide_pool_spans_beyond_one_word() {
+        let mut max_id = 0u8;
+        for seed in 0..20u64 {
+            for tr in synthetic_pool(seed, 3, 16, 2, 160) {
+                for &e in &tr.experts {
+                    assert!((e as usize) < 160, "id {e} out of range");
+                    max_id = max_id.max(e);
+                }
+            }
+        }
+        assert!(max_id >= 64, "expected some band above expert 63, max {max_id}");
     }
 
     #[test]

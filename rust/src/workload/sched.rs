@@ -112,7 +112,11 @@ pub struct SchedCounters {
 }
 
 /// Everything one simulator run reads.
-pub struct WorkloadInputs<'a> {
+///
+/// Generic over the [`ExpertSet`] word width `N` (default 1 = up to 64
+/// experts); wide worlds carry their width through the learned
+/// predictions and the compiled pools into the drain loop below.
+pub struct WorkloadInputs<'a, const N: usize = 1> {
     pub spec: &'a WorkloadSpec,
     pub schedule: &'a Schedule,
     /// `pools[t]` backs tenant `t`'s requests.
@@ -124,7 +128,7 @@ pub struct WorkloadInputs<'a> {
     /// [`PredictorKind::Learned`]; each admitted request replays its
     /// trace's predictions through a [`CachedPredictor`], exactly as the
     /// Fig-7 sweep does).
-    pub learned: Option<&'a [Vec<TracePredictions>]>,
+    pub learned: Option<&'a [Vec<TracePredictions<N>>]>,
     pub cfg: &'a WorkloadConfig,
     pub sim: &'a SimConfig,
     pub eam: &'a EamConfig,
@@ -158,26 +162,27 @@ struct Stream {
 /// as a serial engine's would; `PredictorKind::Learned` instead replays
 /// each request's precomputed [`TracePredictions`]
 /// (`WorkloadInputs::learned`) through a per-request [`CachedPredictor`].
-pub fn run_workload(
-    inp: &WorkloadInputs<'_>,
+pub fn run_workload<const N: usize>(
+    inp: &WorkloadInputs<'_, N>,
     kind: PredictorKind,
-    memory: Box<dyn ExpertMemory>,
+    memory: Box<dyn ExpertMemory<N>>,
 ) -> Result<WorkloadReport> {
     // compile each tenant pool once; requests replay pool traces many
     // times over, and `sweep_load` shares one compilation for the whole
     // grid via `run_workload_compiled`
-    let compiled: Vec<CompiledCorpus> = inp.pools.iter().map(|p| CompiledCorpus::compile(p)).collect();
+    let compiled: Vec<CompiledCorpus<N>> =
+        inp.pools.iter().map(|p| CompiledCorpus::compile(p)).collect();
     run_workload_compiled(inp, kind, memory, &compiled)
 }
 
 /// [`run_workload`] over pre-compiled tenant pools (index-parallel to
 /// `inp.pools`); the load-sweep grid compiles once and every worker
 /// shares the `Arc`-backed tables.
-pub fn run_workload_compiled<'a>(
-    inp: &WorkloadInputs<'a>,
+pub fn run_workload_compiled<'a, const N: usize>(
+    inp: &WorkloadInputs<'a, N>,
     kind: PredictorKind,
-    memory: Box<dyn ExpertMemory>,
-    compiled_pools: &[CompiledCorpus],
+    memory: Box<dyn ExpertMemory<N>>,
+    compiled_pools: &[CompiledCorpus<N>],
 ) -> Result<WorkloadReport> {
     run_workload_obs(inp, kind, memory, compiled_pools, &ObsSink::default())
 }
@@ -189,11 +194,11 @@ pub fn run_workload_compiled<'a>(
 /// default (no-op) sink this is exactly `run_workload_compiled` — the
 /// report is byte-identical either way, because tracing never touches
 /// the virtual-time arithmetic.
-pub fn run_workload_obs<'a>(
-    inp: &WorkloadInputs<'a>,
+pub fn run_workload_obs<'a, const N: usize>(
+    inp: &WorkloadInputs<'a, N>,
     kind: PredictorKind,
-    mut memory: Box<dyn ExpertMemory>,
-    compiled_pools: &[CompiledCorpus],
+    mut memory: Box<dyn ExpertMemory<N>>,
+    compiled_pools: &[CompiledCorpus<N>],
     obs: &ObsSink,
 ) -> Result<WorkloadReport> {
     inp.cfg.validate()?;
@@ -201,7 +206,7 @@ pub fn run_workload_obs<'a>(
     // the learned predictor replays precomputed per-trace predictions
     // (it cannot be factory-built); validate coverage up front so the
     // drain never index-panics mid-run
-    let learned: Option<&'a [Vec<TracePredictions>]> = if kind == PredictorKind::Learned {
+    let learned: Option<&'a [Vec<TracePredictions<N>>]> = if kind == PredictorKind::Learned {
         let l = inp.learned.ok_or_else(|| {
             anyhow::anyhow!(
                 "the learned predictor needs precomputed per-trace predictions \
@@ -321,8 +326,8 @@ pub fn run_workload_obs<'a>(
         n_experts: inp.n_experts,
         fit_traces: inp.fit_traces,
     };
-    let mut predictors: Vec<Box<dyn ExpertPredictor + 'a>> = (0..n_slots)
-        .map(|_| -> Result<Box<dyn ExpertPredictor + 'a>> {
+    let mut predictors: Vec<Box<dyn ExpertPredictor<N> + 'a>> = (0..n_slots)
+        .map(|_| -> Result<Box<dyn ExpertPredictor<N> + 'a>> {
             Ok(match kind {
                 // placeholder: each admission swaps in that request's
                 // CachedPredictor before the slot's first use
@@ -344,7 +349,7 @@ pub fn run_workload_obs<'a>(
 
     let arrivals = &inp.schedule.arrivals;
     // per-token prediction buffer, reused across every decode step
-    let mut pred_sets = vec![ExpertSet::EMPTY; n_layers];
+    let mut pred_sets = vec![ExpertSet::<N>::EMPTY; n_layers];
     let mut clock = 0.0f64;
     let mut next = 0usize; // next arrival to admit (FIFO admission queue)
     let mut due = 0usize; // arrivals with arrival_us <= clock
@@ -574,6 +579,9 @@ pub fn run_workload_obs<'a>(
     if let Some(reg) = obs.registry() {
         reg.gauge("workload_virtual_secs", &[("policy", policy.id())])
             .set(virtual_secs);
+        // world shape, so wide-world traces are self-describing
+        reg.gauge("expert_set_width_words", &[]).set(N as f64);
+        reg.gauge("n_experts", &[]).set(inp.n_experts as f64);
     }
     let mut aggregate = TenantAcc::default();
     for ta in &acc {

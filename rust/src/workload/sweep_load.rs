@@ -43,14 +43,17 @@ impl Backend {
 }
 
 /// Everything the grid shares.
-pub struct LoadSweepInputs<'a> {
+///
+/// Generic over the [`crate::util::ExpertSet`] word width `N` (default 1
+/// = up to 64 experts).
+pub struct LoadSweepInputs<'a, const N: usize = 1> {
     pub spec: &'a WorkloadSpec,
     pub pools: &'a [Vec<PromptTrace>],
     pub fit_traces: &'a [PromptTrace],
     /// Precomputed learned predictions per tenant pool (parallel to
     /// `pools`; required iff `kinds` includes `Learned`) — the paper's
     /// own predictor on the multi-tenant curves.
-    pub learned: Option<&'a [Vec<TracePredictions>]>,
+    pub learned: Option<&'a [Vec<TracePredictions<N>>]>,
     /// Policy field is ignored — the policy is a grid axis.
     pub workload: &'a WorkloadConfig,
     pub sim: &'a SimConfig,
@@ -78,9 +81,9 @@ pub struct LoadPoint {
 /// load multiplier, so regenerating it per point would be pure waste.
 type GridJob = (SchedPolicy, Backend, PredictorKind, usize, f64);
 
-fn run_load_point(
-    inputs: &LoadSweepInputs<'_>,
-    compiled_pools: &[CompiledCorpus],
+fn run_load_point<const N: usize>(
+    inputs: &LoadSweepInputs<'_, N>,
+    compiled_pools: &[CompiledCorpus<N>],
     loaded: &[(f64, WorkloadSpec, Schedule)],
     job: &GridJob,
     obs: &ObsSink,
@@ -94,7 +97,7 @@ fn run_load_point(
     // coupling the serving engine uses (CacheConfig::overlap_per_layer)
     let overlap_us = inputs.workload.token_compute_us / inputs.n_layers.max(1) as f64;
     let mem = match backend {
-        Backend::Flat => memory::build(
+        Backend::Flat => memory::build::<N>(
             "lru",
             &CacheConfig::default().with_capacity(cap),
             None,
@@ -104,7 +107,7 @@ fn run_load_point(
         )?,
         Backend::Tiered => {
             let cfg = inputs.tier_base.clone().with_gpu_capacity(cap);
-            memory::build(
+            memory::build::<N>(
                 "lru",
                 &CacheConfig::default(),
                 Some(&cfg),
@@ -147,8 +150,8 @@ fn run_load_point(
 /// tables alive; the drain itself is byte-identical to the same point
 /// inside [`sweep_load`] (same generation seed, same virtual time).
 #[allow(clippy::too_many_arguments)]
-pub fn run_point_obs(
-    inputs: &LoadSweepInputs<'_>,
+pub fn run_point_obs<const N: usize>(
+    inputs: &LoadSweepInputs<'_, N>,
     policy: SchedPolicy,
     backend: Backend,
     kind: PredictorKind,
@@ -159,7 +162,7 @@ pub fn run_point_obs(
     let spec = inputs.spec.with_load(load_mult);
     let schedule = spec.generate(inputs.pools)?;
     let loaded = [(load_mult, spec, schedule)];
-    let compiled: Vec<CompiledCorpus> = inputs
+    let compiled: Vec<CompiledCorpus<N>> = inputs
         .pools
         .iter()
         .map(|p| CompiledCorpus::compile(p))
@@ -169,8 +172,8 @@ pub fn run_point_obs(
 }
 
 /// Run the load grid with the default worker count.
-pub fn sweep_load(
-    inputs: &LoadSweepInputs<'_>,
+pub fn sweep_load<const N: usize>(
+    inputs: &LoadSweepInputs<'_, N>,
     policies: &[SchedPolicy],
     backends: &[Backend],
     kinds: &[PredictorKind],
@@ -183,8 +186,8 @@ pub fn sweep_load(
 /// [`sweep_load`] on an explicit worker count (`1` = serial).  Output is
 /// deterministic: identical to the serial run for any count.
 #[allow(clippy::too_many_arguments)]
-pub fn sweep_load_threaded(
-    inputs: &LoadSweepInputs<'_>,
+pub fn sweep_load_threaded<const N: usize>(
+    inputs: &LoadSweepInputs<'_, N>,
     policies: &[SchedPolicy],
     backends: &[Backend],
     kinds: &[PredictorKind],
@@ -216,7 +219,7 @@ pub fn sweep_load_threaded(
         .collect::<Result<_>>()?;
     // compile every tenant pool once; the Arc-backed tables are shared
     // by all grid workers instead of recompiled per point
-    let compiled: Vec<CompiledCorpus> = inputs
+    let compiled: Vec<CompiledCorpus<N>> = inputs
         .pools
         .iter()
         .map(|p| CompiledCorpus::compile(p))
@@ -287,7 +290,7 @@ mod tests {
             kmeans_clusters: 0,
             ..Default::default()
         };
-        let inputs = LoadSweepInputs {
+        let inputs: LoadSweepInputs = LoadSweepInputs {
             spec: &spec,
             pools: &pools,
             fit_traces: &fit,

@@ -145,7 +145,7 @@ fn tiered_cache_promotion_demotion_invariants() {
 /// and idempotent from any prior share.
 #[test]
 fn batch_share_restore_after_error_semantics() {
-    let mut m = ExpertCacheManager::new(
+    let mut m: ExpertCacheManager = ExpertCacheManager::new(
         Box::new(LruCache::new(32)),
         CacheConfig::default(),
         &SimConfig::default(),
@@ -167,7 +167,7 @@ fn batch_share_restore_after_error_semantics() {
     }
 
     // the budget is the caller's SimConfig knob, not a magic 12
-    let fresh = ExpertCacheManager::new(
+    let fresh: ExpertCacheManager = ExpertCacheManager::new(
         Box::new(LruCache::new(32)),
         CacheConfig::default(),
         &SimConfig::default(),
@@ -193,7 +193,8 @@ fn tiered_manager_promotion_path() {
         ],
         policy: "lru".into(),
     };
-    let mut m = ExpertCacheManager::new_tiered(&cfg, &SimConfig::default(), 64, 10_000.0).unwrap();
+    let mut m: ExpertCacheManager =
+        ExpertCacheManager::new_tiered(&cfg, &SimConfig::default(), 64, 10_000.0).unwrap();
     let mut stats = GenStats::default();
     m.observe_actual(0, ExpertSet::from_ids([1u8, 2, 3]), &mut stats);
     // expert 1 was demoted to host; touching it again promotes it back
@@ -420,7 +421,7 @@ fn flat_memory_parity_with_pre_refactor_path() {
             } else {
                 reference_flat_replay(&tr, &mut NoPrefetch, cap, &sim, 16)
             };
-            let mut engine = SimEngine::flat(
+            let mut engine: SimEngine = SimEngine::flat(
                 Box::new(LruCache::new(cap)),
                 sim.clone(),
                 CacheConfig::default().with_capacity(cap),
@@ -471,7 +472,7 @@ fn tiered_memory_parity_with_pre_refactor_path() {
             } else {
                 reference_tiered_replay(&tr, &mut NoPrefetch, &cfg, 1_000.0, &sim, 16)
             };
-            let mut engine = SimEngine::tiered(&cfg, sim.clone(), 16, 1_000.0).unwrap();
+            let mut engine: SimEngine = SimEngine::tiered(&cfg, sim.clone(), 16, 1_000.0).unwrap();
             let mut got = CacheStats::default();
             if oracle {
                 engine.run_prompt(&tr, &mut OraclePredictor::new(), &mut got);

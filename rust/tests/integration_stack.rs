@@ -53,7 +53,7 @@ fn sim_learned_beats_eam_at_low_capacity() {
         .map(|tr| learned::precompute(&model, tr, sim.predictor_stride, 6).unwrap())
         .collect();
 
-    let inputs = SweepInputs {
+    let inputs: SweepInputs = SweepInputs {
         test_traces: test,
         fit_traces: fit,
         learned: Some(&preds),

@@ -221,7 +221,7 @@ fn stackdist_sweep_matches_exact_replay() {
             warmup_tokens: rng.below(12),
             ..Default::default()
         };
-        let inputs = SweepInputs {
+        let inputs: SweepInputs = SweepInputs {
             test_traces: &test,
             fit_traces: &fit,
             learned: None,
@@ -282,7 +282,7 @@ fn tiered_stackdist_sweep_matches_exact_replay() {
             warmup_tokens: rng.below(12),
             ..Default::default()
         };
-        let inputs = SweepInputs {
+        let inputs: SweepInputs = SweepInputs {
             test_traces: &test,
             fit_traces: &fit,
             learned: None,
@@ -376,7 +376,7 @@ fn stall_prone_config_falls_back_to_exact_replay() {
         .map(|_| random_trace(&mut rng, 24, 3, 16))
         .collect();
     let fit = vec![random_trace(&mut rng, 12, 3, 16)];
-    let inputs = SweepInputs {
+    let inputs: SweepInputs = SweepInputs {
         test_traces: &test,
         fit_traces: &fit,
         learned: None,
@@ -442,7 +442,7 @@ fn predict_layers_matches_scalar_for_every_kind() {
             let n_tokens = rng.range(4, 24);
             let tr = random_trace(&mut rng, n_tokens, n_layers as u16, 16);
             // synthetic learned predictions: random per-(token, layer) sets
-            let preds = TracePredictions {
+            let preds: TracePredictions = TracePredictions {
                 n_layers,
                 sets: (0..tr.n_tokens())
                     .map(|_| {

@@ -1,0 +1,514 @@
+//! Multi-word `ExpertSet` parity suites.
+//!
+//! `ExpertSet` grew from a single `u64` to a const-generic `[u64; N]`
+//! bitset.  These tests pin the wide paths two ways:
+//!
+//! * every set operation (insert/remove/contains, the branch-free
+//!   algebra, `top_k_mask_f32`, construction helpers, iteration order)
+//!   against a naive `BTreeSet<u8>` / `Vec<bool>` reference, randomized
+//!   over N = 1, 2 and 3 word widths,
+//! * a 160-expert (3-word) world end-to-end: the set-level replay fast
+//!   path vs the `ScalarPath` per-id reference (flat and tiered), the
+//!   stack-distance capacity sweep vs the exact per-capacity replay,
+//!   the analytic tiered sweep vs the per-cell replay, and a full
+//!   workload-simulator run — all byte-identical / deterministic, with
+//!   ids beyond the first word provably exercised.
+
+use std::collections::BTreeSet;
+
+use moe_beyond::cache::{CacheStats, LruCache};
+use moe_beyond::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
+use moe_beyond::memory::{self, ExpertMemory, FlatMemory, ScalarPath, TieredMemory};
+use moe_beyond::predictor::{NoPrefetch, OraclePredictor};
+use moe_beyond::sim::sweep::{
+    sweep_capacities_replay_threaded, sweep_capacities_threaded, sweep_tiered_replay_threaded,
+    sweep_tiered_threaded, SweepInputs,
+};
+use moe_beyond::sim::{PredictorKind, SimEngine};
+use moe_beyond::tier::TierSpec;
+use moe_beyond::trace::PromptTrace;
+use moe_beyond::util::{words_for, ExpertSet, Rng};
+use moe_beyond::workload::{
+    run_workload, synthetic_fit_pool, synthetic_pools, WorkloadInputs, WorkloadSpec,
+};
+
+/// The wide world under test: 160 experts need 3 words.
+const WIDE_EXPERTS: usize = 160;
+const WIDE: usize = 3;
+const _: () = assert!(words_for(WIDE_EXPERTS) == WIDE);
+
+// ---------------------------------------------------------------------
+// Part 1: op-level parity against naive references, N = 1, 2, 3
+// ---------------------------------------------------------------------
+
+fn naive_from(model: &BTreeSet<u8>) -> Vec<u8> {
+    model.iter().copied().collect()
+}
+
+/// Mirror of the documented `top_k_mask_f32` contract, written the slow
+/// way: repeated argmax over a `Vec<bool>` taken-mask, ties to the lower
+/// index, NaNs never win, stop when no finite candidate remains.
+fn naive_top_k(xs: &[f32], k: usize) -> Vec<u8> {
+    let k = k.min(xs.len());
+    let mut taken = vec![false; xs.len()];
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in xs.iter().enumerate() {
+            if !taken[i] && v > best_v {
+                best = i;
+                best_v = v;
+            }
+        }
+        if best == usize::MAX {
+            break;
+        }
+        taken[best] = true;
+    }
+    (0..xs.len()).filter(|&i| taken[i]).map(|i| i as u8).collect()
+}
+
+/// Randomized mutate-and-compare: an `ExpertSet<N>` shadowed by a
+/// `BTreeSet<u8>` model through a long insert/remove sequence.
+fn ops_parity<const N: usize>(seed: u64) {
+    let cap = ExpertSet::<N>::CAPACITY;
+    let mut rng = Rng::new(seed);
+    for _case in 0..40 {
+        let mut set = ExpertSet::<N>::new();
+        let mut model: BTreeSet<u8> = BTreeSet::new();
+        assert!(set.is_empty());
+        for _op in 0..300 {
+            let id = rng.below(cap) as u8;
+            if rng.f64() < 0.6 {
+                set.insert(id);
+                model.insert(id);
+            } else {
+                set.remove(id);
+                model.remove(&id);
+            }
+            assert_eq!(set.contains(id), model.contains(&id), "contains({id})");
+            assert_eq!(set.len() as usize, model.len(), "len after op on {id}");
+            assert_eq!(set.is_empty(), model.is_empty());
+        }
+        // iteration order is ascending and complete
+        assert_eq!(set.to_vec(), naive_from(&model), "to_vec order");
+        assert_eq!(set.iter().collect::<Vec<u8>>(), naive_from(&model));
+        // construction round-trips
+        assert_eq!(ExpertSet::<N>::from_ids(model.iter().copied()), set);
+        assert_eq!(model.iter().copied().collect::<ExpertSet<N>>(), set);
+        assert_eq!(ExpertSet::<N>::from_words(*set.as_words()), set);
+    }
+}
+
+/// Randomized algebra parity: union/intersect/difference/overlap/jaccard
+/// against their set-theoretic references.
+fn algebra_parity<const N: usize>(seed: u64) {
+    let cap = ExpertSet::<N>::CAPACITY;
+    let mut rng = Rng::new(seed);
+    for _case in 0..200 {
+        let n_a = rng.below(cap + 1);
+        let n_b = rng.below(cap + 1);
+        let ma: BTreeSet<u8> = (0..n_a).map(|_| rng.below(cap) as u8).collect();
+        let mb: BTreeSet<u8> = (0..n_b).map(|_| rng.below(cap) as u8).collect();
+        let a = ExpertSet::<N>::from_ids(ma.iter().copied());
+        let b = ExpertSet::<N>::from_ids(mb.iter().copied());
+
+        let uni: Vec<u8> = ma.union(&mb).copied().collect();
+        let inter: Vec<u8> = ma.intersection(&mb).copied().collect();
+        let diff: Vec<u8> = ma.difference(&mb).copied().collect();
+        assert_eq!(a.union(b).to_vec(), uni, "union");
+        assert_eq!(a.intersect(b).to_vec(), inter, "intersect");
+        assert_eq!(a.difference(b).to_vec(), diff, "difference");
+        assert_eq!(a.overlap(b) as usize, inter.len(), "overlap");
+        let want_jaccard = if uni.is_empty() {
+            1.0
+        } else {
+            inter.len() as f64 / uni.len() as f64
+        };
+        assert_eq!(a.jaccard(b).to_bits(), want_jaccard.to_bits(), "jaccard");
+    }
+}
+
+/// Randomized `top_k_mask_f32` parity, including duplicate values
+/// (quantized grid → lower-index tie breaks matter) and NaN logits.
+fn top_k_parity<const N: usize>(seed: u64) {
+    let cap = ExpertSet::<N>::CAPACITY;
+    let mut rng = Rng::new(seed);
+    for _case in 0..200 {
+        let n = rng.range(1, cap + 1);
+        let xs: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.f64() < 0.05 {
+                    f32::NAN
+                } else {
+                    // coarse grid forces frequent exact ties
+                    (rng.below(8) as f32) - 4.0
+                }
+            })
+            .collect();
+        // k can exceed xs.len(): the mask must saturate, not panic
+        let k = rng.below(cap + 8);
+        let mask: ExpertSet<N> = ExpertSet::top_k_mask_f32(&xs, k);
+        assert_eq!(mask.to_vec(), naive_top_k(&xs, k), "k={k} n={n}");
+    }
+}
+
+#[test]
+fn wide_ops_match_naive_reference() {
+    ops_parity::<1>(7001);
+    ops_parity::<2>(7002);
+    ops_parity::<3>(7003);
+}
+
+#[test]
+fn wide_algebra_matches_naive_reference() {
+    algebra_parity::<1>(7101);
+    algebra_parity::<2>(7102);
+    algebra_parity::<3>(7103);
+}
+
+#[test]
+fn wide_top_k_matches_naive_argmax() {
+    top_k_parity::<1>(7201);
+    top_k_parity::<2>(7202);
+    top_k_parity::<3>(7203);
+}
+
+#[test]
+fn wide_all_fills_exact_prefix() {
+    fn check<const N: usize>() {
+        for n in [0usize, 1, 63, 64, 65, 127, 128, 129, ExpertSet::<N>::CAPACITY] {
+            if n > ExpertSet::<N>::CAPACITY {
+                continue;
+            }
+            let s: ExpertSet<N> = ExpertSet::all(n as u16);
+            assert_eq!(s.len() as usize, n, "all({n}) len");
+            assert_eq!(s.to_vec(), (0..n as u8).collect::<Vec<u8>>(), "all({n}) ids");
+        }
+    }
+    check::<1>();
+    check::<2>();
+    check::<3>();
+}
+
+// ---------------------------------------------------------------------
+// Part 2: 160-expert (3-word) world end-to-end
+// ---------------------------------------------------------------------
+
+/// Random trace whose ids span the whole `0..n_experts` range, so a
+/// wide world routinely routes to ids ≥ 64 (words 1 and 2).
+fn random_wide_trace(rng: &mut Rng, n_tokens: usize, n_layers: u16, n_experts: usize) -> PromptTrace {
+    let mut experts = Vec::new();
+    for _ in 0..n_tokens * n_layers as usize {
+        let a = rng.below(n_experts);
+        let b = (a + 1 + rng.below(n_experts - 2)) % n_experts;
+        experts.push(a as u8);
+        experts.push(b as u8);
+    }
+    PromptTrace {
+        prompt_id: 0,
+        n_layers,
+        top_k: 2,
+        d_emb: 0,
+        tokens: vec![0; n_tokens],
+        embeddings: vec![],
+        experts,
+    }
+}
+
+fn assert_stats_identical(label: &str, a: &CacheStats, b: &CacheStats) {
+    assert_eq!(a.hits, b.hits, "{label}: hits");
+    assert_eq!(a.misses, b.misses, "{label}: misses");
+    assert_eq!(a.prefetches, b.prefetches, "{label}: prefetches");
+    assert_eq!(a.wasted_prefetches, b.wasted_prefetches, "{label}: wasted");
+    assert_eq!(a.prediction_hits, b.prediction_hits, "{label}: pred hits");
+    assert_eq!(a.prediction_total, b.prediction_total, "{label}: pred total");
+    assert_eq!(
+        a.transfer_us.to_bits(),
+        b.transfer_us.to_bits(),
+        "{label}: transfer_us ({} vs {})",
+        a.transfer_us,
+        b.transfer_us
+    );
+}
+
+fn run_engine_wide(
+    mut memory: Box<dyn ExpertMemory<WIDE>>,
+    traces: &[PromptTrace],
+    sim: &SimConfig,
+    oracle: bool,
+) -> (CacheStats, (f64, f64), usize) {
+    let mut stats = CacheStats::default();
+    memory.set_prefetch_budget(sim.prefetch_budget);
+    let mut engine = SimEngine::new(memory, sim.clone(), WIDE_EXPERTS);
+    for tr in traces {
+        if oracle {
+            engine.run_prompt(tr, &mut OraclePredictor::new(), &mut stats);
+        } else {
+            engine.run_prompt(tr, &mut NoPrefetch, &mut stats);
+        }
+    }
+    let marks = engine.memory.cost_marks();
+    let resident = engine.memory.resident_count();
+    (stats, marks, resident)
+}
+
+/// 3-word flat replay: native `lookup_set` vs scalar delegation must be
+/// byte-identical, exactly as the single-word suite guarantees.
+#[test]
+fn wide_flat_batched_lookup_matches_scalar_delegation() {
+    let mut rng = Rng::new(601);
+    for case in 0..12 {
+        let traces: Vec<PromptTrace> = (0..rng.range(1, 4))
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_wide_trace(&mut rng, n_tokens, 3, WIDE_EXPERTS)
+            })
+            .collect();
+        assert!(
+            traces.iter().any(|tr| tr.experts.iter().any(|&e| e >= 64)),
+            "wide traces must route beyond word 0"
+        );
+        let cap = rng.range(4, 3 * WIDE_EXPERTS / 2);
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let mk_flat = |cap: usize| -> Box<dyn ExpertMemory<WIDE>> {
+            Box::new(FlatMemory::<WIDE>::new(
+                Box::new(LruCache::new(cap)),
+                CacheConfig::default().with_capacity(cap),
+                WIDE_EXPERTS,
+                sim.prefetch_budget,
+                1_000.0,
+            ))
+        };
+        for oracle in [false, true] {
+            let (native, nm, nr) = run_engine_wide(mk_flat(cap), &traces, &sim, oracle);
+            let (scalar, sm, sr) =
+                run_engine_wide(Box::new(ScalarPath::new(mk_flat(cap))), &traces, &sim, oracle);
+            let label = format!("wide flat case {case} oracle={oracle}");
+            assert_stats_identical(&label, &scalar, &native);
+            assert_eq!(nm.0.to_bits(), sm.0.to_bits(), "{label}: demand marks");
+            assert_eq!(nm.1.to_bits(), sm.1.to_bits(), "{label}: stall marks");
+            assert_eq!(nr, sr, "{label}: residency");
+        }
+    }
+}
+
+/// Same guarantee for the 3-word tiered backend.
+#[test]
+fn wide_tiered_batched_lookup_matches_scalar_delegation() {
+    let mut rng = Rng::new(602);
+    for case in 0..12 {
+        let traces: Vec<PromptTrace> = (0..rng.range(1, 4))
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_wide_trace(&mut rng, n_tokens, 3, WIDE_EXPERTS)
+            })
+            .collect();
+        let cfg = TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", rng.range(4, 24), 2.0, 0.0),
+                TierSpec::new("host", rng.range(16, 64), 1400.0, 1400.0),
+                TierSpec::new("ssd", 3 * WIDE_EXPERTS, 22_000.0, 0.0),
+            ],
+            policy: "lru".into(),
+        };
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let mk_tiered = || -> Box<dyn ExpertMemory<WIDE>> {
+            Box::new(
+                TieredMemory::<WIDE>::new(&cfg, WIDE_EXPERTS, sim.prefetch_budget, 1_000.0)
+                    .unwrap(),
+            )
+        };
+        for oracle in [false, true] {
+            let (native, nm, nr) = run_engine_wide(mk_tiered(), &traces, &sim, oracle);
+            let (scalar, sm, sr) =
+                run_engine_wide(Box::new(ScalarPath::new(mk_tiered())), &traces, &sim, oracle);
+            let label = format!("wide tiered case {case} oracle={oracle}");
+            assert_stats_identical(&label, &scalar, &native);
+            assert_eq!(nm.0.to_bits(), sm.0.to_bits(), "{label}: demand marks");
+            assert_eq!(nm.1.to_bits(), sm.1.to_bits(), "{label}: stall marks");
+            assert_eq!(nr, sr, "{label}: residency");
+        }
+    }
+}
+
+fn wide_sweep_corpus(rng: &mut Rng) -> (Vec<PromptTrace>, Vec<PromptTrace>) {
+    let test: Vec<PromptTrace> = (0..rng.range(2, 5))
+        .map(|_| {
+            let n_tokens = rng.range(6, 40);
+            random_wide_trace(rng, n_tokens, 3, WIDE_EXPERTS)
+        })
+        .collect();
+    let fit: Vec<PromptTrace> = (0..3)
+        .map(|_| random_wide_trace(rng, 12, 3, WIDE_EXPERTS))
+        .collect();
+    (test, fit)
+}
+
+/// 160-expert stack-distance capacity sweep vs the exact per-capacity
+/// replay: byte-identical `SweepPoint`s.
+#[test]
+fn wide_stackdist_sweep_matches_exact_replay() {
+    let mut rng = Rng::new(603);
+    for case in 0..6 {
+        let (test, fit) = wide_sweep_corpus(&mut rng);
+        let sim = SimConfig {
+            warmup_tokens: rng.below(12),
+            ..Default::default()
+        };
+        let inputs: SweepInputs<WIDE> = SweepInputs {
+            test_traces: &test,
+            fit_traces: &fit,
+            learned: None,
+            compiled: None,
+            sim,
+            eam: EamConfig {
+                kmeans_clusters: 0,
+                ..Default::default()
+            },
+            n_layers: 3,
+            n_experts: WIDE_EXPERTS,
+        };
+        let mut fracs: Vec<f64> = (0..rng.range(2, 7))
+            .map(|_| (rng.range(1, 100) as f64) / 100.0)
+            .collect();
+        fracs.push(1.0);
+
+        let fast = sweep_capacities_threaded(PredictorKind::None, &fracs, &inputs, 2).unwrap();
+        let exact =
+            sweep_capacities_replay_threaded(PredictorKind::None, &fracs, &inputs, 2).unwrap();
+        assert_eq!(fast.points.len(), exact.points.len());
+        for (f, e) in fast.points.iter().zip(exact.points.iter()) {
+            let label = format!("wide case {case} frac {}", f.capacity_frac);
+            assert_eq!(f.capacity_experts, e.capacity_experts, "{label}");
+            assert_eq!(f.hit_rate.to_bits(), e.hit_rate.to_bits(), "{label}: rate");
+            assert_stats_identical(&label, &e.stats, &f.stats);
+        }
+    }
+}
+
+/// 160-expert analytic tiered sweep vs the per-cell exact replay.
+#[test]
+fn wide_tiered_sweep_matches_exact_replay() {
+    let mut rng = Rng::new(604);
+    for case in 0..4 {
+        let (test, fit) = wide_sweep_corpus(&mut rng);
+        let sim = SimConfig {
+            warmup_tokens: rng.below(12),
+            ..Default::default()
+        };
+        let inputs: SweepInputs<WIDE> = SweepInputs {
+            test_traces: &test,
+            fit_traces: &fit,
+            learned: None,
+            compiled: None,
+            sim,
+            eam: EamConfig {
+                kmeans_clusters: 0,
+                ..Default::default()
+            },
+            n_layers: 3,
+            n_experts: WIDE_EXPERTS,
+        };
+        let base = TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", 1, 2.0, 0.0),
+                TierSpec::new("host", 1, 1400.0, 0.0),
+                TierSpec::new("ssd", 3 * WIDE_EXPERTS, 22_000.0, 0.0),
+            ],
+            policy: "lru".into(),
+        };
+        let gpu: Vec<f64> = (0..2).map(|_| (rng.range(1, 90) as f64) / 100.0).collect();
+        let host: Vec<f64> = (0..2).map(|_| (rng.range(1, 100) as f64) / 100.0).collect();
+        let ssd = [rng.range(1400, 40_000) as f64];
+
+        let fast = sweep_tiered_threaded(
+            PredictorKind::None, &gpu, &host, &ssd, &inputs, &base, 1_000.0, 2,
+        )
+        .unwrap();
+        let exact = sweep_tiered_replay_threaded(
+            PredictorKind::None, &gpu, &host, &ssd, &inputs, &base, 1_000.0, 2,
+        )
+        .unwrap();
+        assert_eq!(fast.len(), exact.len());
+        for (f, e) in fast.iter().zip(exact.iter()) {
+            let label = format!(
+                "wide case {case} gpu {} host {} ssd {}",
+                f.gpu_frac, f.host_frac, f.ssd_us_per_expert
+            );
+            assert_stats_identical(&label, &e.stats, &f.stats);
+            assert_eq!(
+                f.critical_path_us.to_bits(),
+                e.critical_path_us.to_bits(),
+                "{label}: critical path"
+            );
+            assert_eq!(f.tiers.served, e.tiers.served, "{label}: served");
+            assert_eq!(f.tiers.demotions, e.tiers.demotions, "{label}: demotions");
+            assert_eq!(f.tiers.dropped, e.tiers.dropped, "{label}: dropped");
+        }
+    }
+}
+
+/// 160-expert workload simulator: a full multi-tenant run completes,
+/// conserves scheduler work, actually routes beyond word 0, and is
+/// bitwise deterministic across identical runs.
+#[test]
+fn wide_workload_sim_runs_and_is_deterministic() {
+    let n_layers = 3usize;
+    let spec = WorkloadSpec::example(3, 7, 6.0).with_load(2.0);
+    let pools = synthetic_pools(&spec, 4, n_layers as u16, WIDE_EXPERTS);
+    let fit = synthetic_fit_pool(&spec, 3, n_layers as u16, WIDE_EXPERTS);
+    assert!(
+        pools.iter().flatten().any(|tr| tr.experts.iter().any(|&e| e >= 128)),
+        "160-expert synthetic pools must reach the third word"
+    );
+    let schedule = spec.generate(&pools).unwrap();
+    let sim = SimConfig::default();
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let cfg = WorkloadConfig::default();
+    let mk_mem = || -> Box<dyn ExpertMemory<WIDE>> {
+        let cap = (n_layers * WIDE_EXPERTS) / 10;
+        memory::build(
+            "lru",
+            &CacheConfig::default().with_capacity(cap),
+            None,
+            &sim,
+            WIDE_EXPERTS,
+            cfg.token_compute_us / n_layers as f64,
+        )
+        .unwrap()
+    };
+    let inputs: WorkloadInputs<WIDE> = WorkloadInputs {
+        spec: &spec,
+        schedule: &schedule,
+        pools: &pools,
+        fit_traces: &fit,
+        learned: None,
+        cfg: &cfg,
+        sim: &sim,
+        eam: &eam,
+        n_layers,
+        n_experts: WIDE_EXPERTS,
+    };
+    let a = run_workload(&inputs, PredictorKind::Eam, mk_mem()).unwrap();
+    let b = run_workload(&inputs, PredictorKind::Eam, mk_mem()).unwrap();
+    assert!(a.counters.completions > 0, "no request completed");
+    assert_eq!(a.counters.idle_while_runnable, 0, "work conservation");
+    assert!(a.aggregate.cache.hits + a.aggregate.cache.misses > 0);
+    // identical inputs → bitwise-identical reports
+    assert_eq!(a.counters.steps, b.counters.steps);
+    assert_eq!(a.counters.completions, b.counters.completions);
+    assert_stats_identical("wide workload", &a.aggregate.cache, &b.aggregate.cache);
+    assert_eq!(a.virtual_secs.to_bits(), b.virtual_secs.to_bits());
+}
