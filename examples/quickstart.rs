@@ -5,6 +5,15 @@
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! No artifacts handy?  The serving simulators run self-contained on
+//! synthetic worlds of up to 256 experts — e.g. a 160-expert model
+//! sharded across a 3-node edge cluster:
+//!
+//! ```bash
+//! cargo run --release -- serve-sim --experts 160 --nodes 3 \
+//!     --predictors eam --loads 1,2 --fracs 0.10 --out cluster.csv
+//! ```
 
 use moe_beyond::eval::{eval_trace, EvalAccumulator};
 use moe_beyond::predictor::{learned, LearnedModel};

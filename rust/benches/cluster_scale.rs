@@ -1,0 +1,242 @@
+//! Bench: the multi-node edge-cluster simulator at scale.
+//!
+//! Sweeps the K × placement × link-bandwidth × cache-fraction grid
+//! (`moe_beyond::sim::sweep_cluster`) over synthetic reuse-heavy
+//! corpora and checks the structural guarantees the cluster backend
+//! ships with:
+//!
+//! 1. the K=1 loopback column reproduces the single-node exact-replay
+//!    sweep BIT-for-bit (hit rate, every counter, modeled transfer µs),
+//! 2. sharding a fixed aggregate cache budget across K nodes keeps the
+//!    cluster-wide hit rate in the same regime while remote traffic
+//!    appears (and K=1 never crosses the network),
+//! 3. link bandwidth moves the modeled critical path, never the hit
+//!    rate (the hit-rate-only evaluation blind spot, network edition),
+//! 4. the whole grid is byte-identical across two runs (determinism).
+//!
+//! Self-contained: synthetic traces, no artifacts/PJRT required.
+//! `MOEB_BENCH_PROMPTS` scales the workload; `MOEB_CLUSTER_NODES` caps
+//! the largest swept node count (default 8).
+//!
+//! Artifacts for CI upload land in `target/cluster/sweep_cluster.csv`.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{env_usize, mk_reuse_traces, time_block};
+
+use std::path::Path;
+
+use moe_beyond::cluster::{ClusterConfig, PlacementKind};
+use moe_beyond::config::{EamConfig, SimConfig};
+use moe_beyond::sim::sweep::{
+    sweep_capacities_replay, sweep_cluster, ClusterSweepPoint, PredictorKind, SweepInputs,
+};
+
+const N_LAYERS: usize = 4;
+const N_EXPERTS: usize = 64;
+
+fn csv(points: &[ClusterSweepPoint]) -> String {
+    let mut s = String::from(
+        "nodes,placement,gbps,cache_frac,capacity_per_node,gpu_hit_rate,remote_rate,\
+         critical_path_us,remote_lookups,failovers,promotions,wire_us\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.nodes,
+            p.placement.id(),
+            p.gbps,
+            p.cache_frac,
+            p.capacity_per_node,
+            p.gpu_hit_rate,
+            p.remote_rate,
+            p.critical_path_us,
+            p.net.remote_lookups,
+            p.net.failovers,
+            p.net.promotions,
+            p.net.wire_us,
+        ));
+    }
+    s
+}
+
+fn main() -> moe_beyond::Result<()> {
+    let n_prompts = env_usize("MOEB_BENCH_PROMPTS", 24);
+    let max_nodes = env_usize("MOEB_CLUSTER_NODES", 8).clamp(1, 64);
+    let test = mk_reuse_traces(n_prompts, 40, N_LAYERS as u16, 71);
+    let fit = mk_reuse_traces(n_prompts * 2, 40, N_LAYERS as u16, 72);
+    let inputs: SweepInputs = SweepInputs {
+        test_traces: &test,
+        fit_traces: &fit,
+        learned: None,
+        compiled: None,
+        sim: SimConfig::default(),
+        eam: EamConfig::default(),
+        n_layers: N_LAYERS,
+        n_experts: N_EXPERTS,
+    };
+    let base = ClusterConfig::default();
+    let fracs = [0.05, 0.1, 0.2];
+
+    // -- 1) K=1 loopback parity against the single-node exact replay ------
+    let single = time_block("single-node exact-replay sweep", || {
+        sweep_capacities_replay(PredictorKind::Eam, &fracs, &inputs)
+    })?;
+    let loopback = time_block("K=1 loopback cluster sweep", || {
+        sweep_cluster(
+            PredictorKind::Eam,
+            &[1],
+            &[PlacementKind::RoundRobin],
+            &[0.0], // <= 0 = infinite bandwidth; loopback stays free
+            &fracs,
+            &inputs,
+            &base,
+        )
+    })?;
+    println!("\n== K=1 loopback parity: GPU hit rate (%) ==");
+    println!("{:>10} {:>12} {:>12}", "capacity%", "single", "cluster");
+    for (s, c) in single.points.iter().zip(loopback.iter()) {
+        println!(
+            "{:>10.0} {:>12.2} {:>12.2}",
+            s.capacity_frac * 100.0,
+            s.hit_rate * 100.0,
+            c.gpu_hit_rate * 100.0
+        );
+        assert_eq!(
+            s.hit_rate.to_bits(),
+            c.gpu_hit_rate.to_bits(),
+            "K=1 loopback drifted from the single-node replay at {}%",
+            s.capacity_frac * 100.0
+        );
+        assert_eq!(s.stats.hits, c.stats.hits);
+        assert_eq!(s.stats.misses, c.stats.misses);
+        assert_eq!(s.stats.transfer_us.to_bits(), c.stats.transfer_us.to_bits());
+        assert_eq!(c.net.remote_lookups, 0, "loopback K=1 must stay local");
+    }
+
+    // -- 2) node-count scaling under a fixed per-device budget -------------
+    let mut nodes = vec![1usize];
+    let mut k = 2;
+    while k <= max_nodes {
+        nodes.push(k);
+        k *= 2;
+    }
+    let scaling = time_block("K-scaling sweep (node count x placement)", || {
+        sweep_cluster(
+            PredictorKind::Eam,
+            &nodes,
+            &PlacementKind::ALL,
+            &[10.0],
+            &[0.1],
+            &inputs,
+            &base,
+        )
+    })?;
+    println!("\n== node-count scaling (cache 10%/device, 10 Gbps LAN) ==");
+    println!(
+        "{:>6} {:>11} {:>10} {:>9} {:>9} {:>18}",
+        "nodes", "placement", "cap/node", "hit%", "remote%", "critical path ms"
+    );
+    for p in &scaling {
+        println!(
+            "{:>6} {:>11} {:>10} {:>9.1} {:>9.1} {:>18.1}",
+            p.nodes,
+            p.placement.id(),
+            p.capacity_per_node,
+            p.gpu_hit_rate * 100.0,
+            p.remote_rate * 100.0,
+            p.critical_path_us / 1e3
+        );
+        if p.nodes == 1 {
+            assert_eq!(p.remote_rate, 0.0, "K=1 must not cross the network");
+        } else {
+            assert!(p.remote_rate > 0.0, "K={} saw no remote traffic", p.nodes);
+        }
+    }
+    // sharding a fixed aggregate budget across K partitioned LRUs may
+    // shift a few percent (per-node rounding), but must not crater
+    let n_place = PlacementKind::ALL.len();
+    for (i, p) in scaling.iter().enumerate() {
+        let baseline = &scaling[i % n_place];
+        assert!(
+            p.gpu_hit_rate >= baseline.gpu_hit_rate - 0.10,
+            "K={} {} hit rate cratered vs the single-node baseline ({:.3} vs {:.3})",
+            p.nodes,
+            p.placement.id(),
+            p.gpu_hit_rate,
+            baseline.gpu_hit_rate
+        );
+    }
+
+    // -- 3) link bandwidth moves latency, not hit rate ---------------------
+    let bw = [0.1, 1.0, 10.0];
+    let bw_pts = time_block("bandwidth sweep (K=4)", || {
+        sweep_cluster(
+            PredictorKind::Eam,
+            &[4.min(max_nodes)],
+            &[PlacementKind::RoundRobin],
+            &bw,
+            &[0.1],
+            &inputs,
+            &base,
+        )
+    })?;
+    println!("\n== link bandwidth sweep (K=4, cache 10%/device) ==");
+    println!(
+        "{:>8} {:>9} {:>9} {:>18} {:>12}",
+        "gbps", "hit%", "remote%", "critical path ms", "wire ms"
+    );
+    for p in &bw_pts {
+        println!(
+            "{:>8.1} {:>9.1} {:>9.1} {:>18.1} {:>12.1}",
+            p.gbps,
+            p.gpu_hit_rate * 100.0,
+            p.remote_rate * 100.0,
+            p.critical_path_us / 1e3,
+            p.net.wire_us / 1e3
+        );
+    }
+    for w in bw_pts.windows(2) {
+        assert_eq!(
+            w[0].gpu_hit_rate.to_bits(),
+            w[1].gpu_hit_rate.to_bits(),
+            "bandwidth changed the hit rate"
+        );
+        assert!(
+            w[0].critical_path_us >= w[1].critical_path_us - 1e-9,
+            "more bandwidth made the critical path slower"
+        );
+    }
+    if max_nodes > 1 {
+        assert!(
+            bw_pts[0].critical_path_us > bw_pts[bw_pts.len() - 1].critical_path_us,
+            "a 100x bandwidth gap must show up in the critical path"
+        );
+    }
+
+    // -- 4) determinism: the full grid, byte for byte ----------------------
+    let grid = || {
+        sweep_cluster(
+            PredictorKind::Eam,
+            &nodes,
+            &[PlacementKind::RoundRobin, PlacementKind::LayerHash],
+            &[1.0],
+            &fracs,
+            &inputs,
+            &base,
+        )
+    };
+    let a = time_block("determinism grid (run 1)", grid)?;
+    let b = time_block("determinism grid (run 2)", grid)?;
+    assert_eq!(csv(&a), csv(&b), "cluster sweep is not byte-deterministic");
+    println!("\ndeterminism: two full grid runs serialized byte-identically");
+
+    // -- artifacts for CI upload -------------------------------------------
+    let out_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/cluster");
+    std::fs::create_dir_all(&out_dir)?;
+    std::fs::write(out_dir.join("sweep_cluster.csv"), csv(&scaling))?;
+    println!("artifacts: {}", out_dir.display());
+
+    println!("\nshape check: PASS");
+    Ok(())
+}

@@ -77,6 +77,7 @@ fn run_all() -> Result<(Vec<LoadPoint>, Vec<LoadPoint>)> {
         n_layers: N_LAYERS,
         n_experts: N_EXPERTS,
         tier_base: &tiers,
+        cluster_base: None,
     };
 
     // headline: every policy × both backends at one contended point

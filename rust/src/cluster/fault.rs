@@ -1,0 +1,120 @@
+//! Deterministic fault injection for cluster runs: scheduled node
+//! failures and per-node straggler multipliers.
+//!
+//! Faults are *scheduled*, not sampled — a failure names the measured
+//! lookup index at which the node goes dark, a straggler names a fixed
+//! link-time multiplier — so a seeded run with faults is exactly as
+//! reproducible as one without.  `tests/failure_injection.rs` pins that:
+//! two identical faulted runs must produce byte-identical stats.
+
+use crate::Result;
+
+/// One scheduled node failure: `node` stops serving at the `at_lookup`-th
+/// measured lookup (0 = down from the start) and never recovers.
+/// Lookups it owned fail over to the next alive node in ring order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeFailure {
+    /// Failing node index.  Node 0 (the front node driving the cluster)
+    /// cannot fail — [`FaultPlan::validate`] rejects it.
+    pub node: usize,
+    /// Measured-lookup index at which the failure takes effect.
+    pub at_lookup: u64,
+}
+
+/// One degraded node: every network transfer to/from it costs
+/// `multiplier`× the healthy link time (a slow radio, a thermally
+/// throttled NIC).  Applies for the whole run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    pub node: usize,
+    /// Link-time multiplier, `>= 1`.
+    pub multiplier: f64,
+}
+
+/// The full fault schedule for one cluster run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub failures: Vec<NodeFailure>,
+    pub stragglers: Vec<Straggler>,
+}
+
+impl FaultPlan {
+    /// No faults — the default for every sweep unless injected.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_failure(mut self, node: usize, at_lookup: u64) -> Self {
+        self.failures.push(NodeFailure { node, at_lookup });
+        self
+    }
+
+    pub fn with_straggler(mut self, node: usize, multiplier: f64) -> Self {
+        self.stragglers.push(Straggler { node, multiplier });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.failures.is_empty() && self.stragglers.is_empty()
+    }
+
+    /// Check the plan against a `k`-node cluster.
+    pub fn validate(&self, k: usize) -> Result<()> {
+        for f in &self.failures {
+            anyhow::ensure!(
+                f.node < k,
+                "failure names node {} but the cluster has {k} nodes",
+                f.node
+            );
+            anyhow::ensure!(
+                f.node != 0,
+                "node 0 is the front node and cannot fail (it owns the \
+                 local hierarchy every failover lands on)"
+            );
+        }
+        for s in &self.stragglers {
+            anyhow::ensure!(
+                s.node < k,
+                "straggler names node {} but the cluster has {k} nodes",
+                s.node
+            );
+            anyhow::ensure!(
+                s.multiplier.is_finite() && s.multiplier >= 1.0,
+                "straggler multiplier must be finite and >= 1 (got {})",
+                s.multiplier
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_validates_anywhere() {
+        assert!(FaultPlan::none().validate(1).is_ok());
+        assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_front_node_and_out_of_range() {
+        assert!(FaultPlan::none().with_failure(0, 10).validate(3).is_err());
+        assert!(FaultPlan::none().with_failure(3, 10).validate(3).is_err());
+        assert!(FaultPlan::none().with_failure(2, 10).validate(3).is_ok());
+        assert!(FaultPlan::none().with_straggler(5, 2.0).validate(3).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_speedup_stragglers() {
+        assert!(FaultPlan::none().with_straggler(1, 0.5).validate(3).is_err());
+        assert!(
+            FaultPlan::none()
+                .with_straggler(1, f64::NAN)
+                .validate(3)
+                .is_err()
+        );
+        assert!(FaultPlan::none().with_straggler(1, 1.0).validate(3).is_ok());
+    }
+}

@@ -1,0 +1,423 @@
+//! [`ClusterMemory`] — K per-node [`ExpertMemory`] hierarchies behind
+//! one `ExpertMemory` facade, joined by a priced network link.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use crate::cache::policy::{self, ExpertKey};
+use crate::cluster::{ClusterConfig, NodeFailure, PlacementKind};
+use crate::memory::{ExpertMemory, Lookup, LookupBatch, MemoryStats, Prefetched};
+use crate::metrics::Counter;
+use crate::obs::{ObsSink, TraceEvent};
+use crate::tier::{NetCostModel, TierStats};
+use crate::util::ExpertSet;
+use crate::Result;
+
+/// Deterministic K-node edge-cluster residency backend.
+///
+/// Each node runs its own full single-node backend (flat or tiered —
+/// whatever [`crate::memory::build`] produces for the node config);
+/// expert ownership comes from a pure [`PlacementKind`] map.  A lookup
+/// whose owner is node 0 is a plain delegation — the front node serves
+/// it from its local hierarchy at local cost.  A remote owner serves it
+/// from *its* hierarchy and the [`NetCostModel`] adds the wire time:
+/// activations travel on a remote GPU hit, the expert's weights travel
+/// on a remote miss (and that wire time joins the returned
+/// [`Lookup::fetch_us`], since a remote miss stalls the token exactly
+/// like a local one).
+///
+/// Two structural invariants keep the backend honest:
+///
+/// * **K=1 byte-parity** — with one node every owner is 0, every path is
+///   pure delegation, and a loopback link prices all transfers at 0 µs,
+///   so a 1-node cluster is byte-identical to the wrapped single-node
+///   backend (`tests/cluster_parity.rs`).
+/// * **Determinism** — routing is a pure function, faults fire at fixed
+///   measured-lookup indices, and every f64 accumulates in one fixed
+///   order, so seeded runs (including faulted ones) reproduce exactly.
+///
+/// Hot experts can migrate: after [`ClusterConfig::promote_after`]
+/// measured remote serves of one `(layer, expert)`, its weights are
+/// shipped to node 0 once ([`crate::tier::NetStats::promotions`]) and it
+/// is owned locally from then on — the cluster analogue of a tier
+/// promotion.
+pub struct ClusterMemory<const N: usize = 1> {
+    nodes: Vec<Box<dyn ExpertMemory<N>>>,
+    placement: PlacementKind,
+    net: NetCostModel,
+    n_experts: usize,
+    promote_after: u32,
+    /// Measured remote serves per expert key (promotion trigger).
+    remote_use: HashMap<ExpertKey, u32>,
+    /// Expert keys migrated to node 0 — ownership override.
+    promoted: HashSet<ExpertKey>,
+    /// Failure schedule, sorted by `at_lookup`; `next_failure` indexes
+    /// the first not-yet-fired entry.
+    failures: Vec<NodeFailure>,
+    next_failure: usize,
+    /// Per-node down flags (node 0 can never be down).
+    down: Vec<bool>,
+    /// Per-node link-time multipliers (1.0 = healthy).
+    straggler: Vec<f64>,
+    /// Measured lookups seen so far — the fault clock.
+    measured_lookups: u64,
+    obs: ObsSink,
+    /// Per-node remote-serve counters, wired on `set_obs`.
+    remote_ctrs: Vec<Arc<Counter>>,
+    failover_ctr: Option<Arc<Counter>>,
+    promotion_ctr: Option<Arc<Counter>>,
+}
+
+impl<const N: usize> ClusterMemory<N> {
+    /// Wrap `nodes` (one backend per cluster node, already built with
+    /// per-node capacities) under `cfg`'s placement, link and faults.
+    /// `n_experts` is the per-layer expert count the placement map
+    /// shards over.
+    pub fn new(
+        nodes: Vec<Box<dyn ExpertMemory<N>>>,
+        cfg: &ClusterConfig,
+        n_experts: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(!nodes.is_empty(), "cluster needs at least one node");
+        anyhow::ensure!(
+            nodes.len() == cfg.nodes,
+            "cluster config says {} nodes but {} backends were supplied",
+            cfg.nodes,
+            nodes.len()
+        );
+        cfg.validate()?;
+        let k = nodes.len();
+        let mut failures = cfg.faults.failures.clone();
+        failures.sort_by_key(|f| (f.at_lookup, f.node));
+        let mut straggler = vec![1.0; k];
+        for s in &cfg.faults.stragglers {
+            straggler[s.node] = s.multiplier;
+        }
+        Ok(Self {
+            nodes,
+            placement: cfg.placement,
+            net: NetCostModel::new(cfg.link.clone(), cfg.expert_mb, cfg.act_mb),
+            n_experts,
+            promote_after: cfg.promote_after,
+            remote_use: HashMap::new(),
+            promoted: HashSet::new(),
+            failures,
+            next_failure: 0,
+            down: vec![false; k],
+            straggler,
+            measured_lookups: 0,
+            obs: ObsSink::default(),
+            remote_ctrs: Vec::new(),
+            failover_ctr: None,
+            promotion_ctr: None,
+        })
+    }
+
+    #[inline]
+    fn k(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Ring distance from the front node to `owner` — the hop count the
+    /// link model charges.
+    #[inline]
+    fn hops(&self, owner: usize) -> usize {
+        owner.min(self.k() - owner)
+    }
+
+    /// Fire every scheduled failure whose time has come.  Called before
+    /// routing each measured lookup, so a failure at index `n` affects
+    /// the `n`-th measured lookup onward.
+    fn advance_faults(&mut self) {
+        while self.next_failure < self.failures.len()
+            && self.failures[self.next_failure].at_lookup <= self.measured_lookups
+        {
+            let f = self.failures[self.next_failure];
+            self.next_failure += 1;
+            if !self.down[f.node] {
+                self.down[f.node] = true;
+                self.obs.emit(|ts| TraceEvent::NodeDown {
+                    ts_us: ts,
+                    node: f.node as u8,
+                });
+            }
+        }
+    }
+
+    /// Placement owner with the promotion override applied, before
+    /// failover.
+    #[inline]
+    fn placed_owner(&self, layer: usize, expert: u8) -> usize {
+        let k = policy::key(layer, expert, self.n_experts);
+        if self.promoted.contains(&k) {
+            0
+        } else {
+            self.placement.owner(layer, expert, self.n_experts, self.k())
+        }
+    }
+
+    /// Final routing decision: `(node, failed_over)`.  A down owner
+    /// fails over to the next alive node in ring order; node 0 is always
+    /// alive, so the scan terminates.
+    #[inline]
+    fn route(&self, layer: usize, expert: u8) -> (usize, bool) {
+        let owner = self.placed_owner(layer, expert);
+        if !self.down[owner] {
+            return (owner, false);
+        }
+        let k = self.k();
+        let mut n = (owner + 1) % k;
+        while self.down[n] {
+            n = (n + 1) % k;
+        }
+        (n, true)
+    }
+
+    /// Shared lookup body — `lookup` is one call, `lookup_set` loops it,
+    /// so the two paths cannot drift.
+    fn lookup_one(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+        if measured {
+            self.advance_faults();
+            self.measured_lookups += 1;
+        }
+        let (owner, failed_over) = self.route(layer, expert);
+        if measured && failed_over {
+            self.net.stats.failovers += 1;
+            if let Some(c) = &self.failover_ctr {
+                c.inc();
+            }
+        }
+        if owner == 0 {
+            // Front-node serve: pure delegation, no network charge.
+            // This arm is the whole story at K=1, which is what makes
+            // the loopback cluster byte-identical to single-node.
+            return self.nodes[0].lookup(layer, expert, measured);
+        }
+        let r = self.nodes[owner].lookup(layer, expert, measured);
+        let mut fetch_us = r.fetch_us;
+        if measured {
+            let hops = self.hops(owner);
+            let mult = self.straggler[owner];
+            let wire_us = self.net.on_remote(r.hit, hops, mult);
+            if !r.hit {
+                // A remote weight fetch stalls the token like a local
+                // miss: the wire time joins the demand fetch cost.  On a
+                // remote hit the activation wire time is charged to the
+                // critical path via `cost_marks` only — `Lookup` keeps
+                // the "fetch_us is 0 on a hit" contract.
+                fetch_us += wire_us;
+            }
+            if self.obs.is_active() {
+                self.obs.emit(|ts| TraceEvent::RemoteFetch {
+                    ts_us: ts,
+                    node: owner as u8,
+                    layer: layer as u16,
+                    expert,
+                    hit: r.hit,
+                    wire_us,
+                });
+            }
+            if let Some(c) = self.remote_ctrs.get(owner) {
+                c.inc();
+            }
+            if self.promote_after > 0 {
+                let k = policy::key(layer, expert, self.n_experts);
+                let uses = self.remote_use.entry(k).or_insert(0);
+                *uses += 1;
+                if *uses >= self.promote_after {
+                    self.remote_use.remove(&k);
+                    self.promoted.insert(k);
+                    // Ship the weights once (network charge), then warm
+                    // node 0's hierarchy with an unmeasured lookup — the
+                    // same costless-residency-move contract warm-up uses.
+                    self.net.on_promotion(hops, mult);
+                    self.nodes[0].lookup(layer, expert, false);
+                    if let Some(c) = &self.promotion_ctr {
+                        c.inc();
+                    }
+                }
+            }
+        }
+        Lookup {
+            hit: r.hit,
+            fetch_us,
+        }
+    }
+}
+
+impl<const N: usize> ExpertMemory<N> for ClusterMemory<N> {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn lookup(&mut self, layer: usize, expert: u8, measured: bool) -> Lookup {
+        self.lookup_one(layer, expert, measured)
+    }
+
+    /// Set-level lookup loops the scalar body in ascending-id order —
+    /// routing decisions depend on mutable promotion/fault state, so the
+    /// scalar sequence *is* the specification (and the default-impl
+    /// expansion in the trait matches it exactly).
+    fn lookup_set(&mut self, layer: usize, truth: ExpertSet<N>, measured: bool) -> LookupBatch<N> {
+        let mut out = LookupBatch::default();
+        for e in truth.iter() {
+            let r = self.lookup_one(layer, e, measured);
+            if r.hit {
+                out.hits.insert(e);
+            } else {
+                out.fetch_us += r.fetch_us;
+            }
+        }
+        out
+    }
+
+    /// Prefetch partitions the predicted set by routed owner and hands
+    /// each node its shard — predictions warm the hierarchy that will
+    /// actually serve the lookup.  Weights rise from each node's *own*
+    /// deeper tiers, so no network charge applies here.
+    fn prefetch(&mut self, layer: usize, predicted: ExpertSet<N>) -> Prefetched {
+        let k = self.k();
+        if k == 1 {
+            return self.nodes[0].prefetch(layer, predicted);
+        }
+        let mut shards: Vec<ExpertSet<N>> = vec![ExpertSet::new(); k];
+        for e in predicted.iter() {
+            let (owner, _) = self.route(layer, e);
+            shards[owner].insert(e);
+        }
+        let mut out = Prefetched::default();
+        for (node, shard) in shards.into_iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            let p = self.nodes[node].prefetch(layer, shard);
+            out.issued += p.issued;
+            out.landed += p.landed;
+            out.too_late += p.too_late;
+        }
+        out
+    }
+
+    fn end_layer(&mut self) {
+        for n in &mut self.nodes {
+            n.end_layer();
+        }
+    }
+
+    /// Demand µs = every node's demand (index order) + all network wire
+    /// time; stall µs = every node's stall.  Sums start at 0.0 and
+    /// accumulate non-negative terms, so at K=1 over loopback the result
+    /// is bit-identical to the single node's marks.
+    fn cost_marks(&self) -> (f64, f64) {
+        let mut demand = 0.0;
+        let mut stall = 0.0;
+        for n in &self.nodes {
+            let (d, s) = n.cost_marks();
+            demand += d;
+            stall += s;
+        }
+        demand += self.net.stats.total_us();
+        (demand, stall)
+    }
+
+    fn set_prefetch_budget(&mut self, budget: usize) {
+        for n in &mut self.nodes {
+            n.set_prefetch_budget(budget);
+        }
+    }
+
+    fn set_batch_share(&mut self, batch: usize) {
+        for n in &mut self.nodes {
+            n.set_batch_share(batch);
+        }
+    }
+
+    fn effective_prefetch_budget(&self) -> usize {
+        self.nodes[0].effective_prefetch_budget()
+    }
+
+    /// GPU-resident experts across the whole cluster (sum of every
+    /// node's tier 0).
+    fn resident_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.resident_count()).sum()
+    }
+
+    /// Borrowed per-tier counters exist only at K=1 (delegation); a
+    /// multi-node merge is owned data — read it from
+    /// [`ExpertMemory::stats`] instead.
+    fn tier_stats(&self) -> Option<&TierStats> {
+        if self.k() == 1 {
+            self.nodes[0].tier_stats()
+        } else {
+            None
+        }
+    }
+
+    fn stats(&self) -> MemoryStats {
+        let mut demand_us = 0.0;
+        let mut prefetch_us = 0.0;
+        let mut stall_us = 0.0;
+        let mut resident = 0usize;
+        let mut resident_per_depth: Vec<usize> = Vec::new();
+        let mut tiers: Option<TierStats> = None;
+        for n in &self.nodes {
+            let s = n.stats();
+            demand_us += s.demand_us;
+            prefetch_us += s.prefetch_us;
+            stall_us += s.stall_us;
+            resident += s.resident;
+            if resident_per_depth.len() < s.resident_per_depth.len() {
+                resident_per_depth.resize(s.resident_per_depth.len(), 0);
+            }
+            for (d, r) in s.resident_per_depth.iter().enumerate() {
+                resident_per_depth[d] += r;
+            }
+            if let Some(t) = s.tiers {
+                match &mut tiers {
+                    Some(acc) => acc.merge(&t),
+                    None => tiers = Some(t),
+                }
+            }
+        }
+        demand_us += self.net.stats.total_us();
+        MemoryStats {
+            demand_us,
+            prefetch_us,
+            stall_us,
+            resident,
+            resident_per_depth,
+            tiers,
+            net: Some(self.net.stats.clone()),
+        }
+    }
+
+    /// Drops every node's staged residency plus the promotion state that
+    /// shadows it (promoted experts are only warm while node 0 holds
+    /// them).  Cost accumulators — node DMA and network wire time — are
+    /// cumulative across a run and survive, as the trait requires.
+    fn clear(&mut self) {
+        for n in &mut self.nodes {
+            n.clear();
+        }
+        self.remote_use.clear();
+        self.promoted.clear();
+    }
+
+    fn set_obs(&mut self, obs: ObsSink) {
+        for n in &mut self.nodes {
+            n.set_obs(obs.clone());
+        }
+        if let Some(reg) = obs.registry() {
+            reg.gauge("cluster_nodes", &[]).set(self.k() as f64);
+            self.remote_ctrs = (0..self.k())
+                .map(|i| {
+                    let id = i.to_string();
+                    reg.counter("cluster_remote_fetches", &[("node", id.as_str())])
+                })
+                .collect();
+            self.failover_ctr = Some(reg.counter("cluster_failovers", &[]));
+            self.promotion_ctr = Some(reg.counter("cluster_promotions", &[]));
+        }
+        self.obs = obs;
+    }
+}

@@ -1,0 +1,423 @@
+//! Deterministic multi-node edge-cluster serving simulator.
+//!
+//! The paper's single-device story — predict the next layer's experts,
+//! prefetch them up a GPU ↔ host ↔ SSD hierarchy — has a natural edge
+//! extension (OD-MoE, FlashMoE deployments): several small devices pool
+//! their memory, expert weights are **sharded across K nodes**, and a
+//! token's expert either lives on the front node or must be served
+//! across a link.  This module models that cluster as one more
+//! [`crate::memory::ExpertMemory`] backend, so every existing driver —
+//! replay engines, the multi-tenant workload scheduler, sweeps, the
+//! serving CLI — gains multi-node mode without new plumbing:
+//!
+//! * [`PlacementKind`] — pure expert→node ownership maps (round-robin,
+//!   block, layer-hash).
+//! * [`crate::tier::LinkSpec`] / [`crate::tier::NetCostModel`] — the
+//!   network "tier": per-transfer latency + per-hop cost + payload over
+//!   bandwidth, accumulated like per-tier DMA.
+//! * [`ClusterMemory`] — K per-node backends (each a full flat or
+//!   tiered hierarchy from [`crate::memory::build`]) behind one facade:
+//!   local serve on node 0, remote serve + wire charge elsewhere,
+//!   optional hot-expert migration to the front node
+//!   ([`ClusterConfig::promote_after`]).
+//! * [`FaultPlan`] — scheduled node failures (ring failover) and
+//!   straggler link multipliers, deterministic by construction.
+//!
+//! Structural invariant: a **K=1 cluster over a loopback link is
+//! byte-identical** to the single-node backend it wraps
+//! (`tests/cluster_parity.rs`), exactly as the flat path stays
+//! bit-identical when the tier hierarchy is off.  Sweep the K × placement
+//! × bandwidth × capacity grid with [`crate::sim::sweep_cluster`], or
+//! drive it live via `serve-sim --nodes K`.
+
+mod fault;
+mod memory;
+mod placement;
+
+pub use fault::{FaultPlan, NodeFailure, Straggler};
+pub use memory::ClusterMemory;
+pub use placement::PlacementKind;
+
+use crate::config::{CacheConfig, SimConfig, TierConfig};
+use crate::memory::{self, ExpertMemory};
+use crate::tier::LinkSpec;
+use crate::Result;
+
+/// Configuration of one simulated edge cluster.
+///
+/// The per-node hierarchies themselves are configured by the same
+/// [`CacheConfig`] / [`TierConfig`] every single-node run uses (passed
+/// to [`build`]); this struct only adds what the cluster layer owns —
+/// topology, link pricing, migration policy, and faults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of nodes, `>= 1`.  Node 0 is the front node: it drives
+    /// decode, absorbs failovers, and receives promoted experts.
+    pub nodes: usize,
+    /// Expert→node ownership map.
+    pub placement: PlacementKind,
+    /// Inter-node link pricing.  [`LinkSpec::loopback`] makes every
+    /// transfer free (the K=1 parity configuration).
+    pub link: LinkSpec,
+    /// Payload of one expert's weights in MB (remote miss / promotion).
+    pub expert_mb: f64,
+    /// Payload of one activation round-trip in MB (remote hit).
+    pub act_mb: f64,
+    /// Migrate an expert to the front node after this many measured
+    /// remote serves; 0 disables migration.
+    pub promote_after: u32,
+    /// Scheduled failures and stragglers (default: none).
+    pub faults: FaultPlan,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 1,
+            placement: PlacementKind::RoundRobin,
+            link: LinkSpec::loopback(),
+            // DeepSeek-V2-Lite regime: ~25 MB of weights per routed
+            // expert vs sub-MB activation round-trips.
+            expert_mb: 25.0,
+            act_mb: 0.5,
+            promote_after: 0,
+            faults: FaultPlan::none(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn with_placement(mut self, placement: PlacementKind) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    pub fn with_link(mut self, link: LinkSpec) -> Self {
+        self.link = link;
+        self
+    }
+
+    pub fn with_promote_after(mut self, promote_after: u32) -> Self {
+        self.promote_after = promote_after;
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.nodes >= 1, "cluster needs at least one node");
+        anyhow::ensure!(
+            self.nodes <= 64,
+            "cluster node count {} exceeds the supported maximum of 64",
+            self.nodes
+        );
+        anyhow::ensure!(
+            self.expert_mb >= 0.0 && self.expert_mb.is_finite(),
+            "expert payload must be finite and >= 0 MB"
+        );
+        anyhow::ensure!(
+            self.act_mb >= 0.0 && self.act_mb.is_finite(),
+            "activation payload must be finite and >= 0 MB"
+        );
+        self.link.validate()?;
+        self.faults.validate(self.nodes)
+    }
+}
+
+/// Build a [`ClusterMemory`] of `cfg.nodes` identical per-node backends.
+///
+/// Each node gets its own backend from [`crate::memory::build`] with the
+/// supplied `policy` / `cache` / `tier` configs — callers model a fixed
+/// per-device memory budget by dividing capacities by the node count
+/// *before* calling (as [`crate::sim::sweep_cluster`] does), so adding
+/// nodes grows aggregate capacity but not any single device.
+///
+/// # Example
+///
+/// A three-node cluster with layer-hashed ownership behaves like any
+/// other [`ExpertMemory`]; the extra [`crate::tier::NetStats`] counters
+/// show up under [`crate::memory::MemoryStats::net`]:
+///
+/// ```
+/// use moe_beyond::cluster::{self, ClusterConfig, PlacementKind};
+/// use moe_beyond::config::{CacheConfig, SimConfig};
+/// use moe_beyond::memory::ExpertMemory;
+///
+/// let cfg = ClusterConfig::default()
+///     .with_nodes(3)
+///     .with_placement(PlacementKind::LayerHash);
+/// let cache = CacheConfig::default().with_capacity(4);
+/// let mut mem =
+///     cluster::build::<1>(&cfg, "lru", &cache, None, &SimConfig::default(), 64, 1_000.0)
+///         .unwrap();
+///
+/// assert!(!mem.lookup(0, 9, true).hit); // cold: fetched on the owner node
+/// assert!(mem.lookup(0, 9, true).hit); // warm: resident where it is owned
+/// let stats = mem.stats();
+/// assert_eq!(stats.resident, 1);
+/// assert!(stats.net.is_some()); // cluster backends report NetStats
+/// ```
+pub fn build<const N: usize>(
+    cfg: &ClusterConfig,
+    policy: &str,
+    cache: &CacheConfig,
+    tier: Option<&TierConfig>,
+    sim: &SimConfig,
+    n_experts: usize,
+    overlap_budget_us: f64,
+) -> Result<Box<dyn ExpertMemory<N>>> {
+    cfg.validate()?;
+    let mut nodes: Vec<Box<dyn ExpertMemory<N>>> = Vec::with_capacity(cfg.nodes);
+    for _ in 0..cfg.nodes {
+        nodes.push(memory::build::<N>(
+            policy,
+            cache,
+            tier,
+            sim,
+            n_experts,
+            overlap_budget_us,
+        )?);
+    }
+    Ok(Box::new(ClusterMemory::new(nodes, cfg, n_experts)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ExpertSet;
+
+    fn cache_cfg(cap: usize) -> CacheConfig {
+        CacheConfig {
+            capacity_experts: cap,
+            pcie_us_per_expert: 100.0,
+            hit_us: 0.0,
+            ..Default::default()
+        }
+    }
+
+    fn cluster(cfg: &ClusterConfig, cap: usize) -> Box<dyn ExpertMemory> {
+        build::<1>(
+            cfg,
+            "lru",
+            &cache_cfg(cap),
+            None,
+            &SimConfig::default(),
+            64,
+            250.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn k1_loopback_matches_single_node_bit_for_bit() {
+        let mut c = cluster(&ClusterConfig::default(), 4);
+        let mut single = memory::build::<1>(
+            "lru",
+            &cache_cfg(4),
+            None,
+            &SimConfig::default(),
+            64,
+            250.0,
+        )
+        .unwrap();
+        assert_eq!(c.name(), "cluster");
+        for (layer, e) in [(0usize, 7u8), (0, 9), (1, 7), (0, 7), (2, 33)] {
+            let a = c.lookup(layer, e, true);
+            let b = single.lookup(layer, e, true);
+            assert_eq!(a.hit, b.hit);
+            assert_eq!(a.fetch_us.to_bits(), b.fetch_us.to_bits());
+        }
+        c.prefetch(3, ExpertSet::from_ids([1u8, 2, 3]));
+        single.prefetch(3, ExpertSet::from_ids([1u8, 2, 3]));
+        c.end_layer();
+        single.end_layer();
+        let (cd, cs) = c.cost_marks();
+        let (sd, ss) = single.cost_marks();
+        assert_eq!(cd.to_bits(), sd.to_bits());
+        assert_eq!(cs.to_bits(), ss.to_bits());
+        assert_eq!(c.resident_count(), single.resident_count());
+        let stats = c.stats();
+        assert_eq!(stats.net.as_ref().unwrap().remote_lookups, 0);
+        assert_eq!(stats.net.as_ref().unwrap().total_us(), 0.0);
+    }
+
+    #[test]
+    fn remote_miss_adds_wire_time_to_fetch_and_demand() {
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0)); // flat 10 µs/transfer
+        let mut c = cluster(&cfg, 4);
+        // expert 1 round-robins to node 1: remote miss = 100 µs local
+        // fault on node 1 + 10 µs of weights on the wire
+        let miss = c.lookup(0, 1, true);
+        assert!(!miss.hit);
+        assert_eq!(miss.fetch_us, 110.0);
+        // second access: remote GPU hit — activations travel, Lookup
+        // keeps the fetch_us=0 hit contract, wire goes to cost_marks
+        let hit = c.lookup(0, 1, true);
+        assert!(hit.hit);
+        assert_eq!(hit.fetch_us, 0.0);
+        let (demand, _) = c.cost_marks();
+        assert_eq!(demand, 120.0); // 100 local + 2 × 10 wire
+        let net = c.stats().net.unwrap();
+        assert_eq!(net.remote_lookups, 2);
+        assert_eq!(net.remote_hits, 1);
+        assert_eq!(net.wire_us, 20.0);
+        // expert 0 is local to node 0: no network involvement
+        let local = c.lookup(0, 0, true);
+        assert_eq!(local.fetch_us, 100.0);
+        assert_eq!(c.stats().net.unwrap().remote_lookups, 2);
+    }
+
+    #[test]
+    fn hot_expert_migrates_to_front_node_after_threshold() {
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_promote_after(2);
+        let mut c = cluster(&cfg, 4);
+        c.lookup(0, 1, true); // remote miss (use 1)
+        c.lookup(0, 1, true); // remote hit (use 2) -> promoted
+        let net = c.stats().net.unwrap();
+        assert_eq!(net.promotions, 1);
+        assert_eq!(net.promotion_us, 10.0);
+        // now owned (and warm) on node 0: local hit, no new wire time
+        let wire_before = c.stats().net.unwrap().total_us();
+        let r = c.lookup(0, 1, true);
+        assert!(r.hit);
+        assert_eq!(c.stats().net.unwrap().total_us(), wire_before);
+    }
+
+    #[test]
+    fn failed_node_reroutes_in_ring_order_and_counts_failovers() {
+        let cfg = ClusterConfig::default()
+            .with_nodes(3)
+            .with_faults(FaultPlan::none().with_failure(1, 0));
+        let mut c = cluster(&cfg, 4);
+        // expert 1 is owned by the dead node 1 -> served by node 2
+        let r = c.lookup(0, 1, true);
+        assert!(!r.hit);
+        let net = c.stats().net.unwrap();
+        assert_eq!(net.failovers, 1);
+        assert_eq!(net.remote_lookups, 1); // node 2 is still remote
+        // same expert again: the rerouted copy is warm on node 2
+        assert!(c.lookup(0, 1, true).hit);
+    }
+
+    #[test]
+    fn failure_fires_exactly_at_its_lookup_index() {
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_faults(FaultPlan::none().with_failure(1, 2));
+        let mut c = cluster(&cfg, 4);
+        c.lookup(0, 1, true); // #0: node 1 alive
+        c.lookup(0, 1, true); // #1: node 1 alive (remote hit)
+        assert_eq!(c.stats().net.unwrap().failovers, 0);
+        c.lookup(0, 1, true); // #2: failure fires first -> failover
+        assert_eq!(c.stats().net.unwrap().failovers, 1);
+    }
+
+    #[test]
+    fn straggler_multiplies_wire_time() {
+        let base = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0));
+        let slow = base
+            .clone()
+            .with_faults(FaultPlan::none().with_straggler(1, 3.0));
+        let mut healthy = cluster(&base, 4);
+        let mut degraded = cluster(&slow, 4);
+        healthy.lookup(0, 1, true);
+        degraded.lookup(0, 1, true);
+        assert_eq!(healthy.stats().net.unwrap().wire_us, 10.0);
+        assert_eq!(degraded.stats().net.unwrap().wire_us, 30.0);
+    }
+
+    #[test]
+    fn clear_drops_residency_and_migrations_but_keeps_costs() {
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_promote_after(1);
+        let mut c = cluster(&cfg, 4);
+        c.lookup(0, 1, true); // remote miss + immediate promotion
+        assert!(c.resident_count() > 0);
+        let (d0, _) = c.cost_marks();
+        assert!(d0 > 0.0);
+        c.clear();
+        assert_eq!(c.resident_count(), 0);
+        let (d1, _) = c.cost_marks();
+        assert_eq!(d0.to_bits(), d1.to_bits());
+        // the migration was dropped with the residency: the expert is
+        // remote-owned (and cold) again
+        let r = c.lookup(0, 1, true);
+        assert!(!r.hit);
+        assert_eq!(r.fetch_us, 110.0);
+    }
+
+    #[test]
+    fn prefetch_shards_by_owner_and_warms_the_serving_node() {
+        let cfg = ClusterConfig::default().with_nodes(2);
+        let mut c = cluster(&cfg, 8);
+        let p = c.prefetch(0, ExpertSet::from_ids([1u8, 2, 3, 4]));
+        assert_eq!(p.issued, 4);
+        assert_eq!(p.landed, 4);
+        // every prefetched expert now hits on its owner
+        for e in [1u8, 2, 3, 4] {
+            assert!(c.lookup(0, e, true).hit, "expert {e}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(ClusterConfig::default().with_nodes(0).validate().is_err());
+        assert!(ClusterConfig::default().with_nodes(65).validate().is_err());
+        assert!(ClusterConfig {
+            expert_mb: -1.0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(ClusterConfig::default()
+            .with_nodes(2)
+            .with_faults(FaultPlan::none().with_failure(0, 0))
+            .validate()
+            .is_err());
+        assert!(ClusterConfig::default().with_nodes(4).validate().is_ok());
+    }
+
+    #[test]
+    fn deterministic_across_identical_runs() {
+        let cfg = ClusterConfig::default()
+            .with_nodes(3)
+            .with_placement(PlacementKind::LayerHash)
+            .with_link(LinkSpec::lan())
+            .with_promote_after(2)
+            .with_faults(FaultPlan::none().with_failure(2, 5).with_straggler(1, 1.5));
+        let run = || {
+            let mut c = cluster(&cfg, 6);
+            for t in 0..40usize {
+                let layer = t % 4;
+                c.prefetch(layer, ExpertSet::from_ids([(t % 64) as u8]));
+                c.lookup(layer, ((t * 7) % 64) as u8, true);
+                c.end_layer();
+            }
+            let s = c.stats();
+            (
+                s.demand_us.to_bits(),
+                s.stall_us.to_bits(),
+                s.resident,
+                s.net.unwrap(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,150 @@
+//! Expert-to-node placement maps: which cluster node owns each
+//! `(layer, expert)` weight shard.
+//!
+//! Ownership is a pure function of the coordinates and the node count —
+//! no state, no RNG — so every placement is trivially reproducible and
+//! two runs of the same seeded workload route identically.  All
+//! placements collapse to node 0 at `k = 1`, which is what lets the K=1
+//! cluster parity suite hold the cluster backend byte-identical to the
+//! single-node path.
+
+use crate::Result;
+
+/// How expert weights are sharded across the `k` cluster nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// `expert % k`: interleaves expert ids across nodes.  Spreads a
+    /// layer's top-k set widely — worst case for locality, best for
+    /// per-node load balance.
+    RoundRobin,
+    /// `expert * k / n_experts`: contiguous id ranges per node.  Models
+    /// the "shard the FFN bank in blocks" layout most tensor-parallel
+    /// runtimes use; co-activated neighboring ids stay on one node.
+    Block,
+    /// SplitMix64 hash of `(layer, expert)` mod `k`: decorrelates
+    /// ownership across layers so one node is not the owner of the same
+    /// expert id in every layer.
+    LayerHash,
+}
+
+impl PlacementKind {
+    /// Grid order for sweeps and reports.
+    pub const ALL: [PlacementKind; 3] = [
+        PlacementKind::RoundRobin,
+        PlacementKind::Block,
+        PlacementKind::LayerHash,
+    ];
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            PlacementKind::RoundRobin => "roundrobin",
+            PlacementKind::Block => "block",
+            PlacementKind::LayerHash => "layerhash",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "roundrobin" | "rr" => Ok(PlacementKind::RoundRobin),
+            "block" => Ok(PlacementKind::Block),
+            "layerhash" | "hash" => Ok(PlacementKind::LayerHash),
+            other => anyhow::bail!(
+                "unknown placement '{other}' (expected roundrobin|block|layerhash)"
+            ),
+        }
+    }
+
+    /// Owning node of `(layer, expert)` in a `k`-node cluster.
+    /// Always 0 when `k <= 1`.
+    #[inline]
+    pub fn owner(&self, layer: usize, expert: u8, n_experts: usize, k: usize) -> usize {
+        if k <= 1 {
+            return 0;
+        }
+        match self {
+            PlacementKind::RoundRobin => expert as usize % k,
+            PlacementKind::Block => expert as usize * k / n_experts.max(1),
+            PlacementKind::LayerHash => {
+                (splitmix64((layer as u64) << 8 | expert as u64) % k as u64) as usize
+            }
+        }
+    }
+}
+
+/// SplitMix64 finalizer — the standard avalanche used for seeding
+/// elsewhere in this crate's synthetic generators.
+#[inline]
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_placement_collapses_to_node_zero_at_k1() {
+        for p in PlacementKind::ALL {
+            for layer in 0..8 {
+                for e in 0..64u8 {
+                    assert_eq!(p.owner(layer, e, 64, 1), 0, "{p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn owners_stay_in_range_and_cover_all_nodes() {
+        for p in PlacementKind::ALL {
+            for k in [2usize, 3, 4, 7] {
+                let mut seen = vec![false; k];
+                for layer in 0..16 {
+                    for e in 0..64u8 {
+                        let o = p.owner(layer, e, 64, k);
+                        assert!(o < k, "{p:?} k={k} owner {o}");
+                        seen[o] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "{p:?} k={k} left a node empty");
+            }
+        }
+    }
+
+    #[test]
+    fn block_placement_is_monotone_in_expert_id() {
+        let p = PlacementKind::Block;
+        let mut prev = 0usize;
+        for e in 0..64u8 {
+            let o = p.owner(0, e, 64, 4);
+            assert!(o >= prev);
+            prev = o;
+        }
+        assert_eq!(p.owner(0, 0, 64, 4), 0);
+        assert_eq!(p.owner(0, 63, 64, 4), 3);
+    }
+
+    #[test]
+    fn layerhash_varies_owner_across_layers() {
+        let p = PlacementKind::LayerHash;
+        // deterministic across calls
+        assert_eq!(p.owner(3, 17, 64, 5), p.owner(3, 17, 64, 5));
+        // the same expert id must not map to one node in every layer
+        let owners: Vec<usize> = (0..32).map(|l| p.owner(l, 17, 64, 5)).collect();
+        assert!(owners.iter().any(|&o| o != owners[0]));
+    }
+
+    #[test]
+    fn parse_round_trips_ids_and_rejects_junk() {
+        for p in PlacementKind::ALL {
+            assert_eq!(PlacementKind::parse(p.id()).unwrap(), p);
+        }
+        assert_eq!(
+            PlacementKind::parse("RR").unwrap(),
+            PlacementKind::RoundRobin
+        );
+        assert!(PlacementKind::parse("striped").is_err());
+    }
+}

@@ -14,6 +14,13 @@
 //! ```
 //!
 //! Python never appears: the engine executes AOT HLO through `runtime`.
+//!
+//! Scope: this is the *live* single-device loop, pinned to the default
+//! [`crate::util::ExpertSet`] width (≤ 64 experts) and to the
+//! single-node [`crate::memory`] backends.  Wider worlds and multi-node
+//! topologies are simulation-only today — `serve-sim --nodes K` drives
+//! [`crate::cluster`] instead of this module (see `ARCHITECTURE.md` at
+//! the repo root for the split and the promotion path).
 
 mod engine;
 mod expert_state;

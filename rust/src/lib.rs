@@ -21,7 +21,9 @@
 //!   [`obs`] observability layer (bounded-memory [`obs::Hist`]
 //!   percentiles behind every latency report, a labeled metric
 //!   registry, and Chrome-trace event tracing via [`obs::ObsSink`]),
-//!   and the evaluation harness behind Table 1.
+//!   the [`cluster`] multi-node edge-cluster simulator (experts sharded
+//!   across K nodes, a priced network tier, deterministic fault
+//!   injection), and the evaluation harness behind Table 1.
 //! * **L2 (JAX, build-time)** — the MoE backbone (DeepSeek-V2-Lite
 //!   stand-in) and the MoE-Beyond predictor transformer, AOT-lowered to
 //!   HLO text in `artifacts/`.
@@ -42,8 +44,12 @@
 //!
 //! Every paper figure/table has a bench target under `benches/`; see
 //! `rust/BENCHMARKS.md` for what each one reproduces and how to run it.
+//! For the module map, the data-flow diagram, and the extension guides
+//! ("where do I add a backend / policy / predictor"), start with
+//! `ARCHITECTURE.md` at the repository root.
 
 pub mod cache;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod eval;

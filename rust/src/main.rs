@@ -97,6 +97,21 @@ COMMANDS:
                     --trace-out t.json --metrics-out m.json|m.prom
                       (traced virtual-time re-run of the first grid point;
                        byte-deterministic for a fixed seed)
+                    edge-cluster mode (--backends cluster; implied default
+                    when --nodes > 1 and --backends is not given):
+                    --nodes 3             (shard experts across K nodes; each
+                                           node holds a 1/K capacity share)
+                    --placement roundrobin|block|layerhash
+                    --link-gbps 10  --link-latency-us 100  --link-hop-us 5
+                    --promote-after 0     (migrate hot experts to node 0
+                                           after N remote serves; 0 = never)
+                    --fail-node 1 --fail-at 500       (deterministic failure:
+                                           node 1 dies at measured lookup 500)
+                    --straggler 2 --straggler-mult 2.5 (slow link to node 2)
+                    e.g. a copy-pasteable 160-expert 3-node cluster run:
+                      moe-beyond serve-sim --experts 160 --nodes 3 \\
+                        --predictors eam --loads 1,2 --fracs 0.10 \\
+                        --out cluster.csv
   eval              Table 1: predictor accuracy/F1
                     --split test   --prompts 100
   analyze           Figs 1-3: activation sparsity analysis
@@ -237,6 +252,44 @@ fn serve(args: &Args) -> Result<()> {
 }
 
 /// Multi-tenant contention simulator (see `moe_beyond::workload`):
+/// Edge-cluster topology from the serve-sim CLI flags.  With no cluster
+/// flags this is the 1-node loopback default, which the `cluster`
+/// backend replays byte-identically to `flat` — so threading it through
+/// unconditionally is free.
+fn cluster_from_args(args: &Args) -> Result<moe_beyond::cluster::ClusterConfig> {
+    use moe_beyond::cluster::{ClusterConfig, FaultPlan, PlacementKind};
+    use moe_beyond::tier::LinkSpec;
+
+    let nodes = args.get_usize("nodes", 1)?;
+    let placement = PlacementKind::parse(&args.get("placement", "roundrobin"))?;
+    let link = LinkSpec::new(
+        args.get_f64("link-latency-us", 100.0)?,
+        args.get_f64("link-gbps", 10.0)?,
+        args.get_f64("link-hop-us", 5.0)?,
+    );
+    let mut faults = FaultPlan::none();
+    if args.flags.contains_key("fail-node") {
+        faults = faults.with_failure(
+            args.get_usize("fail-node", 0)?,
+            args.get_usize("fail-at", 500)? as u64,
+        );
+    }
+    if args.flags.contains_key("straggler") {
+        faults = faults.with_straggler(
+            args.get_usize("straggler", 0)?,
+            args.get_f64("straggler-mult", 2.0)?,
+        );
+    }
+    let cfg = ClusterConfig::default()
+        .with_nodes(nodes)
+        .with_placement(placement)
+        .with_link(link)
+        .with_promote_after(args.get_usize("promote-after", 0)? as u32)
+        .with_faults(faults);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
 /// extends Fig 7 into throughput–latency curves over a scheduler-policy
 /// × backend × predictor × offered-load × cache-fraction grid.  Runs
 /// self-contained on synthetic per-tenant corpora; with an artifact
@@ -257,8 +310,16 @@ fn serve_sim(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("unknown policy {s}"))
         })
         .collect::<Result<_>>()?;
+    // --nodes > 1 without an explicit --backends implies the cluster
+    // backend: asking for a multi-node run and silently sweeping
+    // single-node backends would be a footgun
+    let default_backends = if args.get_usize("nodes", 1)? > 1 {
+        "cluster"
+    } else {
+        "flat,tiered"
+    };
     let backends: Vec<workload::Backend> = args
-        .get("backends", "flat,tiered")
+        .get("backends", default_backends)
         .split(',')
         .map(|s| {
             workload::Backend::parse(s.trim())
@@ -403,6 +464,7 @@ fn serve_sim_grid<const N: usize>(
 ) -> Result<()> {
     let (policies, backends, kinds, loads, fracs) = grid;
     let total = n_layers * n_experts;
+    let cluster_base = cluster_from_args(args)?;
     let tier_base = TierConfig {
         tiers: vec![
             moe_beyond::tier::TierSpec::gpu(1), // resized per grid point
@@ -430,6 +492,7 @@ fn serve_sim_grid<const N: usize>(
         n_layers,
         n_experts,
         tier_base: &tier_base,
+        cluster_base: Some(&cluster_base),
     };
     println!(
         "serve-sim: {} tenants, horizon {:.0}s, base offered {:.2} rps; {} grid points",

@@ -203,6 +203,7 @@ impl<const N: usize> ExpertMemory<N> for FlatMemory<N> {
             resident: self.cache.len(),
             resident_per_depth: vec![self.cache.len()],
             tiers: None,
+            net: None,
         }
     }
 

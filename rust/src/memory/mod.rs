@@ -13,6 +13,11 @@
 //! * [`TieredMemory`] — the GPU ↔ host RAM ↔ SSD hierarchy
 //!   ([`crate::tier`]): promotion on miss, demotion on eviction, per-tier
 //!   fetch/writeback costs and serve counters.
+//! * [`crate::cluster::ClusterMemory`] — K nodes, each wrapping one of
+//!   the above, with expert ownership sharded by a placement map and
+//!   remote serves priced over a network link ([`crate::tier::net`]);
+//!   built by [`crate::cluster::build`] rather than [`build`] so the
+//!   single-node construction path stays untouched.
 //!
 //! Both the trace-driven simulator ([`crate::sim::SimEngine`]) and the
 //! serving coordinator ([`crate::coordinator::ExpertCacheManager`]) drive
@@ -69,7 +74,7 @@ pub use tiered::TieredMemory;
 
 use crate::cache::build_policy;
 use crate::config::{CacheConfig, SimConfig, TierConfig};
-use crate::tier::TierStats;
+use crate::tier::{NetStats, TierStats};
 use crate::util::ExpertSet;
 use crate::Result;
 
@@ -128,10 +133,16 @@ pub struct MemoryStats {
     /// Per-tier serve/promotion/demotion counters (`None` on backends
     /// without depth structure).
     pub tiers: Option<TierStats>,
+    /// Network-transfer counters (`None` on single-node backends; the
+    /// cluster backend reports remote fetches, promotions and wire µs
+    /// here — see [`crate::tier::NetStats`]).
+    pub net: Option<NetStats>,
 }
 
 impl MemoryStats {
-    /// Total modeled critical-path microseconds.
+    /// Total modeled critical-path microseconds.  Network wire time is
+    /// already folded into `demand_us` by the cluster backend, so this
+    /// stays `demand + stall` for every backend.
     pub fn critical_path_us(&self) -> f64 {
         self.demand_us + self.stall_us
     }
@@ -156,6 +167,26 @@ impl MemoryStats {
 /// 1 = up to 64 experts); expert ids themselves stay `u8` at every
 /// width, so the scalar [`lookup`](ExpertMemory::lookup) signature is
 /// width-independent.
+///
+/// # Example
+///
+/// Drive a flat backend through one cold-miss → warm-hit cycle:
+///
+/// ```
+/// use moe_beyond::config::{CacheConfig, SimConfig};
+/// use moe_beyond::memory::{self, ExpertMemory};
+///
+/// let cache = CacheConfig::default().with_capacity(4);
+/// let mut mem =
+///     memory::build::<1>("lru", &cache, None, &SimConfig::default(), 64, 1_000.0).unwrap();
+///
+/// let cold = mem.lookup(0, 7, true);
+/// assert!(!cold.hit && cold.fetch_us > 0.0); // demand fetch, priced
+/// let warm = mem.lookup(0, 7, true);
+/// assert!(warm.hit && warm.fetch_us == 0.0); // hits are always free
+/// mem.end_layer();
+/// assert_eq!(mem.stats().resident, 1);
+/// ```
 pub trait ExpertMemory<const N: usize = 1>: Send {
     /// Backend identifier for reports ("flat" | "tiered" | ...).
     fn name(&self) -> &'static str;

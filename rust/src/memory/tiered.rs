@@ -235,6 +235,7 @@ impl<const N: usize> ExpertMemory<N> for TieredMemory<N> {
                 .map(|d| self.cache.len_at(d))
                 .collect(),
             tiers: Some(self.tstats.clone()),
+            net: None,
         }
     }
 

@@ -80,6 +80,21 @@ pub enum TraceEvent {
         landed: u32,
         too_late: u32,
     },
+    /// A routed expert was served by a remote cluster node: `hit` means
+    /// the owner had it GPU-resident (activations travelled), otherwise
+    /// the owner faulted the weights first; `wire_us` is the link time
+    /// charged to the critical path.
+    RemoteFetch {
+        ts_us: f64,
+        node: u8,
+        layer: u16,
+        expert: u8,
+        hit: bool,
+        wire_us: f64,
+    },
+    /// A cluster node went down (fault injection); later lookups it
+    /// owned fail over to the next alive node.
+    NodeDown { ts_us: f64, node: u8 },
 }
 
 impl TraceEvent {
@@ -90,7 +105,9 @@ impl TraceEvent {
             | TraceEvent::DecodeStep { ts_us, .. }
             | TraceEvent::CacheAccess { ts_us, .. }
             | TraceEvent::TierMove { ts_us, .. }
-            | TraceEvent::Prefetch { ts_us, .. } => *ts_us,
+            | TraceEvent::Prefetch { ts_us, .. }
+            | TraceEvent::RemoteFetch { ts_us, .. }
+            | TraceEvent::NodeDown { ts_us, .. } => *ts_us,
         }
     }
 }
@@ -302,6 +319,42 @@ pub fn chrome_trace_json(ring: &TraceRing, clock: &str) -> Json {
                     ]),
                 ],
             ),
+            TraceEvent::RemoteFetch {
+                ts_us,
+                node,
+                layer,
+                expert,
+                hit,
+                wire_us,
+            } => event_json(
+                if *hit { "remote_hit" } else { "remote_miss" },
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("net")),
+                    ("s", Json::str("t")),
+                    args_json(vec![
+                        ("node", Json::num(*node as f64)),
+                        ("layer", Json::num(*layer as f64)),
+                        ("expert", Json::num(*expert as f64)),
+                        ("wire_us", Json::num(*wire_us)),
+                    ]),
+                ],
+            ),
+            TraceEvent::NodeDown { ts_us, node } => event_json(
+                "node_down",
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("fault")),
+                    ("s", Json::str("t")),
+                    args_json(vec![("node", Json::num(*node as f64))]),
+                ],
+            ),
         })
         .collect();
 
@@ -384,6 +437,15 @@ mod tests {
             landed: 2,
             too_late: 1,
         });
+        r.push(TraceEvent::RemoteFetch {
+            ts_us: 8.0,
+            node: 2,
+            layer: 2,
+            expert: 9,
+            hit: false,
+            wire_us: 110.0,
+        });
+        r.push(TraceEvent::NodeDown { ts_us: 9.0, node: 1 });
         r.push(TraceEvent::RequestEnd { ts_us: 205.0, request: 7, tenant: 1 });
 
         let j = chrome_trace_json(&r, "virtual");
@@ -391,7 +453,7 @@ mod tests {
             Some(Json::Arr(a)) => a,
             other => panic!("traceEvents missing: {other:?}"),
         };
-        assert_eq!(evs.len(), 5);
+        assert_eq!(evs.len(), 7);
         for ev in evs {
             let ph = ev.get("ph").unwrap().as_str().unwrap();
             assert!(matches!(ph, "b" | "e" | "X" | "i"));
@@ -406,7 +468,7 @@ mod tests {
         }
         let meta = j.get("metadata").unwrap();
         assert_eq!(meta.get("clock").unwrap().as_str().unwrap(), "virtual");
-        assert_eq!(meta.get("total_events").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(meta.get("total_events").unwrap().as_f64().unwrap(), 7.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod sweep;
 pub use engine::{simulate_prompt, SimEngine};
 pub use sweep::{
     sweep_capacities, sweep_capacities_replay, sweep_capacities_replay_threaded,
-    sweep_capacities_threaded, sweep_threads, sweep_tiered, sweep_tiered_replay,
-    sweep_tiered_replay_threaded, sweep_tiered_threaded, PredictorKind, SweepPoint, SweepResult,
-    TierSweepPoint,
+    sweep_capacities_threaded, sweep_cluster, sweep_cluster_threaded, sweep_threads, sweep_tiered,
+    sweep_tiered_replay, sweep_tiered_replay_threaded, sweep_tiered_threaded, ClusterSweepPoint,
+    PredictorKind, SweepPoint, SweepResult, TierSweepPoint,
 };

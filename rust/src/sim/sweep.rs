@@ -10,6 +10,11 @@
 //! run regardless of scheduling; `MOEB_SWEEP_THREADS` (or the
 //! `*_threaded` variants) pins the worker count, `1` forces serial.
 //!
+//! A third surface sweeps the [`crate::cluster`] simulator over node
+//! count × placement × link bandwidth × per-node capacity
+//! ([`sweep_cluster`]) — always by exact replay (remote routing has no
+//! stack-distance analogue).
+//!
 //! The no-prefetch (`PredictorKind::None`) baselines of BOTH sweeps are
 //! analytic: one memoized Mattson stack-distance pass over the corpus
 //! answers every flat capacity (`sweep_capacities*`) and — via per-tier
@@ -18,10 +23,11 @@
 //! forces the retained exact replays everywhere.
 
 use crate::cache::{CacheStats, LruCache};
+use crate::cluster::{self, ClusterConfig, PlacementKind};
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
 use crate::predictor::{factory, CachedPredictor, ExpertPredictor, PredictorParams, TracePredictions};
 use crate::sim::SimEngine;
-use crate::tier::{TierCostModel, TierStats};
+use crate::tier::{NetStats, TierCostModel, TierStats};
 use crate::trace::{CompiledCorpus, CompiledTrace, PromptTrace};
 use crate::util::parallel::parallel_map;
 use crate::Result;
@@ -591,6 +597,154 @@ fn sweep_tiered_stackdist<const N: usize>(
     })
 }
 
+/// One cell of the cluster grid: a (node count, placement, link
+/// bandwidth, per-node capacity fraction) combination with hit-rate,
+/// network, and latency outcomes.
+#[derive(Debug, Clone)]
+pub struct ClusterSweepPoint {
+    pub nodes: usize,
+    pub placement: PlacementKind,
+    /// Link bandwidth swept into [`crate::tier::LinkSpec::gbps`]
+    /// (`<= 0` = infinite).
+    pub gbps: f64,
+    /// Per-node GPU capacity as a fraction of the full expert table,
+    /// already divided by the node count (fixed per-device budget).
+    pub cache_frac: f64,
+    pub capacity_per_node: usize,
+    /// Fraction of measured lookups served from *some* node's GPU tier.
+    pub gpu_hit_rate: f64,
+    /// Fraction of measured lookups that crossed the network.
+    pub remote_rate: f64,
+    /// Modeled critical-path µs summed over all replayed prompts
+    /// (per-node DMA + network wire time).
+    pub critical_path_us: f64,
+    pub stats: CacheStats,
+    pub net: NetStats,
+}
+
+fn run_cluster_point<const N: usize>(
+    kind: PredictorKind,
+    (k, placement, gbps, frac): (usize, PlacementKind, f64, f64),
+    inputs: &SweepInputs<'_, N>,
+    compiled: &[CompiledTrace<N>],
+    base: &ClusterConfig,
+) -> Result<ClusterSweepPoint> {
+    // Fixed per-device memory budget: each node gets 1/k of the swept
+    // capacity.  At k = 1 the rounding collapses to the flat sweep's
+    // `(total * frac).round().max(1)`, which is what lets the K=1
+    // loopback column reproduce `sweep_capacities` bit-for-bit.
+    let total = inputs.n_layers * inputs.n_experts;
+    let cap = ((total as f64 * frac / k as f64).round() as usize).max(1);
+    let mut cfg = base.clone().with_nodes(k).with_placement(placement);
+    cfg.link.gbps = gbps;
+    let cache_cfg = CacheConfig::default().with_capacity(cap);
+
+    let mut stats = CacheStats::default();
+    let mut critical_path_us = 0.0;
+    let mut net = NetStats::default();
+
+    replay_traces(
+        kind,
+        inputs,
+        compiled,
+        &mut stats,
+        || {
+            let mem = cluster::build::<N>(
+                &cfg,
+                "lru",
+                &cache_cfg,
+                None,
+                &inputs.sim,
+                inputs.n_experts,
+                f64::INFINITY,
+            )?;
+            Ok(SimEngine::<N>::new(mem, inputs.sim.clone(), inputs.n_experts))
+        },
+        |engine| {
+            let m = engine.memory.stats();
+            critical_path_us += m.critical_path_us();
+            net.merge(m.net.as_ref().expect("cluster engine lost its net stats"));
+        },
+    )?;
+
+    let measured = stats.hits + stats.misses;
+    Ok(ClusterSweepPoint {
+        nodes: k,
+        placement,
+        gbps,
+        cache_frac: frac,
+        capacity_per_node: cap,
+        gpu_hit_rate: stats.hit_rate(),
+        remote_rate: net.remote_lookups as f64 / (measured.max(1)) as f64,
+        critical_path_us,
+        stats,
+        net,
+    })
+}
+
+/// Sweep the edge-cluster simulator over node count × placement × link
+/// bandwidth × per-node capacity with the default worker count.
+///
+/// Per-node backends are flat LRU hierarchies (the Fig-7 configuration,
+/// one per node); `base` supplies everything the grid does not sweep —
+/// link latency and per-hop cost, payload sizes, migration threshold,
+/// and the fault plan.  Every cell replays the whole corpus on a fresh
+/// cluster per prompt; there is no analytic fast path (remote routing
+/// breaks stack inclusion the same way prefetching does).
+pub fn sweep_cluster<const N: usize>(
+    kind: PredictorKind,
+    nodes: &[usize],
+    placements: &[PlacementKind],
+    gbps: &[f64],
+    cache_fracs: &[f64],
+    inputs: &SweepInputs<'_, N>,
+    base: &ClusterConfig,
+) -> Result<Vec<ClusterSweepPoint>> {
+    sweep_cluster_threaded(
+        kind,
+        nodes,
+        placements,
+        gbps,
+        cache_fracs,
+        inputs,
+        base,
+        sweep_threads(),
+    )
+}
+
+/// [`sweep_cluster`] on an explicit number of workers (`1` = serial).
+/// Row-major (nodes × placement × gbps × frac) output, deterministic at
+/// any worker count (grid-indexed write-back).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_cluster_threaded<const N: usize>(
+    kind: PredictorKind,
+    nodes: &[usize],
+    placements: &[PlacementKind],
+    gbps: &[f64],
+    cache_fracs: &[f64],
+    inputs: &SweepInputs<'_, N>,
+    base: &ClusterConfig,
+    threads: usize,
+) -> Result<Vec<ClusterSweepPoint>> {
+    let mut grid = Vec::with_capacity(
+        nodes.len() * placements.len() * gbps.len() * cache_fracs.len(),
+    );
+    for &k in nodes {
+        anyhow::ensure!(k >= 1, "cluster sweep needs node counts >= 1");
+        for &p in placements {
+            for &g in gbps {
+                for &f in cache_fracs {
+                    grid.push((k, p, g, f));
+                }
+            }
+        }
+    }
+    let compiled = corpus_for(inputs)?;
+    parallel_map(&grid, threads, |&point| {
+        run_cluster_point(kind, point, inputs, &compiled, base)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -927,6 +1081,109 @@ mod tests {
         let p1 = corpus.stackdist_profile(64, SimConfig::default().warmup_tokens, 1);
         let p2 = corpus.stackdist_profile(64, SimConfig::default().warmup_tokens, 4);
         assert!(std::sync::Arc::ptr_eq(&p1, &p2));
+    }
+
+    /// A 1-node cluster over a loopback link IS the flat Fig-7 sweep:
+    /// every counter and every float must agree bit-for-bit with the
+    /// exact flat replay, for prefetching and non-prefetching predictors
+    /// alike.
+    #[test]
+    fn k1_loopback_cluster_sweep_matches_flat_sweep_exactly() {
+        let test = mk_traces(5, 61);
+        let fit = mk_traces(6, 62);
+        let inp = inputs(&test, &fit);
+        let fracs = [0.05, 0.2, 0.8];
+        for kind in [PredictorKind::None, PredictorKind::Eam, PredictorKind::Oracle] {
+            let flat =
+                sweep_capacities_replay_threaded(kind, &fracs, &inp, 2).unwrap();
+            let cluster = sweep_cluster_threaded(
+                kind,
+                &[1],
+                &[PlacementKind::RoundRobin],
+                &[0.0],
+                &fracs,
+                &inp,
+                &ClusterConfig::default(),
+                2,
+            )
+            .unwrap();
+            assert_eq!(cluster.len(), flat.points.len());
+            for (c, f) in cluster.iter().zip(flat.points.iter()) {
+                assert_eq!(c.capacity_per_node, f.capacity_experts);
+                assert_eq!(c.gpu_hit_rate.to_bits(), f.hit_rate.to_bits());
+                assert_eq!(c.stats.hits, f.stats.hits);
+                assert_eq!(c.stats.misses, f.stats.misses);
+                assert_eq!(c.stats.prefetches, f.stats.prefetches);
+                assert_eq!(
+                    c.stats.transfer_us.to_bits(),
+                    f.stats.transfer_us.to_bits()
+                );
+                assert_eq!(c.net.remote_lookups, 0);
+                assert_eq!(c.net.total_us(), 0.0);
+                assert_eq!(c.remote_rate, 0.0);
+            }
+        }
+    }
+
+    /// Link bandwidth moves the modeled latency surface, never the
+    /// hit/miss routing.
+    #[test]
+    fn cluster_bandwidth_moves_latency_not_hit_rate() {
+        let test = mk_traces(4, 63);
+        let fit = mk_traces(4, 64);
+        let inp = inputs(&test, &fit);
+        let pts = sweep_cluster(
+            PredictorKind::None,
+            &[3],
+            &[PlacementKind::RoundRobin],
+            &[0.1, 10.0],
+            &[0.2],
+            &inp,
+            &ClusterConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts[0].net.remote_lookups > 0, "k=3 rr must route remotely");
+        assert_eq!(pts[0].gpu_hit_rate.to_bits(), pts[1].gpu_hit_rate.to_bits());
+        assert_eq!(pts[0].remote_rate.to_bits(), pts[1].remote_rate.to_bits());
+        assert!(
+            pts[0].critical_path_us > pts[1].critical_path_us,
+            "0.1 Gbps {} must cost more than 10 Gbps {}",
+            pts[0].critical_path_us,
+            pts[1].critical_path_us
+        );
+    }
+
+    /// Cluster grid: deterministic at any worker count, row-major order.
+    #[test]
+    fn threaded_cluster_sweep_matches_serial_exactly() {
+        let test = mk_traces(4, 65);
+        let fit = mk_traces(4, 66);
+        let inp = inputs(&test, &fit);
+        let run = |threads| {
+            sweep_cluster_threaded(
+                PredictorKind::Eam,
+                &[1, 3],
+                &[PlacementKind::RoundRobin, PlacementKind::LayerHash],
+                &[1.0],
+                &[0.1, 0.4],
+                &inp,
+                &ClusterConfig::default().with_promote_after(3),
+                threads,
+            )
+            .unwrap()
+        };
+        let serial = run(1);
+        let par = run(8);
+        assert_eq!(serial.len(), par.len());
+        assert_eq!(serial.len(), 2 * 2 * 2);
+        for (s, p) in serial.iter().zip(par.iter()) {
+            assert_eq!(s.nodes, p.nodes);
+            assert_eq!(s.placement, p.placement);
+            assert_eq!(s.gpu_hit_rate.to_bits(), p.gpu_hit_rate.to_bits());
+            assert_eq!(s.critical_path_us.to_bits(), p.critical_path_us.to_bits());
+            assert_eq!(s.net, p.net);
+        }
     }
 
     /// Tiered surface: same determinism guarantee over the 3-axis grid.

@@ -21,6 +21,11 @@
 //!   (the PCIe and SSD links are independent channels).
 //! * [`TierStats`] — per-depth serve counters (how many lookups each
 //!   tier absorbed), promotions, demotions, drops.
+//! * [`net`] — the network "tier": [`LinkSpec`] prices one inter-node
+//!   transfer (latency + per-hop cost + payload/bandwidth) the way
+//!   [`TierSpec`] prices one tier access, and [`NetCostModel`] /
+//!   [`NetStats`] accumulate those charges for the cluster backend
+//!   ([`crate::cluster`]).
 //!
 //! Tiered mode is opt-in everywhere: [`crate::memory::build`] selects
 //! [`crate::memory::TieredMemory`] (which composes these primitives)
@@ -29,10 +34,12 @@
 
 mod cache;
 mod cost;
+pub mod net;
 mod spec;
 mod stats;
 
 pub use cache::{Demotion, Promotion, TieredCache};
 pub use cost::{TierCost, TierCostModel};
+pub use net::{LinkSpec, NetCostModel, NetStats};
 pub use spec::TierSpec;
 pub use stats::TierStats;

@@ -1,0 +1,219 @@
+//! Network "tier" of the cost model — the per-link cost primitives the
+//! cluster backend charges for crossing node boundaries.
+//!
+//! The existing hierarchy ([`super::TierCostModel`]) prices a miss by
+//! the depth it had to reach (GPU ↔ host ↔ SSD).  A multi-node edge
+//! cluster adds one more rung below the local hierarchy: a peer node
+//! reachable over a link.  [`LinkSpec`] prices one transfer exactly the
+//! way [`super::TierSpec`] prices one tier access — a fixed latency, a
+//! per-hop switching cost, and a bandwidth term proportional to the
+//! payload — and [`NetCostModel`] accumulates those charges the way
+//! [`super::TierCost`] accumulates per-tier DMA, so the cluster's
+//! critical-path arithmetic composes with the per-node hierarchies
+//! instead of replacing them.
+//!
+//! All costs are µs-valued and every accumulation is a plain `+=` in a
+//! deterministic order, so seeded cluster runs are byte-reproducible
+//! (the same `to_bits` discipline the tier parity suites rely on).
+
+use crate::Result;
+
+/// One inter-node link: the network analogue of a [`super::TierSpec`].
+///
+/// A transfer of `mb` megabytes over `hops` hops costs
+/// `latency_us + per_hop_us * hops + mb * 8000 / gbps` microseconds
+/// (`gbps <= 0` models an infinitely fast link — only latency and
+/// per-hop cost remain, and [`LinkSpec::loopback`] zeroes those too).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    /// Fixed propagation/setup latency per transfer (µs).
+    pub latency_us: f64,
+    /// Link bandwidth in Gbit/s; `<= 0` means infinite.
+    pub gbps: f64,
+    /// Fixed switching cost per hop traversed (µs).
+    pub per_hop_us: f64,
+}
+
+impl LinkSpec {
+    pub fn new(latency_us: f64, gbps: f64, per_hop_us: f64) -> Self {
+        Self {
+            latency_us,
+            gbps,
+            per_hop_us,
+        }
+    }
+
+    /// The zero-cost link: every transfer is free.  A K=1 (or K-node,
+    /// zero-distance) cluster over a loopback link must be byte-identical
+    /// to the single-node path — the cluster parity suite pins that.
+    pub fn loopback() -> Self {
+        Self::new(0.0, 0.0, 0.0)
+    }
+
+    /// Wired edge LAN: 100 µs latency, 10 Gbit/s, 5 µs per hop.
+    pub fn lan() -> Self {
+        Self::new(100.0, 10.0, 5.0)
+    }
+
+    /// Wireless mesh (the OD-MoE regime): 2 ms latency, 1 Gbit/s,
+    /// 20 µs per hop.
+    pub fn wifi() -> Self {
+        Self::new(2_000.0, 1.0, 20.0)
+    }
+
+    /// Cost of moving `mb` megabytes across `hops` hops (µs).
+    #[inline]
+    pub fn transfer_us(&self, mb: f64, hops: usize) -> f64 {
+        let bw_us = if self.gbps > 0.0 {
+            mb * 8_000.0 / self.gbps
+        } else {
+            0.0
+        };
+        self.latency_us + self.per_hop_us * hops as f64 + bw_us
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.latency_us >= 0.0, "link latency must be >= 0");
+        anyhow::ensure!(self.per_hop_us >= 0.0, "per-hop cost must be >= 0");
+        anyhow::ensure!(self.gbps.is_finite(), "link bandwidth must be finite");
+        Ok(())
+    }
+}
+
+/// Cumulative network-transfer counters for one cluster run — the
+/// cluster-level twin of [`super::TierStats`], snapshotted into
+/// [`crate::memory::MemoryStats::net`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetStats {
+    /// Measured lookups routed to a remote owner (hits and misses).
+    pub remote_lookups: u64,
+    /// Remote lookups served from the owner's GPU tier.
+    pub remote_hits: u64,
+    /// Hot experts migrated into the front node's hierarchy.
+    pub promotions: u64,
+    /// Measured lookups rerouted around a failed owner.
+    pub failovers: u64,
+    /// Wire time charged for remote serves (activations + weights), µs.
+    pub wire_us: f64,
+    /// Wire time charged for promotion weight transfers, µs.
+    pub promotion_us: f64,
+}
+
+impl NetStats {
+    /// Total network µs on the modeled critical path.
+    pub fn total_us(&self) -> f64 {
+        self.wire_us + self.promotion_us
+    }
+
+    pub fn merge(&mut self, other: &NetStats) {
+        self.remote_lookups += other.remote_lookups;
+        self.remote_hits += other.remote_hits;
+        self.promotions += other.promotions;
+        self.failovers += other.failovers;
+        self.wire_us += other.wire_us;
+        self.promotion_us += other.promotion_us;
+    }
+}
+
+/// Accumulates link charges for one cluster backend: the network
+/// analogue of [`super::TierCostModel`], kept separate from the
+/// per-node models so `cost_marks` can sum node-local DMA and network
+/// time without double counting.
+#[derive(Debug, Clone)]
+pub struct NetCostModel {
+    pub link: LinkSpec,
+    /// Payload of one expert's weights (MB) — charged on remote misses
+    /// and promotions.
+    pub expert_mb: f64,
+    /// Payload of one activation round-trip (MB) — charged on remote
+    /// hits (the expert executes at its owner; activations travel).
+    pub act_mb: f64,
+    pub stats: NetStats,
+}
+
+impl NetCostModel {
+    pub fn new(link: LinkSpec, expert_mb: f64, act_mb: f64) -> Self {
+        Self {
+            link,
+            expert_mb,
+            act_mb,
+            stats: NetStats::default(),
+        }
+    }
+
+    /// Charge one measured remote lookup.  `hit` selects the activation
+    /// payload (the owner had the expert GPU-resident) vs the weight
+    /// payload (the owner faulted it up through its own hierarchy first,
+    /// which its backend charged separately).  Returns the wire µs
+    /// (already scaled by the straggler `mult`).
+    pub fn on_remote(&mut self, hit: bool, hops: usize, mult: f64) -> f64 {
+        let mb = if hit { self.act_mb } else { self.expert_mb };
+        let us = self.link.transfer_us(mb, hops) * mult;
+        self.stats.remote_lookups += 1;
+        if hit {
+            self.stats.remote_hits += 1;
+        }
+        self.stats.wire_us += us;
+        us
+    }
+
+    /// Charge one expert-weight migration to the front node.  Returns
+    /// the wire µs.
+    pub fn on_promotion(&mut self, hops: usize, mult: f64) -> f64 {
+        let us = self.link.transfer_us(self.expert_mb, hops) * mult;
+        self.stats.promotions += 1;
+        self.stats.promotion_us += us;
+        us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_decomposes_into_latency_hops_bandwidth() {
+        let l = LinkSpec::new(100.0, 10.0, 5.0);
+        // 25 MB over 2 hops: 100 + 10 + 25*8000/10 = 20110 µs
+        assert_eq!(l.transfer_us(25.0, 2), 20_110.0);
+        // zero-byte transfer still pays latency + hops
+        assert_eq!(l.transfer_us(0.0, 3), 115.0);
+    }
+
+    #[test]
+    fn loopback_is_free_and_infinite_bandwidth_skips_the_bw_term() {
+        assert_eq!(LinkSpec::loopback().transfer_us(1000.0, 7), 0.0);
+        let l = LinkSpec::new(50.0, 0.0, 0.0);
+        assert_eq!(l.transfer_us(1000.0, 0), 50.0);
+    }
+
+    #[test]
+    fn net_cost_accumulates_and_merges() {
+        let mut m = NetCostModel::new(LinkSpec::new(10.0, 0.0, 0.0), 25.0, 0.5);
+        let hit_us = m.on_remote(true, 1, 1.0);
+        let miss_us = m.on_remote(false, 1, 2.0);
+        assert_eq!(hit_us, 10.0);
+        assert_eq!(miss_us, 20.0); // straggler doubles it
+        let promo_us = m.on_promotion(1, 1.0);
+        assert_eq!(promo_us, 10.0);
+        assert_eq!(m.stats.remote_lookups, 2);
+        assert_eq!(m.stats.remote_hits, 1);
+        assert_eq!(m.stats.promotions, 1);
+        assert_eq!(m.stats.total_us(), 40.0);
+
+        let mut a = NetStats::default();
+        a.merge(&m.stats);
+        a.merge(&m.stats);
+        assert_eq!(a.remote_lookups, 4);
+        assert_eq!(a.total_us(), 80.0);
+    }
+
+    #[test]
+    fn validate_rejects_negative_costs() {
+        assert!(LinkSpec::new(-1.0, 1.0, 0.0).validate().is_err());
+        assert!(LinkSpec::new(0.0, 1.0, -2.0).validate().is_err());
+        assert!(LinkSpec::lan().validate().is_ok());
+        assert!(LinkSpec::wifi().validate().is_ok());
+        assert!(LinkSpec::loopback().validate().is_ok());
+    }
+}

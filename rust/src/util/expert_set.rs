@@ -75,6 +75,22 @@ macro_rules! for_expert_width {
 }
 
 /// A set of expert ids in `0..64*N`, represented as an `N`-word bitmask.
+///
+/// The default width (`ExpertSet` = `ExpertSet<1>`) covers up to 64
+/// experts in a single `u64`; wider worlds pick `N` once at the CLI
+/// boundary via [`for_expert_width!`](crate::for_expert_width).
+///
+/// # Example
+///
+/// ```
+/// use moe_beyond::util::ExpertSet;
+///
+/// let predicted: ExpertSet = ExpertSet::from_ids([3u8, 9, 41]);
+/// let actual: ExpertSet = ExpertSet::from_ids([9u8, 41, 63]);
+/// assert_eq!(predicted.overlap(actual), 2); // prediction hits
+/// assert_eq!(predicted.union(actual).len(), 4);
+/// assert!(!predicted.contains(63)); // this miss costs a demand fetch
+/// ```
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ExpertSet<const N: usize = 1>([u64; N]);
 

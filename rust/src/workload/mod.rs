@@ -28,6 +28,26 @@
 //! Everything is virtual-time and seed-deterministic: no wall clock, no
 //! artifacts, no PJRT — `cargo bench --bench workload_contention` and
 //! the `serve-sim` CLI subcommand run self-contained.
+//!
+//! # Example
+//!
+//! Materialize a deterministic two-tenant arrival schedule (the engine
+//! entry point is [`run_workload`]; `examples/multi_tenant.rs` walks
+//! the whole pipeline from spec to SLO report):
+//!
+//! ```
+//! use moe_beyond::workload::{synthetic_pools, WorkloadSpec};
+//!
+//! let spec = WorkloadSpec::example(2, 7, 4.0);
+//! let pools = synthetic_pools(&spec, 6, 4, 64);
+//! let schedule = spec.generate(&pools).unwrap();
+//! assert!(!schedule.arrivals.is_empty());
+//! // same seed, same pools ⇒ the same schedule, event for event
+//! assert_eq!(
+//!     schedule.arrivals.len(),
+//!     spec.generate(&pools).unwrap().arrivals.len()
+//! );
+//! ```
 
 pub mod profile;
 pub mod sched;

@@ -5,6 +5,7 @@
 //! (`util::parallel::parallel_map`, index-keyed write-back, bit-identical
 //! to a serial run).
 
+use crate::cluster::{self, ClusterConfig};
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
 use crate::memory;
 use crate::obs::ObsSink;
@@ -21,15 +22,23 @@ use crate::Result;
 pub enum Backend {
     Flat,
     Tiered,
+    /// K-node edge cluster ([`crate::cluster`]): flat per-node caches
+    /// sharded by [`LoadSweepInputs::cluster_base`].  Opt-in only — not
+    /// part of [`Backend::ALL`], so default grids (and the golden
+    /// contention bench pinned to them) are unchanged.
+    Cluster,
 }
 
 impl Backend {
+    /// The default sweep axis.  Deliberately excludes [`Backend::Cluster`]
+    /// (select it explicitly, e.g. `serve-sim --backends cluster`).
     pub const ALL: [Backend; 2] = [Backend::Flat, Backend::Tiered];
 
     pub fn id(&self) -> &'static str {
         match self {
             Backend::Flat => "flat",
             Backend::Tiered => "tiered",
+            Backend::Cluster => "cluster",
         }
     }
 
@@ -37,6 +46,7 @@ impl Backend {
         match s {
             "flat" => Some(Backend::Flat),
             "tiered" => Some(Backend::Tiered),
+            "cluster" => Some(Backend::Cluster),
             _ => None,
         }
     }
@@ -63,6 +73,11 @@ pub struct LoadSweepInputs<'a, const N: usize = 1> {
     /// Base hierarchy for `Backend::Tiered` points; its GPU tier is
     /// resized per cache fraction, host/SSD stay as configured.
     pub tier_base: &'a TierConfig,
+    /// Topology for `Backend::Cluster` points (node count, placement,
+    /// link, faults); each node's flat cache gets a `1/nodes` share of
+    /// the swept capacity.  `None` falls back to the 1-node loopback
+    /// cluster (byte-identical to `Backend::Flat`).
+    pub cluster_base: Option<&'a ClusterConfig>,
 }
 
 /// One grid point's outcome.
@@ -111,6 +126,23 @@ fn run_load_point<const N: usize>(
                 "lru",
                 &CacheConfig::default(),
                 Some(&cfg),
+                inputs.sim,
+                inputs.n_experts,
+                overlap_us,
+            )?
+        }
+        Backend::Cluster => {
+            let fallback = ClusterConfig::default();
+            let cfg = inputs.cluster_base.unwrap_or(&fallback);
+            // fixed per-device budget: the swept capacity is the
+            // aggregate, each node holds a 1/k share (same rounding as
+            // the flat arm at k = 1)
+            let cap_node = ((total as f64 * cache_frac / cfg.nodes as f64).round() as usize).max(1);
+            cluster::build::<N>(
+                cfg,
+                "lru",
+                &CacheConfig::default().with_capacity(cap_node),
+                None,
                 inputs.sim,
                 inputs.n_experts,
                 overlap_us,
@@ -301,6 +333,7 @@ mod tests {
             n_layers: 3,
             n_experts: 64,
             tier_base: &tier,
+            cluster_base: None,
         };
         let policies = [SchedPolicy::Fcfs, SchedPolicy::RoundRobin];
         let backends = [Backend::Flat, Backend::Tiered];
@@ -338,5 +371,73 @@ mod tests {
         let csv = load_csv(&serial);
         assert_eq!(csv.lines().count(), serial.len() + 1);
         assert!(csv.starts_with("policy,backend,predictor"));
+    }
+
+    /// A 1-node loopback cluster backend drains the workload
+    /// byte-identically to the flat backend (the workload-level face of
+    /// the cluster parity contract; the replay-level suite lives in
+    /// `tests/cluster_parity.rs`).
+    #[test]
+    fn cluster_k1_loopback_matches_flat_backend_exactly() {
+        let (spec, pools, fit) = fixture();
+        let wcfg = WorkloadConfig::default();
+        let tier = TierConfig::default();
+        let sim = SimConfig::default();
+        let eam = EamConfig {
+            kmeans_clusters: 0,
+            ..Default::default()
+        };
+        let k1 = ClusterConfig::default();
+        let inputs: LoadSweepInputs = LoadSweepInputs {
+            spec: &spec,
+            pools: &pools,
+            fit_traces: &fit,
+            learned: None,
+            workload: &wcfg,
+            sim: &sim,
+            eam: &eam,
+            n_layers: 3,
+            n_experts: 64,
+            tier_base: &tier,
+            cluster_base: Some(&k1),
+        };
+        let policies = [SchedPolicy::Fcfs];
+        let kinds = [PredictorKind::Eam];
+        let loads = [1.5];
+        let fracs = [0.1, 0.4];
+        let flat = sweep_load_threaded(
+            &inputs, &policies, &[Backend::Flat], &kinds, &loads, &fracs, 1,
+        )
+        .unwrap();
+        let cluster = sweep_load_threaded(
+            &inputs, &policies, &[Backend::Cluster], &kinds, &loads, &fracs, 1,
+        )
+        .unwrap();
+        assert_eq!(flat.len(), cluster.len());
+        for (f, c) in flat.iter().zip(cluster.iter()) {
+            assert_eq!(c.backend, Backend::Cluster);
+            assert_eq!(c.report.backend, "cluster");
+            let (fa, ca) = (&f.report.aggregate, &c.report.aggregate);
+            assert_eq!(fa.completed, ca.completed);
+            assert_eq!(fa.cache.hits, ca.cache.hits);
+            assert_eq!(fa.cache.misses, ca.cache.misses);
+            assert_eq!(fa.cache.prefetches, ca.cache.prefetches);
+            assert_eq!(
+                fa.cache.transfer_us.to_bits(),
+                ca.cache.transfer_us.to_bits()
+            );
+            assert_eq!(
+                f.report.virtual_secs.to_bits(),
+                c.report.virtual_secs.to_bits()
+            );
+            assert_eq!(
+                f.report.memory.demand_us.to_bits(),
+                c.report.memory.demand_us.to_bits()
+            );
+            assert_eq!(
+                f.report.memory.stall_us.to_bits(),
+                c.report.memory.stall_us.to_bits()
+            );
+        }
     }
 }

@@ -1,0 +1,266 @@
+//! Cluster-backend parity and determinism suites.
+//!
+//! The multi-node cluster simulator (`moe_beyond::cluster`) is one more
+//! `ExpertMemory` backend, so it is held to the same structural
+//! guarantees as every other fast path in this repo:
+//!
+//! * a K=1 cluster over a zero-cost loopback link is BYTE-identical to
+//!   the single-node backend it wraps — for flat nodes and for full
+//!   tiered hierarchies, over random-trace replays with and without an
+//!   oracle prefetcher,
+//! * the native `lookup_set` matches the trait-default scalar
+//!   delegation (`memory::ScalarPath`) on a live K=3 cluster,
+//! * a seeded K=3 run with an injected node failure and a straggler
+//!   link is byte-identical across two full replays.
+
+use moe_beyond::cache::CacheStats;
+use moe_beyond::cluster::{self, ClusterConfig, FaultPlan, PlacementKind};
+use moe_beyond::config::{CacheConfig, SimConfig, TierConfig};
+use moe_beyond::memory::{self, ExpertMemory, ScalarPath};
+use moe_beyond::predictor::{NoPrefetch, OraclePredictor};
+use moe_beyond::sim::SimEngine;
+use moe_beyond::tier::{LinkSpec, TierSpec};
+use moe_beyond::trace::PromptTrace;
+use moe_beyond::util::Rng;
+
+const N_EXPERTS: usize = 16;
+
+fn random_trace(rng: &mut Rng, n_tokens: usize, n_layers: u16, pool: u8) -> PromptTrace {
+    let mut experts = Vec::new();
+    for _ in 0..n_tokens * n_layers as usize {
+        let a = rng.below(pool as usize) as u8;
+        let b = (a + 1 + rng.below(pool as usize - 2) as u8) % pool;
+        experts.push(a);
+        experts.push(b);
+    }
+    PromptTrace {
+        prompt_id: 0,
+        n_layers,
+        top_k: 2,
+        d_emb: 0,
+        tokens: vec![0; n_tokens],
+        embeddings: vec![],
+        experts,
+    }
+}
+
+fn assert_stats_identical(label: &str, a: &CacheStats, b: &CacheStats) {
+    assert_eq!(a.hits, b.hits, "{label}: hits");
+    assert_eq!(a.misses, b.misses, "{label}: misses");
+    assert_eq!(a.prefetches, b.prefetches, "{label}: prefetches");
+    assert_eq!(a.wasted_prefetches, b.wasted_prefetches, "{label}: wasted");
+    assert_eq!(a.prediction_hits, b.prediction_hits, "{label}: pred hits");
+    assert_eq!(a.prediction_total, b.prediction_total, "{label}: pred total");
+    assert_eq!(
+        a.transfer_us.to_bits(),
+        b.transfer_us.to_bits(),
+        "{label}: transfer_us ({} vs {})",
+        a.transfer_us,
+        b.transfer_us
+    );
+}
+
+fn run_engine(
+    mut memory: Box<dyn ExpertMemory>,
+    traces: &[PromptTrace],
+    sim: &SimConfig,
+    oracle: bool,
+) -> (CacheStats, (f64, f64), usize) {
+    let mut stats = CacheStats::default();
+    memory.set_prefetch_budget(sim.prefetch_budget);
+    let mut engine = SimEngine::new(memory, sim.clone(), N_EXPERTS);
+    for tr in traces {
+        if oracle {
+            engine.run_prompt(tr, &mut OraclePredictor::new(), &mut stats);
+        } else {
+            engine.run_prompt(tr, &mut NoPrefetch, &mut stats);
+        }
+    }
+    let marks = engine.memory.cost_marks();
+    let resident = engine.memory.resident_count();
+    (stats, marks, resident)
+}
+
+/// K=1 loopback cluster around flat LRU nodes vs the flat backend
+/// itself: full random-trace replays must agree in every counter, every
+/// modeled cost bit, and the final residency.
+#[test]
+fn k1_loopback_cluster_matches_flat_replay_bit_for_bit() {
+    let mut rng = Rng::new(601);
+    for case in 0..20 {
+        let n_prompts = rng.range(1, 4);
+        let traces: Vec<PromptTrace> = (0..n_prompts)
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
+            .collect();
+        let cap = rng.range(1, 24);
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let cache = CacheConfig::default().with_capacity(cap);
+        let cfg = ClusterConfig::default(); // 1 node, loopback link
+        for oracle in [false, true] {
+            let clustered =
+                cluster::build::<1>(&cfg, "lru", &cache, None, &sim, N_EXPERTS, 1_000.0).unwrap();
+            let single =
+                memory::build::<1>("lru", &cache, None, &sim, N_EXPERTS, 1_000.0).unwrap();
+            let (cs, cm, cr) = run_engine(clustered, &traces, &sim, oracle);
+            let (ss, sm, sr) = run_engine(single, &traces, &sim, oracle);
+            let label = format!("flat case {case} oracle={oracle}");
+            assert_stats_identical(&label, &ss, &cs);
+            assert_eq!(cm.0.to_bits(), sm.0.to_bits(), "{label}: demand marks");
+            assert_eq!(cm.1.to_bits(), sm.1.to_bits(), "{label}: stall marks");
+            assert_eq!(cr, sr, "{label}: residency");
+        }
+    }
+}
+
+/// Same guarantee with full tiered hierarchies inside each node: the
+/// K=1 loopback cluster replays byte-identically to the single-node
+/// tiered backend, per-tier counters included.
+#[test]
+fn k1_loopback_cluster_matches_tiered_replay_bit_for_bit() {
+    let mut rng = Rng::new(602);
+    for case in 0..12 {
+        let traces: Vec<PromptTrace> = (0..rng.range(1, 4))
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
+            .collect();
+        let tier = TierConfig {
+            tiers: vec![
+                TierSpec::new("gpu", rng.range(1, 6), 2.0, 0.0),
+                TierSpec::new("host", rng.range(2, 12), 1400.0, 1400.0),
+                TierSpec::new("ssd", rng.range(12, 64), 22_000.0, 0.0),
+            ],
+            policy: "lru".into(),
+        };
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let cache = CacheConfig::default();
+        let cfg = ClusterConfig::default();
+        for oracle in [false, true] {
+            let clustered = cluster::build::<1>(
+                &cfg, "lru", &cache, Some(&tier), &sim, N_EXPERTS, 1_000.0,
+            )
+            .unwrap();
+            let single =
+                memory::build::<1>("lru", &cache, Some(&tier), &sim, N_EXPERTS, 1_000.0).unwrap();
+            let mut ce = SimEngine::new(clustered, sim.clone(), N_EXPERTS);
+            let mut se = SimEngine::new(single, sim.clone(), N_EXPERTS);
+            let (mut cs, mut ss) = (CacheStats::default(), CacheStats::default());
+            for tr in &traces {
+                if oracle {
+                    ce.run_prompt(tr, &mut OraclePredictor::new(), &mut cs);
+                    se.run_prompt(tr, &mut OraclePredictor::new(), &mut ss);
+                } else {
+                    ce.run_prompt(tr, &mut NoPrefetch, &mut cs);
+                    se.run_prompt(tr, &mut NoPrefetch, &mut ss);
+                }
+            }
+            let label = format!("tiered case {case} oracle={oracle}");
+            assert_stats_identical(&label, &ss, &cs);
+            let (cm, sm) = (ce.memory.stats(), se.memory.stats());
+            assert_eq!(
+                cm.critical_path_us().to_bits(),
+                sm.critical_path_us().to_bits(),
+                "{label}: critical path"
+            );
+            assert_eq!(cm.resident_per_depth, sm.resident_per_depth, "{label}: depth");
+            let (ct, st) = (cm.tiers.as_ref().unwrap(), sm.tiers.as_ref().unwrap());
+            assert_eq!(ct.served, st.served, "{label}: served");
+            assert_eq!(ct.cold, st.cold, "{label}: cold");
+            assert_eq!(ct.promotions, st.promotions, "{label}: promotions");
+            assert_eq!(ct.demotions, st.demotions, "{label}: demotions");
+            assert_eq!(ct.dropped, st.dropped, "{label}: dropped");
+            // loopback link, one node: the network tier never engaged
+            let net = cm.net.as_ref().unwrap();
+            assert_eq!(net.remote_lookups, 0, "{label}: remote lookups");
+            assert_eq!(net.total_us(), 0.0, "{label}: wire time");
+        }
+    }
+}
+
+/// Native cluster `lookup_set` vs the trait-default scalar delegation on
+/// a live K=3 cluster with a priced LAN link and migration enabled.
+#[test]
+fn cluster_batched_lookup_matches_scalar_delegation() {
+    let mut rng = Rng::new(603);
+    let cfg = ClusterConfig::default()
+        .with_nodes(3)
+        .with_placement(PlacementKind::LayerHash)
+        .with_link(LinkSpec::lan())
+        .with_promote_after(3);
+    for case in 0..15 {
+        let traces: Vec<PromptTrace> = (0..rng.range(1, 4))
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
+            .collect();
+        let cap = rng.range(1, 12);
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let cache = CacheConfig::default().with_capacity(cap);
+        let mk = || cluster::build::<1>(&cfg, "lru", &cache, None, &sim, N_EXPERTS, 1_000.0)
+            .unwrap();
+        for oracle in [false, true] {
+            let (native, nm, nr) = run_engine(mk(), &traces, &sim, oracle);
+            let (scalar, sm, sr) =
+                run_engine(Box::new(ScalarPath::new(mk())), &traces, &sim, oracle);
+            let label = format!("cluster case {case} oracle={oracle}");
+            assert_stats_identical(&label, &scalar, &native);
+            assert_eq!(nm.0.to_bits(), sm.0.to_bits(), "{label}: demand marks");
+            assert_eq!(nm.1.to_bits(), sm.1.to_bits(), "{label}: stall marks");
+            assert_eq!(nr, sr, "{label}: residency");
+        }
+    }
+}
+
+/// A seeded K=3 replay with an injected node failure, a straggler link,
+/// and hot-expert migration is byte-identical across two full runs —
+/// the fault clock ticks on measured lookups, not wall time.
+#[test]
+fn seeded_faulty_cluster_replay_is_byte_identical_across_runs() {
+    let cfg = ClusterConfig::default()
+        .with_nodes(3)
+        .with_placement(PlacementKind::RoundRobin)
+        .with_link(LinkSpec::new(50.0, 1.0, 5.0))
+        .with_promote_after(2)
+        .with_faults(FaultPlan::none().with_failure(2, 40).with_straggler(1, 2.5));
+    let run = || {
+        let mut rng = Rng::new(604);
+        let traces: Vec<PromptTrace> = (0..4)
+            .map(|_| random_trace(&mut rng, 32, 3, 16))
+            .collect();
+        let sim = SimConfig::default();
+        let cache = CacheConfig::default().with_capacity(6);
+        let memory =
+            cluster::build::<1>(&cfg, "lru", &cache, None, &sim, N_EXPERTS, 1_000.0).unwrap();
+        let (stats, marks, resident) = run_engine(memory, &traces, &sim, true);
+        (
+            stats.hits,
+            stats.misses,
+            stats.prefetches,
+            stats.transfer_us.to_bits(),
+            marks.0.to_bits(),
+            marks.1.to_bits(),
+            resident,
+        )
+    };
+    let a = run();
+    assert_eq!(a, run(), "two identical faulty-cluster runs diverged");
+    // the failure actually engaged: enough measured lookups to pass 40
+    assert!(a.0 + a.1 > 40, "scenario too small to exercise the failure");
+}

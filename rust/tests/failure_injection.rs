@@ -1,8 +1,18 @@
-//! Failure-injection tests: corrupted or inconsistent artifact trees must
-//! be rejected loudly at load time, never produce silent wrong numbers.
+//! Failure-injection tests, two families:
+//!
+//! * artifact-tree faults: corrupted or inconsistent artifact trees must
+//!   be rejected loudly at load time, never produce silent wrong numbers
+//!   (these skip silently when the artifact tree is absent);
+//! * cluster faults: scheduled node failures and straggler links in the
+//!   multi-node edge-cluster simulator must change results in the
+//!   direction physics demands, deterministically — these run
+//!   self-contained on synthetic lookups, no artifacts needed.
 
-use moe_beyond::config::Artifacts;
+use moe_beyond::cluster::{self, ClusterConfig, FaultPlan, PlacementKind};
+use moe_beyond::config::{Artifacts, CacheConfig, SimConfig};
+use moe_beyond::memory::ExpertMemory;
 use moe_beyond::runtime::WeightBlob;
+use moe_beyond::tier::LinkSpec;
 use moe_beyond::trace::store;
 
 fn real_artifacts() -> Option<std::path::PathBuf> {
@@ -101,4 +111,104 @@ fn garbage_hlo_rejected_at_compile() {
     std::fs::write(&p, "HloModule not_really { this is not hlo }").unwrap();
     let rt = moe_beyond::runtime::PjrtRuntime::cpu().unwrap();
     assert!(rt.load_hlo_text(&p).is_err());
+}
+
+// ---- cluster fault injection (self-contained, no artifacts) ----------
+
+fn faulty_cluster(cfg: &ClusterConfig) -> Box<dyn ExpertMemory> {
+    cluster::build::<1>(
+        cfg,
+        "lru",
+        &CacheConfig::default().with_capacity(4),
+        None,
+        &SimConfig::default(),
+        64,
+        1_000.0,
+    )
+    .unwrap()
+}
+
+/// Drive a fixed synthetic access pattern and return the fault-relevant
+/// observables (all bit-exact fields).
+fn drive(cfg: &ClusterConfig) -> (u64, u64, u64, u64) {
+    let mut c = faulty_cluster(cfg);
+    for t in 0..120usize {
+        c.lookup(t % 4, ((t * 5) % 64) as u8, true);
+        if t % 8 == 7 {
+            c.end_layer();
+        }
+    }
+    let net = c.stats().net.expect("cluster backend reports net stats");
+    (
+        net.remote_lookups,
+        net.failovers,
+        net.promotions,
+        net.total_us().to_bits(),
+    )
+}
+
+/// A scheduled node failure reroutes every lookup the dead node owned
+/// (ring failover), and does so identically on every run.
+#[test]
+fn node_failure_scenario_is_deterministic_and_reroutes() {
+    let healthy = ClusterConfig::default()
+        .with_nodes(3)
+        .with_link(LinkSpec::lan());
+    let faulty = healthy
+        .clone()
+        .with_faults(FaultPlan::none().with_failure(1, 30));
+    let h = drive(&healthy);
+    let f = drive(&faulty);
+    assert_eq!(h.1, 0, "healthy cluster must not fail over");
+    assert!(f.1 > 0, "failure at lookup 30 must trigger failovers");
+    // determinism: same plan, same numbers, bit for bit
+    assert_eq!(f, drive(&faulty));
+    assert_eq!(h, drive(&healthy));
+}
+
+/// A straggler link only inflates wire time — routing, failovers, and
+/// promotion behavior are untouched.
+#[test]
+fn straggler_scenario_slows_the_wire_but_not_the_routing() {
+    let base = ClusterConfig::default()
+        .with_nodes(3)
+        .with_placement(PlacementKind::Block)
+        .with_link(LinkSpec::new(100.0, 1.0, 10.0));
+    let slow = base
+        .clone()
+        .with_faults(FaultPlan::none().with_straggler(2, 4.0));
+    let b = drive(&base);
+    let s = drive(&slow);
+    assert_eq!(b.0, s.0, "straggler must not change routing");
+    assert_eq!(b.1, s.1, "straggler must not cause failovers");
+    assert_eq!(b.2, s.2, "straggler must not change promotions");
+    assert!(
+        f64::from_bits(s.3) > f64::from_bits(b.3),
+        "straggler must inflate total wire time"
+    );
+    assert_eq!(s, drive(&slow), "straggler scenario must be deterministic");
+}
+
+/// Fault plans that name impossible nodes are rejected at validation,
+/// not silently ignored at runtime.
+#[test]
+fn invalid_fault_plans_rejected_at_validation() {
+    // node index out of range
+    assert!(ClusterConfig::default()
+        .with_nodes(2)
+        .with_faults(FaultPlan::none().with_failure(5, 0))
+        .validate()
+        .is_err());
+    // the front node may never fail (it drives decode)
+    assert!(ClusterConfig::default()
+        .with_nodes(2)
+        .with_faults(FaultPlan::none().with_failure(0, 10))
+        .validate()
+        .is_err());
+    // straggler multipliers below 1 would speed the link up
+    assert!(ClusterConfig::default()
+        .with_nodes(2)
+        .with_faults(FaultPlan::none().with_straggler(1, 0.5))
+        .validate()
+        .is_err());
 }
