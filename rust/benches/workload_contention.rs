@@ -78,6 +78,7 @@ fn run_all() -> Result<(Vec<LoadPoint>, Vec<LoadPoint>)> {
         n_experts: N_EXPERTS,
         tier_base: &tiers,
         cluster_base: None,
+        engine_shards: 1,
     };
 
     // headline: every policy × both backends at one contended point

@@ -298,6 +298,12 @@ pub struct WorkloadConfig {
     /// Modeled prefill compute per prompt token (µs); prefill is one
     /// batched pass, so this is well below the decode-step cost.
     pub prefill_us_per_token: f64,
+    /// Cap on the report's `completion_ids` log (request ids in
+    /// completion order, kept for scheduler-ordering tests).  A
+    /// million-stream drain must not retain every id, so the log stops
+    /// growing here; FCFS-order violations are still counted exactly by
+    /// the O(1) streaming `SchedCounters::out_of_order_completions`.
+    pub completion_log_cap: usize,
 }
 
 impl Default for WorkloadConfig {
@@ -308,6 +314,7 @@ impl Default for WorkloadConfig {
             // one knob: the serving engine's per-token decode wall
             token_compute_us: CacheConfig::default().overlap_decode_us,
             prefill_us_per_token: 3_000.0,
+            completion_log_cap: 4_096,
         }
     }
 }

@@ -91,6 +91,9 @@ COMMANDS:
                     --policies fcfs,round-robin,srd   --backends flat,tiered
                     --predictors eam,none             --loads 0.5,1,2,4
                     --fracs 0.05,0.10,0.20            --max-concurrency 4
+                    --shards 1            (tenant-sharded parallel drain per
+                                           point: K replica engines, merged in
+                                           deterministic shard-index order)
                     --out serve_sim.csv   (synthetic corpora when no artifacts)
                     --experts 64          (synthetic worlds only; up to 256 —
                                            >64 selects a multi-word ExpertSet)
@@ -493,6 +496,7 @@ fn serve_sim_grid<const N: usize>(
         n_experts,
         tier_base: &tier_base,
         cluster_base: Some(&cluster_base),
+        engine_shards: args.get_usize("shards", 1)?,
     };
     println!(
         "serve-sim: {} tenants, horizon {:.0}s, base offered {:.2} rps; {} grid points",
@@ -545,8 +549,20 @@ fn serve_sim_grid<const N: usize>(
     let metrics_out = args.get("metrics-out", "");
     if !trace_out.is_empty() || !metrics_out.is_empty() {
         let obs = moe_beyond::obs::ObsSink::active(moe_beyond::obs::DEFAULT_RING_CAP, "virtual");
+        // shard engines drain with no-op sinks, so the traced re-run
+        // always uses the single-engine drain
+        let traced_inputs = workload::LoadSweepInputs {
+            engine_shards: 1,
+            ..inputs
+        };
         let pt = workload::run_point_obs(
-            &inputs, policies[0], backends[0], kinds[0], loads[0], fracs[0], &obs,
+            &traced_inputs,
+            policies[0],
+            backends[0],
+            kinds[0],
+            loads[0],
+            fracs[0],
+            &obs,
         )?;
         println!(
             "\ntraced re-run: {} x {} x {} @ load {:.2}, cap {:.0}% ({} completions)",

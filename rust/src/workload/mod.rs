@@ -51,6 +51,7 @@
 
 pub mod profile;
 pub mod sched;
+mod sched_queue;
 pub mod slo;
 pub mod sweep_load;
 
@@ -59,7 +60,8 @@ pub use profile::{
     TenantProfile, WorkloadSpec,
 };
 pub use sched::{
-    run_workload, run_workload_compiled, run_workload_obs, SchedCounters, SchedPolicy,
+    inflight_state_bytes_per_stream, run_workload, run_workload_compiled, run_workload_engine,
+    run_workload_obs, run_workload_sharded, MemoryBuilder, SchedCounters, SchedEngine, SchedPolicy,
     WorkloadInputs,
 };
 pub use slo::{report_json, TenantSlo, WorkloadReport};

@@ -13,20 +13,39 @@
 //! that token; prefill occupies `prefill_us_per_token × prompt` plus its
 //! fetch traffic.  No wall clock is ever read, so a seeded workload
 //! replays byte-identically — the CI perf gate depends on this.
+//!
+//! # Scale
+//!
+//! The drain sustains 10⁵–10⁶ concurrent streams: in-flight state lives
+//! in flat SoA columns (`SoaStreams`) indexed by a stable slot, the
+//! runnable set is an O(1)-amortized bucket/ring index
+//! (`workload/sched_queue.rs`), per-slot predictors are built
+//! lazily on first use, and everything scales with the concurrency
+//! high-water mark rather than the configured limit
+//! ([`inflight_state_bytes_per_stream`] states the per-stream budget,
+//! gated ≤ 128 B by `benches/workload_scale.rs`).  The original
+//! linear-scan algorithm is retained verbatim behind
+//! [`SchedEngine::LinearScan`] and the parity suite in
+//! `tests/workload_determinism.rs` pins the indexed engine byte-identical
+//! to it on all three policies.  [`run_workload_sharded`] partitions
+//! tenants across replica engines drained in parallel and merges the
+//! accumulators in deterministic shard-index order.
 
 use std::sync::Arc;
 
 use crate::config::{EamConfig, SimConfig, WorkloadConfig};
-use crate::memory::ExpertMemory;
+use crate::memory::{ExpertMemory, MemoryStats};
 use crate::metrics::Counter;
 use crate::obs::{AtomicHist, ObsSink, TraceEvent};
 use crate::predictor::{
-    factory, CachedPredictor, DecodeContext, ExpertPredictor, NoPrefetch, PredictorKind,
-    PredictorParams, TracePredictions,
+    factory, CachedPredictor, DecodeContext, ExpertPredictor, PredictorKind, PredictorParams,
+    TracePredictions,
 };
 use crate::trace::{CompiledCorpus, PromptTrace};
+use crate::util::parallel::parallel_map;
 use crate::util::ExpertSet;
 use crate::workload::profile::{Schedule, WorkloadSpec};
+use crate::workload::sched_queue::{IndexedRunnable, ReferenceRunnable, RunnableSet, StepOutcome};
 use crate::workload::slo::{TenantAcc, WorkloadReport};
 use crate::Result;
 
@@ -85,6 +104,23 @@ impl SchedPolicy {
     }
 }
 
+/// Which runnable-set implementation drives the drain loop.  Both
+/// produce byte-identical reports (pinned by the scale-parity suite);
+/// the indexed engine is the production path, the linear scan is the
+/// O(n²)-at-scale reference it is verified against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedEngine {
+    /// O(1)-amortized pick/admit/complete via the
+    /// `workload/sched_queue.rs` structures (min-index free-slot
+    /// bitmap, admission ring, remaining-decode bucket queue).
+    #[default]
+    Indexed,
+    /// The original linear scans (`position(|b| !*b)` slot search,
+    /// whole-vector shortest-remaining scan, `Vec::remove` completion),
+    /// retained verbatim as the parity reference.
+    LinearScan,
+}
+
 /// Scheduler invariant counters — deterministic integers the perf gate
 /// and the invariant tests key on.
 #[derive(Debug, Clone, Default)]
@@ -96,7 +132,10 @@ pub struct SchedCounters {
     pub admissions: u64,
     pub completions: u64,
     pub max_inflight: usize,
-    /// Largest number of arrived-but-unadmitted requests observed.
+    /// Largest number of arrived-but-unadmitted requests observed,
+    /// sampled after arrivals become due and BEFORE admission drains
+    /// them — so a burst that admits within one loop iteration still
+    /// reports its true backlog.
     pub max_queue_depth: usize,
     /// Virtual µs the engine spent executing.
     pub busy_us: f64,
@@ -109,6 +148,11 @@ pub struct SchedCounters {
     /// runnable stream existed.  Always 0 under round-robin (the
     /// no-starvation guarantee); positive by design under FCFS.
     pub repeat_pick_with_waiters: u64,
+    /// Completions whose request id undercut an earlier-completed id —
+    /// the O(1) streaming replacement for checking the full (now
+    /// capped) `completion_ids` log for FCFS arrival-order drains.
+    /// Exact at any scale; not part of the report's JSON encoding.
+    pub out_of_order_completions: u64,
 }
 
 /// Everything one simulator run reads.
@@ -136,18 +180,55 @@ pub struct WorkloadInputs<'a, const N: usize = 1> {
     pub n_experts: usize,
 }
 
-/// One in-flight decode stream.
-struct Stream {
-    tenant: usize,
-    request_id: u64,
-    trace_idx: usize,
-    prompt: usize,
-    decode: usize,
-    arrival_us: f64,
-    slot: usize,
-    decoded: usize,
-    prefilled: bool,
-    last_token_us: f64,
+/// Flat structure-of-arrays in-flight stream state, indexed by the
+/// stable slot the runnable structures hand out.  Columns grow to the
+/// concurrency high-water mark and are reused across the requests a
+/// slot serves — no per-stream allocation, ever.
+#[derive(Debug, Default)]
+struct SoaStreams {
+    tenant: Vec<u32>,
+    request_id: Vec<u64>,
+    trace_idx: Vec<u32>,
+    prompt: Vec<u32>,
+    decode: Vec<u32>,
+    decoded: Vec<u32>,
+    arrival_us: Vec<f64>,
+    last_token_us: Vec<f64>,
+    prefilled: Vec<bool>,
+}
+
+impl SoaStreams {
+    fn ensure(&mut self, slot: usize) {
+        if self.tenant.len() <= slot {
+            let n = slot + 1;
+            self.tenant.resize(n, 0);
+            self.request_id.resize(n, 0);
+            self.trace_idx.resize(n, 0);
+            self.prompt.resize(n, 0);
+            self.decode.resize(n, 0);
+            self.decoded.resize(n, 0);
+            self.arrival_us.resize(n, 0.0);
+            self.last_token_us.resize(n, 0.0);
+            self.prefilled.resize(n, false);
+        }
+    }
+}
+
+/// Bytes of per-stream in-flight scheduler state: the analytic sum of
+/// one slot's share of every SoA column, queue link, and lazy-predictor
+/// handle (predictor *internals* are shared per slot and bounded by the
+/// predictor kind, not the stream count).  `benches/workload_scale.rs`
+/// gates this against the 128-byte scale budget.
+pub fn inflight_state_bytes_per_stream() -> usize {
+    use std::mem::size_of;
+    // SoaStreams: tenant/trace_idx/prompt/decode/decoded + request_id
+    // + arrival_us/last_token_us + prefilled
+    let soa = 5 * size_of::<u32>() + size_of::<u64>() + 2 * size_of::<f64>() + size_of::<bool>();
+    let ring = 2 * size_of::<u32>(); // AdmitRing prev/next links
+    let bucket = size_of::<u32>(); // RemainingBuckets intra-bucket link
+    let bitmap = 1; // FreeSlots hierarchical bitmap: ~1.02 bits/slot
+    let predictor = size_of::<Option<Box<dyn ExpertPredictor<1>>>>();
+    soa + ring + bucket + bitmap + predictor
 }
 
 /// Run one multi-tenant workload to drain against `memory`.
@@ -197,15 +278,233 @@ pub fn run_workload_compiled<'a, const N: usize>(
 pub fn run_workload_obs<'a, const N: usize>(
     inp: &WorkloadInputs<'a, N>,
     kind: PredictorKind,
-    mut memory: Box<dyn ExpertMemory<N>>,
+    memory: Box<dyn ExpertMemory<N>>,
     compiled_pools: &[CompiledCorpus<N>],
     obs: &ObsSink,
 ) -> Result<WorkloadReport> {
+    run_workload_engine(inp, kind, memory, compiled_pools, obs, SchedEngine::default())
+}
+
+/// [`run_workload_obs`] with an explicit [`SchedEngine`] selection —
+/// the parity suite drains the same inputs through both engines and
+/// asserts byte-identical reports and traces.
+pub fn run_workload_engine<'a, const N: usize>(
+    inp: &WorkloadInputs<'a, N>,
+    kind: PredictorKind,
+    mut memory: Box<dyn ExpertMemory<N>>,
+    compiled_pools: &[CompiledCorpus<N>],
+    obs: &ObsSink,
+    engine: SchedEngine,
+) -> Result<WorkloadReport> {
+    let (policy, learned) = validate_inputs(inp, kind, compiled_pools)?;
+    let backend = memory.name().to_string();
+    memory.set_obs(obs.clone());
+    let cx = DrainCtx {
+        inp,
+        kind,
+        learned,
+        policy,
+        compiled_pools,
+        obs,
+        tobs: resolve_tobs(inp, policy, obs),
+    };
+    let out = match engine {
+        SchedEngine::Indexed => {
+            let mut q = IndexedRunnable::new(policy);
+            drain(&cx, &mut q, memory.as_mut())?
+        }
+        SchedEngine::LinearScan => {
+            let mut q = ReferenceRunnable::new(policy);
+            drain(&cx, &mut q, memory.as_mut())?
+        }
+    };
+    Ok(fold_report(inp, kind, policy, backend, memory.stats(), out, obs))
+}
+
+/// Factory for one engine's memory replica: [`run_workload_sharded`]
+/// calls it once per shard, inside that shard's worker thread.
+pub type MemoryBuilder<const N: usize> = dyn Fn() -> Result<Box<dyn ExpertMemory<N>>> + Sync;
+
+/// Shard-then-merge drain for the many-tenant regime: tenants are
+/// partitioned by `tenant % shards`, each shard's sub-schedule drains on
+/// its own full engine (its own memory replica from `build_memory`, its
+/// own virtual clock) across `threads` workers, and the per-tenant
+/// accumulators are merged in deterministic shard-index order — exact,
+/// because the PR-6 histograms and every counter merge associatively
+/// and a tenant's streams never cross shards.
+///
+/// Semantics: each shard is a full REPLICA engine (the point's whole
+/// memory capacity), so the merged report models `shards` independent
+/// servers splitting the tenant population — the scale-out analogue of
+/// the single-engine run, not a partition of one engine's capacity
+/// (that is the cluster backend's job).  Consequences, documented in
+/// `rust/BENCHMARKS.md`: `virtual_secs` is the max over shard clocks
+/// (wall time of the slowest replica), `max_*` counters sum as
+/// aggregate capacity bounds, `completion_ids` is empty (per-shard
+/// completion order does not interleave into one global order), and
+/// shards drain with no-op observability sinks (use `shards = 1` for
+/// traced runs).
+pub fn run_workload_sharded<'a, const N: usize>(
+    inp: &WorkloadInputs<'a, N>,
+    kind: PredictorKind,
+    build_memory: &MemoryBuilder<N>,
+    compiled_pools: &[CompiledCorpus<N>],
+    shards: usize,
+    threads: usize,
+) -> Result<WorkloadReport> {
+    let shards = shards.max(1);
+    if shards == 1 {
+        return run_workload_compiled(inp, kind, build_memory()?, compiled_pools);
+    }
+    let (policy, _) = validate_inputs(inp, kind, compiled_pools)?;
+    // partition the schedule by tenant shard; arrival order within a
+    // shard is preserved, so each sub-schedule stays sorted
+    let horizon_secs = (inp.schedule.horizon_us / 1e6).max(1e-9);
+    let mut shard_schedules: Vec<Schedule> = (0..shards)
+        .map(|_| Schedule {
+            arrivals: Vec::new(),
+            horizon_us: inp.schedule.horizon_us,
+            offered_rps: 0.0,
+        })
+        .collect();
+    for ev in &inp.schedule.arrivals {
+        shard_schedules[ev.tenant % shards].arrivals.push(ev.clone());
+    }
+    for s in &mut shard_schedules {
+        s.offered_rps = s.arrivals.len() as f64 / horizon_secs;
+    }
+    let shard_ids: Vec<usize> = (0..shards).collect();
+    let outs = parallel_map(&shard_ids, threads, |&s| {
+        let sinp = WorkloadInputs {
+            schedule: &shard_schedules[s],
+            ..*inp
+        };
+        let (policy, learned) = validate_inputs(&sinp, kind, compiled_pools)?;
+        let mut memory = build_memory()?;
+        let obs = ObsSink::default();
+        memory.set_obs(obs.clone());
+        let backend = memory.name().to_string();
+        let cx = DrainCtx {
+            inp: &sinp,
+            kind,
+            learned,
+            policy,
+            compiled_pools,
+            obs: &obs,
+            tobs: None,
+        };
+        let mut q = IndexedRunnable::new(policy);
+        let out = drain(&cx, &mut q, memory.as_mut())?;
+        Ok((out, memory.stats(), backend))
+    })?;
+
+    // merge in shard-index order — parallel_map writes results back by
+    // index, so this order (and every merged number) is independent of
+    // thread count and interleaving
+    let mut acc: Vec<TenantAcc> = inp
+        .spec
+        .tenants
+        .iter()
+        .map(|_| TenantAcc::default())
+        .collect();
+    let mut counters = SchedCounters::default();
+    let mut clock_us = 0.0f64;
+    let mut memory_stats: Option<MemoryStats> = None;
+    let mut backend = String::new();
+    for (s, (out, ms, be)) in outs.into_iter().enumerate() {
+        if s == 0 {
+            backend = be;
+        }
+        for (a, b) in acc.iter_mut().zip(out.acc.iter()) {
+            a.merge(b);
+        }
+        merge_counters(&mut counters, &out.counters);
+        clock_us = clock_us.max(out.clock_us);
+        memory_stats = Some(match memory_stats.take() {
+            None => ms,
+            Some(mut m) => {
+                merge_memory_stats(&mut m, &ms);
+                m
+            }
+        });
+    }
+    let out = DrainOutcome {
+        acc,
+        counters,
+        clock_us,
+        completion_ids: Vec::new(),
+    };
+    Ok(fold_report(
+        inp,
+        kind,
+        policy,
+        backend,
+        memory_stats.unwrap_or_default(),
+        out,
+        &ObsSink::default(),
+    ))
+}
+
+/// Sum two shard engines' counters.  The `max_*` peaks are summed, not
+/// maxed: shard engines run concurrently in virtual time, so the sum is
+/// the aggregate in-flight/backlog capacity bound across replicas.
+fn merge_counters(a: &mut SchedCounters, b: &SchedCounters) {
+    a.steps += b.steps;
+    a.prefill_steps += b.prefill_steps;
+    a.admissions += b.admissions;
+    a.completions += b.completions;
+    a.max_inflight += b.max_inflight;
+    a.max_queue_depth += b.max_queue_depth;
+    a.busy_us += b.busy_us;
+    a.idle_us += b.idle_us;
+    a.idle_while_runnable += b.idle_while_runnable;
+    a.repeat_pick_with_waiters += b.repeat_pick_with_waiters;
+    a.out_of_order_completions += b.out_of_order_completions;
+}
+
+/// Elementwise-sum two shard replicas' memory snapshots.  Structured
+/// sub-stats merge only when both sides carry them (shards build
+/// identical backends, so a mismatch means the shapes diverged — drop
+/// to `None` rather than fabricate a partial merge).
+fn merge_memory_stats(a: &mut MemoryStats, b: &MemoryStats) {
+    a.demand_us += b.demand_us;
+    a.prefetch_us += b.prefetch_us;
+    a.stall_us += b.stall_us;
+    a.resident += b.resident;
+    if a.resident_per_depth.len() < b.resident_per_depth.len() {
+        a.resident_per_depth.resize(b.resident_per_depth.len(), 0);
+    }
+    for (x, y) in a.resident_per_depth.iter_mut().zip(b.resident_per_depth.iter()) {
+        *x += *y;
+    }
+    a.tiers = match (a.tiers.take(), &b.tiers) {
+        (Some(mut t), Some(u)) => {
+            t.merge(u);
+            Some(t)
+        }
+        _ => None,
+    };
+    a.net = match (a.net.take(), &b.net) {
+        (Some(mut n), Some(u)) => {
+            n.merge(u);
+            Some(n)
+        }
+        _ => None,
+    };
+}
+
+/// Upfront validation shared by every entry point: config sanity,
+/// learned-prediction coverage, and hand-built-schedule bounds — so the
+/// drain loop never index-panics mid-run.
+fn validate_inputs<'a, const N: usize>(
+    inp: &WorkloadInputs<'a, N>,
+    kind: PredictorKind,
+    compiled_pools: &[CompiledCorpus<N>],
+) -> Result<(SchedPolicy, Option<&'a [Vec<TracePredictions<N>>]>)> {
     inp.cfg.validate()?;
     inp.sim.validate()?;
     // the learned predictor replays precomputed per-trace predictions
-    // (it cannot be factory-built); validate coverage up front so the
-    // drain never index-panics mid-run
+    // (it cannot be factory-built); validate coverage up front
     let learned: Option<&'a [Vec<TracePredictions<N>>]> = if kind == PredictorKind::Learned {
         let l = inp.learned.ok_or_else(|| {
             anyhow::anyhow!(
@@ -292,12 +591,17 @@ pub fn run_workload_obs<'a, const N: usize>(
     }
     let policy = SchedPolicy::parse(&inp.cfg.policy)
         .ok_or_else(|| anyhow::anyhow!("unknown scheduler policy '{}'", inp.cfg.policy))?;
+    Ok((policy, learned))
+}
 
-    let backend = memory.name().to_string();
-    memory.set_obs(obs.clone());
-    // Per-tenant registry handles, resolved once (the registry lock is
-    // never taken inside the drain loop).  `None` when the sink is off.
-    let tobs: Option<Vec<TenantObsHandles>> = obs.registry().map(|reg| {
+/// Per-tenant registry handles, resolved once (the registry lock is
+/// never taken inside the drain loop).  `None` when the sink is off.
+fn resolve_tobs<const N: usize>(
+    inp: &WorkloadInputs<'_, N>,
+    policy: SchedPolicy,
+    obs: &ObsSink,
+) -> Option<Vec<TenantObsHandles>> {
+    obs.registry().map(|reg| {
         let pid = policy.id();
         inp.spec
             .tenants
@@ -316,9 +620,44 @@ pub fn run_workload_obs<'a, const N: usize>(
                 }
             })
             .collect()
-    });
+    })
+}
+
+/// Everything the generic drain body reads besides the runnable set and
+/// the memory backend.
+struct DrainCtx<'r, 'a, const N: usize> {
+    inp: &'r WorkloadInputs<'a, N>,
+    kind: PredictorKind,
+    learned: Option<&'a [Vec<TracePredictions<N>>]>,
+    policy: SchedPolicy,
+    compiled_pools: &'r [CompiledCorpus<N>],
+    obs: &'r ObsSink,
+    tobs: Option<Vec<TenantObsHandles>>,
+}
+
+/// What one drain produced, before folding into a [`WorkloadReport`] —
+/// plain data only, so shard outcomes can cross the worker threads.
+struct DrainOutcome {
+    acc: Vec<TenantAcc>,
+    counters: SchedCounters,
+    clock_us: f64,
+    completion_ids: Vec<u64>,
+}
+
+/// The drain loop, generic over the runnable-set engine — ONE body for
+/// both [`SchedEngine`]s, so "byte-identical pick order" is the only
+/// degree of freedom the parity suite has to pin.
+fn drain<'a, const N: usize, Q: RunnableSet>(
+    cx: &DrainCtx<'_, 'a, N>,
+    queue: &mut Q,
+    memory: &mut dyn ExpertMemory<N>,
+) -> Result<DrainOutcome> {
+    let inp = cx.inp;
+    let obs = cx.obs;
+    let tobs = &cx.tobs;
     let n_layers = inp.n_layers;
     let n_slots = inp.cfg.max_concurrency;
+    let id_cap = inp.cfg.completion_log_cap;
     let params = PredictorParams {
         eam: inp.eam,
         predict_top_k: inp.sim.predict_top_k,
@@ -326,17 +665,14 @@ pub fn run_workload_obs<'a, const N: usize>(
         n_experts: inp.n_experts,
         fit_traces: inp.fit_traces,
     };
-    let mut predictors: Vec<Box<dyn ExpertPredictor<N> + 'a>> = (0..n_slots)
-        .map(|_| -> Result<Box<dyn ExpertPredictor<N> + 'a>> {
-            Ok(match kind {
-                // placeholder: each admission swaps in that request's
-                // CachedPredictor before the slot's first use
-                PredictorKind::Learned => Box::new(NoPrefetch),
-                _ => factory::build(kind, &params)?,
-            })
-        })
-        .collect::<Result<_>>()?;
-    let mut slot_busy = vec![false; n_slots];
+    // per-slot predictor replicas, built lazily on a slot's first use:
+    // memory tracks the concurrency high-water mark, not the configured
+    // limit (a 10⁶-stream limit must not allocate 10⁶ EAMC tables up
+    // front).  A slot keeps its predictor across the requests it serves
+    // — identical state evolution to eager construction, since building
+    // is deterministic and a never-used predictor observes nothing.
+    let mut predictors: Vec<Option<Box<dyn ExpertPredictor<N> + 'a>>> = Vec::new();
+    let mut soa = SoaStreams::default();
 
     let mut acc: Vec<TenantAcc> = inp
         .spec
@@ -346,6 +682,7 @@ pub fn run_workload_obs<'a, const N: usize>(
         .collect();
     let mut counters = SchedCounters::default();
     let mut completion_ids: Vec<u64> = Vec::new();
+    let mut last_completed_id: Option<u64> = None;
 
     let arrivals = &inp.schedule.arrivals;
     // per-token prediction buffer, reused across every decode step
@@ -353,8 +690,6 @@ pub fn run_workload_obs<'a, const N: usize>(
     let mut clock = 0.0f64;
     let mut next = 0usize; // next arrival to admit (FIFO admission queue)
     let mut due = 0usize; // arrivals with arrival_us <= clock
-    let mut inflight: Vec<Stream> = Vec::new();
-    let mut rr_idx = 0usize;
     let mut last_stepped: Option<u64> = None;
 
     loop {
@@ -363,22 +698,31 @@ pub fn run_workload_obs<'a, const N: usize>(
         while due < arrivals.len() && arrivals[due].arrival_us <= clock {
             due += 1;
         }
-        while next < due && inflight.len() < n_slots {
+        // peak backlog is sampled before admission drains it, so an
+        // arrival burst admitted within this same iteration still
+        // reports its true queue depth
+        counters.max_queue_depth = counters.max_queue_depth.max(due - next);
+        while next < due && queue.len() < n_slots {
             let ev = &arrivals[next];
-            let slot = slot_busy
-                .iter()
-                .position(|b| !*b)
-                .expect("free predictor slot under the concurrency limit");
-            slot_busy[slot] = true;
-            if let Some(l) = learned {
+            let slot = queue.acquire_slot();
+            soa.ensure(slot);
+            if predictors.len() <= slot {
+                predictors.resize_with(slot + 1, || None);
+            }
+            if cx.kind == PredictorKind::Learned {
                 // learned predictions are per request trace: the slot
                 // replays exactly this trace's precomputed sets
-                predictors[slot] = Box::new(CachedPredictor::new(&l[ev.tenant][ev.trace_idx]));
+                let l = cx.learned.expect("learned predictions validated upfront");
+                predictors[slot] =
+                    Some(Box::new(CachedPredictor::new(&l[ev.tenant][ev.trace_idx])));
+            } else if predictors[slot].is_none() {
+                predictors[slot] = Some(factory::build(cx.kind, &params)?);
             }
-            predictors[slot].begin_prompt(&inp.pools[ev.tenant][ev.trace_idx]);
+            let pred = predictors[slot].as_mut().expect("slot predictor ensured above");
+            pred.begin_prompt(&inp.pools[ev.tenant][ev.trace_idx]);
             let queued_us = clock - ev.arrival_us;
             acc[ev.tenant].queue.record(queued_us);
-            if let Some(h) = &tobs {
+            if let Some(h) = tobs {
                 h[ev.tenant].queue.record(queued_us);
             }
             obs.emit(|ts| TraceEvent::RequestBegin {
@@ -386,26 +730,23 @@ pub fn run_workload_obs<'a, const N: usize>(
                 request: ev.request_id,
                 tenant: ev.tenant as u32,
             });
-            inflight.push(Stream {
-                tenant: ev.tenant,
-                request_id: ev.request_id,
-                trace_idx: ev.trace_idx,
-                prompt: ev.prompt_tokens,
-                decode: ev.decode_tokens,
-                arrival_us: ev.arrival_us,
-                slot,
-                decoded: 0,
-                prefilled: false,
-                last_token_us: 0.0,
-            });
+            soa.tenant[slot] = ev.tenant as u32;
+            soa.request_id[slot] = ev.request_id;
+            soa.trace_idx[slot] = ev.trace_idx as u32;
+            soa.prompt[slot] = ev.prompt_tokens as u32;
+            soa.decode[slot] = ev.decode_tokens as u32;
+            soa.decoded[slot] = 0;
+            soa.arrival_us[slot] = ev.arrival_us;
+            soa.last_token_us[slot] = 0.0;
+            soa.prefilled[slot] = false;
+            queue.admit(slot, ev.decode_tokens);
             counters.admissions += 1;
             next += 1;
         }
-        counters.max_queue_depth = counters.max_queue_depth.max(due - next);
-        counters.max_inflight = counters.max_inflight.max(inflight.len());
+        counters.max_inflight = counters.max_inflight.max(queue.len());
 
         // ---- idle: jump the virtual clock to the next arrival
-        if inflight.is_empty() {
+        if queue.len() == 0 {
             if next >= arrivals.len() {
                 break; // drained
             }
@@ -419,47 +760,28 @@ pub fn run_workload_obs<'a, const N: usize>(
             continue;
         }
 
-        // ---- pick a stream
-        let i = match policy {
-            SchedPolicy::Fcfs => 0,
-            SchedPolicy::RoundRobin => {
-                if rr_idx >= inflight.len() {
-                    rr_idx = 0;
-                }
-                rr_idx
-            }
-            SchedPolicy::ShortestRemaining => {
-                let mut best = 0usize;
-                for j in 1..inflight.len() {
-                    let rj = inflight[j].decode - inflight[j].decoded;
-                    let rb = inflight[best].decode - inflight[best].decoded;
-                    if rj < rb {
-                        best = j;
-                    }
-                }
-                best
-            }
-        };
-        if inflight.len() >= 2 && last_stepped == Some(inflight[i].request_id) {
+        // ---- pick a stream (O(1) amortized on the indexed engine)
+        let slot = queue.pick(&soa.decode, &soa.decoded);
+        if queue.len() >= 2 && last_stepped == Some(soa.request_id[slot]) {
             counters.repeat_pick_with_waiters += 1;
         }
-        last_stepped = Some(inflight[i].request_id);
+        last_stepped = Some(soa.request_id[slot]);
 
         // ---- execute one unit of work (whole prefill or one token)
-        let was_decode;
+        let was_decode = soa.prefilled[slot];
+        let tenant = soa.tenant[slot] as usize;
         let cost;
         {
-            let s = &mut inflight[i];
-            let trace = &inp.pools[s.tenant][s.trace_idx];
-            let ctrace = &compiled_pools[s.tenant][s.trace_idx];
-            let pred = predictors[s.slot].as_mut();
-            let ta = &mut acc[s.tenant];
-            was_decode = s.prefilled;
-            if !s.prefilled {
+            let trace = &inp.pools[tenant][soa.trace_idx[slot] as usize];
+            let ctrace = &cx.compiled_pools[tenant][soa.trace_idx[slot] as usize];
+            let pred = predictors[slot].as_mut().expect("admitted slot has a predictor");
+            let ta = &mut acc[tenant];
+            if !was_decode {
                 // prefill: warm the shared residency (unmeasured — the
                 // per-prompt warm-up epoch), still paying fetch traffic
                 let mut fetch_us = 0.0;
-                for t in 0..s.prompt {
+                let prompt = soa.prompt[slot] as usize;
+                for t in 0..prompt {
                     let ctx = DecodeContext { trace, t };
                     for l in 0..n_layers {
                         let truth = ctrace.set(t, l);
@@ -468,14 +790,14 @@ pub fn run_workload_obs<'a, const N: usize>(
                         pred.observe(&ctx, l, truth);
                     }
                 }
-                s.prefilled = true;
+                soa.prefilled[slot] = true;
                 counters.prefill_steps += 1;
-                cost = inp.cfg.prefill_us_per_token * s.prompt as f64 + fetch_us;
+                cost = inp.cfg.prefill_us_per_token * prompt as f64 + fetch_us;
             } else {
                 // one decode token: predict every layer in ONE call
                 // (the replay engine's timing), then prefetch → reveal
                 // truth per layer
-                let t = s.prompt + s.decoded;
+                let t = (soa.prompt[slot] + soa.decoded[slot]) as usize;
                 let ctx = DecodeContext { trace, t };
                 pred.predict_layers(&ctx, 0..n_layers, &mut pred_sets);
                 let mark = memory.cost_marks();
@@ -491,9 +813,9 @@ pub fn run_workload_obs<'a, const N: usize>(
                     let hits = batch.hits.len() as u64;
                     ta.cache.hits += hits;
                     ta.cache.misses += truth.len() as u64 - hits;
-                    if let Some(h) = &tobs {
-                        h[s.tenant].cache_hits.add(hits);
-                        h[s.tenant].cache_misses.add(truth.len() as u64 - hits);
+                    if let Some(h) = tobs {
+                        h[tenant].cache_hits.add(hits);
+                        h[tenant].cache_misses.add(truth.len() as u64 - hits);
                     }
                     ta.cache.transfer_us += batch.fetch_us;
                     memory.end_layer();
@@ -501,19 +823,18 @@ pub fn run_workload_obs<'a, const N: usize>(
                 }
                 let after = memory.cost_marks();
                 cost = inp.cfg.token_compute_us + (after.0 - mark.0) + (after.1 - mark.1);
-                s.decoded += 1;
+                soa.decoded[slot] += 1;
                 counters.steps += 1;
             }
         }
         if was_decode {
             // Chrome "X" span for the token: starts at the sink's
             // still-token-start clock, spans the step's virtual cost.
-            let s = &inflight[i];
             obs.emit(|ts| TraceEvent::DecodeStep {
                 ts_us: ts,
-                request: s.request_id,
-                tenant: s.tenant as u32,
-                token: (s.decoded - 1) as u32,
+                request: soa.request_id[slot],
+                tenant: soa.tenant[slot],
+                token: soa.decoded[slot] - 1,
                 cost_us: cost,
             });
         }
@@ -523,59 +844,80 @@ pub fn run_workload_obs<'a, const N: usize>(
 
         // ---- token SLO accounting + completion
         let mut completed = false;
-        {
-            let s = &mut inflight[i];
-            if was_decode {
-                let ta = &mut acc[s.tenant];
-                if s.decoded == 1 {
-                    let v = clock - s.arrival_us;
-                    ta.ttft.record(v);
-                    if let Some(h) = &tobs {
-                        h[s.tenant].ttft.record(v);
-                    }
-                } else {
-                    let v = clock - s.last_token_us;
-                    ta.tbt.record(v);
-                    if let Some(h) = &tobs {
-                        h[s.tenant].tbt.record(v);
-                    }
+        if was_decode {
+            let ta = &mut acc[tenant];
+            if soa.decoded[slot] == 1 {
+                let v = clock - soa.arrival_us[slot];
+                ta.ttft.record(v);
+                if let Some(h) = tobs {
+                    h[tenant].ttft.record(v);
                 }
-                s.last_token_us = clock;
-                completed = s.decoded == s.decode;
+            } else {
+                let v = clock - soa.last_token_us[slot];
+                ta.tbt.record(v);
+                if let Some(h) = tobs {
+                    h[tenant].tbt.record(v);
+                }
             }
+            soa.last_token_us[slot] = clock;
+            completed = soa.decoded[slot] == soa.decode[slot];
         }
         if completed {
-            let s = inflight.remove(i);
-            predictors[s.slot].end_prompt(&inp.pools[s.tenant][s.trace_idx]);
-            slot_busy[s.slot] = false;
-            let ta = &mut acc[s.tenant];
-            let latency_us = clock - s.arrival_us;
+            let pred = predictors[slot].as_mut().expect("admitted slot has a predictor");
+            pred.end_prompt(&inp.pools[tenant][soa.trace_idx[slot] as usize]);
+            let ta = &mut acc[tenant];
+            let latency_us = clock - soa.arrival_us[slot];
             ta.latency.record(latency_us);
             ta.completed += 1;
-            ta.tokens += s.decode as u64;
-            if let Some(h) = &tobs {
-                let th = &h[s.tenant];
+            ta.tokens += soa.decode[slot] as u64;
+            if let Some(h) = tobs {
+                let th = &h[tenant];
                 th.latency.record(latency_us);
-                th.tokens.add(s.decode as u64);
+                th.tokens.add(soa.decode[slot] as u64);
                 th.completions.inc();
             }
             obs.emit(|ts| TraceEvent::RequestEnd {
                 ts_us: ts,
-                request: s.request_id,
-                tenant: s.tenant as u32,
+                request: soa.request_id[slot],
+                tenant: soa.tenant[slot],
             });
-            completion_ids.push(s.request_id);
-            counters.completions += 1;
-            if rr_idx > i {
-                rr_idx -= 1; // keep the cursor on the same logical stream
+            let rid = soa.request_id[slot];
+            if completion_ids.len() < id_cap {
+                completion_ids.push(rid);
             }
-        } else if policy == SchedPolicy::RoundRobin {
-            rr_idx = i + 1; // advance past the stream just stepped
+            match last_completed_id {
+                Some(prev) if rid < prev => counters.out_of_order_completions += 1,
+                _ => last_completed_id = Some(rid),
+            }
+            counters.completions += 1;
+            queue.stepped(slot, StepOutcome::Complete);
+        } else if was_decode {
+            queue.stepped(slot, StepOutcome::Decode);
+        } else {
+            queue.stepped(slot, StepOutcome::Prefill);
         }
     }
 
-    // ---- fold the accumulators into the report
-    let virtual_secs = clock / 1e6;
+    Ok(DrainOutcome {
+        acc,
+        counters,
+        clock_us: clock,
+        completion_ids,
+    })
+}
+
+/// Fold a drain outcome into the report (and the registry gauges, when
+/// a sink is attached).
+fn fold_report<const N: usize>(
+    inp: &WorkloadInputs<'_, N>,
+    kind: PredictorKind,
+    policy: SchedPolicy,
+    backend: String,
+    memory_stats: MemoryStats,
+    out: DrainOutcome,
+    obs: &ObsSink,
+) -> WorkloadReport {
+    let virtual_secs = out.clock_us / 1e6;
     if let Some(reg) = obs.registry() {
         reg.gauge("workload_virtual_secs", &[("policy", policy.id())])
             .set(virtual_secs);
@@ -584,30 +926,32 @@ pub fn run_workload_obs<'a, const N: usize>(
         reg.gauge("n_experts", &[]).set(inp.n_experts as f64);
     }
     let mut aggregate = TenantAcc::default();
-    for ta in &acc {
+    for ta in &out.acc {
         aggregate.merge(ta);
     }
-    let total_tokens: u64 = acc.iter().map(|a| a.tokens).sum();
-    let tenants = acc
+    let total_tokens: u64 = out.acc.iter().map(|a| a.tokens).sum();
+    let completions = out.counters.completions;
+    let tenants = out
+        .acc
         .into_iter()
         .zip(inp.spec.tenants.iter())
         .map(|(a, t)| a.into_slo(&t.name))
         .collect();
     let denom = virtual_secs.max(1e-9);
-    Ok(WorkloadReport {
+    WorkloadReport {
         policy: policy.id().to_string(),
         backend,
         predictor: kind.id().to_string(),
         offered_rps: inp.schedule.offered_rps,
-        completed_rps: counters.completions as f64 / denom,
+        completed_rps: completions as f64 / denom,
         tokens_per_sec: total_tokens as f64 / denom,
         virtual_secs,
-        counters,
+        counters: out.counters,
         aggregate: aggregate.into_slo("all"),
         tenants,
-        memory: memory.stats(),
-        completion_ids,
-    })
+        memory: memory_stats,
+        completion_ids: out.completion_ids,
+    }
 }
 
 #[cfg(test)]
@@ -625,5 +969,46 @@ mod tests {
             Some(SchedPolicy::ShortestRemaining)
         );
         assert_eq!(SchedPolicy::parse("magic"), None);
+    }
+
+    #[test]
+    fn per_stream_state_fits_the_scale_budget() {
+        let b = inflight_state_bytes_per_stream();
+        assert!(b <= 128, "{b} bytes/stream exceeds the 128-byte budget");
+    }
+
+    #[test]
+    fn counter_merge_sums_every_field() {
+        let mut a = SchedCounters {
+            steps: 1,
+            max_inflight: 3,
+            busy_us: 10.0,
+            ..Default::default()
+        };
+        let b = SchedCounters {
+            steps: 2,
+            prefill_steps: 4,
+            admissions: 5,
+            completions: 5,
+            max_inflight: 2,
+            max_queue_depth: 7,
+            busy_us: 2.5,
+            idle_us: 1.5,
+            idle_while_runnable: 1,
+            repeat_pick_with_waiters: 2,
+            out_of_order_completions: 3,
+        };
+        merge_counters(&mut a, &b);
+        assert_eq!(a.steps, 3);
+        assert_eq!(a.prefill_steps, 4);
+        assert_eq!(a.admissions, 5);
+        assert_eq!(a.completions, 5);
+        assert_eq!(a.max_inflight, 5);
+        assert_eq!(a.max_queue_depth, 7);
+        assert!((a.busy_us - 12.5).abs() < 1e-12);
+        assert!((a.idle_us - 1.5).abs() < 1e-12);
+        assert_eq!(a.idle_while_runnable, 1);
+        assert_eq!(a.repeat_pick_with_waiters, 2);
+        assert_eq!(a.out_of_order_completions, 3);
     }
 }

@@ -96,7 +96,13 @@ pub struct WorkloadReport {
     /// Shared-memory cost/residency snapshot at drain.
     pub memory: MemoryStats,
     /// Request ids in completion order (scheduler-ordering tests; not
-    /// part of the JSON encoding).
+    /// part of the JSON encoding).  Capped at
+    /// `WorkloadConfig::completion_log_cap` entries so a 10⁶-stream
+    /// drain cannot grow it without bound — order checks past the cap
+    /// use the O(1) streaming
+    /// `SchedCounters::out_of_order_completions` counter.  Empty on
+    /// sharded drains (per-shard completion orders do not interleave
+    /// into one global order).
     pub completion_ids: Vec<u64>,
 }
 

@@ -7,13 +7,13 @@
 
 use crate::cluster::{self, ClusterConfig};
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
-use crate::memory;
+use crate::memory::{self, ExpertMemory};
 use crate::obs::ObsSink;
 use crate::predictor::{PredictorKind, TracePredictions};
-use crate::util::parallel::{parallel_map, sweep_threads};
 use crate::trace::{CompiledCorpus, PromptTrace};
+use crate::util::parallel::{parallel_map, sweep_threads};
 use crate::workload::profile::{Schedule, WorkloadSpec};
-use crate::workload::sched::{run_workload_obs, SchedPolicy, WorkloadInputs};
+use crate::workload::sched::{run_workload_obs, run_workload_sharded, SchedPolicy, WorkloadInputs};
 use crate::workload::slo::WorkloadReport;
 use crate::Result;
 
@@ -78,6 +78,14 @@ pub struct LoadSweepInputs<'a, const N: usize = 1> {
     /// the swept capacity.  `None` falls back to the 1-node loopback
     /// cluster (byte-identical to `Backend::Flat`).
     pub cluster_base: Option<&'a ClusterConfig>,
+    /// Shard-then-merge fan-out per grid point
+    /// ([`run_workload_sharded`]): tenants are partitioned across this
+    /// many replica engines (each with the point's full memory
+    /// capacity) and drained in parallel, accumulators merged in
+    /// deterministic shard-index order.  `0`/`1` = the single-engine
+    /// drain.  Traced re-runs (`run_point_obs` with an active sink)
+    /// should stay at 1 — shard engines drain with no-op sinks.
+    pub engine_shards: usize,
 }
 
 /// One grid point's outcome.
@@ -96,22 +104,21 @@ pub struct LoadPoint {
 /// load multiplier, so regenerating it per point would be pure waste.
 type GridJob = (SchedPolicy, Backend, PredictorKind, usize, f64);
 
-fn run_load_point<const N: usize>(
+/// Build one grid point's memory backend — shared by the single-engine
+/// drain and (called once per shard, inside the shard's worker thread)
+/// the shard-then-merge path, so every replica prices capacity with the
+/// exact same rounding.
+fn build_backend_memory<const N: usize>(
     inputs: &LoadSweepInputs<'_, N>,
-    compiled_pools: &[CompiledCorpus<N>],
-    loaded: &[(f64, WorkloadSpec, Schedule)],
-    job: &GridJob,
-    obs: &ObsSink,
-) -> Result<LoadPoint> {
-    let &(policy, backend, kind, load_idx, cache_frac) = job;
-    let (load_mult, ref spec, ref schedule) = loaded[load_idx];
-
+    backend: Backend,
+    cache_frac: f64,
+) -> Result<Box<dyn ExpertMemory<N>>> {
     let total = inputs.n_layers * inputs.n_experts;
     let cap = ((total as f64 * cache_frac).round() as usize).max(1);
     // DMA hides under one layer's share of the token compute, the same
     // coupling the serving engine uses (CacheConfig::overlap_per_layer)
     let overlap_us = inputs.workload.token_compute_us / inputs.n_layers.max(1) as f64;
-    let mem = match backend {
+    match backend {
         Backend::Flat => memory::build::<N>(
             "lru",
             &CacheConfig::default().with_capacity(cap),
@@ -119,7 +126,7 @@ fn run_load_point<const N: usize>(
             inputs.sim,
             inputs.n_experts,
             overlap_us,
-        )?,
+        ),
         Backend::Tiered => {
             let cfg = inputs.tier_base.clone().with_gpu_capacity(cap);
             memory::build::<N>(
@@ -129,7 +136,7 @@ fn run_load_point<const N: usize>(
                 inputs.sim,
                 inputs.n_experts,
                 overlap_us,
-            )?
+            )
         }
         Backend::Cluster => {
             let fallback = ClusterConfig::default();
@@ -146,9 +153,20 @@ fn run_load_point<const N: usize>(
                 inputs.sim,
                 inputs.n_experts,
                 overlap_us,
-            )?
+            )
         }
-    };
+    }
+}
+
+fn run_load_point<const N: usize>(
+    inputs: &LoadSweepInputs<'_, N>,
+    compiled_pools: &[CompiledCorpus<N>],
+    loaded: &[(f64, WorkloadSpec, Schedule)],
+    job: &GridJob,
+    obs: &ObsSink,
+) -> Result<LoadPoint> {
+    let &(policy, backend, kind, load_idx, cache_frac) = job;
+    let (load_mult, ref spec, ref schedule) = loaded[load_idx];
 
     let mut wcfg = inputs.workload.clone();
     wcfg.policy = policy.id().to_string();
@@ -164,7 +182,14 @@ fn run_load_point<const N: usize>(
         n_layers: inputs.n_layers,
         n_experts: inputs.n_experts,
     };
-    let report = run_workload_obs(&winp, kind, mem, compiled_pools, obs)?;
+    let shards = inputs.engine_shards.max(1);
+    let report = if shards > 1 {
+        let build = || build_backend_memory(inputs, backend, cache_frac);
+        run_workload_sharded(&winp, kind, &build, compiled_pools, shards, sweep_threads())?
+    } else {
+        let mem = build_backend_memory(inputs, backend, cache_frac)?;
+        run_workload_obs(&winp, kind, mem, compiled_pools, obs)?
+    };
     Ok(LoadPoint {
         policy,
         backend,
@@ -334,6 +359,7 @@ mod tests {
             n_experts: 64,
             tier_base: &tier,
             cluster_base: None,
+            engine_shards: 1,
         };
         let policies = [SchedPolicy::Fcfs, SchedPolicy::RoundRobin];
         let backends = [Backend::Flat, Backend::Tiered];
@@ -400,6 +426,7 @@ mod tests {
             n_experts: 64,
             tier_base: &tier,
             cluster_base: Some(&k1),
+            engine_shards: 1,
         };
         let policies = [SchedPolicy::Fcfs];
         let kinds = [PredictorKind::Eam];
@@ -438,6 +465,74 @@ mod tests {
                 f.report.memory.stall_us.to_bits(),
                 c.report.memory.stall_us.to_bits()
             );
+        }
+    }
+
+    /// Tenant-sharded drains ([`LoadSweepInputs::engine_shards`] > 1)
+    /// are deterministic (two identical runs produce byte-identical
+    /// reports) and conserve the workload: every arrival admits and
+    /// completes exactly once across the shard replicas, and per-tenant
+    /// completion/token totals match the single-engine drain because a
+    /// tenant's streams never cross shards.
+    #[test]
+    fn sharded_drain_is_deterministic_and_conserves_work() {
+        let (spec, pools, fit) = fixture();
+        let wcfg = WorkloadConfig::default();
+        let tier = TierConfig::default();
+        let sim = SimConfig::default();
+        let eam = EamConfig {
+            kmeans_clusters: 0,
+            ..Default::default()
+        };
+        let mut inputs: LoadSweepInputs = LoadSweepInputs {
+            spec: &spec,
+            pools: &pools,
+            fit_traces: &fit,
+            learned: None,
+            workload: &wcfg,
+            sim: &sim,
+            eam: &eam,
+            n_layers: 3,
+            n_experts: 64,
+            tier_base: &tier,
+            cluster_base: None,
+            engine_shards: 1,
+        };
+        let point = |inputs: &LoadSweepInputs| {
+            run_point_obs(
+                inputs,
+                SchedPolicy::RoundRobin,
+                Backend::Flat,
+                PredictorKind::None,
+                1.5,
+                0.2,
+                &ObsSink::default(),
+            )
+            .unwrap()
+        };
+        let single = point(&inputs);
+        inputs.engine_shards = 2;
+        let a = point(&inputs);
+        let b = point(&inputs);
+        assert_eq!(
+            crate::workload::slo::report_json(&a.report).to_json_string(),
+            crate::workload::slo::report_json(&b.report).to_json_string(),
+            "sharded drain must replay byte-identically"
+        );
+        let c = &a.report.counters;
+        assert_eq!(c.admissions, single.report.counters.admissions);
+        assert_eq!(c.completions, c.admissions);
+        assert_eq!(c.idle_while_runnable, 0);
+        // sharded reports keep no global completion order
+        assert!(a.report.completion_ids.is_empty());
+        assert_eq!(
+            a.report.aggregate.completed,
+            single.report.aggregate.completed
+        );
+        assert_eq!(a.report.aggregate.tokens, single.report.aggregate.tokens);
+        for (sa, st) in a.report.tenants.iter().zip(single.report.tenants.iter()) {
+            assert_eq!(sa.completed, st.completed);
+            assert_eq!(sa.tokens, st.tokens);
         }
     }
 }

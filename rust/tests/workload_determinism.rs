@@ -7,13 +7,16 @@
 
 use moe_beyond::config::{CacheConfig, EamConfig, SimConfig, TierConfig, WorkloadConfig};
 use moe_beyond::memory::{self, ExpertMemory};
+use moe_beyond::obs::{ObsSink, DEFAULT_RING_CAP};
 use moe_beyond::predictor::TracePredictions;
 use moe_beyond::sim::PredictorKind;
 use moe_beyond::tier::TierSpec;
-use moe_beyond::trace::PromptTrace;
+use moe_beyond::trace::{CompiledCorpus, PromptTrace};
+use moe_beyond::util::Rng;
 use moe_beyond::workload::{
-    report_json, run_workload, synthetic_fit_pool, synthetic_pools, ArrivalEvent, Schedule,
-    SchedPolicy, TenantProfile, WorkloadInputs, WorkloadReport, WorkloadSpec,
+    report_json, run_workload, run_workload_engine, synthetic_fit_pool, synthetic_pools,
+    ArrivalEvent, Schedule, SchedEngine, SchedPolicy, TenantProfile, WorkloadInputs,
+    WorkloadReport, WorkloadSpec,
 };
 
 const N_LAYERS: usize = 4;
@@ -402,4 +405,259 @@ fn flat_vs_tiered_contention_parity() {
     // the hierarchy did its work: deep tiers actually served lookups
     let ts = tiered.memory.tiers.as_ref().expect("tier stats");
     assert!(ts.served[1] > 0, "host tier never served under contention");
+}
+
+// ---- engine parity: the indexed runnable structures (calendar queue,
+// admission ring, free-slot bitmap) against the linear-scan reference
+// they replaced — byte-identical or bust.
+
+/// Drain `fx` through one engine with a live trace ring; returns the
+/// report plus the serialized Chrome trace.
+fn run_engine(
+    fx: &Fixture,
+    policy: SchedPolicy,
+    engine: SchedEngine,
+    max_concurrency: usize,
+) -> (WorkloadReport, String) {
+    let cfg = WorkloadConfig {
+        max_concurrency,
+        policy: policy.id().to_string(),
+        ..Default::default()
+    };
+    let sim = SimConfig::default();
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let inputs = WorkloadInputs {
+        spec: &fx.spec,
+        schedule: &fx.schedule,
+        pools: &fx.pools,
+        fit_traces: &fx.fit,
+        learned: None,
+        cfg: &cfg,
+        sim: &sim,
+        eam: &eam,
+        n_layers: N_LAYERS,
+        n_experts: N_EXPERTS,
+    };
+    let compiled: Vec<CompiledCorpus> =
+        fx.pools.iter().map(|p| CompiledCorpus::compile(p)).collect();
+    let obs = ObsSink::active(DEFAULT_RING_CAP, "virtual");
+    let report = run_workload_engine(
+        &inputs,
+        PredictorKind::None,
+        flat_memory(25, &sim, overlap_us()),
+        &compiled,
+        &obs,
+        engine,
+    )
+    .unwrap();
+    let trace = obs.trace_json().unwrap().to_json_string();
+    (report, trace)
+}
+
+fn assert_engine_parity(fx: &Fixture, policy: SchedPolicy, max_concurrency: usize, what: &str) {
+    let (ri, ti) = run_engine(fx, policy, SchedEngine::Indexed, max_concurrency);
+    let (rl, tl) = run_engine(fx, policy, SchedEngine::LinearScan, max_concurrency);
+    assert_eq!(
+        report_json(&ri).to_json_string(),
+        report_json(&rl).to_json_string(),
+        "{what}: {policy:?}/mc={max_concurrency} reports diverged between engines"
+    );
+    assert_eq!(
+        ri.completion_ids, rl.completion_ids,
+        "{what}: {policy:?}/mc={max_concurrency} completion order diverged"
+    );
+    assert_eq!(
+        ri.counters.out_of_order_completions, rl.counters.out_of_order_completions,
+        "{what}: {policy:?}/mc={max_concurrency} order-violation counters diverged"
+    );
+    assert_eq!(
+        ti, tl,
+        "{what}: {policy:?}/mc={max_concurrency} Chrome traces diverged"
+    );
+}
+
+#[test]
+fn engines_are_byte_identical_on_the_generated_fixture() {
+    let fx = fixture(3.0);
+    for policy in SchedPolicy::ALL {
+        for mc in [1usize, 2, 5] {
+            assert_engine_parity(&fx, policy, mc, "generated fixture");
+        }
+    }
+}
+
+/// Randomized hand-built schedules (sorted arrivals, random tenants,
+/// shapes clamped to each trace) hunt for pick-order divergence the
+/// structured fixtures would never reach.
+#[test]
+fn engines_are_byte_identical_on_randomized_schedules() {
+    for seed in [3u64, 71, 905] {
+        let spec = WorkloadSpec::example(3, 23, 6.0);
+        let pools = synthetic_pools(&spec, 5, N_LAYERS as u16, N_EXPERTS);
+        let mut rng = Rng::new(seed);
+        let n = 80 + rng.below(80);
+        let mut times: Vec<f64> = (0..n).map(|_| rng.f64() * 4e6).collect();
+        times.sort_by(f64::total_cmp);
+        let arrivals: Vec<ArrivalEvent> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &arrival_us)| {
+                let tenant = rng.below(pools.len());
+                let trace_idx = rng.below(pools[tenant].len());
+                let n_tok = pools[tenant][trace_idx].n_tokens();
+                let prompt_tokens = 1 + rng.below(n_tok - 1);
+                let decode_tokens = 1 + rng.below(n_tok - prompt_tokens);
+                ArrivalEvent {
+                    arrival_us,
+                    tenant,
+                    request_id: i as u64,
+                    trace_idx,
+                    prompt_tokens,
+                    decode_tokens,
+                }
+            })
+            .collect();
+        let fx = Fixture {
+            schedule: Schedule {
+                arrivals,
+                horizon_us: 6e6,
+                offered_rps: n as f64 / 6.0,
+            },
+            spec,
+            pools,
+            fit: vec![],
+        };
+        for policy in SchedPolicy::ALL {
+            for mc in [1usize, 3, 7] {
+                assert_engine_parity(&fx, policy, mc, "randomized schedule");
+            }
+        }
+    }
+}
+
+/// Round-robin cursor regression family: two streams admitted at t=0
+/// wrap the cursor past the end of the admission ring, then two more
+/// arrive together at a swept offset, interleaving admission with
+/// completion at every cursor position the sweep reaches.  The
+/// stable-slot cursor must match the reference index-shifting cursor
+/// byte for byte at every offset.
+#[test]
+fn rr_cursor_wraparound_and_completion_interleave_parity() {
+    let tenant = TenantProfile {
+        name: "t0".into(),
+        arrival: moe_beyond::workload::ArrivalProcess::Poisson { rate_rps: 1.0 },
+        prompt_tokens: (4, 4),
+        decode_tokens: (1, 8),
+        trace_seed: 9,
+    };
+    let spec = WorkloadSpec {
+        seed: 9,
+        horizon_secs: 1.0,
+        tenants: vec![tenant],
+    };
+    let pools = synthetic_pools(&spec, 1, N_LAYERS as u16, N_EXPERTS);
+    let mk = |id: u64, at: f64, decode: usize| ArrivalEvent {
+        arrival_us: at,
+        tenant: 0,
+        request_id: id,
+        trace_idx: 0,
+        prompt_tokens: 4,
+        decode_tokens: decode,
+    };
+    for step in 0..50u32 {
+        let off = f64::from(step) * 400.0;
+        let fx = Fixture {
+            spec: spec.clone(),
+            pools: pools.clone(),
+            fit: vec![],
+            schedule: Schedule {
+                arrivals: vec![mk(0, 0.0, 4), mk(1, 0.0, 2), mk(2, off, 3), mk(3, off, 1)],
+                horizon_us: 1e6,
+                offered_rps: 4.0,
+            },
+        };
+        assert_engine_parity(&fx, SchedPolicy::RoundRobin, 3, "rr offset family");
+    }
+}
+
+/// 10⁵ concurrent streams in one burst: the indexed engine admits them
+/// all, round-robins fairly, conserves every counter, and caps the
+/// completion log — the scale regime the calendar queue exists for.
+#[test]
+fn hundred_thousand_stream_burst_conserves_counters() {
+    const STREAMS: usize = 100_000;
+    let tenant = TenantProfile {
+        name: "t0".into(),
+        arrival: moe_beyond::workload::ArrivalProcess::Poisson { rate_rps: 1.0 },
+        prompt_tokens: (1, 1),
+        decode_tokens: (1, 2),
+        trace_seed: 3,
+    };
+    let spec = WorkloadSpec {
+        seed: 3,
+        horizon_secs: 1.0,
+        tenants: vec![tenant],
+    };
+    let n_layers = 2usize;
+    let pools = synthetic_pools(&spec, 1, n_layers as u16, N_EXPERTS);
+    let arrivals: Vec<ArrivalEvent> = (0..STREAMS)
+        .map(|i| ArrivalEvent {
+            arrival_us: 0.0,
+            tenant: 0,
+            request_id: i as u64,
+            trace_idx: 0,
+            prompt_tokens: 1,
+            decode_tokens: 2,
+        })
+        .collect();
+    let schedule = Schedule {
+        arrivals,
+        horizon_us: 1e6,
+        offered_rps: STREAMS as f64,
+    };
+    let cfg = WorkloadConfig {
+        max_concurrency: STREAMS,
+        policy: "round-robin".into(),
+        ..Default::default()
+    };
+    let sim = SimConfig::default();
+    let eam = EamConfig {
+        kmeans_clusters: 0,
+        ..Default::default()
+    };
+    let inputs = WorkloadInputs {
+        spec: &spec,
+        schedule: &schedule,
+        pools: &pools,
+        fit_traces: &[],
+        learned: None,
+        cfg: &cfg,
+        sim: &sim,
+        eam: &eam,
+        n_layers,
+        n_experts: N_EXPERTS,
+    };
+    let mem = flat_memory(25, &sim, WorkloadConfig::default().token_compute_us / n_layers as f64);
+    let r = run_workload(&inputs, PredictorKind::None, mem).unwrap();
+    let c = &r.counters;
+    assert_eq!(c.admissions, STREAMS as u64);
+    assert_eq!(c.completions, STREAMS as u64);
+    assert_eq!(c.prefill_steps, STREAMS as u64);
+    assert_eq!(c.steps, 2 * STREAMS as u64);
+    assert_eq!(c.max_inflight, STREAMS);
+    assert_eq!(
+        c.max_queue_depth, STREAMS,
+        "burst depth must be sampled before admission drains it"
+    );
+    assert_eq!(c.idle_while_runnable, 0);
+    assert_eq!(
+        c.out_of_order_completions, 0,
+        "equal-length round-robin completes in slot (= arrival) order"
+    );
+    assert_eq!(r.completion_ids.len(), cfg.completion_log_cap);
+    assert_eq!(r.aggregate.tokens, 2 * STREAMS as u64);
+    assert_eq!(r.aggregate.ttft.count as u64, STREAMS as u64);
 }
