@@ -12,7 +12,9 @@
 //!    appears (and K=1 never crosses the network),
 //! 3. link bandwidth moves the modeled critical path, never the hit
 //!    rate (the hit-rate-only evaluation blind spot, network edition),
-//! 4. the whole grid is byte-identical across two runs (determinism).
+//! 4. R-way replication under the seeded chaos plan: healthy baselines
+//!    are clean and availability is monotone non-decreasing in R,
+//! 5. the whole grid is byte-identical across two runs (determinism).
 //!
 //! Self-contained: synthetic traces, no artifacts/PJRT required.
 //! `MOEB_BENCH_PROMPTS` scales the workload; `MOEB_CLUSTER_NODES` caps
@@ -29,8 +31,10 @@ use std::path::Path;
 use moe_beyond::cluster::{ClusterConfig, PlacementKind};
 use moe_beyond::config::{EamConfig, SimConfig};
 use moe_beyond::sim::sweep::{
-    sweep_capacities_replay, sweep_cluster, ClusterSweepPoint, PredictorKind, SweepInputs,
+    chaos_csv, sweep_capacities_replay, sweep_chaos, sweep_cluster, ChaosSweepPoint,
+    ClusterSweepPoint, PredictorKind, SweepInputs,
 };
+use moe_beyond::tier::LinkSpec;
 
 const N_LAYERS: usize = 4;
 const N_EXPERTS: usize = 64;
@@ -214,7 +218,86 @@ fn main() -> moe_beyond::Result<()> {
         );
     }
 
-    // -- 4) determinism: the full grid, byte for byte ----------------------
+    // -- 4) replication column: availability under chaos -------------------
+    // R-way replicas on a K=3 cluster under the seeded chaos plan: the
+    // healthy (intensity 0) baselines are clean, availability is monotone
+    // non-decreasing in R (replica rank sets are nested and the fault
+    // clock ticks on measured lookups, not on routing), and the whole
+    // sweep — R column included — replays byte-identically.
+    let mut chaos_points: Option<Vec<ChaosSweepPoint>> = None;
+    if max_nodes >= 3 {
+        let rs = [1usize, 2, 3];
+        let chaos_base = ClusterConfig::default()
+            .with_nodes(3)
+            .with_link(LinkSpec::new(100.0, 10.0, 5.0));
+        let chaos_run = || {
+            sweep_chaos(
+                PredictorKind::Eam,
+                &rs,
+                &[1.0],
+                &[PlacementKind::RoundRobin],
+                0.1,
+                &inputs,
+                &chaos_base,
+            )
+        };
+        let chaos = time_block("chaos sweep (R x intensity, K=3)", chaos_run)?;
+        println!("\n== replication under chaos (K=3, cache 10%/device) ==");
+        println!(
+            "{:>3} {:>10} {:>13} {:>7} {:>9} {:>9}",
+            "R", "intensity", "availability", "hit%", "degraded", "p99 infl"
+        );
+        for p in &chaos {
+            println!(
+                "{:>3} {:>10.1} {:>13.4} {:>7.1} {:>9} {:>9.2}",
+                p.replicas,
+                p.intensity,
+                p.availability,
+                p.gpu_hit_rate * 100.0,
+                p.net.degraded_fetches,
+                p.p99_inflation
+            );
+        }
+        // each (R, placement) group leads with its intensity-0 baseline
+        for group in chaos.chunks(2) {
+            let healthy = &group[0];
+            assert_eq!(healthy.intensity, 0.0);
+            assert_eq!(
+                healthy.availability, 1.0,
+                "R={}: healthy baseline must be fully available",
+                healthy.replicas
+            );
+            assert_eq!(healthy.net.degraded_fetches, 0);
+            assert_eq!(healthy.net.retries, 0);
+            assert_eq!(healthy.p99_inflation, 1.0);
+        }
+        let faulted: Vec<&ChaosSweepPoint> =
+            chaos.iter().filter(|p| p.intensity > 0.0).collect();
+        assert_eq!(faulted.len(), rs.len());
+        assert!(
+            faulted[0].net.degraded_fetches > 0,
+            "full-intensity chaos must force degraded fetches at R=1"
+        );
+        for w in faulted.windows(2) {
+            assert!(
+                w[1].availability >= w[0].availability,
+                "availability regressed with more replicas: R={} {:.4} vs R={} {:.4}",
+                w[0].replicas,
+                w[0].availability,
+                w[1].replicas,
+                w[1].availability
+            );
+        }
+        let again = time_block("chaos sweep (replay)", chaos_run)?;
+        assert_eq!(
+            chaos_csv(&chaos),
+            chaos_csv(&again),
+            "chaos sweep is not byte-deterministic"
+        );
+        chaos_points = Some(chaos);
+    }
+
+    // -- 5) determinism: the full grid, byte for byte ----------------------
     let grid = || {
         sweep_cluster(
             PredictorKind::Eam,
@@ -235,6 +318,9 @@ fn main() -> moe_beyond::Result<()> {
     let out_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/cluster");
     std::fs::create_dir_all(&out_dir)?;
     std::fs::write(out_dir.join("sweep_cluster.csv"), csv(&scaling))?;
+    if let Some(chaos) = &chaos_points {
+        std::fs::write(out_dir.join("sweep_chaos.csv"), chaos_csv(chaos))?;
+    }
     println!("artifacts: {}", out_dir.display());
 
     println!("\nshape check: PASS");

@@ -1,17 +1,23 @@
-//! Deterministic fault injection for cluster runs: scheduled node
-//! failures and per-node straggler multipliers.
+//! Deterministic fault injection for cluster runs: permanent failures,
+//! transient down/up windows, link flaps, degraded-bandwidth episodes,
+//! fail-slow nodes, and straggler multipliers.
 //!
-//! Faults are *scheduled*, not sampled — a failure names the measured
-//! lookup index at which the node goes dark, a straggler names a fixed
-//! link-time multiplier — so a seeded run with faults is exactly as
-//! reproducible as one without.  `tests/failure_injection.rs` pins that:
-//! two identical faulted runs must produce byte-identical stats.
+//! Faults are *scheduled*, not sampled — every entry names the
+//! measured-lookup index (the cluster's fault clock) at which it starts
+//! and, for windows, the half-open index `[from, until)` at which it
+//! ends — so a seeded run with faults is exactly as reproducible as one
+//! without.  `tests/failure_injection.rs` pins that: two identical
+//! faulted runs must produce byte-identical stats.  Even the
+//! [`FaultPlan::chaos`] generator is a pure function of its arguments
+//! (SplitMix64 over the node index), never an RNG.
 
+use crate::cluster::placement::splitmix64;
 use crate::Result;
 
 /// One scheduled node failure: `node` stops serving at the `at_lookup`-th
 /// measured lookup (0 = down from the start) and never recovers.
-/// Lookups it owned fail over to the next alive node in ring order.
+/// Lookups it owned fail over to the next-cheapest alive replica, or the
+/// ring when every replica is down.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NodeFailure {
     /// Failing node index.  Node 0 (the front node driving the cluster)
@@ -23,7 +29,8 @@ pub struct NodeFailure {
 
 /// One degraded node: every network transfer to/from it costs
 /// `multiplier`× the healthy link time (a slow radio, a thermally
-/// throttled NIC).  Applies for the whole run.
+/// throttled NIC).  Applies for the whole run; use [`SlowLink`] for a
+/// bounded episode.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Straggler {
     pub node: usize,
@@ -31,11 +38,110 @@ pub struct Straggler {
     pub multiplier: f64,
 }
 
+/// A transient outage: `node` is down for measured lookups
+/// `[from, until)` and then **recovers with a cold cache** — its staged
+/// residency is dropped (crash-restart semantics) while its cost
+/// accumulators survive, exactly the `ExpertMemory::clear` contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DownWindow {
+    pub node: usize,
+    /// First measured-lookup index of the outage.
+    pub from: u64,
+    /// First measured-lookup index after recovery (half-open).
+    pub until: u64,
+}
+
+/// A link flap: `node` is unreachable for measured lookups
+/// `[from, until)` but its process never died — it **recovers warm**
+/// (residency intact).  Routing treats a flapped node exactly like a
+/// down one; only the recovery differs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkFlap {
+    pub node: usize,
+    pub from: u64,
+    pub until: u64,
+}
+
+/// A degraded-bandwidth episode: every transfer to/from `node` costs
+/// `multiplier`× for measured lookups `[from, until)`, stacking
+/// multiplicatively with any permanent [`Straggler`] on the node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowLink {
+    pub node: usize,
+    pub from: u64,
+    pub until: u64,
+    /// Episode link-time multiplier, `>= 1`.
+    pub multiplier: f64,
+}
+
+/// A fail-slow node: for measured lookups `[from, until)` the node is
+/// alive and answers, but serves `multiplier`× slower (a wedged disk, a
+/// GC-storming runtime).  The multiplier applies to lookups *served by*
+/// the node — not to one-shot promotion pulls, which only see link-level
+/// degradation ([`Straggler`], [`SlowLink`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailSlow {
+    pub node: usize,
+    pub from: u64,
+    pub until: u64,
+    /// Serve-time multiplier, `>= 1`.
+    pub multiplier: f64,
+}
+
+/// What one compiled fault event does when the fault clock reaches it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum FaultAction {
+    /// Node goes dark (permanent failure or down-window start).
+    NodeDown,
+    /// Node returns; `cold` drops its staged residency first.
+    NodeUp { cold: bool },
+    /// Link to the node drops (flap start) — process stays alive.
+    LinkDown,
+    /// Link returns (flap end).
+    LinkUp,
+    /// Degraded-bandwidth episode begins: wire multiplier on the node.
+    SlowLinkStart { multiplier: f64 },
+    SlowLinkEnd,
+    /// Fail-slow episode begins: serve multiplier on the node.
+    FailSlowStart { multiplier: f64 },
+    FailSlowEnd,
+}
+
+impl FaultAction {
+    /// Sort rank at one clock index: recoveries apply before new
+    /// outages, so back-to-back windows `[a,b)` + `[b,c)` hand over
+    /// cleanly at `b`.
+    fn rank(&self) -> u8 {
+        match self {
+            FaultAction::NodeUp { .. }
+            | FaultAction::LinkUp
+            | FaultAction::SlowLinkEnd
+            | FaultAction::FailSlowEnd => 0,
+            FaultAction::NodeDown
+            | FaultAction::LinkDown
+            | FaultAction::SlowLinkStart { .. }
+            | FaultAction::FailSlowStart { .. } => 1,
+        }
+    }
+}
+
+/// One compiled fault transition, keyed to the measured-lookup clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct FaultEvent {
+    pub at: u64,
+    pub node: usize,
+    pub action: FaultAction,
+}
+
 /// The full fault schedule for one cluster run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FaultPlan {
     pub failures: Vec<NodeFailure>,
     pub stragglers: Vec<Straggler>,
+    pub down_windows: Vec<DownWindow>,
+    pub link_flaps: Vec<LinkFlap>,
+    pub slow_links: Vec<SlowLink>,
+    pub fail_slows: Vec<FailSlow>,
 }
 
 impl FaultPlan {
@@ -54,38 +160,405 @@ impl FaultPlan {
         self
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.failures.is_empty() && self.stragglers.is_empty()
+    pub fn with_down_window(mut self, node: usize, from: u64, until: u64) -> Self {
+        self.down_windows.push(DownWindow { node, from, until });
+        self
     }
 
-    /// Check the plan against a `k`-node cluster.
-    pub fn validate(&self, k: usize) -> Result<()> {
+    pub fn with_link_flap(mut self, node: usize, from: u64, until: u64) -> Self {
+        self.link_flaps.push(LinkFlap { node, from, until });
+        self
+    }
+
+    pub fn with_slow_link(mut self, node: usize, from: u64, until: u64, multiplier: f64) -> Self {
+        self.slow_links.push(SlowLink {
+            node,
+            from,
+            until,
+            multiplier,
+        });
+        self
+    }
+
+    pub fn with_fail_slow(mut self, node: usize, from: u64, until: u64, multiplier: f64) -> Self {
+        self.fail_slows.push(FailSlow {
+            node,
+            from,
+            until,
+            multiplier,
+        });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.failures.is_empty()
+            && self.stragglers.is_empty()
+            && self.down_windows.is_empty()
+            && self.link_flaps.is_empty()
+            && self.slow_links.is_empty()
+            && self.fail_slows.is_empty()
+    }
+
+    /// Compile the plan into one event list sorted by
+    /// `(clock index, recovery-before-outage, node)` — the order
+    /// [`super::ClusterMemory`] replays it in.
+    pub(crate) fn events(&self) -> Vec<FaultEvent> {
+        let mut ev = Vec::new();
         for f in &self.failures {
+            ev.push(FaultEvent {
+                at: f.at_lookup,
+                node: f.node,
+                action: FaultAction::NodeDown,
+            });
+        }
+        for w in &self.down_windows {
+            ev.push(FaultEvent {
+                at: w.from,
+                node: w.node,
+                action: FaultAction::NodeDown,
+            });
+            ev.push(FaultEvent {
+                at: w.until,
+                node: w.node,
+                action: FaultAction::NodeUp { cold: true },
+            });
+        }
+        for w in &self.link_flaps {
+            ev.push(FaultEvent {
+                at: w.from,
+                node: w.node,
+                action: FaultAction::LinkDown,
+            });
+            ev.push(FaultEvent {
+                at: w.until,
+                node: w.node,
+                action: FaultAction::LinkUp,
+            });
+        }
+        for w in &self.slow_links {
+            ev.push(FaultEvent {
+                at: w.from,
+                node: w.node,
+                action: FaultAction::SlowLinkStart {
+                    multiplier: w.multiplier,
+                },
+            });
+            ev.push(FaultEvent {
+                at: w.until,
+                node: w.node,
+                action: FaultAction::SlowLinkEnd,
+            });
+        }
+        for w in &self.fail_slows {
+            ev.push(FaultEvent {
+                at: w.from,
+                node: w.node,
+                action: FaultAction::FailSlowStart {
+                    multiplier: w.multiplier,
+                },
+            });
+            ev.push(FaultEvent {
+                at: w.until,
+                node: w.node,
+                action: FaultAction::FailSlowEnd,
+            });
+        }
+        ev.sort_by_key(|e| (e.at, e.action.rank(), e.node));
+        ev
+    }
+
+    /// Check the plan against a `k`-node cluster.  Every rejection names
+    /// the offending entry — its index within its category, the node,
+    /// the firing index or window, and the multiplier where one applies.
+    pub fn validate(&self, k: usize) -> Result<()> {
+        for (i, f) in self.failures.iter().enumerate() {
             anyhow::ensure!(
                 f.node < k,
-                "failure names node {} but the cluster has {k} nodes",
-                f.node
+                "failure #{i} (node {}, at lookup {}) names a node out of range \
+                 for a {k}-node cluster",
+                f.node,
+                f.at_lookup
             );
             anyhow::ensure!(
                 f.node != 0,
-                "node 0 is the front node and cannot fail (it owns the \
-                 local hierarchy every failover lands on)"
+                "failure #{i} (at lookup {}) targets node 0 — the front node \
+                 cannot fail (it owns the local hierarchy every degraded \
+                 lookup lands on)",
+                f.at_lookup
             );
         }
-        for s in &self.stragglers {
+        for (i, s) in self.stragglers.iter().enumerate() {
             anyhow::ensure!(
                 s.node < k,
-                "straggler names node {} but the cluster has {k} nodes",
-                s.node
+                "straggler #{i} (node {}, multiplier {}) names a node out of \
+                 range for a {k}-node cluster",
+                s.node,
+                s.multiplier
             );
             anyhow::ensure!(
                 s.multiplier.is_finite() && s.multiplier >= 1.0,
-                "straggler multiplier must be finite and >= 1 (got {})",
+                "straggler #{i} (node {}): multiplier {} must be finite and >= 1",
+                s.node,
                 s.multiplier
             );
         }
+        validate_windows(
+            "down-window",
+            k,
+            &self
+                .down_windows
+                .iter()
+                .map(|w| (w.node, w.from, w.until, 1.0))
+                .collect::<Vec<_>>(),
+            &self.failures,
+        )?;
+        validate_windows(
+            "link-flap",
+            k,
+            &self
+                .link_flaps
+                .iter()
+                .map(|w| (w.node, w.from, w.until, 1.0))
+                .collect::<Vec<_>>(),
+            &self.failures,
+        )?;
+        validate_windows(
+            "slow-link",
+            k,
+            &self
+                .slow_links
+                .iter()
+                .map(|w| (w.node, w.from, w.until, w.multiplier))
+                .collect::<Vec<_>>(),
+            &self.failures,
+        )?;
+        validate_windows(
+            "fail-slow",
+            k,
+            &self
+                .fail_slows
+                .iter()
+                .map(|w| (w.node, w.from, w.until, w.multiplier))
+                .collect::<Vec<_>>(),
+            &self.failures,
+        )?;
         Ok(())
     }
+
+    /// Parse a `--fault-plan` string: `;`-separated entries, each one of
+    ///
+    /// * `fail:NODE@AT` — permanent failure at measured lookup `AT`
+    /// * `straggle:NODE*MULT` — whole-run link multiplier
+    /// * `down:NODE@FROM-UNTIL` — outage window, cold recovery
+    /// * `flap:NODE@FROM-UNTIL` — link flap, warm recovery
+    /// * `slow:NODE@FROM-UNTIL*MULT` — degraded-bandwidth episode
+    /// * `failslow:NODE@FROM-UNTIL*MULT` — fail-slow serve episode
+    ///
+    /// e.g. `down:1@200-600;slow:2@100-400*3` — node 1 crashes for
+    /// lookups 200..600 and node 2's link runs 3× slow for 100..400.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut plan = FaultPlan::none();
+        for raw in s.split(';') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, rest) = entry.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("fault entry '{entry}' is missing its 'kind:' prefix")
+            })?;
+            match kind.trim().to_ascii_lowercase().as_str() {
+                "fail" => {
+                    let (node, at) = parse_at(entry, rest)?;
+                    plan = plan.with_failure(node, at);
+                }
+                "straggle" | "straggler" => {
+                    let (node, mult) = parse_mult(entry, rest)?;
+                    plan = plan.with_straggler(node, mult);
+                }
+                "down" => {
+                    let (node, from, until) = parse_window(entry, rest)?;
+                    plan = plan.with_down_window(node, from, until);
+                }
+                "flap" => {
+                    let (node, from, until) = parse_window(entry, rest)?;
+                    plan = plan.with_link_flap(node, from, until);
+                }
+                "slow" => {
+                    let (node, from, until, mult) = parse_window_mult(entry, rest)?;
+                    plan = plan.with_slow_link(node, from, until, mult);
+                }
+                "failslow" => {
+                    let (node, from, until, mult) = parse_window_mult(entry, rest)?;
+                    plan = plan.with_fail_slow(node, from, until, mult);
+                }
+                other => anyhow::bail!(
+                    "unknown fault kind '{other}' in '{entry}' \
+                     (expected fail|straggle|down|flap|slow|failslow)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Deterministic chaos plan for a `k`-node cluster: transient
+    /// outages, degraded-bandwidth episodes and link flaps over a run of
+    /// `horizon` measured lookups, scaled by `intensity` in `[0, 1]`.
+    ///
+    /// Pure function of its arguments — window positions derive from
+    /// SplitMix64 over the node index, so the same `(k, intensity,
+    /// horizon)` always yields the same plan, and a node afflicted at
+    /// intensity `i` stays afflicted (with the same window) at every
+    /// intensity above `i`.  That nesting keeps chaos sweeps comparable
+    /// across the intensity axis.
+    pub fn chaos(k: usize, intensity: f64, horizon: u64) -> Self {
+        let mut plan = FaultPlan::none();
+        if k <= 1 || intensity.is_nan() || intensity <= 0.0 || horizon < 8 {
+            return plan;
+        }
+        let level = intensity.min(1.0);
+        // Uniform-ish draw in [0, 1) from a hash.
+        let frac = |h: u64| (h % 4096) as f64 / 4096.0;
+        let span = horizon as f64;
+        for node in 1..k {
+            let h0 = splitmix64(0xC1A0_5EED ^ node as u64);
+            let h1 = splitmix64(h0);
+            let h2 = splitmix64(h1);
+            let h3 = splitmix64(h2);
+            // Transient outage somewhere in the first half, lasting up
+            // to a quarter of the run; the node recovers cold.
+            if frac(h0) < level {
+                let from = (frac(h1) * span * 0.5) as u64;
+                let len = 1 + (span * 0.25 * (0.25 + 0.75 * frac(h2)) * level) as u64;
+                plan = plan.with_down_window(node, from, from + len);
+            }
+            // Degraded-bandwidth episode in the second half.
+            if frac(h1) < level {
+                let from = horizon / 2 + (frac(h3) * span * 0.25) as u64;
+                let len = 1 + (span * 0.125) as u64;
+                let mult = 1.0 + 3.0 * level;
+                plan = plan.with_slow_link(node, from, from + len, mult);
+            }
+            // Short link flap near the end on a subset of nodes.
+            if frac(h2) < level * 0.5 {
+                let from = horizon * 3 / 4 + (frac(h0) * span * 0.125) as u64;
+                let len = 1 + (span / 16.0) as u64;
+                plan = plan.with_link_flap(node, from, from + len);
+            }
+            // Fail-slow episode on every third node at high intensity.
+            if node % 3 == 1 && frac(h3) < level * 0.75 {
+                let from = (span * 0.25) as u64 + (frac(h2) * span * 0.25) as u64;
+                let len = 1 + (span * 0.1875) as u64;
+                plan = plan.with_fail_slow(node, from, from + len, 1.0 + 2.0 * level);
+            }
+        }
+        plan
+    }
+}
+
+/// Shared window checks: range, front node, non-empty span, multiplier,
+/// no same-category overlap on one node, and no window extending past a
+/// permanent failure of the same node (the node would have to resurrect).
+fn validate_windows(
+    what: &str,
+    k: usize,
+    windows: &[(usize, u64, u64, f64)],
+    failures: &[NodeFailure],
+) -> Result<()> {
+    for (i, &(node, from, until, mult)) in windows.iter().enumerate() {
+        anyhow::ensure!(
+            node < k,
+            "{what} #{i} (node {node}, [{from},{until})) names a node out of \
+             range for a {k}-node cluster"
+        );
+        anyhow::ensure!(
+            node != 0,
+            "{what} #{i} ([{from},{until})) targets node 0 — the front node \
+             cannot fault"
+        );
+        anyhow::ensure!(
+            from < until,
+            "{what} #{i} (node {node}) is empty: from {from} must be < until {until}"
+        );
+        anyhow::ensure!(
+            mult.is_finite() && mult >= 1.0,
+            "{what} #{i} (node {node}, [{from},{until})): multiplier {mult} \
+             must be finite and >= 1"
+        );
+        for (fi, f) in failures.iter().enumerate() {
+            anyhow::ensure!(
+                f.node != node || f.at_lookup >= until,
+                "{what} #{i} (node {node}, [{from},{until})) outlives permanent \
+                 failure #{fi} at lookup {} — a dead node cannot host a window",
+                f.at_lookup
+            );
+        }
+        for (j, &(n2, f2, u2, _)) in windows.iter().enumerate().skip(i + 1) {
+            anyhow::ensure!(
+                n2 != node || until <= f2 || u2 <= from,
+                "{what}s #{i} and #{j} overlap on node {node}: \
+                 [{from},{until}) vs [{f2},{u2})"
+            );
+        }
+    }
+    Ok(())
+}
+
+fn parse_node(entry: &str, s: &str) -> Result<usize> {
+    s.trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad node index '{s}' in fault entry '{entry}'"))
+}
+
+fn parse_clock(entry: &str, s: &str) -> Result<u64> {
+    s.trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad lookup index '{s}' in fault entry '{entry}'"))
+}
+
+fn parse_multiplier(entry: &str, s: &str) -> Result<f64> {
+    s.trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad multiplier '{s}' in fault entry '{entry}'"))
+}
+
+/// `NODE@AT`
+fn parse_at(entry: &str, rest: &str) -> Result<(usize, u64)> {
+    let (node, at) = rest
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("fault entry '{entry}' needs NODE@AT"))?;
+    Ok((parse_node(entry, node)?, parse_clock(entry, at)?))
+}
+
+/// `NODE*MULT`
+fn parse_mult(entry: &str, rest: &str) -> Result<(usize, f64)> {
+    let (node, mult) = rest
+        .split_once('*')
+        .ok_or_else(|| anyhow::anyhow!("fault entry '{entry}' needs NODE*MULT"))?;
+    Ok((parse_node(entry, node)?, parse_multiplier(entry, mult)?))
+}
+
+/// `NODE@FROM-UNTIL`
+fn parse_window(entry: &str, rest: &str) -> Result<(usize, u64, u64)> {
+    let (node, span) = rest
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("fault entry '{entry}' needs NODE@FROM-UNTIL"))?;
+    let (from, until) = span
+        .split_once('-')
+        .ok_or_else(|| anyhow::anyhow!("fault entry '{entry}' needs a FROM-UNTIL window"))?;
+    Ok((
+        parse_node(entry, node)?,
+        parse_clock(entry, from)?,
+        parse_clock(entry, until)?,
+    ))
+}
+
+/// `NODE@FROM-UNTIL*MULT`
+fn parse_window_mult(entry: &str, rest: &str) -> Result<(usize, u64, u64, f64)> {
+    let (span, mult) = rest
+        .split_once('*')
+        .ok_or_else(|| anyhow::anyhow!("fault entry '{entry}' needs NODE@FROM-UNTIL*MULT"))?;
+    let (node, from, until) = parse_window(entry, span)?;
+    Ok((node, from, until, parse_multiplier(entry, mult)?))
 }
 
 #[cfg(test)]
@@ -96,6 +569,7 @@ mod tests {
     fn empty_plan_validates_anywhere() {
         assert!(FaultPlan::none().validate(1).is_ok());
         assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::none().events().is_empty());
     }
 
     #[test]
@@ -104,6 +578,18 @@ mod tests {
         assert!(FaultPlan::none().with_failure(3, 10).validate(3).is_err());
         assert!(FaultPlan::none().with_failure(2, 10).validate(3).is_ok());
         assert!(FaultPlan::none().with_straggler(5, 2.0).validate(3).is_err());
+        assert!(
+            FaultPlan::none()
+                .with_down_window(0, 1, 5)
+                .validate(3)
+                .is_err()
+        );
+        assert!(
+            FaultPlan::none()
+                .with_slow_link(4, 1, 5, 2.0)
+                .validate(3)
+                .is_err()
+        );
     }
 
     #[test]
@@ -116,5 +602,131 @@ mod tests {
                 .is_err()
         );
         assert!(FaultPlan::none().with_straggler(1, 1.0).validate(3).is_ok());
+        assert!(
+            FaultPlan::none()
+                .with_fail_slow(1, 0, 10, 0.25)
+                .validate(3)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn validate_names_the_offending_entry() {
+        let msg = |plan: FaultPlan, k: usize| plan.validate(k).unwrap_err().to_string();
+        // entry index + node + firing index
+        let m = msg(
+            FaultPlan::none().with_failure(1, 5).with_failure(7, 42),
+            3,
+        );
+        assert!(m.contains("#1") && m.contains("node 7") && m.contains("42"), "{m}");
+        // multiplier value
+        let m = msg(FaultPlan::none().with_straggler(2, 0.25), 3);
+        assert!(m.contains("#0") && m.contains("0.25"), "{m}");
+        // window span
+        let m = msg(FaultPlan::none().with_down_window(2, 9, 9), 3);
+        assert!(m.contains("9") && m.contains("down-window #0"), "{m}");
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_windows_but_allows_touching() {
+        let overlap = FaultPlan::none()
+            .with_down_window(1, 10, 50)
+            .with_down_window(1, 30, 60);
+        let m = overlap.validate(3).unwrap_err().to_string();
+        assert!(m.contains("overlap") && m.contains("node 1"), "{m}");
+        // half-open windows that touch are fine
+        assert!(
+            FaultPlan::none()
+                .with_down_window(1, 10, 20)
+                .with_down_window(1, 20, 30)
+                .validate(3)
+                .is_ok()
+        );
+        // different nodes never conflict
+        assert!(
+            FaultPlan::none()
+                .with_link_flap(1, 10, 50)
+                .with_link_flap(2, 30, 60)
+                .validate(3)
+                .is_ok()
+        );
+        // a window outliving a permanent failure of the same node is
+        // a resurrection — rejected by name
+        let m = FaultPlan::none()
+            .with_failure(1, 30)
+            .with_down_window(1, 10, 50)
+            .validate(3)
+            .unwrap_err()
+            .to_string();
+        assert!(m.contains("failure #0") && m.contains("30"), "{m}");
+    }
+
+    #[test]
+    fn events_sort_recoveries_before_outages_at_one_index() {
+        let plan = FaultPlan::none()
+            .with_down_window(1, 10, 20)
+            .with_down_window(1, 20, 30)
+            .with_slow_link(2, 20, 40, 2.0);
+        let ev = plan.events();
+        assert_eq!(ev.len(), 6);
+        let at20: Vec<_> = ev.iter().filter(|e| e.at == 20).collect();
+        assert_eq!(at20.len(), 3);
+        // NodeUp first (rank 0), then the two starts
+        assert_eq!(at20[0].action, FaultAction::NodeUp { cold: true });
+        assert!(matches!(at20[1].action, FaultAction::NodeDown));
+        assert!(matches!(
+            at20[2].action,
+            FaultAction::SlowLinkStart { .. }
+        ));
+    }
+
+    #[test]
+    fn parse_round_trips_every_kind() {
+        let plan =
+            FaultPlan::parse("fail:2@500; straggle:1*2.5; down:1@200-600; flap:2@100-150; slow:2@100-400*3; failslow:1@50-90*1.5")
+                .unwrap();
+        let want = FaultPlan::none()
+            .with_failure(2, 500)
+            .with_straggler(1, 2.5)
+            .with_down_window(1, 200, 600)
+            .with_link_flap(2, 100, 150)
+            .with_slow_link(2, 100, 400, 3.0)
+            .with_fail_slow(1, 50, 90, 1.5);
+        assert_eq!(plan, want);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("down:1@200-600;").unwrap().validate(3).is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        assert!(FaultPlan::parse("explode:1@5").is_err());
+        assert!(FaultPlan::parse("fail:1").is_err());
+        assert!(FaultPlan::parse("down:1@200").is_err());
+        assert!(FaultPlan::parse("slow:1@1-2").is_err());
+        assert!(FaultPlan::parse("straggle:x*2").is_err());
+        assert!(FaultPlan::parse("no-colon").is_err());
+    }
+
+    #[test]
+    fn chaos_is_deterministic_and_scales_with_intensity() {
+        assert!(FaultPlan::chaos(1, 1.0, 1000).is_empty());
+        assert!(FaultPlan::chaos(4, 0.0, 1000).is_empty());
+        let a = FaultPlan::chaos(4, 0.7, 1000);
+        let b = FaultPlan::chaos(4, 0.7, 1000);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.validate(4).is_ok());
+        // full intensity afflicts every non-front node with an outage
+        let full = FaultPlan::chaos(4, 1.0, 1000);
+        assert_eq!(full.down_windows.len(), 3);
+        assert!(full.validate(4).is_ok());
+        // higher intensity never loses entries (nested draws)
+        for k in [2usize, 3, 5, 8] {
+            let lo = FaultPlan::chaos(k, 0.3, 2000);
+            let hi = FaultPlan::chaos(k, 0.9, 2000);
+            assert!(hi.down_windows.len() >= lo.down_windows.len(), "k={k}");
+            assert!(lo.validate(k).is_ok(), "k={k}");
+            assert!(hi.validate(k).is_ok(), "k={k}");
+        }
     }
 }

@@ -5,10 +5,11 @@ use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::cache::policy::{self, ExpertKey};
-use crate::cluster::{ClusterConfig, NodeFailure, PlacementKind};
+use crate::cluster::fault::{FaultAction, FaultEvent};
+use crate::cluster::{ClusterConfig, PlacementKind};
 use crate::memory::{ExpertMemory, Lookup, LookupBatch, MemoryStats, Prefetched};
 use crate::metrics::Counter;
-use crate::obs::{ObsSink, TraceEvent};
+use crate::obs::{Gauge, ObsSink, TraceEvent};
 use crate::tier::{NetCostModel, TierStats};
 use crate::util::ExpertSet;
 use crate::Result;
@@ -41,24 +42,48 @@ use crate::Result;
 /// shipped to node 0 once ([`crate::tier::NetStats::promotions`]) and it
 /// is owned locally from then on — the cluster analogue of a tier
 /// promotion.
+///
+/// With [`ClusterConfig::replicas`] `R > 1` each expert lives on `R`
+/// distinct nodes (rank `r` = rotation `(owner + r) % k`) and a lookup
+/// is served by the cheapest *reachable* replica (fewest hops, rank
+/// breaking ties).  When the rank-0 owner is unreachable but another
+/// replica serves, that is a replica failover; when **every** replica is
+/// unreachable, the lookup degrades to the ring-scan fallback — a
+/// deepest-tier demand load on whatever alive node the scan finds,
+/// counted in [`crate::tier::NetStats::degraded_fetches`] and never a
+/// panic.  Arm [`crate::tier::LinkSpec::timeout_us`] and a fetch whose
+/// priced wire time blows the deadline charges the timeout, backs off
+/// exponentially ([`ClusterConfig::retry_backoff_us`]), and retries the
+/// next-cheapest alive replica.
 pub struct ClusterMemory<const N: usize = 1> {
     nodes: Vec<Box<dyn ExpertMemory<N>>>,
     placement: PlacementKind,
     net: NetCostModel,
     n_experts: usize,
     promote_after: u32,
+    /// Replication factor (1 = today's single-owner cluster).
+    replicas: usize,
+    /// Base backoff after a timed-out fetch attempt (µs).
+    retry_backoff_us: f64,
     /// Measured remote serves per expert key (promotion trigger).
     remote_use: HashMap<ExpertKey, u32>,
     /// Expert keys migrated to node 0 — ownership override.
     promoted: HashSet<ExpertKey>,
-    /// Failure schedule, sorted by `at_lookup`; `next_failure` indexes
-    /// the first not-yet-fired entry.
-    failures: Vec<NodeFailure>,
-    next_failure: usize,
+    /// Compiled fault schedule, sorted by `(at, recovery-first, node)`;
+    /// `next_event` indexes the first not-yet-fired entry.
+    events: Vec<FaultEvent>,
+    next_event: usize,
     /// Per-node down flags (node 0 can never be down).
     down: Vec<bool>,
-    /// Per-node link-time multipliers (1.0 = healthy).
+    /// Per-node link-flap flags: unreachable but warm (the process
+    /// never died, so recovery keeps its residency).
+    link_down: Vec<bool>,
+    /// Permanent per-node link-time multipliers (1.0 = healthy).
     straggler: Vec<f64>,
+    /// Windowed degraded-bandwidth multipliers (1.0 outside episodes).
+    episode_mult: Vec<f64>,
+    /// Windowed fail-slow serve multipliers (1.0 outside episodes).
+    serve_mult: Vec<f64>,
     /// Measured lookups seen so far — the fault clock.
     measured_lookups: u64,
     obs: ObsSink,
@@ -66,6 +91,10 @@ pub struct ClusterMemory<const N: usize = 1> {
     remote_ctrs: Vec<Arc<Counter>>,
     failover_ctr: Option<Arc<Counter>>,
     promotion_ctr: Option<Arc<Counter>>,
+    retry_ctr: Option<Arc<Counter>>,
+    degraded_ctr: Option<Arc<Counter>>,
+    /// Per-node up/down gauges (1 = reachable), wired on `set_obs`.
+    node_up_gauges: Vec<Arc<Gauge>>,
 }
 
 impl<const N: usize> ClusterMemory<N> {
@@ -87,8 +116,7 @@ impl<const N: usize> ClusterMemory<N> {
         );
         cfg.validate()?;
         let k = nodes.len();
-        let mut failures = cfg.faults.failures.clone();
-        failures.sort_by_key(|f| (f.at_lookup, f.node));
+        let events = cfg.faults.events();
         let mut straggler = vec![1.0; k];
         for s in &cfg.faults.stragglers {
             straggler[s.node] = s.multiplier;
@@ -99,17 +127,25 @@ impl<const N: usize> ClusterMemory<N> {
             net: NetCostModel::new(cfg.link.clone(), cfg.expert_mb, cfg.act_mb),
             n_experts,
             promote_after: cfg.promote_after,
+            replicas: cfg.replicas.max(1),
+            retry_backoff_us: cfg.retry_backoff_us,
             remote_use: HashMap::new(),
             promoted: HashSet::new(),
-            failures,
-            next_failure: 0,
+            events,
+            next_event: 0,
             down: vec![false; k],
+            link_down: vec![false; k],
             straggler,
+            episode_mult: vec![1.0; k],
+            serve_mult: vec![1.0; k],
             measured_lookups: 0,
             obs: ObsSink::default(),
             remote_ctrs: Vec::new(),
             failover_ctr: None,
             promotion_ctr: None,
+            retry_ctr: None,
+            degraded_ctr: None,
+            node_up_gauges: Vec::new(),
         })
     }
 
@@ -125,52 +161,175 @@ impl<const N: usize> ClusterMemory<N> {
         owner.min(self.k() - owner)
     }
 
-    /// Fire every scheduled failure whose time has come.  Called before
-    /// routing each measured lookup, so a failure at index `n` affects
-    /// the `n`-th measured lookup onward.
+    /// A node no routing decision may pick: process down or link down.
+    #[inline]
+    fn unreachable(&self, node: usize) -> bool {
+        self.down[node] || self.link_down[node]
+    }
+
+    /// Wire-time multiplier for lookups served by `node`: permanent
+    /// straggler × degraded-bandwidth episode × fail-slow serve episode.
+    /// All three default to 1.0, and `x * 1.0` is a bit-exact identity,
+    /// so the healthy path prices exactly as before.
+    #[inline]
+    fn wire_mult(&self, node: usize) -> f64 {
+        self.straggler[node] * self.episode_mult[node] * self.serve_mult[node]
+    }
+
+    /// Wire-time multiplier for one-shot promotion pulls from `node`:
+    /// link-level degradation only — a fail-slow node's *serve* penalty
+    /// does not apply to a bulk weight copy.
+    #[inline]
+    fn promo_mult(&self, node: usize) -> f64 {
+        self.straggler[node] * self.episode_mult[node]
+    }
+
+    /// Refresh the node's up/down gauge after a reachability change.
+    fn publish_node_gauge(&self, node: usize) {
+        if let Some(g) = self.node_up_gauges.get(node) {
+            g.set(if self.unreachable(node) { 0.0 } else { 1.0 });
+        }
+    }
+
+    /// Fire every scheduled fault transition whose time has come.
+    /// Called before routing each measured lookup, so an event at index
+    /// `n` affects the `n`-th measured lookup onward.  Recovery from a
+    /// [`FaultAction::NodeUp`] with `cold` drops the node's staged
+    /// residency (crash-restart) while its cost accumulators survive —
+    /// the `ExpertMemory::clear` contract; a link flap recovers warm.
     fn advance_faults(&mut self) {
-        while self.next_failure < self.failures.len()
-            && self.failures[self.next_failure].at_lookup <= self.measured_lookups
+        while self.next_event < self.events.len()
+            && self.events[self.next_event].at <= self.measured_lookups
         {
-            let f = self.failures[self.next_failure];
-            self.next_failure += 1;
-            if !self.down[f.node] {
-                self.down[f.node] = true;
-                self.obs.emit(|ts| TraceEvent::NodeDown {
-                    ts_us: ts,
-                    node: f.node as u8,
-                });
+            let e = self.events[self.next_event];
+            self.next_event += 1;
+            match e.action {
+                FaultAction::NodeDown => {
+                    if !self.down[e.node] {
+                        self.down[e.node] = true;
+                        self.obs.emit(|ts| TraceEvent::NodeDown {
+                            ts_us: ts,
+                            node: e.node as u8,
+                        });
+                        self.publish_node_gauge(e.node);
+                    }
+                }
+                FaultAction::NodeUp { cold } => {
+                    if self.down[e.node] {
+                        self.down[e.node] = false;
+                        if cold {
+                            self.nodes[e.node].clear();
+                        }
+                        self.obs.emit(|ts| TraceEvent::NodeUp {
+                            ts_us: ts,
+                            node: e.node as u8,
+                        });
+                        self.publish_node_gauge(e.node);
+                    }
+                }
+                FaultAction::LinkDown => {
+                    if !self.link_down[e.node] {
+                        self.link_down[e.node] = true;
+                        self.obs.emit(|ts| TraceEvent::LinkFlap {
+                            ts_us: ts,
+                            node: e.node as u8,
+                            up: false,
+                        });
+                        self.publish_node_gauge(e.node);
+                    }
+                }
+                FaultAction::LinkUp => {
+                    if self.link_down[e.node] {
+                        self.link_down[e.node] = false;
+                        self.obs.emit(|ts| TraceEvent::LinkFlap {
+                            ts_us: ts,
+                            node: e.node as u8,
+                            up: true,
+                        });
+                        self.publish_node_gauge(e.node);
+                    }
+                }
+                FaultAction::SlowLinkStart { multiplier } => {
+                    self.episode_mult[e.node] = multiplier;
+                }
+                FaultAction::SlowLinkEnd => self.episode_mult[e.node] = 1.0,
+                FaultAction::FailSlowStart { multiplier } => {
+                    self.serve_mult[e.node] = multiplier;
+                }
+                FaultAction::FailSlowEnd => self.serve_mult[e.node] = 1.0,
             }
         }
     }
 
-    /// Placement owner with the promotion override applied, before
-    /// failover.
+    /// Final routing decision: `(node, failed_over, degraded)`.
+    ///
+    /// Promoted experts are served by node 0 (always reachable).
+    /// Otherwise the cheapest reachable replica serves — fewest hops,
+    /// replica rank breaking ties; at `replicas == 1` this is exactly
+    /// the old single-owner rule.  `failed_over` flags a serve that
+    /// deviated from an unreachable rank-0 owner.  When *every* replica
+    /// is unreachable the lookup degrades to the ring scan from the
+    /// owner — node 0 is always reachable, so the scan terminates and
+    /// the lookup is served (never a panic), flagged `degraded`.
     #[inline]
-    fn placed_owner(&self, layer: usize, expert: u8) -> usize {
-        let k = policy::key(layer, expert, self.n_experts);
-        if self.promoted.contains(&k) {
-            0
-        } else {
-            self.placement.owner(layer, expert, self.n_experts, self.k())
-        }
-    }
-
-    /// Final routing decision: `(node, failed_over)`.  A down owner
-    /// fails over to the next alive node in ring order; node 0 is always
-    /// alive, so the scan terminates.
-    #[inline]
-    fn route(&self, layer: usize, expert: u8) -> (usize, bool) {
-        let owner = self.placed_owner(layer, expert);
-        if !self.down[owner] {
-            return (owner, false);
+    fn route(&self, layer: usize, expert: u8) -> (usize, bool, bool) {
+        let key = policy::key(layer, expert, self.n_experts);
+        if self.promoted.contains(&key) {
+            return (0, false, false);
         }
         let k = self.k();
+        let owner = self.placement.owner(layer, expert, self.n_experts, k);
+        if self.replicas <= 1 {
+            if !self.unreachable(owner) {
+                return (owner, false, false);
+            }
+        } else {
+            let mut best: Option<(usize, usize)> = None; // (hops, node)
+            for rank in 0..self.replicas {
+                let n = (owner + rank) % k;
+                if self.unreachable(n) {
+                    continue;
+                }
+                let h = self.hops(n);
+                if best.map_or(true, |(bh, _)| h < bh) {
+                    best = Some((h, n));
+                }
+            }
+            if let Some((_, n)) = best {
+                return (n, n != owner && self.unreachable(owner), false);
+            }
+        }
         let mut n = (owner + 1) % k;
-        while self.down[n] {
+        while self.unreachable(n) {
             n = (n + 1) % k;
         }
-        (n, true)
+        (n, true, true)
+    }
+
+    /// Next replica in the deterministic failover order after a timed-out
+    /// attempt on `current`: the reachable replica with the smallest
+    /// `(hops, rank)` key strictly greater than `current`'s.  `None`
+    /// exhausts the chain (the final attempt then waits out its fetch —
+    /// with no alternative left, abandoning it buys nothing).
+    fn next_replica(&self, layer: usize, expert: u8, current: usize) -> Option<usize> {
+        let k = self.k();
+        let owner = self.placement.owner(layer, expert, self.n_experts, k);
+        let cur_key = (self.hops(current), (current + k - owner) % k);
+        let mut best: Option<((usize, usize), usize)> = None;
+        for rank in 0..self.replicas {
+            let n = (owner + rank) % k;
+            if self.unreachable(n) {
+                continue;
+            }
+            let key = (self.hops(n), rank);
+            if key <= cur_key {
+                continue;
+            }
+            if best.map_or(true, |(bk, _)| key < bk) {
+                best = Some((key, n));
+            }
+        }
+        best.map(|(_, n)| n)
     }
 
     /// Shared lookup body — `lookup` is one call, `lookup_set` loops it,
@@ -180,11 +339,39 @@ impl<const N: usize> ClusterMemory<N> {
             self.advance_faults();
             self.measured_lookups += 1;
         }
-        let (owner, failed_over) = self.route(layer, expert);
-        if measured && failed_over {
-            self.net.stats.failovers += 1;
-            if let Some(c) = &self.failover_ctr {
-                c.inc();
+        let (owner, failed_over, degraded) = self.route(layer, expert);
+        if measured {
+            if failed_over {
+                self.net.stats.failovers += 1;
+                if let Some(c) = &self.failover_ctr {
+                    c.inc();
+                }
+                if !degraded && self.obs.is_active() {
+                    self.obs.emit(|ts| TraceEvent::ReplicaFailover {
+                        ts_us: ts,
+                        node: owner as u8,
+                        layer: layer as u16,
+                        expert,
+                    });
+                }
+            }
+            if degraded {
+                // Every replica unreachable: the ring-scan fallback is
+                // a deepest-tier demand load on a node that never held
+                // the expert.  Count it — availability is the fraction
+                // of lookups served without this arm — and serve it.
+                self.net.on_degraded();
+                if let Some(c) = &self.degraded_ctr {
+                    c.inc();
+                }
+                if self.obs.is_active() {
+                    self.obs.emit(|ts| TraceEvent::DegradedFetch {
+                        ts_us: ts,
+                        node: owner as u8,
+                        layer: layer as u16,
+                        expert,
+                    });
+                }
             }
         }
         if owner == 0 {
@@ -193,31 +380,81 @@ impl<const N: usize> ClusterMemory<N> {
             // the loopback cluster byte-identical to single-node.
             return self.nodes[0].lookup(layer, expert, measured);
         }
-        let r = self.nodes[owner].lookup(layer, expert, measured);
+        let mut serve_node = owner;
+        let mut r = self.nodes[serve_node].lookup(layer, expert, measured);
         let mut fetch_us = r.fetch_us;
         if measured {
-            let hops = self.hops(owner);
-            let mult = self.straggler[owner];
-            let wire_us = self.net.on_remote(r.hit, hops, mult);
+            // Timeout/retry chain: with the deadline armed, an attempt
+            // whose priced wire time blows it charges the timeout plus
+            // exponential backoff and retries the next-cheapest alive
+            // replica.  Wire time is deterministic, so re-asking the
+            // same node would time out identically — the chain only
+            // moves forward and terminates.  Degraded serves skip it:
+            // there is no replica left to retry.
+            let mut penalty_us = 0.0;
+            if self.net.link.timeout_us > 0.0 && !degraded {
+                let mut attempt = 0u32;
+                loop {
+                    let priced = self.net.price_remote(
+                        r.hit,
+                        self.hops(serve_node),
+                        self.wire_mult(serve_node),
+                    );
+                    if !self.net.link.times_out(priced) {
+                        break;
+                    }
+                    let Some(next) = self.next_replica(layer, expert, serve_node) else {
+                        // Chain exhausted: the final attempt waits out
+                        // its fetch — with no alternative, abandoning
+                        // it buys nothing.  Never a panic.
+                        break;
+                    };
+                    attempt += 1;
+                    let backoff_us = self.retry_backoff_us * f64::powi(2.0, attempt as i32 - 1);
+                    penalty_us += self.net.on_timeout(backoff_us);
+                    if let Some(c) = &self.retry_ctr {
+                        c.inc();
+                    }
+                    if self.obs.is_active() {
+                        self.obs.emit(|ts| TraceEvent::RemoteRetry {
+                            ts_us: ts,
+                            node: next as u8,
+                            layer: layer as u16,
+                            expert,
+                            attempt: attempt as u8,
+                        });
+                    }
+                    serve_node = next;
+                    r = self.nodes[serve_node].lookup(layer, expert, measured);
+                    fetch_us = r.fetch_us;
+                }
+            }
+            let hops = self.hops(serve_node);
+            let mult = self.wire_mult(serve_node);
+            let wire_us = self.net.price_remote(r.hit, hops, mult);
+            self.net.commit_remote(r.hit, wire_us);
             if !r.hit {
                 // A remote weight fetch stalls the token like a local
                 // miss: the wire time joins the demand fetch cost.  On a
                 // remote hit the activation wire time is charged to the
                 // critical path via `cost_marks` only — `Lookup` keeps
-                // the "fetch_us is 0 on a hit" contract.
+                // the "fetch_us is 0 on a hit" contract.  Timeout and
+                // backoff penalties ride along the same way (they are
+                // always on the critical path via `NetStats::total_us`).
                 fetch_us += wire_us;
+                fetch_us += penalty_us;
             }
             if self.obs.is_active() {
                 self.obs.emit(|ts| TraceEvent::RemoteFetch {
                     ts_us: ts,
-                    node: owner as u8,
+                    node: serve_node as u8,
                     layer: layer as u16,
                     expert,
                     hit: r.hit,
                     wire_us,
                 });
             }
-            if let Some(c) = self.remote_ctrs.get(owner) {
+            if let Some(c) = self.remote_ctrs.get(serve_node) {
                 c.inc();
             }
             if self.promote_after > 0 {
@@ -230,7 +467,8 @@ impl<const N: usize> ClusterMemory<N> {
                     // Ship the weights once (network charge), then warm
                     // node 0's hierarchy with an unmeasured lookup — the
                     // same costless-residency-move contract warm-up uses.
-                    self.net.on_promotion(hops, mult);
+                    let promo = self.promo_mult(serve_node);
+                    self.net.on_promotion(hops, promo);
                     self.nodes[0].lookup(layer, expert, false);
                     if let Some(c) = &self.promotion_ctr {
                         c.inc();
@@ -282,7 +520,7 @@ impl<const N: usize> ExpertMemory<N> for ClusterMemory<N> {
         }
         let mut shards: Vec<ExpertSet<N>> = vec![ExpertSet::new(); k];
         for e in predicted.iter() {
-            let (owner, _) = self.route(layer, e);
+            let (owner, _, _) = self.route(layer, e);
             shards[owner].insert(e);
         }
         let mut out = Prefetched::default();
@@ -417,6 +655,17 @@ impl<const N: usize> ExpertMemory<N> for ClusterMemory<N> {
                 .collect();
             self.failover_ctr = Some(reg.counter("cluster_failovers", &[]));
             self.promotion_ctr = Some(reg.counter("cluster_promotions", &[]));
+            self.retry_ctr = Some(reg.counter("cluster_retries", &[]));
+            self.degraded_ctr = Some(reg.counter("cluster_degraded_fetches", &[]));
+            self.node_up_gauges = (0..self.k())
+                .map(|i| {
+                    let id = i.to_string();
+                    reg.gauge("cluster_node_up", &[("node", id.as_str())])
+                })
+                .collect();
+            for i in 0..self.k() {
+                self.publish_node_gauge(i);
+            }
         }
         self.obs = obs;
     }

@@ -34,7 +34,7 @@ mod fault;
 mod memory;
 mod placement;
 
-pub use fault::{FaultPlan, NodeFailure, Straggler};
+pub use fault::{DownWindow, FailSlow, FaultPlan, LinkFlap, NodeFailure, SlowLink, Straggler};
 pub use memory::ClusterMemory;
 pub use placement::PlacementKind;
 
@@ -66,7 +66,17 @@ pub struct ClusterConfig {
     /// Migrate an expert to the front node after this many measured
     /// remote serves; 0 disables migration.
     pub promote_after: u32,
-    /// Scheduled failures and stragglers (default: none).
+    /// Replication factor: each expert lives on this many distinct nodes
+    /// (deterministic rank rotation of the placement map).  `1` is the
+    /// classic single-owner cluster; must be `<= nodes`.
+    pub replicas: usize,
+    /// Base backoff after a timed-out fetch attempt (µs); attempt `a`
+    /// waits `retry_backoff_us * 2^(a-1)` before retrying the next
+    /// replica.  Only reachable when [`crate::tier::LinkSpec::timeout_us`]
+    /// arms the deadline.
+    pub retry_backoff_us: f64,
+    /// Scheduled failures, transient windows and stragglers
+    /// (default: none).
     pub faults: FaultPlan,
 }
 
@@ -81,6 +91,8 @@ impl Default for ClusterConfig {
             expert_mb: 25.0,
             act_mb: 0.5,
             promote_after: 0,
+            replicas: 1,
+            retry_backoff_us: 50.0,
             faults: FaultPlan::none(),
         }
     }
@@ -107,6 +119,16 @@ impl ClusterConfig {
         self
     }
 
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
+    pub fn with_retry_backoff_us(mut self, retry_backoff_us: f64) -> Self {
+        self.retry_backoff_us = retry_backoff_us;
+        self
+    }
+
     pub fn with_faults(mut self, faults: FaultPlan) -> Self {
         self.faults = faults;
         self
@@ -126,6 +148,16 @@ impl ClusterConfig {
         anyhow::ensure!(
             self.act_mb >= 0.0 && self.act_mb.is_finite(),
             "activation payload must be finite and >= 0 MB"
+        );
+        anyhow::ensure!(
+            self.replicas >= 1 && self.replicas <= self.nodes,
+            "replication factor {} must be between 1 and the node count {}",
+            self.replicas,
+            self.nodes
+        );
+        anyhow::ensure!(
+            self.retry_backoff_us >= 0.0 && self.retry_backoff_us.is_finite(),
+            "retry backoff must be finite and >= 0 µs"
         );
         self.link.validate()?;
         self.faults.validate(self.nodes)
@@ -308,8 +340,167 @@ mod tests {
         let net = c.stats().net.unwrap();
         assert_eq!(net.failovers, 1);
         assert_eq!(net.remote_lookups, 1); // node 2 is still remote
+        // at R=1 the ring fallback IS the degraded path: no replica held
+        // the expert, so the serve counts as a degraded fetch
+        assert_eq!(net.degraded_fetches, 1);
         // same expert again: the rerouted copy is warm on node 2
         assert!(c.lookup(0, 1, true).hit);
+    }
+
+    #[test]
+    fn replica_failover_serves_from_surviving_replica_then_degrades() {
+        // k=3, R=2: expert 1's replicas sit on nodes 1 (rank 0) and 2.
+        let cfg = ClusterConfig::default()
+            .with_nodes(3)
+            .with_replicas(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_faults(FaultPlan::none().with_failure(1, 0));
+        let mut c = cluster(&cfg, 4);
+        let r = c.lookup(0, 1, true);
+        assert!(!r.hit);
+        assert_eq!(r.fetch_us, 110.0); // node 2 serves at normal wire cost
+        let net = c.stats().net.unwrap();
+        assert_eq!(net.failovers, 1); // rank 0 was unreachable
+        assert_eq!(net.degraded_fetches, 0); // ...but a replica served it
+        // warm on the surviving replica now
+        assert!(c.lookup(0, 1, true).hit);
+
+        // kill the second replica too: the same expert degrades to the
+        // ring scan, which lands on the front node — and never panics
+        let cfg = ClusterConfig::default()
+            .with_nodes(3)
+            .with_replicas(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_faults(FaultPlan::none().with_failure(1, 0).with_failure(2, 0));
+        let mut c = cluster(&cfg, 4);
+        let r = c.lookup(0, 1, true);
+        assert!(!r.hit);
+        assert_eq!(r.fetch_us, 100.0); // front-node demand load, no wire
+        let net = c.stats().net.unwrap();
+        assert_eq!(net.degraded_fetches, 1);
+        assert_eq!(net.failovers, 1);
+    }
+
+    #[test]
+    fn timed_out_fetch_retries_next_replica_with_backoff() {
+        // node 1's straggled link prices a miss at 50 µs > the 20 µs
+        // deadline; the rank-1 replica on node 2 serves within it.
+        let cfg = ClusterConfig::default()
+            .with_nodes(3)
+            .with_replicas(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0).with_timeout_us(20.0))
+            .with_retry_backoff_us(5.0)
+            .with_faults(FaultPlan::none().with_straggler(1, 5.0));
+        let mut c = cluster(&cfg, 4);
+        let r = c.lookup(0, 1, true);
+        assert!(!r.hit);
+        // 100 local fault on node 2 + 10 wire + (20 timeout + 5 backoff)
+        assert_eq!(r.fetch_us, 135.0);
+        let net = c.stats().net.unwrap();
+        assert_eq!(net.retries, 1);
+        assert_eq!(net.timeout_us, 20.0);
+        assert_eq!(net.backoff_us, 5.0);
+        assert_eq!(net.wire_us, 10.0); // only the serving attempt commits
+        assert_eq!(net.degraded_fetches, 0);
+    }
+
+    #[test]
+    fn exhausted_retry_chain_waits_out_the_final_fetch() {
+        // both replicas time out; the chain ends and the last attempt
+        // commits its full wire time instead of panicking or looping.
+        let cfg = ClusterConfig::default()
+            .with_nodes(3)
+            .with_replicas(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0).with_timeout_us(20.0))
+            .with_retry_backoff_us(5.0)
+            .with_faults(
+                FaultPlan::none()
+                    .with_straggler(1, 5.0)
+                    .with_straggler(2, 5.0),
+            );
+        let mut c = cluster(&cfg, 4);
+        let r = c.lookup(0, 1, true);
+        assert!(!r.hit);
+        // 100 local + 50 slow wire on node 2 + (20 + 5) timeout penalty
+        assert_eq!(r.fetch_us, 175.0);
+        let net = c.stats().net.unwrap();
+        assert_eq!(net.retries, 1);
+        assert_eq!(net.wire_us, 50.0);
+    }
+
+    #[test]
+    fn down_window_recovers_cold_and_link_flap_recovers_warm() {
+        // crash-restart: node 1 loses its cache across the outage
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_faults(FaultPlan::none().with_down_window(1, 2, 4));
+        let mut c = cluster(&cfg, 4);
+        assert!(!c.lookup(0, 1, true).hit); // #0 remote miss, warms node 1
+        assert!(c.lookup(0, 1, true).hit); // #1 remote hit
+        c.lookup(0, 1, true); // #2 degraded to node 0
+        c.lookup(0, 1, true); // #3 degraded to node 0
+        assert_eq!(c.stats().net.unwrap().degraded_fetches, 2);
+        // #4: node 1 is back but cold — the expert must miss again
+        assert!(!c.lookup(0, 1, true).hit);
+        assert_eq!(c.stats().net.unwrap().degraded_fetches, 2);
+
+        // link flap: same schedule, but the node keeps its residency
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_faults(FaultPlan::none().with_link_flap(1, 2, 4));
+        let mut c = cluster(&cfg, 4);
+        assert!(!c.lookup(0, 1, true).hit); // #0 warms node 1
+        assert!(c.lookup(0, 1, true).hit); // #1
+        c.lookup(0, 1, true); // #2 degraded
+        c.lookup(0, 1, true); // #3 degraded
+        // #4: the link is back and the cache survived the flap
+        assert!(c.lookup(0, 1, true).hit);
+    }
+
+    #[test]
+    fn slow_link_and_fail_slow_episodes_end_on_schedule() {
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_faults(FaultPlan::none().with_slow_link(1, 1, 2, 3.0));
+        let mut c = cluster(&cfg, 4);
+        c.lookup(0, 1, true); // #0: healthy wire, 10
+        c.lookup(0, 1, true); // #1: episode wire, 30
+        c.lookup(0, 1, true); // #2: episode over, 10
+        assert_eq!(c.stats().net.unwrap().wire_us, 50.0);
+
+        let cfg = ClusterConfig::default()
+            .with_nodes(2)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_faults(FaultPlan::none().with_fail_slow(1, 1, 2, 2.0));
+        let mut c = cluster(&cfg, 4);
+        c.lookup(0, 1, true); // #0: 10
+        c.lookup(0, 1, true); // #1: 20 (fail-slow serve)
+        c.lookup(0, 1, true); // #2: 10
+        assert_eq!(c.stats().net.unwrap().wire_us, 40.0);
+    }
+
+    #[test]
+    fn replicated_cluster_validates_and_r1_matches_builder_default() {
+        assert!(ClusterConfig::default()
+            .with_nodes(2)
+            .with_replicas(3)
+            .validate()
+            .is_err());
+        assert!(ClusterConfig::default().with_replicas(0).validate().is_err());
+        assert!(ClusterConfig::default()
+            .with_nodes(4)
+            .with_replicas(4)
+            .validate()
+            .is_ok());
+        assert!(ClusterConfig {
+            retry_backoff_us: f64::NAN,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
     }
 
     #[test]

@@ -69,12 +69,36 @@ impl PlacementKind {
             }
         }
     }
+
+    /// Node holding replica `rank` of `(layer, expert)`: the rank-0
+    /// replica is the primary [`Self::owner`]; rank `r` is a
+    /// deterministic rotation `(owner + r) % k`.  Ranks `0..R` therefore
+    /// name `R` *distinct* nodes whenever `R <= k`, and rank maps for
+    /// different `R` are nested prefixes of each other — which is what
+    /// makes availability monotone in the replication factor under a
+    /// fixed fault plan.
+    #[inline]
+    pub fn replica_owner(
+        &self,
+        layer: usize,
+        expert: u8,
+        n_experts: usize,
+        k: usize,
+        rank: usize,
+    ) -> usize {
+        if k <= 1 {
+            return 0;
+        }
+        (self.owner(layer, expert, n_experts, k) + rank) % k
+    }
 }
 
 /// SplitMix64 finalizer — the standard avalanche used for seeding
-/// elsewhere in this crate's synthetic generators.
+/// elsewhere in this crate's synthetic generators.  `pub(crate)` so the
+/// fault-plan chaos generator can derive its windows from the same
+/// stateless hash.
 #[inline]
-fn splitmix64(x: u64) -> u64 {
+pub(crate) fn splitmix64(x: u64) -> u64 {
     let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
@@ -134,6 +158,30 @@ mod tests {
         // the same expert id must not map to one node in every layer
         let owners: Vec<usize> = (0..32).map(|l| p.owner(l, 17, 64, 5)).collect();
         assert!(owners.iter().any(|&o| o != owners[0]));
+    }
+
+    #[test]
+    fn replica_ranks_are_distinct_rotations_nested_across_r() {
+        for p in PlacementKind::ALL {
+            for k in [2usize, 3, 5] {
+                for layer in 0..8 {
+                    for e in 0..64u8 {
+                        // rank 0 is the primary owner
+                        assert_eq!(p.replica_owner(layer, e, 64, k, 0), p.owner(layer, e, 64, k));
+                        // ranks 0..k cover k distinct nodes
+                        let mut seen = vec![false; k];
+                        for r in 0..k {
+                            let o = p.replica_owner(layer, e, 64, k, r);
+                            assert!(o < k);
+                            assert!(!seen[o], "{p:?} k={k} rank {r} repeats node {o}");
+                            seen[o] = true;
+                        }
+                    }
+                }
+            }
+        }
+        // k=1 collapses every rank to node 0
+        assert_eq!(PlacementKind::LayerHash.replica_owner(3, 9, 64, 1, 2), 0);
     }
 
     #[test]

@@ -72,6 +72,10 @@ pub struct ModelEngine {
     /// Empty trace handed to heuristic predictors (they only use
     /// observe/predict state, never the trace contents).
     dummy_trace: PromptTrace,
+    /// Set when a requested learned predictor failed to load and the
+    /// engine degraded to the EAM heuristic instead of refusing to
+    /// serve (see [`ModelEngine::predictor_fell_back`]).
+    predictor_fallback: bool,
 }
 
 /// One in-flight decode stream (session + accounting + cached predictions).
@@ -106,13 +110,8 @@ impl ModelEngine {
 
         let kind = PredictorKind::parse(&cfg.serve.predictor)
             .ok_or_else(|| anyhow::anyhow!("unknown predictor {}", cfg.serve.predictor))?;
-        let predictor = match kind {
-            PredictorKind::Learned => EnginePredictor::Learned(LearnedModel::load(rt, arts)?),
-            PredictorKind::None => EnginePredictor::None,
-            PredictorKind::Oracle => {
-                anyhow::bail!("predictor oracle not servable (oracle is sim-only)")
-            }
-            k => EnginePredictor::Heuristic(factory::build(
+        let heuristic = |k: PredictorKind| -> Result<EnginePredictor> {
+            Ok(EnginePredictor::Heuristic(factory::build(
                 k,
                 &PredictorParams {
                     eam: &cfg.eam,
@@ -122,7 +121,31 @@ impl ModelEngine {
                     // online serving fits through the observers instead
                     fit_traces: &[],
                 },
-            )?),
+            )?))
+        };
+        let mut predictor_fallback = false;
+        let predictor = match kind {
+            // A broken/missing learned artifact degrades to the EAM
+            // heuristic instead of refusing to serve: prefetch quality
+            // drops, availability does not.  The fallback is visible via
+            // `predictor_fell_back` and the coordinator's
+            // `serving_predictor_fallbacks` counter.
+            PredictorKind::Learned => match LearnedModel::load(rt, arts) {
+                Ok(m) => EnginePredictor::Learned(m),
+                Err(e) => {
+                    eprintln!(
+                        "warning: learned predictor failed to load ({e:#}); \
+                         serving with the EAM heuristic predictor instead"
+                    );
+                    predictor_fallback = true;
+                    heuristic(PredictorKind::Eam)?
+                }
+            },
+            PredictorKind::None => EnginePredictor::None,
+            PredictorKind::Oracle => {
+                anyhow::bail!("predictor oracle not servable (oracle is sim-only)")
+            }
+            k => heuristic(k)?,
         };
 
         // overlap budget: one layer's decode compute hides this much DMA
@@ -155,7 +178,14 @@ impl ModelEngine {
                 embeddings: vec![],
                 experts: vec![],
             },
+            predictor_fallback,
         })
+    }
+
+    /// Whether a requested learned predictor failed to load and this
+    /// engine is serving on the EAM heuristic fallback instead.
+    pub fn predictor_fell_back(&self) -> bool {
+        self.predictor_fallback
     }
 
     pub fn world(&self) -> &crate::config::WorldMeta {

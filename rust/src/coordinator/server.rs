@@ -73,8 +73,15 @@ where
     });
 
     // ---- engine worker thread
+    let worker_metrics = metrics.clone();
     let worker = std::thread::spawn(move || -> Result<()> {
         let mut engine = make_engine()?;
+        if engine.predictor_fell_back() {
+            // graceful degradation (learned artifact failed to load):
+            // surface it on the coordinator's metric set so operators
+            // see the quality downgrade, not just a stderr line
+            worker_metrics.predictor_fallbacks.inc();
+        }
         // dynamic-batching window: wait this long for co-arriving
         // requests before launching the batch (vLLM-style).  A validated
         // ServeConfig knob; 0 launches immediately.

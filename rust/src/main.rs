@@ -108,6 +108,24 @@ COMMANDS:
                     --link-gbps 10  --link-latency-us 100  --link-hop-us 5
                     --promote-after 0     (migrate hot experts to node 0
                                            after N remote serves; 0 = never)
+                    --replicas 1          (R-way expert replication: each
+                                           expert lives on R distinct nodes
+                                           and fetches fail over to the
+                                           cheapest alive replica)
+                    --fault-plan 'down:1@200-400;slow:2@500-700*3'
+                                          (transient-fault DSL, ;-separated:
+                                           fail:N@AT  straggle:N*MULT
+                                           down:N@FROM-UNTIL   (cold comeback)
+                                           flap:N@FROM-UNTIL   (warm comeback)
+                                           slow:N@FROM-UNTIL*MULT
+                                           failslow:N@FROM-UNTIL*MULT;
+                                           indices are measured lookups)
+                    --link-timeout-us 0   (remote-fetch deadline: a fetch
+                                           priced above it pays the deadline
+                                           and retries the next-cheapest
+                                           alive replica; 0 = no deadline)
+                    --retry-backoff-us 50 (exponential backoff base between
+                                           retry attempts)
                     --fail-node 1 --fail-at 500       (deterministic failure:
                                            node 1 dies at measured lookup 500)
                     --straggler 2 --straggler-mult 2.5 (slow link to node 2)
@@ -269,8 +287,14 @@ fn cluster_from_args(args: &Args) -> Result<moe_beyond::cluster::ClusterConfig> 
         args.get_f64("link-latency-us", 100.0)?,
         args.get_f64("link-gbps", 10.0)?,
         args.get_f64("link-hop-us", 5.0)?,
-    );
-    let mut faults = FaultPlan::none();
+    )
+    .with_timeout_us(args.get_f64("link-timeout-us", 0.0)?);
+    // --fault-plan is the general DSL; the legacy --fail-node /
+    // --straggler knobs merge into it so old invocations keep working.
+    let mut faults = match args.flags.get("fault-plan") {
+        Some(s) => FaultPlan::parse(s)?,
+        None => FaultPlan::none(),
+    };
     if args.flags.contains_key("fail-node") {
         faults = faults.with_failure(
             args.get_usize("fail-node", 0)?,
@@ -288,6 +312,8 @@ fn cluster_from_args(args: &Args) -> Result<moe_beyond::cluster::ClusterConfig> 
         .with_placement(placement)
         .with_link(link)
         .with_promote_after(args.get_usize("promote-after", 0)? as u32)
+        .with_replicas(args.get_usize("replicas", 1)?)
+        .with_retry_backoff_us(args.get_f64("retry-backoff-us", 50.0)?)
         .with_faults(faults);
     cfg.validate()?;
     Ok(cfg)

@@ -149,6 +149,10 @@ pub struct ServingMetrics {
     pub cache_hits: Arc<Counter>,
     pub cache_misses: Arc<Counter>,
     pub prefetches: Arc<Counter>,
+    /// Engines that asked for the learned predictor but came up on the
+    /// EAM heuristic because the artifact failed to load
+    /// ([`crate::coordinator::ModelEngine::predictor_fell_back`]).
+    pub predictor_fallbacks: Arc<Counter>,
     pub request_latency: LatencyRecorder,
     pub token_latency: LatencyRecorder,
 }
@@ -167,6 +171,7 @@ impl ServingMetrics {
             cache_hits: reg.counter("serving_cache_hits", &[]),
             cache_misses: reg.counter("serving_cache_misses", &[]),
             prefetches: reg.counter("serving_prefetches", &[]),
+            predictor_fallbacks: reg.counter("serving_predictor_fallbacks", &[]),
             request_latency: LatencyRecorder::from_handle(
                 reg.histogram("serving_request_latency_us", &[]),
             ),

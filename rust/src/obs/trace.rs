@@ -93,8 +93,39 @@ pub enum TraceEvent {
         wire_us: f64,
     },
     /// A cluster node went down (fault injection); later lookups it
-    /// owned fail over to the next alive node.
+    /// owned fail over to another replica or the ring.
     NodeDown { ts_us: f64, node: u8 },
+    /// A cluster node recovered from a transient outage (cold cache).
+    NodeUp { ts_us: f64, node: u8 },
+    /// The link to a cluster node flapped: `up: false` when it drops,
+    /// `up: true` when it returns (the node itself stayed warm).
+    LinkFlap { ts_us: f64, node: u8, up: bool },
+    /// A lookup whose rank-0 owner was unreachable was served by another
+    /// replica (`node` is the replica that served).
+    ReplicaFailover {
+        ts_us: f64,
+        node: u8,
+        layer: u16,
+        expert: u8,
+    },
+    /// A remote fetch attempt blew its deadline and was retried on
+    /// `node` (the next-cheapest alive replica); `attempt` counts
+    /// retries of this lookup, driving the exponential backoff.
+    RemoteRetry {
+        ts_us: f64,
+        node: u8,
+        layer: u16,
+        expert: u8,
+        attempt: u8,
+    },
+    /// Every replica of the expert was unreachable: the lookup degraded
+    /// to a deepest-tier demand load on `node` (the ring-scan fallback).
+    DegradedFetch {
+        ts_us: f64,
+        node: u8,
+        layer: u16,
+        expert: u8,
+    },
 }
 
 impl TraceEvent {
@@ -107,7 +138,12 @@ impl TraceEvent {
             | TraceEvent::TierMove { ts_us, .. }
             | TraceEvent::Prefetch { ts_us, .. }
             | TraceEvent::RemoteFetch { ts_us, .. }
-            | TraceEvent::NodeDown { ts_us, .. } => *ts_us,
+            | TraceEvent::NodeDown { ts_us, .. }
+            | TraceEvent::NodeUp { ts_us, .. }
+            | TraceEvent::LinkFlap { ts_us, .. }
+            | TraceEvent::ReplicaFailover { ts_us, .. }
+            | TraceEvent::RemoteRetry { ts_us, .. }
+            | TraceEvent::DegradedFetch { ts_us, .. } => *ts_us,
         }
     }
 }
@@ -355,6 +391,95 @@ pub fn chrome_trace_json(ring: &TraceRing, clock: &str) -> Json {
                     args_json(vec![("node", Json::num(*node as f64))]),
                 ],
             ),
+            TraceEvent::NodeUp { ts_us, node } => event_json(
+                "node_up",
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("fault")),
+                    ("s", Json::str("t")),
+                    args_json(vec![("node", Json::num(*node as f64))]),
+                ],
+            ),
+            TraceEvent::LinkFlap { ts_us, node, up } => event_json(
+                if *up { "link_up" } else { "link_down" },
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("fault")),
+                    ("s", Json::str("t")),
+                    args_json(vec![("node", Json::num(*node as f64))]),
+                ],
+            ),
+            TraceEvent::ReplicaFailover {
+                ts_us,
+                node,
+                layer,
+                expert,
+            } => event_json(
+                "replica_failover",
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("net")),
+                    ("s", Json::str("t")),
+                    args_json(vec![
+                        ("node", Json::num(*node as f64)),
+                        ("layer", Json::num(*layer as f64)),
+                        ("expert", Json::num(*expert as f64)),
+                    ]),
+                ],
+            ),
+            TraceEvent::RemoteRetry {
+                ts_us,
+                node,
+                layer,
+                expert,
+                attempt,
+            } => event_json(
+                "remote_retry",
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("net")),
+                    ("s", Json::str("t")),
+                    args_json(vec![
+                        ("node", Json::num(*node as f64)),
+                        ("layer", Json::num(*layer as f64)),
+                        ("expert", Json::num(*expert as f64)),
+                        ("attempt", Json::num(*attempt as f64)),
+                    ]),
+                ],
+            ),
+            TraceEvent::DegradedFetch {
+                ts_us,
+                node,
+                layer,
+                expert,
+            } => event_json(
+                "degraded_fetch",
+                "i",
+                *ts_us,
+                1,
+                0,
+                vec![
+                    ("cat", Json::str("net")),
+                    ("s", Json::str("t")),
+                    args_json(vec![
+                        ("node", Json::num(*node as f64)),
+                        ("layer", Json::num(*layer as f64)),
+                        ("expert", Json::num(*expert as f64)),
+                    ]),
+                ],
+            ),
         })
         .collect();
 
@@ -446,6 +571,27 @@ mod tests {
             wire_us: 110.0,
         });
         r.push(TraceEvent::NodeDown { ts_us: 9.0, node: 1 });
+        r.push(TraceEvent::NodeUp { ts_us: 10.0, node: 1 });
+        r.push(TraceEvent::LinkFlap { ts_us: 11.0, node: 2, up: false });
+        r.push(TraceEvent::ReplicaFailover {
+            ts_us: 12.0,
+            node: 2,
+            layer: 2,
+            expert: 9,
+        });
+        r.push(TraceEvent::RemoteRetry {
+            ts_us: 13.0,
+            node: 1,
+            layer: 2,
+            expert: 9,
+            attempt: 1,
+        });
+        r.push(TraceEvent::DegradedFetch {
+            ts_us: 14.0,
+            node: 0,
+            layer: 2,
+            expert: 9,
+        });
         r.push(TraceEvent::RequestEnd { ts_us: 205.0, request: 7, tenant: 1 });
 
         let j = chrome_trace_json(&r, "virtual");
@@ -453,7 +599,7 @@ mod tests {
             Some(Json::Arr(a)) => a,
             other => panic!("traceEvents missing: {other:?}"),
         };
-        assert_eq!(evs.len(), 7);
+        assert_eq!(evs.len(), 12);
         for ev in evs {
             let ph = ev.get("ph").unwrap().as_str().unwrap();
             assert!(matches!(ph, "b" | "e" | "X" | "i"));
@@ -468,7 +614,7 @@ mod tests {
         }
         let meta = j.get("metadata").unwrap();
         assert_eq!(meta.get("clock").unwrap().as_str().unwrap(), "virtual");
-        assert_eq!(meta.get("total_events").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(meta.get("total_events").unwrap().as_f64().unwrap(), 12.0);
     }
 
     #[test]

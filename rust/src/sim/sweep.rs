@@ -23,8 +23,10 @@
 //! forces the retained exact replays everywhere.
 
 use crate::cache::{CacheStats, LruCache};
-use crate::cluster::{self, ClusterConfig, PlacementKind};
+use crate::cluster::{self, ClusterConfig, FaultPlan, PlacementKind};
 use crate::config::{CacheConfig, EamConfig, SimConfig, TierConfig};
+use crate::metrics::LatencyReport;
+use crate::obs::Hist;
 use crate::predictor::{factory, CachedPredictor, ExpertPredictor, PredictorParams, TracePredictions};
 use crate::sim::SimEngine;
 use crate::tier::{NetStats, TierCostModel, TierStats};
@@ -745,6 +747,272 @@ pub fn sweep_cluster_threaded<const N: usize>(
     })
 }
 
+/// One cell of the chaos grid: a (replication factor, fault intensity,
+/// placement) combination under a seeded transient-fault plan, with
+/// availability, tail-latency, and recovery outcomes.
+#[derive(Debug, Clone)]
+pub struct ChaosSweepPoint {
+    /// Replication factor R (experts live on R distinct nodes).
+    pub replicas: usize,
+    /// Fault intensity fed to [`FaultPlan::chaos`] (`0.0` = the healthy
+    /// baseline row — always present, see [`sweep_chaos`]).
+    pub intensity: f64,
+    pub placement: PlacementKind,
+    /// Fraction of measured lookups that did NOT have to take the
+    /// degraded all-replicas-down path: `1 - degraded_fetches/measured`.
+    pub availability: f64,
+    pub gpu_hit_rate: f64,
+    /// Modeled critical-path µs over the whole replay (one persistent
+    /// cluster — residency and the fault clock span all prompts).
+    pub critical_path_us: f64,
+    /// p99 of per-prompt critical-path deltas (bucketed; see
+    /// [`crate::obs::Hist`]).
+    pub p99_prompt_us: f64,
+    /// `p99_prompt_us` relative to the same (R, placement) group's
+    /// intensity-0 baseline (`1.0` when the baseline is free).
+    pub p99_inflation: f64,
+    /// Per-prompt GPU hit rate, in replay order — the hit-rate-recovery
+    /// curve: dips while nodes are down or freshly cold, reconverges as
+    /// caches rewarm.
+    pub hit_curve: Vec<f64>,
+    pub stats: CacheStats,
+    pub net: NetStats,
+}
+
+/// Exact measured-lookup count of a compiled corpus — the fault-plan
+/// horizon [`sweep_chaos`] hands to [`FaultPlan::chaos`], so generated
+/// windows land inside the replay regardless of corpus size.
+fn chaos_horizon<const N: usize>(compiled: &[CompiledTrace<N>], warmup_tokens: usize) -> u64 {
+    let mut horizon = 0u64;
+    for c in compiled {
+        let warm = warmup_tokens.min(c.n_tokens());
+        for t in warm..c.n_tokens() {
+            for l in 0..c.n_layers() {
+                horizon += c.set(t, l).len() as u64;
+            }
+        }
+    }
+    horizon
+}
+
+fn run_chaos_point<const N: usize>(
+    kind: PredictorKind,
+    (replicas, placement, intensity): (usize, PlacementKind, f64),
+    cache_frac: f64,
+    inputs: &SweepInputs<'_, N>,
+    compiled: &[CompiledTrace<N>],
+    base: &ClusterConfig,
+    horizon: u64,
+) -> Result<ChaosSweepPoint> {
+    let k = base.nodes;
+    let total = inputs.n_layers * inputs.n_experts;
+    let cap = ((total as f64 * cache_frac / k as f64).round() as usize).max(1);
+    let cfg = base
+        .clone()
+        .with_placement(placement)
+        .with_replicas(replicas)
+        .with_faults(FaultPlan::chaos(k, intensity, horizon));
+    let cache_cfg = CacheConfig::default().with_capacity(cap);
+
+    // ONE persistent cluster across every prompt (unlike the other
+    // sweeps' fresh-backend-per-prompt replays): the fault clock ticks
+    // per measured lookup, so outages must span prompt boundaries for
+    // the recovery curve to mean anything.
+    let mem = cluster::build::<N>(
+        &cfg,
+        "lru",
+        &cache_cfg,
+        None,
+        &inputs.sim,
+        inputs.n_experts,
+        f64::INFINITY,
+    )?;
+    let mut engine = SimEngine::<N>::new(mem, inputs.sim.clone(), inputs.n_experts);
+
+    let mut stats = CacheStats::default();
+    let mut hist = Hist::new();
+    let mut hit_curve = Vec::with_capacity(inputs.test_traces.len());
+    let mut prev_cp = 0.0f64;
+    let mut prev_hits = 0u64;
+    let mut prev_measured = 0u64;
+
+    let mut predictor = if kind == PredictorKind::Learned {
+        None
+    } else {
+        Some(make_predictor(kind, inputs)?)
+    };
+    for (i, tr) in inputs.test_traces.iter().enumerate() {
+        match (&mut predictor, kind) {
+            (None, PredictorKind::Learned) => {
+                let preds = &inputs
+                    .learned
+                    .ok_or_else(|| anyhow::anyhow!("learned sweep needs precomputed predictions"))?[i];
+                let mut p = CachedPredictor::new(preds);
+                engine.run_prompt_compiled(tr, &compiled[i], &mut p, &mut stats);
+            }
+            (Some(p), _) => engine.run_prompt_compiled(tr, &compiled[i], p.as_mut(), &mut stats),
+            _ => unreachable!(),
+        }
+        let cp = engine.memory.stats().critical_path_us();
+        hist.record(cp - prev_cp);
+        prev_cp = cp;
+        let measured = stats.hits + stats.misses;
+        let (dm, dh) = (measured - prev_measured, stats.hits - prev_hits);
+        hit_curve.push(if dm == 0 { 0.0 } else { dh as f64 / dm as f64 });
+        prev_measured = measured;
+        prev_hits = stats.hits;
+    }
+
+    let m = engine.memory.stats();
+    let net = m.net.expect("cluster engine lost its net stats");
+    let measured = stats.hits + stats.misses;
+    Ok(ChaosSweepPoint {
+        replicas,
+        intensity,
+        placement,
+        availability: 1.0 - net.degraded_fetches as f64 / measured.max(1) as f64,
+        gpu_hit_rate: stats.hit_rate(),
+        critical_path_us: prev_cp,
+        p99_prompt_us: LatencyReport::from_hist(&hist).p99_us,
+        p99_inflation: 1.0, // filled in by the sweep against the group baseline
+        hit_curve,
+        stats,
+        net,
+    })
+}
+
+/// Chaos sweep with the default worker count: replicate × break ×
+/// measure.  See [`sweep_chaos_threaded`].
+pub fn sweep_chaos<const N: usize>(
+    kind: PredictorKind,
+    replicas: &[usize],
+    intensities: &[f64],
+    placements: &[PlacementKind],
+    cache_frac: f64,
+    inputs: &SweepInputs<'_, N>,
+    base: &ClusterConfig,
+) -> Result<Vec<ChaosSweepPoint>> {
+    sweep_chaos_threaded(
+        kind,
+        replicas,
+        intensities,
+        placements,
+        cache_frac,
+        inputs,
+        base,
+        sweep_threads(),
+    )
+}
+
+/// Sweep the fault-tolerant cluster over replication factor × fault
+/// intensity × placement on an explicit worker count (`1` = serial;
+/// output is deterministic at any count).
+///
+/// Every cell replays the whole corpus through ONE persistent
+/// `base.nodes`-node cluster under a seeded [`FaultPlan::chaos`] plan
+/// sized to the corpus's measured-lookup horizon (replacing whatever
+/// fault plan `base` carries).  `cache_frac` is the per-node capacity
+/// fraction, divided by the node count exactly as [`sweep_cluster`]
+/// does.  The intensity axis always gets a `0.0` healthy-baseline row
+/// prepended (deduplicated): `p99_inflation` of every row is measured
+/// against its (R, placement) group's baseline.  Output is row-major
+/// (replicas × placement × intensity).
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_chaos_threaded<const N: usize>(
+    kind: PredictorKind,
+    replicas: &[usize],
+    intensities: &[f64],
+    placements: &[PlacementKind],
+    cache_frac: f64,
+    inputs: &SweepInputs<'_, N>,
+    base: &ClusterConfig,
+    threads: usize,
+) -> Result<Vec<ChaosSweepPoint>> {
+    anyhow::ensure!(
+        cache_frac.is_finite() && cache_frac > 0.0,
+        "chaos sweep cache_frac {cache_frac} must be finite and > 0"
+    );
+    let mut ints = vec![0.0f64];
+    for &i in intensities {
+        anyhow::ensure!(
+            i.is_finite() && i >= 0.0,
+            "chaos sweep intensity {i} must be finite and >= 0"
+        );
+        if i > 0.0 {
+            ints.push(i);
+        }
+    }
+    let mut grid = Vec::with_capacity(replicas.len() * placements.len() * ints.len());
+    for &r in replicas {
+        anyhow::ensure!(
+            r >= 1 && r <= base.nodes,
+            "chaos sweep replication factor {r} must be in 1..={} (the node count)",
+            base.nodes
+        );
+        for &p in placements {
+            for &i in &ints {
+                grid.push((r, p, i));
+            }
+        }
+    }
+    let compiled = corpus_for(inputs)?;
+    let horizon = chaos_horizon(&compiled, inputs.sim.warmup_tokens);
+    let mut points = parallel_map(&grid, threads, |&cell| {
+        run_chaos_point(kind, cell, cache_frac, inputs, &compiled, base, horizon)
+    })?;
+    // Tail inflation vs the healthy run of the same (R, placement)
+    // group — the first row of each group is its intensity-0 baseline.
+    for group in points.chunks_mut(ints.len()) {
+        let base_p99 = group[0].p99_prompt_us;
+        for pt in group.iter_mut() {
+            pt.p99_inflation = if base_p99 > 0.0 {
+                pt.p99_prompt_us / base_p99
+            } else {
+                1.0
+            };
+        }
+    }
+    Ok(points)
+}
+
+/// Render chaos sweep points as CSV (one row per grid cell; the
+/// recovery curve is `|`-joined per-prompt hit rates in the last
+/// column).  Pure function of the points, so two seeded runs of the
+/// same grid produce byte-identical files — the CI chaos-determinism
+/// gate `cmp`s exactly this output.
+pub fn chaos_csv(points: &[ChaosSweepPoint]) -> String {
+    let mut out = String::from(
+        "replicas,intensity,placement,availability,gpu_hit_rate,critical_path_us,\
+         p99_prompt_us,p99_inflation,remote_lookups,remote_hits,failovers,retries,\
+         degraded_fetches,wire_us,promotion_us,timeout_us,backoff_us,hit_curve\n",
+    );
+    for p in points {
+        let curve: Vec<String> = p.hit_curve.iter().map(|h| format!("{h:.6}")).collect();
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            p.replicas,
+            p.intensity,
+            p.placement.id(),
+            p.availability,
+            p.gpu_hit_rate,
+            p.critical_path_us,
+            p.p99_prompt_us,
+            p.p99_inflation,
+            p.net.remote_lookups,
+            p.net.remote_hits,
+            p.net.failovers,
+            p.net.retries,
+            p.net.degraded_fetches,
+            p.net.wire_us,
+            p.net.promotion_us,
+            p.net.timeout_us,
+            p.net.backoff_us,
+            curve.join("|"),
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1217,5 +1485,108 @@ mod tests {
             assert_eq!(s.tiers.demotions, p.tiers.demotions);
             assert_eq!(s.tiers.dropped, p.tiers.dropped);
         }
+    }
+
+    /// Chaos grid: the prepended intensity-0 baseline rows are clean
+    /// (full availability, no retries, inflation exactly 1), and the
+    /// whole sweep — including the seeded fault plans — is bit-identical
+    /// at any worker count (and therefore across replays).
+    #[test]
+    fn chaos_sweep_baselines_are_clean_and_output_is_deterministic() {
+        let test = mk_traces(6, 71);
+        let fit = mk_traces(4, 72);
+        let inp = inputs(&test, &fit);
+        let base = ClusterConfig::default().with_nodes(3);
+        let run = |threads| {
+            sweep_chaos_threaded(
+                PredictorKind::None,
+                &[1, 2],
+                &[0.8],
+                &[PlacementKind::RoundRobin],
+                0.2,
+                &inp,
+                &base,
+                threads,
+            )
+            .unwrap()
+        };
+        let pts = run(1);
+        // row-major (R × placement × (baseline + intensities))
+        assert_eq!(pts.len(), 4);
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.replicas, if i < 2 { 1 } else { 2 });
+            assert_eq!(p.hit_curve.len(), test.len());
+            assert!(
+                (0.0..=1.0).contains(&p.availability),
+                "availability {} out of range",
+                p.availability
+            );
+        }
+        for b in [&pts[0], &pts[2]] {
+            assert_eq!(b.intensity, 0.0);
+            assert_eq!(b.availability, 1.0);
+            assert_eq!(b.p99_inflation, 1.0);
+            assert_eq!(b.net.degraded_fetches, 0);
+            assert_eq!(b.net.retries, 0);
+            assert_eq!(b.net.timeout_us, 0.0);
+        }
+        // k=3 round-robin must cross the network even when healthy
+        assert!(pts[0].net.remote_lookups > 0);
+        let par = run(4);
+        for (s, p) in pts.iter().zip(par.iter()) {
+            assert_eq!(s.replicas, p.replicas);
+            assert_eq!(s.intensity.to_bits(), p.intensity.to_bits());
+            assert_eq!(s.availability.to_bits(), p.availability.to_bits());
+            assert_eq!(s.gpu_hit_rate.to_bits(), p.gpu_hit_rate.to_bits());
+            assert_eq!(s.critical_path_us.to_bits(), p.critical_path_us.to_bits());
+            assert_eq!(s.p99_prompt_us.to_bits(), p.p99_prompt_us.to_bits());
+            assert_eq!(s.net, p.net);
+            assert_eq!(s.hit_curve, p.hit_curve);
+        }
+        assert_eq!(chaos_csv(&pts), chaos_csv(&par));
+    }
+
+    /// Under a fixed chaos plan with nested replica rank maps, adding
+    /// replicas never reduces availability (the monotonicity the R-column
+    /// of `benches/cluster_scale.rs` gates on).
+    #[test]
+    fn chaos_availability_is_monotone_in_replication() {
+        let test = mk_traces(8, 73);
+        let fit = mk_traces(4, 74);
+        let inp = inputs(&test, &fit);
+        let base = ClusterConfig::default().with_nodes(4);
+        let pts = sweep_chaos(
+            PredictorKind::None,
+            &[1, 2, 3, 4],
+            &[1.0],
+            &[PlacementKind::RoundRobin],
+            0.2,
+            &inp,
+            &base,
+        )
+        .unwrap();
+        // rows: (R, 0.0), (R, 1.0) per R
+        let faulted: Vec<&ChaosSweepPoint> =
+            pts.iter().filter(|p| p.intensity > 0.0).collect();
+        assert_eq!(faulted.len(), 4);
+        for w in faulted.windows(2) {
+            assert!(
+                w[1].availability >= w[0].availability,
+                "availability must not drop when R grows: R={} {} vs R={} {}",
+                w[0].replicas,
+                w[0].availability,
+                w[1].replicas,
+                w[1].availability
+            );
+        }
+        // the chaos plan at full intensity on 4 nodes actually bites
+        assert!(
+            faulted[0].net.degraded_fetches > 0,
+            "intensity-1.0 chaos on R=1 should force degraded fetches"
+        );
+        // CSV shape: header + one row per point, recovery curve last
+        let csv = chaos_csv(&pts);
+        assert_eq!(csv.lines().count(), pts.len() + 1);
+        assert!(csv.starts_with("replicas,intensity,placement,availability,"));
     }
 }

@@ -32,6 +32,11 @@ pub struct LinkSpec {
     pub gbps: f64,
     /// Fixed switching cost per hop traversed (µs).
     pub per_hop_us: f64,
+    /// Per-fetch deadline (µs); `<= 0` disables timeouts.  A remote
+    /// fetch whose priced wire time exceeds the deadline charges
+    /// exactly `timeout_us` (the fetcher gave up at the deadline) and
+    /// the cluster retries the next-cheapest alive replica.
+    pub timeout_us: f64,
 }
 
 impl LinkSpec {
@@ -40,7 +45,14 @@ impl LinkSpec {
             latency_us,
             gbps,
             per_hop_us,
+            timeout_us: 0.0,
         }
+    }
+
+    /// Arm the per-fetch deadline (builder form; `0` keeps it off).
+    pub fn with_timeout_us(mut self, timeout_us: f64) -> Self {
+        self.timeout_us = timeout_us;
+        self
     }
 
     /// The zero-cost link: every transfer is free.  A K=1 (or K-node,
@@ -72,10 +84,20 @@ impl LinkSpec {
         self.latency_us + self.per_hop_us * hops as f64 + bw_us
     }
 
+    /// Whether a transfer priced at `us` would blow the deadline.
+    #[inline]
+    pub fn times_out(&self, us: f64) -> bool {
+        self.timeout_us > 0.0 && us > self.timeout_us
+    }
+
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.latency_us >= 0.0, "link latency must be >= 0");
         anyhow::ensure!(self.per_hop_us >= 0.0, "per-hop cost must be >= 0");
         anyhow::ensure!(self.gbps.is_finite(), "link bandwidth must be finite");
+        anyhow::ensure!(
+            self.timeout_us.is_finite() && self.timeout_us >= 0.0,
+            "link timeout must be finite and >= 0 (0 disables it)"
+        );
         Ok(())
     }
 }
@@ -93,16 +115,26 @@ pub struct NetStats {
     pub promotions: u64,
     /// Measured lookups rerouted around a failed owner.
     pub failovers: u64,
+    /// Remote fetch attempts abandoned at the deadline and retried on
+    /// another replica.
+    pub retries: u64,
+    /// Measured lookups served through the degraded path because every
+    /// replica was unreachable (deepest-tier demand load; never a panic).
+    pub degraded_fetches: u64,
     /// Wire time charged for remote serves (activations + weights), µs.
     pub wire_us: f64,
     /// Wire time charged for promotion weight transfers, µs.
     pub promotion_us: f64,
+    /// Deadline time burned by timed-out fetch attempts, µs.
+    pub timeout_us: f64,
+    /// Exponential-backoff wait folded into retried fetches, µs.
+    pub backoff_us: f64,
 }
 
 impl NetStats {
     /// Total network µs on the modeled critical path.
     pub fn total_us(&self) -> f64 {
-        self.wire_us + self.promotion_us
+        self.wire_us + self.promotion_us + self.timeout_us + self.backoff_us
     }
 
     pub fn merge(&mut self, other: &NetStats) {
@@ -110,8 +142,12 @@ impl NetStats {
         self.remote_hits += other.remote_hits;
         self.promotions += other.promotions;
         self.failovers += other.failovers;
+        self.retries += other.retries;
+        self.degraded_fetches += other.degraded_fetches;
         self.wire_us += other.wire_us;
         self.promotion_us += other.promotion_us;
+        self.timeout_us += other.timeout_us;
+        self.backoff_us += other.backoff_us;
     }
 }
 
@@ -141,20 +177,51 @@ impl NetCostModel {
         }
     }
 
-    /// Charge one measured remote lookup.  `hit` selects the activation
-    /// payload (the owner had the expert GPU-resident) vs the weight
-    /// payload (the owner faulted it up through its own hierarchy first,
-    /// which its backend charged separately).  Returns the wire µs
-    /// (already scaled by the straggler `mult`).
-    pub fn on_remote(&mut self, hit: bool, hops: usize, mult: f64) -> f64 {
+    /// Price one remote serve without committing it: the wire µs a
+    /// lookup *would* cost (already scaled by the link `mult`).  The
+    /// retry loop prices an attempt first so a deadline blow-through
+    /// charges [`Self::on_timeout`] instead of the full transfer.
+    #[inline]
+    pub fn price_remote(&self, hit: bool, hops: usize, mult: f64) -> f64 {
         let mb = if hit { self.act_mb } else { self.expert_mb };
-        let us = self.link.transfer_us(mb, hops) * mult;
+        self.link.transfer_us(mb, hops) * mult
+    }
+
+    /// Commit one measured remote lookup priced at `us` by
+    /// [`Self::price_remote`].  `hit` selects the activation payload
+    /// (the owner had the expert GPU-resident) vs the weight payload
+    /// (the owner faulted it up through its own hierarchy first, which
+    /// its backend charged separately).
+    pub fn commit_remote(&mut self, hit: bool, us: f64) {
         self.stats.remote_lookups += 1;
         if hit {
             self.stats.remote_hits += 1;
         }
         self.stats.wire_us += us;
+    }
+
+    /// Charge one measured remote lookup: price + commit in one step.
+    /// Returns the wire µs (already scaled by the link `mult`).
+    pub fn on_remote(&mut self, hit: bool, hops: usize, mult: f64) -> f64 {
+        let us = self.price_remote(hit, hops, mult);
+        self.commit_remote(hit, us);
         us
+    }
+
+    /// Charge one abandoned fetch attempt: the fetcher waited out the
+    /// full deadline, then backed off `backoff_us` before retrying the
+    /// next replica.  Returns the µs folded into the retry path.
+    pub fn on_timeout(&mut self, backoff_us: f64) -> f64 {
+        self.stats.retries += 1;
+        self.stats.timeout_us += self.link.timeout_us;
+        self.stats.backoff_us += backoff_us;
+        self.link.timeout_us + backoff_us
+    }
+
+    /// Record one degraded serve (all replicas unreachable; the lookup
+    /// fell back to the deepest-tier demand path).
+    pub fn on_degraded(&mut self) {
+        self.stats.degraded_fetches += 1;
     }
 
     /// Charge one expert-weight migration to the front node.  Returns
@@ -215,5 +282,58 @@ mod tests {
         assert!(LinkSpec::lan().validate().is_ok());
         assert!(LinkSpec::wifi().validate().is_ok());
         assert!(LinkSpec::loopback().validate().is_ok());
+        assert!(LinkSpec::lan().with_timeout_us(-5.0).validate().is_err());
+        assert!(
+            LinkSpec::lan()
+                .with_timeout_us(f64::INFINITY)
+                .validate()
+                .is_err()
+        );
+        assert!(LinkSpec::lan().with_timeout_us(500.0).validate().is_ok());
+    }
+
+    #[test]
+    fn zero_timeout_disables_the_deadline() {
+        let l = LinkSpec::lan(); // timeout_us == 0
+        assert!(!l.times_out(1e12));
+        let armed = LinkSpec::lan().with_timeout_us(100.0);
+        assert!(!armed.times_out(100.0)); // deadline itself still fits
+        assert!(armed.times_out(100.5));
+    }
+
+    #[test]
+    fn price_then_commit_matches_on_remote_bit_for_bit() {
+        let link = LinkSpec::new(100.0, 10.0, 5.0);
+        let mut a = NetCostModel::new(link.clone(), 25.0, 0.5);
+        let mut b = NetCostModel::new(link, 25.0, 0.5);
+        for (hit, hops, mult) in [(true, 1, 1.0), (false, 2, 3.0), (false, 1, 1.0)] {
+            let direct = a.on_remote(hit, hops, mult);
+            let priced = b.price_remote(hit, hops, mult);
+            b.commit_remote(hit, priced);
+            assert_eq!(direct.to_bits(), priced.to_bits());
+        }
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn timeout_and_degraded_accounting() {
+        let link = LinkSpec::new(10.0, 0.0, 0.0).with_timeout_us(40.0);
+        let mut m = NetCostModel::new(link, 25.0, 0.5);
+        let penalty = m.on_timeout(15.0);
+        assert_eq!(penalty, 55.0); // deadline + backoff
+        m.on_degraded();
+        assert_eq!(m.stats.retries, 1);
+        assert_eq!(m.stats.degraded_fetches, 1);
+        assert_eq!(m.stats.timeout_us, 40.0);
+        assert_eq!(m.stats.backoff_us, 15.0);
+        // penalties ride the critical-path total
+        assert_eq!(m.stats.total_us(), 55.0);
+
+        let mut merged = NetStats::default();
+        merged.merge(&m.stats);
+        merged.merge(&m.stats);
+        assert_eq!(merged.retries, 2);
+        assert_eq!(merged.degraded_fetches, 2);
+        assert_eq!(merged.total_us(), 110.0);
     }
 }

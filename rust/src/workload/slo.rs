@@ -137,6 +137,35 @@ fn tenant_json(t: &TenantSlo) -> Json {
     ])
 }
 
+/// Memory-cost block of the report: the flat demand/prefetch/stall
+/// marks, plus a "net" sub-object on cluster backends (retries and
+/// degraded fetches included, so chaos runs are auditable straight from
+/// the metrics file).  Non-cluster backends omit the key entirely.
+fn memory_json(m: &MemoryStats) -> Json {
+    let mut fields = vec![
+        ("demand_us", Json::num(m.demand_us)),
+        ("prefetch_us", Json::num(m.prefetch_us)),
+        ("stall_us", Json::num(m.stall_us)),
+    ];
+    if let Some(n) = &m.net {
+        fields.push((
+            "net",
+            Json::obj(vec![
+                ("remote_lookups", Json::num(n.remote_lookups as f64)),
+                ("remote_hits", Json::num(n.remote_hits as f64)),
+                ("failovers", Json::num(n.failovers as f64)),
+                ("retries", Json::num(n.retries as f64)),
+                ("degraded_fetches", Json::num(n.degraded_fetches as f64)),
+                ("wire_us", Json::num(n.wire_us)),
+                ("promotion_us", Json::num(n.promotion_us)),
+                ("timeout_us", Json::num(n.timeout_us)),
+                ("backoff_us", Json::num(n.backoff_us)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
+}
+
 /// Deterministic JSON encoding of a report: integer-valued floats print
 /// as integers, object keys are sorted (BTreeMap), and every number
 /// comes out of the same seeded virtual-time arithmetic — so two runs of
@@ -173,14 +202,7 @@ pub fn report_json(r: &WorkloadReport) -> Json {
                 ),
             ]),
         ),
-        (
-            "memory",
-            Json::obj(vec![
-                ("demand_us", Json::num(r.memory.demand_us)),
-                ("prefetch_us", Json::num(r.memory.prefetch_us)),
-                ("stall_us", Json::num(r.memory.stall_us)),
-            ]),
-        ),
+        ("memory", memory_json(&r.memory)),
         ("aggregate", tenant_json(&r.aggregate)),
         (
             "tenants",

@@ -292,14 +292,20 @@ pub fn load_csv(points: &[LoadPoint]) -> String {
     let mut out = String::from(
         "policy,backend,predictor,load_mult,offered_rps,cache_frac,completed,completed_rps,\
          tokens_per_sec,hit_rate,prediction_hit_rate,p50_ttft_ms,p95_ttft_ms,p50_tbt_ms,\
-         p95_tbt_ms,p50_latency_ms,p95_latency_ms,p95_queue_ms,demand_ms,stall_ms\n",
+         p95_tbt_ms,p50_latency_ms,p95_latency_ms,p95_queue_ms,demand_ms,stall_ms,\
+         remote_lookups,remote_hits,failovers,retries,degraded_fetches,wire_ms,promo_ms,\
+         timeout_ms,backoff_ms\n",
     );
     for p in points {
         let r = &p.report;
         let a = &r.aggregate;
+        // non-cluster backends have no NetStats: zero columns keep the
+        // schema rectangular across mixed-backend grids
+        let net = r.memory.net.clone().unwrap_or_default();
         out.push_str(&format!(
             "{},{},{},{:.3},{:.4},{:.3},{},{:.4},{:.2},{:.4},{:.4},\
-             {:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3}\n",
+             {:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3},\
+             {},{},{},{},{},{:.3},{:.3},{:.3},{:.3}\n",
             p.policy.id(),
             p.backend.id(),
             p.predictor.id(),
@@ -320,6 +326,15 @@ pub fn load_csv(points: &[LoadPoint]) -> String {
             a.queue_delay.p95_us / 1e3,
             r.memory.demand_us / 1e3,
             r.memory.stall_us / 1e3,
+            net.remote_lookups,
+            net.remote_hits,
+            net.failovers,
+            net.retries,
+            net.degraded_fetches,
+            net.wire_us / 1e3,
+            net.promotion_us / 1e3,
+            net.timeout_us / 1e3,
+            net.backoff_us / 1e3,
         ));
     }
     out

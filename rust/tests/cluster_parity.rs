@@ -264,3 +264,172 @@ fn seeded_faulty_cluster_replay_is_byte_identical_across_runs() {
     // the failure actually engaged: enough measured lookups to pass 40
     assert!(a.0 + a.1 > 40, "scenario too small to exercise the failure");
 }
+
+/// The replication machinery is inert at R=1 with no faults: a K=3
+/// cluster configured through the new knobs (`with_replicas(1)` plus an
+/// explicit retry backoff, which is unreachable while the deadline is
+/// off) replays byte-identically to the plain pre-replication config —
+/// the old single-owner path survives unchanged.
+#[test]
+fn r1_cluster_with_replication_knobs_matches_single_owner_bit_for_bit() {
+    let mut rng = Rng::new(605);
+    for placement in [PlacementKind::RoundRobin, PlacementKind::LayerHash] {
+        for case in 0..8 {
+            let traces: Vec<PromptTrace> = (0..rng.range(1, 4))
+                .map(|_| {
+                    let n_tokens = rng.range(4, 40);
+                    random_trace(&mut rng, n_tokens, 3, 16)
+                })
+                .collect();
+            let cap = rng.range(1, 12);
+            let sim = SimConfig {
+                prefetch_budget: rng.range(1, 6),
+                warmup_tokens: rng.below(10),
+                ..Default::default()
+            };
+            let cache = CacheConfig::default().with_capacity(cap);
+            let old = ClusterConfig::default()
+                .with_nodes(3)
+                .with_placement(placement)
+                .with_link(LinkSpec::new(50.0, 1.0, 5.0))
+                .with_promote_after(2);
+            let knobs = old.clone().with_replicas(1).with_retry_backoff_us(777.0);
+            for oracle in [false, true] {
+                let mk = |cfg: &ClusterConfig| {
+                    cluster::build::<1>(cfg, "lru", &cache, None, &sim, N_EXPERTS, 1_000.0)
+                        .unwrap()
+                };
+                let (s1, m1, r1) = run_engine(mk(&old), &traces, &sim, oracle);
+                let (s2, m2, r2) = run_engine(mk(&knobs), &traces, &sim, oracle);
+                let label = format!("{placement:?} case {case} oracle={oracle}");
+                assert_stats_identical(&label, &s1, &s2);
+                assert_eq!(m1.0.to_bits(), m2.0.to_bits(), "{label}: demand marks");
+                assert_eq!(m1.1.to_bits(), m2.1.to_bits(), "{label}: stall marks");
+                assert_eq!(r1, r2, "{label}: residency");
+            }
+        }
+    }
+}
+
+/// Full replication puts a rank of every expert on the front node, and
+/// the cheapest-reachable-replica rule always prefers hops 0 — so a
+/// healthy K=3, R=3 cluster serves every lookup locally and replays
+/// byte-identically to the single-node backend, with the wire never
+/// engaging.
+#[test]
+fn fully_replicated_cluster_serves_locally_and_matches_single_node() {
+    let mut rng = Rng::new(607);
+    for case in 0..8 {
+        let traces: Vec<PromptTrace> = (0..rng.range(1, 4))
+            .map(|_| {
+                let n_tokens = rng.range(4, 40);
+                random_trace(&mut rng, n_tokens, 3, 16)
+            })
+            .collect();
+        let cap = rng.range(1, 12);
+        let sim = SimConfig {
+            prefetch_budget: rng.range(1, 6),
+            warmup_tokens: rng.below(10),
+            ..Default::default()
+        };
+        let cache = CacheConfig::default().with_capacity(cap);
+        let cfg = ClusterConfig::default()
+            .with_nodes(3)
+            .with_link(LinkSpec::new(50.0, 1.0, 5.0))
+            .with_replicas(3);
+        for oracle in [false, true] {
+            let mut clustered =
+                cluster::build::<1>(&cfg, "lru", &cache, None, &sim, N_EXPERTS, 1_000.0)
+                    .unwrap();
+            let mut single =
+                memory::build::<1>("lru", &cache, None, &sim, N_EXPERTS, 1_000.0).unwrap();
+            clustered.set_prefetch_budget(sim.prefetch_budget);
+            single.set_prefetch_budget(sim.prefetch_budget);
+            let mut ce = SimEngine::new(clustered, sim.clone(), N_EXPERTS);
+            let mut se = SimEngine::new(single, sim.clone(), N_EXPERTS);
+            let (mut cs, mut ss) = (CacheStats::default(), CacheStats::default());
+            for tr in &traces {
+                if oracle {
+                    ce.run_prompt(tr, &mut OraclePredictor::new(), &mut cs);
+                    se.run_prompt(tr, &mut OraclePredictor::new(), &mut ss);
+                } else {
+                    ce.run_prompt(tr, &mut NoPrefetch, &mut cs);
+                    se.run_prompt(tr, &mut NoPrefetch, &mut ss);
+                }
+            }
+            let label = format!("full-replication case {case} oracle={oracle}");
+            assert_stats_identical(&label, &ss, &cs);
+            let (cm, sm) = (ce.memory.cost_marks(), se.memory.cost_marks());
+            assert_eq!(cm.0.to_bits(), sm.0.to_bits(), "{label}: demand marks");
+            assert_eq!(cm.1.to_bits(), sm.1.to_bits(), "{label}: stall marks");
+            assert_eq!(
+                ce.memory.resident_count(),
+                se.memory.resident_count(),
+                "{label}: residency"
+            );
+            let net = ce.memory.stats().net.unwrap();
+            assert_eq!(net.remote_lookups, 0, "{label}: remote lookups");
+            assert_eq!(net.total_us(), 0.0, "{label}: wire time");
+        }
+    }
+}
+
+/// A seeded chaos run — recovery windows taking both replicas of some
+/// experts down at once, a straggler behind a fetch deadline (so the
+/// retry/backoff chain engages), a link flap, and a slow-link episode —
+/// replays byte-identically across two full runs, serves every lookup
+/// without panicking, and actually exercises the degraded and retry
+/// paths.
+#[test]
+fn seeded_chaos_replay_is_byte_identical_and_degrades_without_panic() {
+    let cfg = ClusterConfig::default()
+        .with_nodes(3)
+        .with_placement(PlacementKind::RoundRobin)
+        .with_link(LinkSpec::new(50.0, 0.0, 5.0).with_timeout_us(100.0))
+        .with_replicas(2)
+        .with_retry_backoff_us(25.0)
+        .with_faults(
+            FaultPlan::none()
+                .with_down_window(1, 10, 60)
+                .with_link_flap(2, 20, 50)
+                .with_straggler(1, 4.0)
+                .with_slow_link(2, 80, 120, 3.0),
+        );
+    let run = || {
+        let mut rng = Rng::new(606);
+        let traces: Vec<PromptTrace> = (0..4)
+            .map(|_| random_trace(&mut rng, 32, 3, 16))
+            .collect();
+        let sim = SimConfig::default();
+        let cache = CacheConfig::default().with_capacity(6);
+        let mut memory =
+            cluster::build::<1>(&cfg, "lru", &cache, None, &sim, N_EXPERTS, 1_000.0).unwrap();
+        memory.set_prefetch_budget(sim.prefetch_budget);
+        let mut stats = CacheStats::default();
+        let mut engine = SimEngine::new(memory, sim.clone(), N_EXPERTS);
+        for tr in &traces {
+            engine.run_prompt(tr, &mut OraclePredictor::new(), &mut stats);
+        }
+        let m = engine.memory.stats();
+        let net = m.net.expect("cluster backend reports NetStats");
+        let marks = engine.memory.cost_marks();
+        (stats, net, marks)
+    };
+    let (s1, n1, m1) = run();
+    let (s2, n2, m2) = run();
+    assert_stats_identical("chaos replay", &s1, &s2);
+    assert_eq!(n1, n2, "chaos replay: NetStats diverged");
+    assert_eq!(m1.0.to_bits(), m2.0.to_bits(), "chaos replay: demand marks");
+    assert_eq!(m1.1.to_bits(), m2.1.to_bits(), "chaos replay: stall marks");
+    // the chaos actually bit: both replicas down at once forced the
+    // degraded deepest-tier path, and the deadline forced retries
+    assert!(
+        n1.degraded_fetches > 0,
+        "overlapping down+flap windows should have forced degraded fetches"
+    );
+    assert!(n1.retries > 0, "the 100µs deadline should have forced retries");
+    assert!(n1.failovers > 0, "down windows should have forced failovers");
+    assert!(n1.timeout_us > 0.0 && n1.backoff_us > 0.0);
+    // every measured lookup was served: hits + misses covers the corpus
+    assert!(s1.hits + s1.misses > 0);
+}

@@ -189,6 +189,174 @@ fn straggler_scenario_slows_the_wire_but_not_the_routing() {
     assert_eq!(s, drive(&slow), "straggler scenario must be deterministic");
 }
 
+// ---- recovery windows -------------------------------------------------
+
+/// Build a K=2 cluster where experts 1/3/5/7 all live on node 1 and
+/// cycle them for `n` lookups over a flat 10 µs link; returns the final
+/// net counters plus the number of remote GPU hits observed.
+fn drive_node1_cycle(cfg: &ClusterConfig, n: usize) -> moe_beyond::tier::NetStats {
+    let mut c = faulty_cluster(cfg);
+    for t in 0..n {
+        c.lookup(0, [1u8, 3, 5, 7][t % 4], true);
+    }
+    c.stats().net.expect("cluster backend reports net stats")
+}
+
+/// A transient outage window ends: lookups degrade only while the node
+/// is down, and service resumes afterwards — unlike a permanent failure,
+/// which degrades every remaining lookup.  Both scenarios replay
+/// bit-identically.
+#[test]
+fn down_window_recovery_resumes_service_where_permanent_failure_does_not() {
+    let base = ClusterConfig::default()
+        .with_nodes(2)
+        .with_link(LinkSpec::new(10.0, 0.0, 0.0));
+    let windowed = base
+        .clone()
+        .with_faults(FaultPlan::parse("down:1@20-40").unwrap());
+    let permanent = base
+        .clone()
+        .with_faults(FaultPlan::parse("fail:1@20").unwrap());
+    let w = drive_node1_cycle(&windowed, 80);
+    let p = drive_node1_cycle(&permanent, 80);
+    // exactly the 20 in-window lookups degraded; after recovery node 1
+    // serves again, so the permanent failure degrades the other 40 too
+    assert_eq!(w.degraded_fetches, 20);
+    assert_eq!(p.degraded_fetches, 60);
+    // recovery restores the remote-hit stream the dead cluster never got
+    assert!(
+        w.remote_hits > p.remote_hits,
+        "recovered cluster must out-hit the permanently failed one \
+         ({} vs {})",
+        w.remote_hits,
+        p.remote_hits
+    );
+    assert_eq!(w, drive_node1_cycle(&windowed, 80), "windowed replay diverged");
+    assert_eq!(p, drive_node1_cycle(&permanent, 80), "permanent replay diverged");
+}
+
+/// Cold vs warm recovery: a down window drops the node's residency
+/// (crash-restart misses again), a link flap of the same span keeps it —
+/// so the flap run ends with strictly more remote hits while routing the
+/// same lookups over the wire.
+#[test]
+fn link_flap_recovers_warm_where_down_window_recovers_cold() {
+    let base = ClusterConfig::default()
+        .with_nodes(2)
+        .with_link(LinkSpec::new(10.0, 0.0, 0.0));
+    let down = base
+        .clone()
+        .with_faults(FaultPlan::parse("down:1@20-40").unwrap());
+    let flap = base
+        .clone()
+        .with_faults(FaultPlan::parse("flap:1@20-40").unwrap());
+    let d = drive_node1_cycle(&down, 80);
+    let f = drive_node1_cycle(&flap, 80);
+    // identical routing: same lookups went remote, same lookups degraded
+    assert_eq!(d.remote_lookups, f.remote_lookups);
+    assert_eq!(d.degraded_fetches, f.degraded_fetches);
+    // ...but the flap kept node 1's cache warm across the outage
+    assert!(
+        f.remote_hits > d.remote_hits,
+        "warm recovery must out-hit cold recovery ({} vs {})",
+        f.remote_hits,
+        d.remote_hits
+    );
+}
+
+/// A degraded-bandwidth episode ends on schedule: wire time is inflated
+/// only inside the window, so a longer episode costs strictly more and a
+/// healthy run strictly less.
+#[test]
+fn slow_link_episode_ends_on_schedule() {
+    let base = ClusterConfig::default()
+        .with_nodes(2)
+        .with_link(LinkSpec::new(10.0, 0.0, 0.0));
+    let short = base
+        .clone()
+        .with_faults(FaultPlan::parse("slow:1@10-20*5").unwrap());
+    let long = base
+        .clone()
+        .with_faults(FaultPlan::parse("slow:1@10-30*5").unwrap());
+    let h = drive_node1_cycle(&base, 80).wire_us;
+    let s = drive_node1_cycle(&short, 80).wire_us;
+    let l = drive_node1_cycle(&long, 80).wire_us;
+    assert!(h < s, "episode must inflate wire time ({h} vs {s})");
+    assert!(s < l, "longer episode must cost strictly more ({s} vs {l})");
+}
+
+// ---- timeout / retry / degraded ---------------------------------------
+
+/// With the fetch deadline armed, every lookup served off a straggling
+/// owner walks the same deterministic failover order: time out on the
+/// rank-0 replica, back off once, serve from rank 1.  The per-attempt
+/// accounting is exact and bit-stable across replays.
+#[test]
+fn timeout_retry_chain_is_deterministic_and_orderly() {
+    let cfg = ClusterConfig::default()
+        .with_nodes(3)
+        .with_replicas(2)
+        .with_link(LinkSpec::new(10.0, 0.0, 0.0).with_timeout_us(20.0))
+        .with_retry_backoff_us(5.0)
+        .with_faults(FaultPlan::parse("straggle:1*10").unwrap());
+    let run = || {
+        let mut c = faulty_cluster(&cfg);
+        // experts 1/4/7 all round-robin to node 1 (the straggler)
+        for t in 0..60usize {
+            c.lookup(0, [1u8, 4, 7][t % 3], true);
+        }
+        c.stats().net.expect("cluster backend reports net stats")
+    };
+    let net = run();
+    // every remote serve timed out exactly once on node 1 and was
+    // served by the rank-1 replica on node 2 within the deadline
+    assert_eq!(net.remote_lookups, 60);
+    assert_eq!(net.retries, 60);
+    assert_eq!(net.timeout_us, 20.0 * 60.0);
+    assert_eq!(net.backoff_us, 5.0 * 60.0); // all first attempts: 5 × 2^0
+    assert_eq!(net.failovers, 0, "rank 0 stayed reachable — no failover");
+    assert_eq!(net.degraded_fetches, 0, "a replica always served");
+    assert_eq!(net, run(), "retry-chain replay diverged");
+}
+
+/// When every replica of an expert is unreachable the lookup degrades to
+/// the front node and is still served — never a panic — and adding a
+/// replica strictly reduces how often that happens under the same plan.
+#[test]
+fn all_replicas_unreachable_degrades_and_replication_raises_availability() {
+    // nodes 1 and 2 are both gone for the first 40 lookups
+    let plan = || FaultPlan::parse("down:1@0-40;flap:2@0-40").unwrap();
+    let cfg_r = |replicas: usize| {
+        ClusterConfig::default()
+            .with_nodes(3)
+            .with_replicas(replicas)
+            .with_link(LinkSpec::new(10.0, 0.0, 0.0))
+            .with_faults(plan())
+    };
+    let drive_mixed = |cfg: &ClusterConfig| {
+        let mut c = faulty_cluster(cfg);
+        for t in 0..80usize {
+            c.lookup(0, ((t * 5) % 64) as u8, true);
+        }
+        c.stats().net.expect("cluster backend reports net stats")
+    };
+    let r1 = drive_mixed(&cfg_r(1));
+    let r2 = drive_mixed(&cfg_r(2));
+    // both degrade while the outage lasts, and only then
+    assert!(r1.degraded_fetches > 0);
+    assert!(r2.degraded_fetches > 0, "owner-1 experts lost both replicas");
+    // R=2 rescues every owner-2 lookup (its rank-1 replica is node 0)
+    assert!(
+        r2.degraded_fetches < r1.degraded_fetches,
+        "replication must strictly reduce degraded fetches ({} vs {})",
+        r2.degraded_fetches,
+        r1.degraded_fetches
+    );
+    // deterministic, and the run never panicked while fully partitioned
+    assert_eq!(r1, drive_mixed(&cfg_r(1)));
+    assert_eq!(r2, drive_mixed(&cfg_r(2)));
+}
+
 /// Fault plans that name impossible nodes are rejected at validation,
 /// not silently ignored at runtime.
 #[test]
